@@ -1,0 +1,82 @@
+//! End-to-end serving driver (the repo's headline validation run):
+//! loads a real (AOT-compiled) model, serves Poisson-arrival batched
+//! requests across the simulated heterogeneous fleet in every scheduling
+//! mode, and reports latency / throughput / carbon — recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! cargo run --release --example e2e_serving -- [--requests 50] [--rate 8]
+//! ```
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::{Coordinator, ServingLoop};
+use carbonedge::deployer;
+use carbonedge::scheduler::{Amp4ecScheduler, CarbonAwareScheduler, Mode, Scheduler};
+use carbonedge::util::cli::Args;
+use carbonedge::util::table::{f2, f4, Table};
+use carbonedge::workload::{Arrivals, RequestStream};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let requests = args.parse_or("requests", 50usize)?;
+    let rate = args.parse_or("rate", 8.0f64)?;
+    let model_name = args.str_or("model", "mobilenet_v2");
+
+    let coord = Coordinator::new(Config::default())?;
+    let model = coord.load_model(&model_name)?;
+    println!(
+        "e2e: serving {requests} Poisson requests @ {rate} req/s on {model_name} ({:.2}M params)",
+        model.entry.params as f64 / 1e6
+    );
+
+    let mut table = Table::new(
+        "End-to-end serving (Poisson arrivals, simulated 3-node edge fleet)",
+        &[
+            "Scheduler",
+            "p50 (ms)",
+            "p95 (ms)",
+            "req/s",
+            "gCO2/inf",
+            "inf/gCO2",
+            "queue (ms)",
+            "sched (ms)",
+        ],
+    );
+
+    let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(Amp4ecScheduler::new()),
+        Box::new(CarbonAwareScheduler::new("performance", Mode::Performance.weights())),
+        Box::new(CarbonAwareScheduler::new("balanced", Mode::Balanced.weights())),
+        Box::new(CarbonAwareScheduler::new("green", Mode::Green.weights())),
+    ];
+
+    for sched in scheds.iter_mut() {
+        let registry = coord.calibrated_registry(&model)?;
+        let containers =
+            deployer::deploy_task_level(&coord.exec(), &model, registry.nodes(), &coord.cfg)?;
+        let stream = RequestStream {
+            image_size: coord.manifest.image_size,
+            arrivals: Arrivals::Poisson { count: requests, rate_hz: rate, seed: 42 },
+            seed: 7,
+        };
+        let loop_ = ServingLoop::new(&registry, &containers);
+        let name = sched.name().to_string();
+        let out = loop_.serve(&stream, sched.as_mut(), &name)?;
+        let r = &out.report;
+        table.row(vec![
+            name,
+            f2(r.latency_ms.p50),
+            f2(r.latency_ms.p95),
+            f2(r.throughput_rps),
+            f4(r.carbon_per_inf_g),
+            f2(r.carbon_efficiency),
+            f2(out.queue_ms_mean),
+            format!("{:.4}", out.sched_ms_mean),
+        ]);
+        let usage: Vec<String> =
+            r.node_usage.iter().map(|(n, c)| format!("{n}:{c}")).collect();
+        println!("  {} -> {}", r.label, usage.join(" "));
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

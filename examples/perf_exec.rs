@@ -1,0 +1,31 @@
+//! §Perf helper: time raw monolithic PJRT execution for an artifact
+//! directory (used for the L1 tile-size A/B in EXPERIMENTS.md §Perf).
+//!
+//! ```sh
+//! cargo run --release --example perf_exec -- --artifacts artifacts_t256
+//! ```
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::util::bench::{black_box, Bencher};
+use carbonedge::util::cli::Args;
+use carbonedge::workload::synthetic_image;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = args.str_or("artifacts", "artifacts");
+    let model_name = args.str_or("model", "mobilenet_v2");
+    let coord = Coordinator::new(cfg)?;
+    let model = coord.load_model(&model_name)?;
+    let exec = coord.exec();
+    exec.register("perf", &model.monolithic_path(), model.all_weights(), true)?;
+    let input = synthetic_image(coord.manifest.image_size, 0);
+    exec.execute("perf", input.clone())?; // warmup
+    let b = Bencher::default();
+    let r = b.run(&format!("exec/{}/{}", coord.cfg.artifacts_dir, model_name), || {
+        black_box(exec.execute("perf", input.clone()).unwrap());
+    });
+    println!("{}", r.report());
+    Ok(())
+}

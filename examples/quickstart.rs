@@ -1,0 +1,47 @@
+//! Quickstart: load a model, run a few carbon-aware inferences, print the
+//! carbon report.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::metrics::RunReport;
+use carbonedge::scheduler::{CarbonAwareScheduler, Mode};
+use carbonedge::workload::RequestStream;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Start the coordinator (PJRT executor + artifact manifest).
+    let coord = Coordinator::new(Config::default())?;
+    println!("loaded manifest with {} models", coord.manifest.models.len());
+
+    // 2. Load MobileNetV2 and verify numerics against the golden record.
+    let model = coord.load_model("mobilenet_v2")?;
+    let err = coord.golden_check(&model)?;
+    println!("golden check OK (max logit error {err:.2e})");
+
+    // 3. Run 10 inferences in Green mode across the simulated edge fleet.
+    let mut sched = CarbonAwareScheduler::new("green", Mode::Green.weights());
+    let stream = RequestStream {
+        image_size: coord.manifest.image_size,
+        arrivals: carbonedge::workload::Arrivals::ClosedLoop { count: 10 },
+        seed: 0,
+    };
+    let run = coord.run_scheduled(&model, &mut sched, &stream.inputs())?;
+    let report = RunReport::from_records("quickstart-green", &run.records);
+
+    // 4. Print the carbon report.
+    println!("\n== {} ==", report.label);
+    println!("inferences:        {}", report.inferences);
+    println!("mean latency:      {:.2} ms", report.latency_ms.mean);
+    println!("throughput:        {:.2} req/s", report.throughput_rps);
+    println!("energy:            {:.6} kWh", report.energy_kwh);
+    println!("carbon/inference:  {:.5} gCO2", report.carbon_per_inf_g);
+    println!("carbon efficiency: {:.1} inf/gCO2", report.carbon_efficiency);
+    println!("scheduling:        {:.4} ms/task", run.mean_sched_ms());
+    for (node, tasks) in &report.node_usage {
+        println!("  routed {tasks} tasks -> {node}");
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Weight sweep (the paper's Fig. 3 scenario as an application): explore
+//! the performance–carbon trade-off by sweeping the carbon weight `w_C`
+//! from 0 to 1 and report where routing flips to the green node.
+//!
+//! ```sh
+//! cargo run --release --example weight_sweep -- [--step 0.1] [--iters 10]
+//! ```
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+use carbonedge::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let step = args.parse_or("step", 0.1f64)?;
+    let iters = args.parse_or("iters", 10usize)?;
+    let model = args.str_or("model", "mobilenet_v2");
+
+    let coord = Coordinator::new(Config::default())?;
+    let mono = exp::run_strategy(&coord, &model, exp::Strategy::Monolithic, iters, 1)?;
+    let points = exp::fig3_sweep(&coord, &model, iters, step)?;
+    println!("{}", exp::fig3_render(&points, &mono));
+
+    // Narrative summary: carbon saved at each end of the sweep.
+    let first = &points.first().unwrap().report;
+    let last = &points.last().unwrap().report;
+    println!(
+        "w_C=0.0: {:.5} g/inf on {:?} | w_C=1.0: {:.5} g/inf on {:?}",
+        first.carbon_per_inf_g,
+        first.node_usage.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+        last.carbon_per_inf_g,
+        last.node_usage.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+    );
+    Ok(())
+}

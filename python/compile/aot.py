@@ -1,0 +1,176 @@
+"""AOT compilation: lower the model zoo to HLO text + weight/manifest sidecars.
+
+This is the only place Python touches the serving stack. For every model we
+emit:
+
+  artifacts/<model>.hlo.txt            monolithic program  f(weights..., x)
+  artifacts/<model>.stage<i>.hlo.txt   one program per stage
+  artifacts/<model>.weights.bin        all weights, packed f32 little-endian
+  artifacts/<model>.input.bin          golden input image (f32, H*W*3)
+  artifacts/manifest.json              shapes, layer cost tables (Eq. 5),
+                                       weight offsets, golden logits
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .models import ZOO, build
+
+# ImageNet preprocessing constants used by the paper (Sec. IV-A2).
+IMAGENET_MEAN = np.array([0.485, 0.456, 0.406], np.float32)
+IMAGENET_STD = np.array([0.229, 0.224, 0.225], np.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def golden_image(image_size: int, seed: int = 0) -> np.ndarray:
+    """Deterministic synthetic "photo": smooth gradients + noise, then the
+    paper's ImageNet normalization. Shared with the Rust workload generator
+    (same formula, same seed) so golden logits match end-to-end."""
+    rng = np.random.RandomState(seed)
+    yy, xx = np.mgrid[0:image_size, 0:image_size].astype(np.float32) / image_size
+    base = np.stack([yy, xx, 0.5 * (xx + yy)], axis=-1)
+    img = np.clip(base + 0.1 * rng.randn(image_size, image_size, 3).astype(np.float32), 0.0, 1.0)
+    return (img - IMAGENET_MEAN) / IMAGENET_STD
+
+
+def lower_model(model, image_size: int):
+    """Lower monolithic + per-stage programs; return dict name -> hlo text."""
+    x_spec = jax.ShapeDtypeStruct((image_size, image_size, 3), jnp.float32)
+    out = {}
+
+    w_specs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in model.all_weights]
+    mono = jax.jit(lambda ws, x: (model.monolithic_fn()(ws, x),))
+    out["monolithic"] = to_hlo_text(mono.lower(w_specs, x_spec))
+
+    for i, s in enumerate(model.stages):
+        s_in = jax.ShapeDtypeStruct(tuple(s.in_shape), jnp.float32)
+        s_specs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in s.weights]
+        fn = jax.jit(lambda ws, x, s=s: (s.fn(ws, x),))
+        out[f"stage{i}"] = to_hlo_text(fn.lower(s_specs, s_in))
+    return out
+
+
+def export_model(model, out_dir: str, image_size: int) -> dict:
+    """Write all artifacts for one model; return its manifest entry."""
+    hlos = lower_model(model, image_size)
+    files = {}
+    for key, text in hlos.items():
+        fname = f"{model.name}.hlo.txt" if key == "monolithic" else f"{model.name}.{key}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[key] = fname
+
+    # Packed weights + offset table (per-tensor, element offsets into the bin).
+    weights_meta = []
+    offset = 0
+    chunks = []
+    for si, s in enumerate(model.stages):
+        for w in s.weights:
+            arr = np.asarray(w, np.float32)
+            weights_meta.append({"stage": si, "shape": list(arr.shape), "offset": offset})
+            offset += arr.size
+            chunks.append(arr.ravel())
+    packed = np.concatenate(chunks) if chunks else np.zeros(0, np.float32)
+    wfile = f"{model.name}.weights.bin"
+    packed.tofile(os.path.join(out_dir, wfile))
+
+    # Golden input + logits (monolithic forward with the real weights).
+    img = golden_image(image_size)
+    ifile = f"{model.name}.input.bin"
+    img.astype("<f4").tofile(os.path.join(out_dir, ifile))
+    logits = np.asarray(model.forward(jnp.asarray(img)))
+    golden = {
+        "seed": 0,
+        "logits8": [float(v) for v in logits[:8]],
+        "argmax": int(np.argmax(logits)),
+        "logit_sum": float(logits.sum()),
+    }
+
+    return {
+        "params": int(model.params),
+        "flops": int(model.flops),
+        "input_shape": [image_size, image_size, 3],
+        "num_classes": model.num_classes,
+        "monolithic": files["monolithic"],
+        "weights_file": wfile,
+        "weights_total": int(packed.size),
+        "input_file": ifile,
+        "golden": golden,
+        "stages": [
+            {
+                "name": s.name,
+                "artifact": files[f"stage{i}"],
+                "in_shape": list(s.in_shape),
+                "out_shape": list(s.out_shape),
+                "params": int(s.params),
+                "flops": int(s.flops),
+                "cost": int(s.cost),
+                "num_weights": len(s.weights),
+            }
+            for i, s in enumerate(model.stages)
+        ],
+        "weights": weights_meta,
+        "layers": [dict(m.to_json(), stage=si) for si, s in enumerate(model.stages) for m in s.layers],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="CarbonEdge AOT pipeline")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=sorted(ZOO))
+    ap.add_argument("--image-size", type=int, default=64)
+    ap.add_argument("--width", type=float, default=0.5)
+    ap.add_argument("--classes", type=int, default=1000)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "image_size": args.image_size,
+        "width": args.width,
+        "num_classes": args.classes,
+        "models": {},
+    }
+    for name in args.models:
+        print(f"[aot] building {name} ...", flush=True)
+        model = build(name, image_size=args.image_size, width=args.width, num_classes=args.classes)
+        manifest["models"][name] = export_model(model, args.out_dir, args.image_size)
+        print(
+            f"[aot]   {name}: {model.params/1e6:.2f}M params, {model.flops/1e6:.1f}M flops, "
+            f"{len(model.stages)} stages",
+            flush=True,
+        )
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    digest = hashlib.sha256(open(path, "rb").read()).hexdigest()[:12]
+    print(f"[aot] wrote {path} (sha256 {digest})")
+
+
+if __name__ == "__main__":
+    main()

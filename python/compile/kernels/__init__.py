@@ -1,0 +1,13 @@
+"""CarbonEdge L1 Pallas kernels (build-time only; lowered into model HLO)."""
+
+from .matmul import matmul_bias_act, apply_act
+from .depthwise import depthwise3x3, same_pad
+from .pool import avgpool_global
+
+__all__ = [
+    "matmul_bias_act",
+    "apply_act",
+    "depthwise3x3",
+    "same_pad",
+    "avgpool_global",
+]

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: depthwise 3x3 convolution (SAME padding, stride 1/2).
+
+The second hot op of the MobileNet-family models. TPU mapping: the grid
+tiles the channel axis; each program holds a (Hp, Wp, bc) spatial slab in
+VMEM and produces the full output plane for its channel block as nine
+shifted multiply-accumulates — a vector (VPU) op, not an MXU op, exactly as
+a depthwise conv maps on TPU. Bias + activation are fused in the epilogue.
+
+Runs under ``interpret=True`` on this image (see matmul.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import apply_act
+
+TILE_C = 128
+
+
+def same_pad(size: int, k: int, stride: int) -> tuple[int, int, int]:
+    """TF-style SAME padding. Returns (out_size, pad_lo, pad_hi)."""
+    out = -(-size // stride)  # ceil
+    total = max((out - 1) * stride + k - size, 0)
+    lo = total // 2
+    return out, lo, total - lo
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, act: str, ho: int, wo: int):
+    x = x_ref[...]
+    w = w_ref[...]
+    c = x.shape[-1]
+    acc = jnp.zeros((ho, wo, c), jnp.float32)
+    # Nine shifted MACs over the VMEM-resident slab; strided slices express
+    # the stride without gather traffic.
+    for di in range(3):
+        for dj in range(3):
+            xs = jax.lax.slice(
+                x,
+                (di, dj, 0),
+                (di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = acc + xs * w[di, dj][None, None, :]
+    acc = acc + b_ref[...][None, None, :]
+    o_ref[...] = apply_act(acc, act).astype(o_ref.dtype)
+
+
+def _pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "act", "tile_c"))
+def depthwise3x3(x, w, b, stride: int = 1, act: str = "none", *, tile_c: int = TILE_C):
+    """Depthwise 3x3 conv, SAME padding.
+
+    Args:
+      x: ``(H, W, C)``.
+      w: ``(3, 3, C)`` per-channel filters.
+      b: ``(C,)`` bias.
+      stride: 1 or 2.
+
+    Returns:
+      ``(Ho, Wo, C)`` float32, ``Ho = ceil(H/stride)``.
+    """
+    assert stride in (1, 2), stride
+    h, wdt, c = x.shape
+    assert w.shape == (3, 3, c), (w.shape, c)
+    assert b.shape == (c,), (b.shape, c)
+
+    ho, plo_h, phi_h = same_pad(h, 3, stride)
+    wo, plo_w, phi_w = same_pad(wdt, 3, stride)
+
+    bc = min(tile_c, _pad_to(c, 8))
+    cp = _pad_to(c, bc)
+
+    xp = jnp.pad(x.astype(jnp.float32), ((plo_h, phi_h), (plo_w, phi_w), (0, cp - c)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, 0), (0, cp - c)))
+    bp = jnp.pad(b.astype(jnp.float32), ((0, cp - c),))
+    hp, wp_ = xp.shape[0], xp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, stride=stride, act=act, ho=ho, wo=wo),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, cp), jnp.float32),
+        grid=(cp // bc,),
+        in_specs=[
+            pl.BlockSpec((hp, wp_, bc), lambda k: (0, 0, k)),
+            pl.BlockSpec((3, 3, bc), lambda k: (0, 0, k)),
+            pl.BlockSpec((bc,), lambda k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((ho, wo, bc), lambda k: (0, 0, k)),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:, :, :c]
+
+
+def vmem_bytes(h: int, w: int, c: int, stride: int = 1, tile_c: int = TILE_C) -> int:
+    """Analytic VMEM footprint of one program instance (float32)."""
+    ho, plo_h, phi_h = same_pad(h, 3, stride)
+    wo, plo_w, phi_w = same_pad(w, 3, stride)
+    bc = min(tile_c, c)
+    slab = (h + plo_h + phi_h) * (w + plo_w + phi_w) * bc
+    return 4 * (slab + 9 * bc + bc + ho * wo * bc)

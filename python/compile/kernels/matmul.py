@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: tiled matmul + bias + activation.
+
+This is the compute hot-spot of the CarbonEdge model zoo: every pointwise
+(1x1) convolution, the im2col-ed stem/head convolutions, the squeeze-excite
+MLP and the classifier head all lower to this kernel.
+
+TPU mapping (DESIGN.md #Hardware-Adaptation): the grid tiles M and N for the
+MXU systolic array; K is kept VMEM-resident so each output tile is produced
+in a single pass (no partial-accumulator HBM traffic). Bias add and the
+activation are fused into the epilogue so the activation never makes an
+extra HBM round-trip. On this image the kernel runs under ``interpret=True``
+(CPU PJRT cannot execute Mosaic custom-calls); the lowering is identical in
+structure, and TPU efficiency is estimated analytically in EXPERIMENTS.md
+#Perf-L1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes. M/N tiles of 128 match the 128x128
+# systolic array; they are clamped (and inputs zero-padded) for small layers.
+# Overridable via env for the #Perf-L1 tile sweep (EXPERIMENTS.md).
+import os
+
+TILE_M = int(os.environ.get("CE_TILE_M", "512"))
+TILE_N = int(os.environ.get("CE_TILE_N", "128"))
+
+_ACTS = ("none", "relu", "relu6", "sigmoid", "silu")
+
+
+def apply_act(x, act: str):
+    """Apply a named activation (shared by kernels and the jnp oracle)."""
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if act == "silu":
+        return x * jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    # One (TILE_M, TILE_N) output tile per program. K is resident: a single
+    # MXU-shaped dot produces the full tile, then the epilogue fuses
+    # bias + activation before the tile is written back.
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    o_ref[...] = apply_act(acc, act).astype(o_ref.dtype)
+
+
+def _pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("act", "tile_m", "tile_n"))
+def matmul_bias_act(x, w, b, act: str = "none", *, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """``act(x @ w + b)`` via the tiled Pallas kernel.
+
+    Args:
+      x: ``(M, K)`` float array.
+      w: ``(K, N)`` float array.
+      b: ``(N,)`` bias.
+      act: one of ``none|relu|relu6|sigmoid|silu`` (fused epilogue).
+
+    Returns:
+      ``(M, N)`` float32 array.
+    """
+    if act not in _ACTS:
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+
+    bm = min(tile_m, _pad_to(m, 8))
+    bn = min(tile_n, _pad_to(n, 8))
+    mp, np_ = _pad_to(m, bm), _pad_to(n, bn)
+
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b.astype(jnp.float32), ((0, np_ - n),))
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, act=act),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(m: int, k: int, n: int, tile_m: int = TILE_M, tile_n: int = TILE_N) -> int:
+    """Analytic VMEM footprint of one program instance (float32).
+
+    Used by the #Perf-L1 roofline estimate: x-tile + w-tile + bias + out-tile.
+    """
+    bm, bn = min(tile_m, m), min(tile_n, n)
+    return 4 * (bm * k + k * bn + bn + bm * bn)
+
+
+def mxu_utilization(m: int, k: int, n: int, tile_m: int = TILE_M, tile_n: int = TILE_N) -> float:
+    """Fraction of MXU lanes doing useful work for this shape (padding waste)."""
+    bm, bn = min(tile_m, _pad_to(m, 8)), min(tile_n, _pad_to(n, 8))
+    mp, np_ = _pad_to(m, bm), _pad_to(n, bn)
+    return (m * n * k) / float(mp * np_ * k)

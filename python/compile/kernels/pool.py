@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: global average pool (feeds the classifier head / SE)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_C = 256
+
+
+def _gap_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.mean(x_ref[...], axis=(0, 1))
+
+
+def _pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c",))
+def avgpool_global(x, *, tile_c: int = TILE_C):
+    """Global average pool ``(H, W, C) -> (C,)``."""
+    h, w, c = x.shape
+    bc = min(tile_c, _pad_to(c, 8))
+    cp = _pad_to(c, bc)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, 0), (0, cp - c)))
+    out = pl.pallas_call(
+        _gap_kernel,
+        out_shape=jax.ShapeDtypeStruct((cp,), jnp.float32),
+        grid=(cp // bc,),
+        in_specs=[pl.BlockSpec((h, w, bc), lambda k: (0, 0, k))],
+        out_specs=pl.BlockSpec((bc,), lambda k: (k,)),
+        interpret=True,
+    )(xp)
+    return out[:c]

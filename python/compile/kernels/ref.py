@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the kernels are validated against in
+``python/tests/test_kernels.py`` (hypothesis shape sweeps + allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import apply_act
+from .depthwise import same_pad
+
+
+def ref_matmul_bias_act(x, w, b, act: str = "none"):
+    return apply_act(
+        jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32),
+        act,
+    )
+
+
+def ref_depthwise3x3(x, w, b, stride: int = 1, act: str = "none"):
+    """Depthwise 3x3 conv via lax.conv_general_dilated (feature groups)."""
+    h, wdt, c = x.shape
+    _, plo_h, phi_h = same_pad(h, 3, stride)
+    _, plo_w, phi_w = same_pad(wdt, 3, stride)
+    lhs = x.astype(jnp.float32)[None]  # NHWC
+    rhs = w.astype(jnp.float32)[:, :, None, :]  # HWIO with I=1, O=C (grouped)
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding=((plo_h, phi_h), (plo_w, phi_w)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )[0]
+    return apply_act(out + b.astype(jnp.float32)[None, None, :], act)
+
+
+def ref_avgpool_global(x):
+    return jnp.mean(x.astype(jnp.float32), axis=(0, 1))

@@ -1,0 +1,181 @@
+"""L2 layer library: JAX building blocks that call the L1 Pallas kernels.
+
+Every convolution in the model zoo routes through the Pallas kernels:
+  * k x k conv  -> im2col + ``matmul_bias_act``      (stem, head, 1x1)
+  * depthwise   -> ``depthwise3x3``
+  * global pool -> ``avgpool_global``
+BatchNorm is folded into the conv weights at build time (inference-time BN
+folding), so each layer is a single fused conv+bias+act kernel call.
+
+Layers also carry the paper's Eq. 5 cost metadata::
+
+    Cost(l) = kh*kw*Cin*Cout   (Conv2D)
+            | Nin*Nout         (Linear)
+            | params_count     (others)
+
+which `aot.py` exports in the manifest for the Rust partitioner.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul_bias_act, depthwise3x3, avgpool_global, same_pad
+
+
+@dataclasses.dataclass
+class LayerMeta:
+    """Per-layer record exported to the manifest (drives Eq. 5 in Rust)."""
+
+    name: str
+    kind: str  # conv2d | linear | depthwise | pool | add | scale
+    params: int
+    cost: int  # paper Eq. 5
+    flops: int
+    in_shape: tuple
+    out_shape: tuple
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "params": self.params,
+            "cost": self.cost,
+            "flops": self.flops,
+            "in_shape": list(self.in_shape),
+            "out_shape": list(self.out_shape),
+        }
+
+
+class Initializer:
+    """Deterministic He-normal initializer (numpy PRNG, seeded)."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.RandomState(seed)
+
+    def conv(self, kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        w = self.rng.randn(kh, kw, cin, cout).astype(np.float32) * np.sqrt(2.0 / fan_in)
+        # Folded-BN bias: small random offset (a trained model would carry
+        # the folded running stats here).
+        b = (self.rng.randn(cout) * 0.01).astype(np.float32)
+        return jnp.asarray(w), jnp.asarray(b)
+
+    def dw(self, c):
+        w = self.rng.randn(3, 3, c).astype(np.float32) * np.sqrt(2.0 / 9.0)
+        b = (self.rng.randn(c) * 0.01).astype(np.float32)
+        return jnp.asarray(w), jnp.asarray(b)
+
+    def dense(self, nin, nout):
+        w = self.rng.randn(nin, nout).astype(np.float32) * np.sqrt(2.0 / nin)
+        b = np.zeros(nout, np.float32)
+        return jnp.asarray(w), jnp.asarray(b)
+
+
+def im2col(x, k: int, stride: int):
+    """Extract k x k patches (SAME padding) -> ``(Ho*Wo, k*k*Cin)``."""
+    h, w, c = x.shape
+    ho, plo_h, phi_h = same_pad(h, k, stride)
+    wo, plo_w, phi_w = same_pad(w, k, stride)
+    xp = jnp.pad(x, ((plo_h, phi_h), (plo_w, phi_w), (0, 0)))
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(
+                xp[
+                    di : di + (ho - 1) * stride + 1 : stride,
+                    dj : dj + (wo - 1) * stride + 1 : stride,
+                    :,
+                ]
+            )
+    patches = jnp.concatenate(cols, axis=-1)  # (Ho, Wo, k*k*C)
+    return patches.reshape(ho * wo, k * k * c), (ho, wo)
+
+
+def conv2d(x, w, b, stride: int = 1, act: str = "none"):
+    """k x k conv (SAME) via im2col + the Pallas matmul kernel.
+
+    ``x (H,W,Cin)``, ``w (kh,kw,Cin,Cout)`` -> ``(Ho,Wo,Cout)``.
+    """
+    kh, kw, cin, cout = w.shape
+    assert kh == kw, "square kernels only"
+    if kh == 1 and stride == 1:
+        h, wdt, _ = x.shape
+        out = matmul_bias_act(x.reshape(h * wdt, cin), w.reshape(cin, cout), b, act)
+        return out.reshape(h, wdt, cout)
+    cols, (ho, wo) = im2col(x, kh, stride)
+    out = matmul_bias_act(cols, w.reshape(kh * kw * cin, cout), b, act)
+    return out.reshape(ho, wo, cout)
+
+
+def dense(x, w, b, act: str = "none"):
+    """``x (Nin,) @ w (Nin,Nout) + b`` via the Pallas matmul kernel."""
+    return matmul_bias_act(x[None, :], w, b, act)[0]
+
+
+def squeeze_excite(x, w1, b1, w2, b2):
+    """SE block: GAP -> reduce(silu) -> expand(sigmoid) -> channel scale."""
+    s = avgpool_global(x)
+    s = dense(s, w1, b1, act="silu")
+    s = dense(s, w2, b2, act="sigmoid")
+    return x * s[None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Metadata helpers (Eq. 5 + FLOPs)
+# ---------------------------------------------------------------------------
+
+
+def conv_meta(name, kh, cin, cout, in_shape, out_shape) -> LayerMeta:
+    ho, wo = out_shape[0], out_shape[1]
+    params = kh * kh * cin * cout + cout
+    return LayerMeta(
+        name=name,
+        kind="conv2d",
+        params=params,
+        cost=kh * kh * cin * cout,  # Eq. 5 Conv2D branch
+        flops=2 * kh * kh * cin * cout * ho * wo,
+        in_shape=in_shape,
+        out_shape=out_shape,
+    )
+
+
+def dw_meta(name, c, in_shape, out_shape) -> LayerMeta:
+    ho, wo = out_shape[0], out_shape[1]
+    params = 9 * c + c
+    return LayerMeta(
+        name=name,
+        kind="depthwise",
+        params=params,
+        cost=params,  # Eq. 5 "others" branch: params_count
+        flops=2 * 9 * c * ho * wo,
+        in_shape=in_shape,
+        out_shape=out_shape,
+    )
+
+
+def linear_meta(name, nin, nout) -> LayerMeta:
+    return LayerMeta(
+        name=name,
+        kind="linear",
+        params=nin * nout + nout,
+        cost=nin * nout,  # Eq. 5 Linear branch
+        flops=2 * nin * nout,
+        in_shape=(nin,),
+        out_shape=(nout,),
+    )
+
+
+def misc_meta(name, kind, params, in_shape, out_shape, flops=0) -> LayerMeta:
+    return LayerMeta(
+        name=name,
+        kind=kind,
+        params=params,
+        cost=params,  # Eq. 5 "others"
+        flops=flops,
+        in_shape=in_shape,
+        out_shape=out_shape,
+    )

@@ -1,0 +1,14 @@
+"""L2 public entrypoint: the CarbonEdge model zoo forward pass.
+
+Thin re-export kept at the path the repo layout mandates; the actual model
+definitions (which call the L1 Pallas kernels) live in ``models.py`` and
+``layers.py``.
+"""
+
+from .models import ZOO, Model, Stage, build, make_divisible  # noqa: F401
+from .layers import LayerMeta  # noqa: F401
+
+
+def forward(name: str, x, **kwargs):
+    """Run a zoo model forward: ``x (H,W,3) -> logits (num_classes,)``."""
+    return build(name, **kwargs).forward(x)

@@ -1,0 +1,339 @@
+"""L2 model zoo: MobileNetV2 / MobileNetV4-style / EfficientNet-B0-style.
+
+The paper evaluates torchvision MobileNetV2, MobileNetV4 and EfficientNet-B0
+at 224x224. We rebuild the same architectures in JAX on top of the L1 Pallas
+kernels, width-scaled and at a configurable (default 64x64) input size so the
+AOT artifacts compile and execute quickly on this CPU-only image
+(substitution table: DESIGN.md section 7). Weights are deterministic
+(seeded He-normal with folded-BN biases) and are exported as packed binary
+sidecars; the lowered HLO takes them as *arguments* (like a real serving
+runtime: weights are loaded at deploy time, not baked into the program).
+
+Each model is exposed as an ordered list of **stages** (stem / block groups /
+head). `aot.py` exports one HLO per stage plus a monolithic HLO; the Rust
+partitioner (Eq. 5 cost model) groups contiguous stages onto edge nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels import depthwise3x3, avgpool_global, same_pad
+
+
+def make_divisible(v: float, divisor: int = 8) -> int:
+    """Standard MobileNet channel rounding."""
+    new_v = max(divisor, int(v + divisor / 2) // divisor * divisor)
+    if new_v < 0.9 * v:
+        new_v += divisor
+    return new_v
+
+
+@dataclasses.dataclass
+class Stage:
+    """A contiguous chunk of the model: unit of distribution across nodes.
+
+    ``fn(weights, x)`` where ``weights`` is the per-stage list of parameter
+    arrays (HLO arguments, in order) and ``x`` the activation.
+    """
+
+    name: str
+    fn: Callable
+    in_shape: tuple
+    out_shape: tuple
+    layers: List[L.LayerMeta]
+    weights: List[jnp.ndarray]
+
+    @property
+    def params(self) -> int:
+        return sum(m.params for m in self.layers)
+
+    @property
+    def flops(self) -> int:
+        return sum(m.flops for m in self.layers)
+
+    @property
+    def cost(self) -> int:
+        return sum(m.cost for m in self.layers)
+
+
+@dataclasses.dataclass
+class Model:
+    name: str
+    input_shape: tuple  # (H, W, 3)
+    num_classes: int
+    stages: List[Stage]
+
+    def forward(self, x):
+        """Full forward pass using the stored weights (testing convenience)."""
+        for s in self.stages:
+            x = s.fn(s.weights, x)
+        return x
+
+    def monolithic_fn(self):
+        """``fn(all_weights, x)`` suitable for AOT lowering as one program."""
+        stages = self.stages
+        sizes = [len(s.weights) for s in stages]
+
+        def fn(ws, x):
+            off = 0
+            for s, n in zip(stages, sizes):
+                x = s.fn(ws[off : off + n], x)
+                off += n
+            return x
+
+        return fn
+
+    @property
+    def all_weights(self) -> List[jnp.ndarray]:
+        return [w for s in self.stages for w in s.weights]
+
+    @property
+    def params(self) -> int:
+        return sum(s.params for s in self.stages)
+
+    @property
+    def flops(self) -> int:
+        return sum(s.flops for s in self.stages)
+
+    @property
+    def layers(self) -> List[L.LayerMeta]:
+        return [m for s in self.stages for m in s.layers]
+
+
+class _Builder:
+    """Tracks the running activation shape while blocks are appended.
+
+    Ops have signature ``op(ws, x)`` where ``ws`` is the *stage-local*
+    weight list; weights are referenced by index so they can be lowered as
+    HLO arguments instead of baked constants.
+    """
+
+    def __init__(self, init: L.Initializer, in_shape):
+        self.init = init
+        self.shape = tuple(in_shape)
+        self.ops: List[Callable] = []
+        self.metas: List[L.LayerMeta] = []
+        self.weights: List[jnp.ndarray] = []
+        self._stages: List[Stage] = []
+        self._stage_start_shape = self.shape
+        self._n = 0
+
+    def _name(self, base):
+        self._n += 1
+        return f"{base}_{self._n}"
+
+    def _add_w(self, *arrays) -> int:
+        idx = len(self.weights)
+        self.weights.extend(arrays)
+        return idx
+
+    # -- primitive layers ---------------------------------------------------
+
+    def conv(self, k, cout, stride=1, act="relu6"):
+        h, w, cin = self.shape
+        wgt, b = self.init.conv(k, k, cin, cout)
+        i = self._add_w(wgt, b)
+        ho, _, _ = same_pad(h, k, stride)
+        wo, _, _ = same_pad(w, k, stride)
+        out_shape = (ho, wo, cout)
+        self.ops.append(lambda ws, x, i=i, stride=stride, act=act: L.conv2d(x, ws[i], ws[i + 1], stride, act))
+        self.metas.append(L.conv_meta(self._name(f"conv{k}x{k}"), k, cin, cout, self.shape, out_shape))
+        self.shape = out_shape
+
+    def dw(self, stride=1, act="relu6"):
+        h, w, c = self.shape
+        wgt, b = self.init.dw(c)
+        i = self._add_w(wgt, b)
+        ho, _, _ = same_pad(h, 3, stride)
+        wo, _, _ = same_pad(w, 3, stride)
+        out_shape = (ho, wo, c)
+        self.ops.append(lambda ws, x, i=i, stride=stride, act=act: depthwise3x3(x, ws[i], ws[i + 1], stride, act))
+        self.metas.append(L.dw_meta(self._name("dw3x3"), c, self.shape, out_shape))
+        self.shape = out_shape
+
+    def gap(self):
+        h, w, c = self.shape
+        self.ops.append(lambda ws, x: avgpool_global(x))
+        self.metas.append(L.misc_meta(self._name("gap"), "pool", 0, self.shape, (c,), flops=h * w * c))
+        self.shape = (c,)
+
+    def classifier(self, num_classes):
+        (nin,) = self.shape
+        wgt, b = self.init.dense(nin, num_classes)
+        i = self._add_w(wgt, b)
+        self.ops.append(lambda ws, x, i=i: L.dense(x, ws[i], ws[i + 1], "none"))
+        self.metas.append(L.linear_meta(self._name("classifier"), nin, num_classes))
+        self.shape = (num_classes,)
+
+    # -- composite blocks ---------------------------------------------------
+
+    def inverted_residual(self, t, cout, stride, act="relu6", start_dw=False, se_ratio=0.0):
+        """MNv2 inverted residual / MNv4 UIB / EffNet MBConv (by flags)."""
+        h, w, cin = self.shape
+        residual = stride == 1 and cin == cout
+        start = len(self.ops)
+
+        if start_dw:  # UIB extra-DW variant (MobileNetV4)
+            self.dw(stride=1, act="none")
+        hidden = make_divisible(cin * t)
+        if t != 1:
+            self.conv(1, hidden, 1, act)
+        self.dw(stride=stride, act=act)
+        if se_ratio > 0.0:  # EfficientNet squeeze-excite
+            c = self.shape[2]
+            reduced = max(8, make_divisible(cin * se_ratio))
+            w1, b1 = self.init.dense(c, reduced)
+            w2, b2 = self.init.dense(reduced, c)
+            i = self._add_w(w1, b1, w2, b2)
+            self.ops.append(
+                lambda ws, x, i=i: L.squeeze_excite(x, ws[i], ws[i + 1], ws[i + 2], ws[i + 3])
+            )
+            se_params = c * reduced + reduced + reduced * c + c
+            self.metas.append(
+                L.misc_meta(self._name("se"), "scale", se_params, self.shape, self.shape,
+                            flops=2 * (c * reduced * 2) + self.shape[0] * self.shape[1] * c)
+            )
+        self.conv(1, cout, 1, "none")
+
+        if residual:
+            body = self.ops[start:]
+            del self.ops[start:]
+
+            def block(ws, x, body=tuple(body)):
+                y = x
+                for op in body:
+                    y = op(ws, y)
+                return x + y
+
+            self.ops.append(block)
+            hh, ww, cc = self.shape
+            self.metas.append(L.misc_meta(self._name("add"), "add", 0, self.shape, self.shape, flops=hh * ww * cc))
+
+    # -- stage management ----------------------------------------------------
+
+    def end_stage(self, name):
+        ops = list(self.ops)
+        metas = list(self.metas)
+        weights = list(self.weights)
+        self.ops, self.metas, self.weights = [], [], []
+
+        def stage_fn(ws, x, ops=tuple(ops)):
+            for op in ops:
+                x = op(ws, x)
+            return x
+
+        self._stages.append(Stage(name, stage_fn, self._stage_start_shape, self.shape, metas, weights))
+        self._stage_start_shape = self.shape
+
+    def finish(self, name, input_shape, num_classes) -> Model:
+        assert not self.ops, "un-ended stage"
+        return Model(name, tuple(input_shape), num_classes, self._stages)
+
+
+# ---------------------------------------------------------------------------
+# Architectures
+# ---------------------------------------------------------------------------
+
+
+def mobilenet_v2(image_size=64, width=0.5, num_classes=1000, seed=42) -> Model:
+    """MobileNetV2 (Sandler et al., CVPR'18): inverted residuals, ReLU6."""
+    cfg = [  # (t, c, n, s) — the paper's Table 2
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ]
+    b = _Builder(L.Initializer(seed), (image_size, image_size, 3))
+    b.conv(3, make_divisible(32 * width), stride=2, act="relu6")
+    stage_after = {1: "stage0_stem_g1", 3: "stage1", 5: "stage2"}  # group idx -> stage cut
+    for gi, (t, c, n, s) in enumerate(cfg):
+        cout = make_divisible(c * width)
+        for i in range(n):
+            b.inverted_residual(t, cout, s if i == 0 else 1, act="relu6")
+        if gi in stage_after:
+            b.end_stage(stage_after[gi])
+    head = max(1024, make_divisible(1280 * width))
+    b.conv(1, head, 1, act="relu6")
+    b.gap()
+    b.classifier(num_classes)
+    b.end_stage("stage3_head")
+    return b.finish("mobilenet_v2", (image_size, image_size, 3), num_classes)
+
+
+def mobilenet_v4(image_size=64, width=0.5, num_classes=1000, seed=43) -> Model:
+    """MobileNetV4-style (Qin et al., ECCV'24): UIB blocks (extra-DW variant).
+
+    A conv-small-like configuration; the UIB "ExtraDW" block (leading
+    stride-1 depthwise before the expansion) is the architecture's signature.
+    """
+    cfg = [  # (t, c, n, s, extra_dw)
+        (1, 32, 1, 2, False),
+        (4, 48, 2, 2, True),
+        (4, 64, 3, 2, True),
+        (4, 96, 3, 1, False),
+        (6, 128, 2, 2, True),
+    ]
+    b = _Builder(L.Initializer(seed), (image_size, image_size, 3))
+    b.conv(3, make_divisible(32 * width), stride=2, act="relu6")
+    stage_after = {0: "stage0_stem_g1", 2: "stage1", 3: "stage2"}
+    for gi, (t, c, n, s, xdw) in enumerate(cfg):
+        cout = make_divisible(c * width)
+        for i in range(n):
+            b.inverted_residual(t, cout, s if i == 0 else 1, act="relu6", start_dw=xdw)
+        if gi in stage_after:
+            b.end_stage(stage_after[gi])
+    head = max(960, make_divisible(1280 * width))
+    b.conv(1, head, 1, act="relu6")
+    b.gap()
+    b.classifier(num_classes)
+    b.end_stage("stage3_head")
+    return b.finish("mobilenet_v4", (image_size, image_size, 3), num_classes)
+
+
+def efficientnet_b0(image_size=64, width=0.5, num_classes=1000, seed=44) -> Model:
+    """EfficientNet-B0-style (Tan & Le, ICML'19): MBConv + squeeze-excite, SiLU."""
+    cfg = [  # (t, c, n, s)
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 40, 2, 2),
+        (6, 80, 3, 2),
+        (6, 112, 3, 1),
+        (6, 192, 4, 2),
+        (6, 320, 1, 1),
+    ]
+    b = _Builder(L.Initializer(seed), (image_size, image_size, 3))
+    b.conv(3, make_divisible(32 * width), stride=2, act="silu")
+    stage_after = {1: "stage0_stem_g1", 3: "stage1", 5: "stage2"}
+    for gi, (t, c, n, s) in enumerate(cfg):
+        cout = make_divisible(c * width)
+        for i in range(n):
+            b.inverted_residual(t, cout, s if i == 0 else 1, act="silu", se_ratio=0.25)
+        if gi in stage_after:
+            b.end_stage(stage_after[gi])
+    head = max(1024, make_divisible(1280 * width))
+    b.conv(1, head, 1, act="silu")
+    b.gap()
+    b.classifier(num_classes)
+    b.end_stage("stage3_head")
+    return b.finish("efficientnet_b0", (image_size, image_size, 3), num_classes)
+
+
+ZOO = {
+    "mobilenet_v2": mobilenet_v2,
+    "mobilenet_v4": mobilenet_v4,
+    "efficientnet_b0": efficientnet_b0,
+}
+
+
+def build(name: str, image_size=64, width=0.5, num_classes=1000) -> Model:
+    if name not in ZOO:
+        raise KeyError(f"unknown model {name!r}; options: {sorted(ZOO)}")
+    return ZOO[name](image_size=image_size, width=width, num_classes=num_classes)

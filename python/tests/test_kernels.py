@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/strides/seeds; every case asserts allclose.
+This is the CORE correctness signal for the compute layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_bias_act, depthwise3x3, avgpool_global, same_pad
+from compile.kernels.matmul import vmem_bytes as mm_vmem, mxu_utilization, apply_act
+from compile.kernels.depthwise import vmem_bytes as dw_vmem
+from compile.kernels.ref import (
+    ref_matmul_bias_act,
+    ref_depthwise3x3,
+    ref_avgpool_global,
+)
+
+ACTS = ["none", "relu", "relu6", "sigmoid", "silu"]
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_matmul_acts(act):
+    rng = np.random.RandomState(0)
+    x, w, b = _rand(rng, 64, 32), _rand(rng, 32, 48), _rand(rng, 48)
+    got = matmul_bias_act(x, w, b, act)
+    want = ref_matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 96),
+    n=st.integers(1, 300),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_shape_sweep(m, k, n, act, seed):
+    rng = np.random.RandomState(seed)
+    x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    got = matmul_bias_act(x, w, b, act)
+    want = ref_matmul_bias_act(x, w, b, act)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tile_boundary_shapes():
+    # Exactly at / just around the 128-tile boundaries.
+    rng = np.random.RandomState(1)
+    for m in (127, 128, 129):
+        for n in (127, 128, 129):
+            x, w, b = _rand(rng, m, 16), _rand(rng, 16, n), _rand(rng, n)
+            np.testing.assert_allclose(
+                matmul_bias_act(x, w, b, "relu"),
+                ref_matmul_bias_act(x, w, b, "relu"),
+                rtol=1e-5,
+                atol=1e-5,
+            )
+
+
+def test_matmul_custom_tiles():
+    rng = np.random.RandomState(2)
+    x, w, b = _rand(rng, 200, 40), _rand(rng, 40, 72), _rand(rng, 72)
+    for tm, tn in [(32, 32), (64, 128), (256, 8)]:
+        np.testing.assert_allclose(
+            matmul_bias_act(x, w, b, "none", tile_m=tm, tile_n=tn),
+            ref_matmul_bias_act(x, w, b, "none"),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+def test_matmul_rejects_bad_act():
+    rng = np.random.RandomState(0)
+    with pytest.raises(ValueError):
+        matmul_bias_act(_rand(rng, 4, 4), _rand(rng, 4, 4), _rand(rng, 4), "tanh")
+
+
+def test_apply_act_values():
+    x = jnp.asarray([-1.0, 0.0, 3.0, 7.0], jnp.float32)
+    np.testing.assert_allclose(apply_act(x, "relu"), [0, 0, 3, 7])
+    np.testing.assert_allclose(apply_act(x, "relu6"), [0, 0, 3, 6])
+    np.testing.assert_allclose(apply_act(x, "none"), x)
+
+
+def test_mm_perf_estimators():
+    # Analytic estimators used by EXPERIMENTS.md #Perf-L1 are sane.
+    assert mm_vmem(4096, 64, 128, tile_m=128, tile_n=128) == 4 * (
+        128 * 64 + 64 * 128 + 128 + 128 * 128
+    )
+    assert 0.0 < mxu_utilization(100, 32, 100) <= 1.0
+    assert mxu_utilization(128, 32, 128, tile_m=128, tile_n=128) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# depthwise3x3
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("act", ["none", "relu6", "silu"])
+def test_depthwise_basic(stride, act):
+    rng = np.random.RandomState(3)
+    x, w, b = _rand(rng, 16, 16, 24), _rand(rng, 3, 3, 24), _rand(rng, 24)
+    got = depthwise3x3(x, w, b, stride, act)
+    want = ref_depthwise3x3(x, w, b, stride, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(3, 40),
+    w=st.integers(3, 40),
+    c=st.integers(1, 160),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_shape_sweep(h, w, c, stride, seed):
+    rng = np.random.RandomState(seed)
+    x, wgt, b = _rand(rng, h, w, c), _rand(rng, 3, 3, c), _rand(rng, c)
+    got = depthwise3x3(x, wgt, b, stride)
+    want = ref_depthwise3x3(x, wgt, b, stride)
+    assert got.shape == want.shape == (-(-h // stride), -(-w // stride), c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_odd_sizes():
+    rng = np.random.RandomState(4)
+    for h, w in [(7, 9), (5, 5), (3, 3), (31, 17)]:
+        for s in (1, 2):
+            x, wgt, b = _rand(rng, h, w, 8), _rand(rng, 3, 3, 8), _rand(rng, 8)
+            np.testing.assert_allclose(
+                depthwise3x3(x, wgt, b, s),
+                ref_depthwise3x3(x, wgt, b, s),
+                rtol=1e-5,
+                atol=1e-5,
+            )
+
+
+def test_same_pad_semantics():
+    # TF SAME semantics: out = ceil(in/stride).
+    assert same_pad(64, 3, 1) == (64, 1, 1)
+    assert same_pad(64, 3, 2) == (32, 0, 1)
+    assert same_pad(7, 3, 2) == (4, 1, 1)
+    out, lo, hi = same_pad(5, 3, 1)
+    assert out == 5 and lo + hi == 2
+
+
+def test_dw_perf_estimator():
+    assert dw_vmem(16, 16, 8) > 0
+    # channel tiling caps the slab at tile_c channels
+    assert dw_vmem(16, 16, 512, tile_c=128) < dw_vmem(16, 16, 512, tile_c=512)
+
+
+# ---------------------------------------------------------------------------
+# avgpool_global
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 32),
+    w=st.integers(1, 32),
+    c=st.integers(1, 512),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_avgpool_sweep(h, w, c, seed):
+    rng = np.random.RandomState(seed)
+    x = _rand(rng, h, w, c)
+    got = avgpool_global(x)
+    assert got.shape == (c,)
+    np.testing.assert_allclose(got, ref_avgpool_global(x), rtol=1e-5, atol=1e-6)
+
+
+def test_avgpool_constant():
+    x = jnp.full((4, 4, 3), 2.5, jnp.float32)
+    np.testing.assert_allclose(avgpool_global(x), [2.5, 2.5, 2.5], rtol=1e-6)

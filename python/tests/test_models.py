@@ -1,0 +1,105 @@
+"""L2 correctness: model zoo structure, shapes, stage composition."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile.aot import golden_image
+from compile.models import ZOO, build, make_divisible
+
+SMALL = dict(image_size=32, width=0.25, num_classes=10)
+
+
+@pytest.fixture(scope="module", params=sorted(ZOO))
+def small_model(request):
+    return build(request.param, **SMALL)
+
+
+def test_make_divisible():
+    assert make_divisible(16) == 16
+    assert make_divisible(8.0) == 8
+    assert make_divisible(1) == 8  # floor at divisor
+    for v in (13, 27, 100, 255):
+        assert make_divisible(v) % 8 == 0
+        assert make_divisible(v) >= 0.9 * v
+
+
+def test_stage_shapes_chain(small_model):
+    # Stage i out_shape must equal stage i+1 in_shape.
+    stages = small_model.stages
+    assert stages[0].in_shape == (32, 32, 3)
+    for a, b in zip(stages, stages[1:]):
+        assert tuple(a.out_shape) == tuple(b.in_shape)
+    assert tuple(stages[-1].out_shape) == (10,)
+
+
+def test_forward_shape_and_finite(small_model):
+    x = jnp.asarray(np.random.RandomState(0).randn(32, 32, 3), jnp.float32)
+    y = small_model.forward(x)
+    assert y.shape == (10,)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_stage_composition_equals_monolithic(small_model):
+    """Stage-chained execution must be bit-identical to the monolithic fn."""
+    x = jnp.asarray(golden_image(32, seed=7))
+    chained = x
+    for s in small_model.stages:
+        chained = s.fn(s.weights, chained)
+    mono = small_model.monolithic_fn()(small_model.all_weights, x)
+    np.testing.assert_allclose(np.asarray(chained), np.asarray(mono), rtol=0, atol=0)
+
+
+def test_deterministic_weights(small_model):
+    """Rebuilding the model reproduces identical weights (seeded init)."""
+    again = build(small_model.name, **SMALL)
+    assert len(again.all_weights) == len(small_model.all_weights)
+    for a, b in zip(again.all_weights, small_model.all_weights):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_metadata_consistency(small_model):
+    # params metadata matches actual weight element counts.
+    meta_params = small_model.params
+    actual = sum(int(np.prod(w.shape)) for w in small_model.all_weights)
+    assert meta_params == actual
+    # Eq. 5 costs are positive for conv/linear layers.
+    for m in small_model.layers:
+        if m.kind in ("conv2d", "linear"):
+            assert m.cost > 0
+        assert m.flops >= 0
+
+
+def test_eq5_cost_model_branches():
+    # Paper Eq. 5 exact values per layer kind.
+    cm = L.conv_meta("c", 3, 8, 16, (10, 10, 8), (10, 10, 16))
+    assert cm.cost == 3 * 3 * 8 * 16
+    lm = L.linear_meta("l", 100, 10)
+    assert lm.cost == 100 * 10
+    dm = L.dw_meta("d", 8, (10, 10, 8), (10, 10, 8))
+    assert dm.cost == dm.params  # "others" branch
+
+
+def test_paper_scale_models():
+    """At paper-ish settings the three models keep their relative ordering
+    (EfficientNet-B0 > MobileNetV4 > MobileNetV2 in params, as in Sec. IV-A3)."""
+    ms = {n: build(n, image_size=64, width=0.5, num_classes=1000) for n in ZOO}
+    p = {n: m.params for n, m in ms.items()}
+    assert p["efficientnet_b0"] > p["mobilenet_v2"]
+    for m in ms.values():
+        assert 0.5e6 < m.params < 6e6
+        assert len(m.stages) == 4
+
+
+def test_stage_weight_partition(small_model):
+    """all_weights is exactly the concatenation of per-stage weights."""
+    cat = [w for s in small_model.stages for w in s.weights]
+    assert len(cat) == len(small_model.all_weights)
+    for a, b in zip(cat, small_model.all_weights):
+        assert a is b
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(KeyError):
+        build("resnet50")

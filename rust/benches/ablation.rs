@@ -1,0 +1,127 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!  1. scheduler baselines (AMP4EC / round-robin / random / least-loaded
+//!     vs CE-Green) — what carbon awareness alone buys;
+//!  2. energy apportioning mode (quota-proportional vs active-attribution);
+//!  3. temporal intensity traces (diurnal grid) vs the paper's static
+//!     scenarios — the future-work extension;
+//!  4. task-level routing vs cross-node green pipeline.
+
+use carbonedge::carbon::IntensityTrace;
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::energy::{ApportionMode, Apportioner};
+use carbonedge::metrics::RunReport;
+use carbonedge::scheduler::{
+    Amp4ecScheduler, CarbonAwareScheduler, ConstrainedGreenScheduler, LeastLoadedScheduler, Mode,
+    NormalizedScheduler, RandomScheduler, RoundRobinScheduler, Scheduler,
+};
+use carbonedge::util::table::{f2, f4, Table};
+use carbonedge::workload::RequestStream;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("run `make artifacts` first");
+        return Ok(());
+    }
+    let coord = Coordinator::new(Config::default())?;
+    let model = coord.load_model("mobilenet_v2")?;
+    let stream = RequestStream {
+        image_size: coord.manifest.image_size,
+        arrivals: carbonedge::workload::Arrivals::ClosedLoop { count: 25 },
+        seed: 0,
+    };
+    let inputs = stream.inputs();
+
+    // --- 1. scheduler ablation -------------------------------------------
+    let mut t = Table::new(
+        "Ablation 1 — scheduler policies (25 inferences, MobileNetV2)",
+        &["Scheduler", "Latency (ms)", "gCO2/inf", "inf/gCO2", "node mix"],
+    );
+    let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(Amp4ecScheduler::new()),
+        Box::new(RoundRobinScheduler::new()),
+        Box::new(RandomScheduler::new(11)),
+        Box::new(LeastLoadedScheduler),
+        Box::new(CarbonAwareScheduler::new("ce-green", Mode::Green.weights())),
+        // Sec. V-A future-work variants: min-max normalized Balanced
+        // (does differentiate on carbon) and constraint-based green.
+        Box::new(NormalizedScheduler::new("balanced-normalized", Mode::Balanced.weights())),
+        Box::new(ConstrainedGreenScheduler::new(1.15)),
+    ];
+    for s in scheds.iter_mut() {
+        let run = coord.run_scheduled(&model, s.as_mut(), &inputs)?;
+        let r = RunReport::from_records(s.name(), &run.records);
+        let mix: Vec<String> = r.node_usage.iter().map(|(n, c)| format!("{n}:{c}")).collect();
+        t.row(vec![
+            r.label.clone(),
+            f2(r.latency_ms.mean),
+            f4(r.carbon_per_inf_g),
+            f2(r.carbon_efficiency),
+            mix.join(" "),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 2. apportioning mode ---------------------------------------------
+    let quotas: Vec<(&str, f64)> = coord
+        .cfg
+        .nodes
+        .iter()
+        .map(|n| (n.name.as_str(), n.cpu_quota))
+        .collect();
+    let mut t = Table::new(
+        "Ablation 2 — host-energy apportioning (100 J idle + 50 J dynamic window, node-green active)",
+        &["Mode", "node-high (J)", "node-medium (J)", "node-green (J)"],
+    );
+    for mode in [ApportionMode::QuotaProportional, ApportionMode::ActiveAttribution] {
+        let a = Apportioner::new(mode, &quotas);
+        let out = a.attribute(100.0, 50.0, Some("node-green"));
+        t.row(vec![
+            format!("{mode:?}"),
+            f2(out["node-high"]),
+            f2(out["node-medium"]),
+            f2(out["node-green"]),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 3. temporal intensity (future-work extension) ---------------------
+    let diurnal =
+        IntensityTrace::Diurnal { mean: 530.0, amplitude: 180.0, period_s: 86_400.0, phase_s: 0.0 };
+    let mut t = Table::new(
+        "Ablation 3 — static vs diurnal grid intensity (carbon of a 36 J inference at different times)",
+        &["time of day", "intensity (g/kWh)", "gCO2/inf (static 530)", "gCO2/inf (diurnal)"],
+    );
+    for (label, tsec) in
+        [("00:00", 0.0), ("06:00", 21_600.0), ("12:00", 43_200.0), ("18:00", 64_800.0)]
+    {
+        let kwh = carbonedge::carbon::joules_to_kwh(36.0);
+        t.row(vec![
+            label.to_string(),
+            f2(diurnal.at(tsec)),
+            f4(carbonedge::carbon::emissions_g(kwh, 530.0, 1.0)),
+            f4(carbonedge::carbon::emissions_g(kwh, diurnal.at(tsec), 1.0)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 4. task-level vs pipeline ------------------------------------------
+    let mut t = Table::new(
+        "Ablation 4 — task-level routing vs cross-node green pipeline",
+        &["Execution", "Latency (ms)", "gCO2/inf", "route"],
+    );
+    let mut green = CarbonAwareScheduler::new("green", Mode::Green.weights());
+    let run = coord.run_scheduled(&model, &mut green, &inputs)?;
+    let r = RunReport::from_records("task-level (CE-Green)", &run.records);
+    t.row(vec![r.label.clone(), f2(r.latency_ms.mean), f4(r.carbon_per_inf_g), "single node".into()]);
+    let recs = coord.run_pipeline(&model, 0.5, &inputs, 4.0)?;
+    let rp = RunReport::from_records("green pipeline (w=0.5)", &recs);
+    t.row(vec![
+        rp.label.clone(),
+        f2(rp.latency_ms.mean),
+        f4(rp.carbon_per_inf_g),
+        recs[0].node.clone(),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}

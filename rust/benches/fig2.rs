@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Fig. 2 (latency vs carbon-efficiency trade-off).
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let reps: usize = std::env::var("CE_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+    let coord = Coordinator::new(cfg)?;
+    let t2 = exp::table2(&coord, "mobilenet_v2", iters, reps)?;
+    println!("{}", exp::fig2_render(&t2));
+    let green = &t2.reports[4];
+    let mono = &t2.reports[0];
+    println!(
+        "paper Fig. 2 shape: Green 245.8 inf/g vs Mono 189.5 (1.30x); measured {:.1} vs {:.1} ({:.2}x)",
+        green.carbon_efficiency,
+        mono.carbon_efficiency,
+        green.carbon_efficiency / mono.carbon_efficiency
+    );
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Fig. 3 (w_C sweep: carbon-latency trade-off,
+//! transition threshold at w_C >= 0.50).
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    let coord = Coordinator::new(cfg)?;
+    let mono = exp::run_strategy(&coord, "mobilenet_v2", exp::Strategy::Monolithic, iters, 1)?;
+    let points = exp::fig3_sweep(&coord, "mobilenet_v2", iters, 0.05)?;
+    println!("{}", exp::fig3_render(&points, &mono));
+    println!("paper Fig. 3 shape: transition at w_C >= 0.50, ~22.9% reduction beyond it");
+    Ok(())
+}

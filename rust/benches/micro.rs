@@ -1,0 +1,96 @@
+//! Micro-benchmarks of the L3 hot-path building blocks (§Perf-L3 profile):
+//! score computation, JSON parsing, partition DP, image synthesis, and the
+//! end-to-end per-inference cost split (executor vs bookkeeping).
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::node::NodeRegistry;
+use carbonedge::partitioner::balanced_partition;
+use carbonedge::scheduler::{score_breakdown, Mode, TaskDemand};
+use carbonedge::util::bench::{black_box, Bencher};
+use carbonedge::util::json::Json;
+use carbonedge::workload::synthetic_image;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bencher::default();
+
+    // score computation (Eq. 3 full breakdown, one node)
+    let reg = NodeRegistry::paper_setup();
+    let task = TaskDemand::default();
+    let w = Mode::Green.weights();
+    let r = b.run_batched("score_breakdown", 1000, || {
+        black_box(score_breakdown(reg.get(0), &task, &w));
+    });
+    println!("{}", r.report());
+
+    // JSON parse of a manifest-sized document
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        let r = b.run("json_parse_manifest", || {
+            black_box(Json::parse(&text).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    // partition DP (12 stages into 3 groups)
+    let costs: Vec<u64> = (1..=12).map(|i| (i * 37) % 101 + 1).collect();
+    let r = b.run_batched("balanced_partition_12x3", 100, || {
+        black_box(balanced_partition(&costs, 3));
+    });
+    println!("{}", r.report());
+
+    // input synthesis (64x64 image)
+    let r = b.run("synthetic_image_64", || {
+        black_box(synthetic_image(64, 1));
+    });
+    println!("{}", r.report());
+
+    // end-to-end per-inference split: executor time vs total, and the
+    // §Perf-L3 A/B — device-resident weight buffers (hot path) vs
+    // literal-per-call re-upload (naive baseline).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let coord = Coordinator::new(Config::default())?;
+        let model = coord.load_model("mobilenet_v2")?;
+        let exec = coord.exec();
+        let input = synthetic_image(coord.manifest.image_size, 0);
+        let quick = Bencher::quick();
+
+        exec.register(
+            "perf/resident",
+            &model.monolithic_path(),
+            model.all_weights(),
+            true,
+        )?;
+        exec.execute("perf/resident", input.clone())?; // warmup
+        let resident = quick.run("pjrt_execute/resident-weights", || {
+            black_box(exec.execute("perf/resident", input.clone()).unwrap());
+        });
+        println!("{}", resident.report());
+
+        exec.register(
+            "perf/literals",
+            &model.monolithic_path(),
+            model.all_weights(),
+            false,
+        )?;
+        exec.execute("perf/literals", input.clone())?; // warmup
+        let literals = quick.run("pjrt_execute/literal-per-call", || {
+            black_box(exec.execute("perf/literals", input.clone()).unwrap());
+        });
+        println!("{}", literals.report());
+        println!(
+            "resident-weights speedup: {:.2}x (before {:.2} ms -> after {:.2} ms)",
+            literals.per_iter.mean / resident.per_iter.mean,
+            literals.per_iter.mean * 1e3,
+            resident.per_iter.mean * 1e3,
+        );
+
+        let stats = exec.stats()?;
+        println!(
+            "executor stats: {} executions, {:.1} ms device total, {:.1} ms upload total",
+            stats.executions,
+            stats.exec_time.as_secs_f64() * 1e3,
+            stats.upload_time.as_secs_f64() * 1e3,
+        );
+    }
+    Ok(())
+}

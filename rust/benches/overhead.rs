@@ -1,0 +1,54 @@
+//! Bench: scheduling overhead (paper Sec. IV-F: 0.03 ms/task, <1% CPU).
+//! Micro-benchmarks the node-selection hot path in isolation plus the
+//! in-situ overhead measured inside a real run.
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+use carbonedge::node::NodeRegistry;
+use carbonedge::scheduler::{CarbonAwareScheduler, Mode, Scheduler, TaskDemand};
+use carbonedge::util::bench::{black_box, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    // Isolated: pure Algorithm-1 selection over the 3-node fleet.
+    let registry = NodeRegistry::paper_setup();
+    let task = TaskDemand::default();
+    let b = Bencher::default();
+    for mode in Mode::all() {
+        let mut s = CarbonAwareScheduler::new(mode.name(), mode.weights());
+        let r = b.run_batched(&format!("nsa-select/{}", mode.name()), 1000, || {
+            black_box(s.select(&task, registry.nodes()));
+        });
+        println!("{}", r.report());
+    }
+
+    // Scaling: selection cost vs fleet size.
+    for n in [3usize, 10, 50, 100] {
+        let specs: Vec<_> = (0..n)
+            .map(|i| {
+                let mut spec = carbonedge::node::NodeSpec::paper_nodes()[i % 3].clone();
+                spec.name = format!("n{i}");
+                spec
+            })
+            .collect();
+        let reg = NodeRegistry::new(specs);
+        let mut s = CarbonAwareScheduler::new("green", Mode::Green.weights());
+        let r = b.run_batched(&format!("nsa-select/fleet-{n}"), 500, || {
+            black_box(s.select(&task, reg.nodes()));
+        });
+        println!("{}", r.report());
+    }
+
+    // In-situ: measured inside a real scheduled run (includes lock traffic).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let coord = Coordinator::new(Config::default())?;
+        let s = exp::scheduling_overhead(&coord, "mobilenet_v2", 50)?;
+        println!(
+            "in-situ scheduling overhead: mean {:.4} ms, p95 {:.4} ms (paper: 0.03 ms)",
+            s.mean, s.p95
+        );
+    } else {
+        println!("(skipping in-situ overhead: run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Table II (carbon footprint comparison,
+//! MobileNetV2, 50 inferences x 3 repetitions across 5 configurations).
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let reps: usize = std::env::var("CE_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+    let coord = Coordinator::new(cfg)?;
+    let t0 = std::time::Instant::now();
+    let t2 = exp::table2(&coord, "mobilenet_v2", iters, reps)?;
+    println!("{}", t2.render());
+    println!(
+        "paper Table II shape: Green +22.9% / Performance -26.7%; measured Green {:+.1}%",
+        t2.green_reduction() * 100.0
+    );
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

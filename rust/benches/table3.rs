@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Table III (comparison with related carbon-aware
+//! systems; our row carries the measured reduction).
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let coord = Coordinator::new(cfg)?;
+    // Table III only needs the Green-vs-Mono reduction: run those two.
+    let mono = exp::run_strategy(&coord, "mobilenet_v2", exp::Strategy::Monolithic, iters, 1)?;
+    let green = exp::run_strategy(
+        &coord,
+        "mobilenet_v2",
+        exp::Strategy::CarbonEdge(carbonedge::scheduler::Mode::Green),
+        iters,
+        1,
+    )?;
+    println!("{}", exp::table3_render(green.reduction_vs(&mono)));
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Table IV (multi-model carbon footprint:
+//! MobileNetV2 / MobileNetV4 / EfficientNet-B0, Monolithic vs CE-Green).
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let reps: usize = std::env::var("CE_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+    let coord = Coordinator::new(cfg)?;
+    let models: Vec<String> = coord.manifest.models.keys().cloned().collect();
+    let refs: Vec<&str> = models.iter().map(String::as_str).collect();
+    let rows = exp::table4(&coord, &refs, iters, reps)?;
+    println!("{}", exp::table4_render(&rows));
+    println!("paper Table IV shape: consistent reduction (14.8%-32.2%) across architectures");
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Table V (node usage distribution per mode).
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let coord = Coordinator::new(cfg)?;
+    let t5 = exp::table5(&coord, "mobilenet_v2", iters)?;
+    println!("{}", exp::table5_render(&t5));
+    println!("paper Table V shape: Performance/Balanced 100% node-high; Green 100% node-green");
+    Ok(())
+}

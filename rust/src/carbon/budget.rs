@@ -1,0 +1,154 @@
+//! Carbon budgets — the paper's "multi-tenant optimization with carbon
+//! budgets" future-work item (Sec. V-A): per-tenant emission allowances
+//! with admission control and periodic refill.
+
+use std::collections::BTreeMap;
+
+/// Admission decision for a task under a budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Enough budget: run now.
+    Admit,
+    /// Budget exhausted but the task may run later (deferral).
+    Defer,
+    /// Task alone exceeds the whole period budget: reject outright.
+    Reject,
+}
+
+/// A per-tenant carbon allowance over a refill period.
+#[derive(Debug, Clone)]
+pub struct CarbonBudget {
+    /// Grams of CO₂ allowed per period.
+    pub per_period_g: f64,
+    /// Remaining grams in the current period.
+    remaining_g: f64,
+    /// Period length (seconds).
+    pub period_s: f64,
+    /// Start of the current period (experiment clock, seconds).
+    period_start: f64,
+}
+
+impl CarbonBudget {
+    pub fn new(per_period_g: f64, period_s: f64) -> CarbonBudget {
+        assert!(per_period_g > 0.0 && period_s > 0.0);
+        CarbonBudget { per_period_g, remaining_g: per_period_g, period_s, period_start: 0.0 }
+    }
+
+    pub fn remaining_g(&self) -> f64 {
+        self.remaining_g
+    }
+
+    /// Advance the experiment clock, refilling at period boundaries.
+    pub fn tick(&mut self, now_s: f64) {
+        while now_s - self.period_start >= self.period_s {
+            self.period_start += self.period_s;
+            self.remaining_g = self.per_period_g;
+        }
+    }
+
+    /// Admission control for a task expected to emit `est_g`.
+    pub fn admit(&self, est_g: f64) -> Admission {
+        assert!(est_g >= 0.0);
+        if est_g > self.per_period_g {
+            Admission::Reject
+        } else if est_g > self.remaining_g {
+            Admission::Defer
+        } else {
+            Admission::Admit
+        }
+    }
+
+    /// Charge actual emissions after execution (may overdraw slightly when
+    /// the estimate was low; the debt carries into the period).
+    pub fn charge(&mut self, actual_g: f64) {
+        assert!(actual_g >= 0.0);
+        self.remaining_g -= actual_g;
+    }
+}
+
+/// Multi-tenant budget book.
+#[derive(Debug, Default)]
+pub struct BudgetBook {
+    tenants: BTreeMap<String, CarbonBudget>,
+}
+
+impl BudgetBook {
+    pub fn register(&mut self, tenant: &str, budget: CarbonBudget) {
+        self.tenants.insert(tenant.to_string(), budget);
+    }
+
+    pub fn get(&self, tenant: &str) -> Option<&CarbonBudget> {
+        self.tenants.get(tenant)
+    }
+
+    pub fn tick_all(&mut self, now_s: f64) {
+        for b in self.tenants.values_mut() {
+            b.tick(now_s);
+        }
+    }
+
+    /// Admission for a tenant's task; unknown tenants are admitted
+    /// (no budget configured).
+    pub fn admit(&self, tenant: &str, est_g: f64) -> Admission {
+        self.tenants.get(tenant).map(|b| b.admit(est_g)).unwrap_or(Admission::Admit)
+    }
+
+    pub fn charge(&mut self, tenant: &str, actual_g: f64) {
+        if let Some(b) = self.tenants.get_mut(tenant) {
+            b.charge(actual_g);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_defer_reject() {
+        let b = CarbonBudget::new(1.0, 60.0);
+        assert_eq!(b.admit(0.4), Admission::Admit);
+        assert_eq!(b.admit(1.5), Admission::Reject);
+        let mut b = b;
+        b.charge(0.9);
+        assert_eq!(b.admit(0.4), Admission::Defer); // remaining 0.1 < 0.4
+        assert_eq!(b.admit(0.05), Admission::Admit);
+    }
+
+    #[test]
+    fn refill_at_period_boundary() {
+        let mut b = CarbonBudget::new(1.0, 60.0);
+        b.charge(1.0);
+        assert!(b.remaining_g() <= 0.0 + 1e-12);
+        b.tick(59.9);
+        assert!(b.remaining_g() <= 0.0 + 1e-12); // not yet
+        b.tick(60.0);
+        assert_eq!(b.remaining_g(), 1.0);
+        // multiple periods elapse at once
+        b.charge(1.0);
+        b.tick(400.0);
+        assert_eq!(b.remaining_g(), 1.0);
+    }
+
+    #[test]
+    fn overdraw_carries_debt() {
+        let mut b = CarbonBudget::new(1.0, 60.0);
+        b.charge(1.3); // actual exceeded estimate
+        assert!((b.remaining_g() + 0.3).abs() < 1e-12);
+        assert_eq!(b.admit(0.1), Admission::Defer);
+    }
+
+    #[test]
+    fn multi_tenant_isolation() {
+        let mut book = BudgetBook::default();
+        book.register("team-a", CarbonBudget::new(0.5, 60.0));
+        book.register("team-b", CarbonBudget::new(2.0, 60.0));
+        book.charge("team-a", 0.5);
+        assert_eq!(book.admit("team-a", 0.1), Admission::Defer);
+        assert_eq!(book.admit("team-b", 0.1), Admission::Admit);
+        // unknown tenant: no budget -> admitted
+        assert_eq!(book.admit("team-c", 99.0), Admission::Admit);
+        book.tick_all(61.0);
+        assert_eq!(book.admit("team-a", 0.1), Admission::Admit);
+    }
+}

@@ -1,0 +1,124 @@
+//! Temporal carbon-aware deferral — the paper's Sec. II-E observation
+//! ("deferring non-urgent tasks to low-carbon time periods") and its
+//! "real-time carbon intensity integration" future-work item, implemented
+//! against [`IntensityTrace`].
+
+use super::IntensityTrace;
+
+/// Decision for a deferrable task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeferDecision {
+    /// Run now at the current intensity.
+    RunNow { intensity: f64 },
+    /// Wait until `at_s` (experiment clock) where intensity is lower.
+    Defer { at_s: f64, intensity: f64 },
+}
+
+/// Policy: run a task now, or defer it (within a deadline) to the
+/// lowest-intensity slot the trace forecasts.
+#[derive(Debug, Clone)]
+pub struct DeferralPolicy {
+    /// Forecast sampling resolution (seconds).
+    pub resolution_s: f64,
+    /// Minimum relative improvement required to defer (e.g. 0.05 = 5%).
+    pub min_gain: f64,
+}
+
+impl Default for DeferralPolicy {
+    fn default() -> Self {
+        DeferralPolicy { resolution_s: 300.0, min_gain: 0.05 }
+    }
+}
+
+impl DeferralPolicy {
+    /// Decide for a task arriving at `now_s` with slack until
+    /// `deadline_s` (absolute, experiment clock).
+    pub fn decide(&self, trace: &IntensityTrace, now_s: f64, deadline_s: f64) -> DeferDecision {
+        assert!(deadline_s >= now_s);
+        let now_i = trace.at(now_s);
+        let mut best_t = now_s;
+        let mut best_i = now_i;
+        let mut t = now_s;
+        while t <= deadline_s {
+            let i = trace.at(t);
+            if i < best_i {
+                best_i = i;
+                best_t = t;
+            }
+            t += self.resolution_s;
+        }
+        if best_t > now_s && best_i < now_i * (1.0 - self.min_gain) {
+            DeferDecision::Defer { at_s: best_t, intensity: best_i }
+        } else {
+            DeferDecision::RunNow { intensity: now_i }
+        }
+    }
+
+    /// Expected carbon saving (grams) of the decision for a task of
+    /// `energy_kwh`.
+    pub fn saving_g(&self, trace: &IntensityTrace, now_s: f64, deadline_s: f64, energy_kwh: f64) -> f64 {
+        match self.decide(trace, now_s, deadline_s) {
+            DeferDecision::RunNow { .. } => 0.0,
+            DeferDecision::Defer { intensity, .. } => {
+                (trace.at(now_s) - intensity) * energy_kwh
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diurnal() -> IntensityTrace {
+        // Peak ~710 at 06:00, trough ~350 at 18:00 (mean 530 ± 180).
+        IntensityTrace::Diurnal { mean: 530.0, amplitude: 180.0, period_s: 86_400.0, phase_s: 0.0 }
+    }
+
+    #[test]
+    fn static_trace_never_defers() {
+        let p = DeferralPolicy::default();
+        let d = p.decide(&IntensityTrace::Static(530.0), 0.0, 86_400.0);
+        assert_eq!(d, DeferDecision::RunNow { intensity: 530.0 });
+    }
+
+    #[test]
+    fn defers_from_peak_to_trough() {
+        let p = DeferralPolicy::default();
+        // At 06:00 (peak), with 24h slack, defer towards the trough.
+        let d = p.decide(&diurnal(), 21_600.0, 21_600.0 + 86_400.0);
+        match d {
+            DeferDecision::Defer { intensity, at_s } => {
+                assert!(intensity < 380.0, "deferred intensity {intensity}");
+                assert!(at_s > 21_600.0);
+            }
+            other => panic!("expected defer, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tight_deadline_runs_now() {
+        let p = DeferralPolicy::default();
+        // 10 minutes of slack at the peak: intensity barely moves.
+        let d = p.decide(&diurnal(), 21_600.0, 21_600.0 + 600.0);
+        assert!(matches!(d, DeferDecision::RunNow { .. }));
+    }
+
+    #[test]
+    fn saving_positive_when_deferring() {
+        let p = DeferralPolicy::default();
+        let kwh = 1e-5; // one paper-scale inference
+        let s = p.saving_g(&diurnal(), 21_600.0, 21_600.0 + 86_400.0, kwh);
+        assert!(s > 0.0);
+        // trough -> no saving available
+        let s2 = p.saving_g(&diurnal(), 64_800.0, 64_800.0 + 3_600.0, kwh);
+        assert_eq!(s2, 0.0);
+    }
+
+    #[test]
+    fn min_gain_threshold_respected() {
+        let strict = DeferralPolicy { resolution_s: 300.0, min_gain: 0.99 };
+        let d = strict.decide(&diurnal(), 21_600.0, 21_600.0 + 86_400.0);
+        assert!(matches!(d, DeferDecision::RunNow { .. }));
+    }
+}

@@ -1,0 +1,130 @@
+//! Grid carbon-intensity data: named regional scenarios (the paper's static
+//! setup, Sec. IV-A1) and temporal traces (the paper's future-work
+//! extension: "real-time carbon intensity integration").
+
+use super::GramsPerKwh;
+
+/// A named grid region with a representative static intensity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Region {
+    pub name: &'static str,
+    pub intensity: GramsPerKwh,
+}
+
+/// Representative regional intensities cited by the paper (Sec. II-E,
+/// IV-A1): coal-heavy grids >800, China average ~530, hydro-rich <200,
+/// renewable areas <100 gCO₂/kWh; plus the paper's three node scenarios.
+pub const REGIONS: &[Region] = &[
+    Region { name: "coal-north-china", intensity: 820.0 },
+    Region { name: "node-high-scenario", intensity: 620.0 },
+    Region { name: "china-average", intensity: 530.0 },
+    Region { name: "global-average", intensity: 475.0 },
+    Region { name: "node-green-scenario", intensity: 380.0 },
+    Region { name: "yunnan-hydro", intensity: 180.0 },
+    Region { name: "renewable-zone", intensity: 90.0 },
+    Region { name: "nordic-hydro", intensity: 45.0 },
+];
+
+/// Look up a named region.
+pub fn region(name: &str) -> Option<Region> {
+    REGIONS.iter().copied().find(|r| r.name == name)
+}
+
+/// Time-varying carbon intensity. The paper uses `Static`; `Diurnal` and
+/// `Trace` implement its future-work extension so schedulers can be
+/// evaluated against temporal variation too (bench `ablation`).
+#[derive(Debug, Clone)]
+pub enum IntensityTrace {
+    /// Constant intensity (the paper's experimental setting).
+    Static(GramsPerKwh),
+    /// Sinusoidal day curve: `mean + amp * sin(2π (t - phase)/period)`.
+    /// Approximates solar-driven grids (low at noon, high at night).
+    Diurnal { mean: GramsPerKwh, amplitude: f64, period_s: f64, phase_s: f64 },
+    /// Piecewise-constant samples `(t_seconds, intensity)`, step-held.
+    Trace(Vec<(f64, GramsPerKwh)>),
+}
+
+impl IntensityTrace {
+    /// Intensity at time `t` seconds from experiment start.
+    pub fn at(&self, t: f64) -> GramsPerKwh {
+        match self {
+            IntensityTrace::Static(v) => *v,
+            IntensityTrace::Diurnal { mean, amplitude, period_s, phase_s } => {
+                let x = 2.0 * std::f64::consts::PI * (t - phase_s) / period_s;
+                (mean + amplitude * x.sin()).max(0.0)
+            }
+            IntensityTrace::Trace(points) => {
+                if points.is_empty() {
+                    return 0.0;
+                }
+                // step-hold: last sample with time <= t (or first sample)
+                let mut current = points[0].1;
+                for &(ts, v) in points {
+                    if ts <= t {
+                        current = v;
+                    } else {
+                        break;
+                    }
+                }
+                current
+            }
+        }
+    }
+
+    /// Mean over `[0, horizon]` by midpoint sampling (reporting helper).
+    pub fn mean(&self, horizon: f64, samples: usize) -> GramsPerKwh {
+        assert!(samples > 0);
+        (0..samples)
+            .map(|i| self.at((i as f64 + 0.5) * horizon / samples as f64))
+            .sum::<f64>()
+            / samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_cover_paper_scenarios() {
+        assert_eq!(region("node-high-scenario").unwrap().intensity, 620.0);
+        assert_eq!(region("china-average").unwrap().intensity, 530.0);
+        assert_eq!(region("node-green-scenario").unwrap().intensity, 380.0);
+        assert!(region("atlantis").is_none());
+        // ordering: coal-heavy above renewable
+        assert!(region("coal-north-china").unwrap().intensity > 800.0);
+        assert!(region("renewable-zone").unwrap().intensity < 100.0);
+    }
+
+    #[test]
+    fn static_trace_constant() {
+        let t = IntensityTrace::Static(530.0);
+        assert_eq!(t.at(0.0), 530.0);
+        assert_eq!(t.at(1e6), 530.0);
+        assert_eq!(t.mean(100.0, 10), 530.0);
+    }
+
+    #[test]
+    fn diurnal_oscillates_and_clamps() {
+        let t = IntensityTrace::Diurnal { mean: 100.0, amplitude: 150.0, period_s: 86400.0, phase_s: 0.0 };
+        // peak at period/4
+        assert!((t.at(21600.0) - 250.0).abs() < 1.0);
+        // trough clamps at zero (mean-amp < 0)
+        assert_eq!(t.at(64800.0), 0.0);
+        // mean over a full period is >= 0 and <= mean+amp
+        let m = t.mean(86400.0, 1000);
+        assert!(m > 0.0 && m < 250.0);
+    }
+
+    #[test]
+    fn trace_step_holds() {
+        let t = IntensityTrace::Trace(vec![(0.0, 500.0), (10.0, 300.0), (20.0, 700.0)]);
+        assert_eq!(t.at(0.0), 500.0);
+        assert_eq!(t.at(9.9), 500.0);
+        assert_eq!(t.at(10.0), 300.0);
+        assert_eq!(t.at(25.0), 700.0);
+        // before first sample: first value
+        assert_eq!(IntensityTrace::Trace(vec![(5.0, 42.0)]).at(0.0), 42.0);
+        assert_eq!(IntensityTrace::Trace(vec![]).at(1.0), 0.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Carbon accounting: grid carbon-intensity data and the paper's emission
+//! model (Eq. 2), plus temporal intensity traces (the paper's stated
+//! future-work extension, implemented here behind the same interface).
+
+mod budget;
+mod deferral;
+mod intensity;
+
+pub use budget::{Admission, BudgetBook, CarbonBudget};
+pub use deferral::{DeferDecision, DeferralPolicy};
+pub use intensity::{region, IntensityTrace, Region, REGIONS};
+
+/// Grid carbon intensity in gCO₂/kWh.
+pub type GramsPerKwh = f64;
+
+/// Power Usage Effectiveness. The paper defaults to 1.0 for edge devices.
+pub const DEFAULT_PUE: f64 = 1.0;
+
+/// Paper Eq. 2: `C = E_total * I_carbon * PUE`.
+///
+/// `energy_kwh` in kWh, `intensity` in gCO₂/kWh; result in grams of CO₂.
+pub fn emissions_g(energy_kwh: f64, intensity: GramsPerKwh, pue: f64) -> f64 {
+    assert!(energy_kwh >= 0.0, "negative energy");
+    assert!(intensity >= 0.0, "negative intensity");
+    assert!(pue >= 1.0, "PUE < 1 is unphysical");
+    energy_kwh * intensity * pue
+}
+
+/// Joules -> kWh (1 kWh = 3.6e6 J).
+pub fn joules_to_kwh(j: f64) -> f64 {
+    j / 3.6e6
+}
+
+/// Watts sustained for `ms` milliseconds -> kWh.
+/// This is the paper's `E = P * T / 3_600_000` (with T in ms) conversion
+/// used inside the carbon-efficiency score (Eq. 4).
+pub fn watts_ms_to_kwh(watts: f64, ms: f64) -> f64 {
+    watts * ms / 3.6e9
+}
+
+/// Carbon efficiency metric reported in Fig. 2: inferences per gram CO₂.
+pub fn carbon_efficiency(inferences: u64, grams: f64) -> f64 {
+    if grams <= 0.0 {
+        return f64::INFINITY;
+    }
+    inferences as f64 / grams
+}
+
+/// A carbon "ledger" accumulating emissions per label (node / experiment).
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    entries: std::collections::BTreeMap<String, LedgerEntry>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LedgerEntry {
+    pub energy_kwh: f64,
+    pub carbon_g: f64,
+    pub tasks: u64,
+}
+
+impl Ledger {
+    pub fn charge(&mut self, label: &str, energy_kwh: f64, intensity: GramsPerKwh, pue: f64) {
+        let e = self.entries.entry(label.to_string()).or_default();
+        e.energy_kwh += energy_kwh;
+        e.carbon_g += emissions_g(energy_kwh, intensity, pue);
+        e.tasks += 1;
+    }
+
+    pub fn get(&self, label: &str) -> LedgerEntry {
+        self.entries.get(label).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> LedgerEntry {
+        let mut t = LedgerEntry::default();
+        for e in self.entries.values() {
+            t.energy_kwh += e.energy_kwh;
+            t.carbon_g += e.carbon_g;
+            t.tasks += e.tasks;
+        }
+        t
+    }
+
+    pub fn labels(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_exact() {
+        // 1 kWh at 530 g/kWh, PUE 1.0 -> 530 g.
+        assert_eq!(emissions_g(1.0, 530.0, 1.0), 530.0);
+        // PUE scales linearly.
+        assert_eq!(emissions_g(2.0, 100.0, 1.5), 300.0);
+        assert_eq!(emissions_g(0.0, 620.0, 1.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pue_below_one_rejected() {
+        emissions_g(1.0, 100.0, 0.5);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        assert!((joules_to_kwh(3.6e6) - 1.0).abs() < 1e-12);
+        // 500 W for 255 ms = 0.03542 Wh = 3.542e-5 kWh
+        let kwh = watts_ms_to_kwh(500.0, 255.0);
+        assert!((kwh - 500.0 * 0.255 / 3.6e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // The paper's monolithic MobileNetV2 datum: 0.0053 gCO2/inference at
+        // 530 g/kWh implies exactly 1e-5 kWh (36 J) per inference.
+        let kwh = 0.0053 / 530.0;
+        assert!((emissions_g(kwh, 530.0, DEFAULT_PUE) - 0.0053).abs() < 1e-12);
+        assert!((joules_to_kwh(36.0) - kwh).abs() < 1e-8);
+    }
+
+    #[test]
+    fn efficiency_metric() {
+        // Fig. 2: 50 inferences at 0.0041 g/inf -> 243.9 inf/g.
+        let eff = carbon_efficiency(50, 50.0 * 0.0041);
+        assert!((eff - 1.0 / 0.0041).abs() < 1e-9);
+        assert!(carbon_efficiency(5, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = Ledger::default();
+        l.charge("node-green", 0.001, 380.0, 1.0);
+        l.charge("node-green", 0.001, 380.0, 1.0);
+        l.charge("node-high", 0.001, 620.0, 1.0);
+        let g = l.get("node-green");
+        assert_eq!(g.tasks, 2);
+        assert!((g.carbon_g - 0.76).abs() < 1e-12);
+        let t = l.total();
+        assert_eq!(t.tasks, 3);
+        assert!((t.carbon_g - (0.76 + 0.62)).abs() < 1e-12);
+        assert_eq!(l.labels(), vec!["node-green", "node-high"]);
+    }
+}

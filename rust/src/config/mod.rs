@@ -1,0 +1,181 @@
+//! Configuration system: typed experiment/serving config with JSON file
+//! loading (`configs/*.json`) and programmatic defaults matching the
+//! paper's setup (Sec. IV-A).
+
+use anyhow::{Context, Result};
+
+use crate::energy::{CpuRapl, GpuSim, HostPowerModel, RamPower};
+use crate::node::NodeSpec;
+use crate::util::json::Json;
+
+/// Host power model calibrated to the paper's testbed scale (DESIGN.md §3):
+/// a DGX SPARK-class desktop host. Full-load ≈ 142 W, so a 255 ms
+/// monolithic inference consumes ≈ 36 J ⇒ 0.0053 gCO₂ at 530 g/kWh —
+/// exactly the paper's Table II monolithic datum.
+pub fn default_host_power() -> HostPowerModel {
+    HostPowerModel {
+        cpu: CpuRapl { idle_w: 30.0, peak_w: 80.0 },
+        gpu: GpuSim { idle_w: 12.0, peak_w: 50.0 },
+        ram: RamPower::new(32.0),
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Artifact directory (manifest.json + HLO + weights).
+    pub artifacts_dir: String,
+    /// Node fleet.
+    pub nodes: Vec<NodeSpec>,
+    /// Host power model (energy accounting).
+    pub host: HostPowerModel,
+    /// PUE (paper default 1.0 for edge).
+    pub pue: f64,
+    /// Grid intensity used for host-local (monolithic) execution — the
+    /// paper's "average scenario" (530 gCO₂/kWh).
+    pub host_intensity: f64,
+    /// Inferences per experiment configuration (paper: 50).
+    pub iterations: usize,
+    /// Repetitions per configuration (paper: 3).
+    pub repetitions: usize,
+    /// Upload weights as device-resident buffers (§Perf hot path).
+    pub resident_weights: bool,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            artifacts_dir: "artifacts".into(),
+            nodes: NodeSpec::paper_nodes(),
+            host: default_host_power(),
+            pue: crate::carbon::DEFAULT_PUE,
+            host_intensity: 530.0,
+            iterations: 50,
+            repetitions: 3,
+            resident_weights: true,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON config file; missing fields fall back to defaults.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing config {path}"))?;
+        Config::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Config> {
+        let mut c = Config::default();
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("pue").and_then(Json::as_f64) {
+            c.pue = v;
+        }
+        if let Some(v) = j.get("host_intensity").and_then(Json::as_f64) {
+            c.host_intensity = v;
+        }
+        if let Some(v) = j.get("iterations").and_then(Json::as_usize) {
+            c.iterations = v;
+        }
+        if let Some(v) = j.get("repetitions").and_then(Json::as_usize) {
+            c.repetitions = v;
+        }
+        if let Some(v) = j.get("resident_weights").and_then(Json::as_bool) {
+            c.resident_weights = v;
+        }
+        if let Some(h) = j.get("host") {
+            c.host = HostPowerModel {
+                cpu: CpuRapl {
+                    idle_w: h.req_f64("cpu_idle_w")?,
+                    peak_w: h.req_f64("cpu_peak_w")?,
+                },
+                gpu: GpuSim {
+                    idle_w: h.req_f64("gpu_idle_w")?,
+                    peak_w: h.req_f64("gpu_peak_w")?,
+                },
+                ram: RamPower::new(h.req_f64("ram_gb")?),
+            };
+        }
+        if let Some(ns) = j.get("nodes").and_then(Json::as_arr) {
+            c.nodes = ns.iter().map(node_from_json).collect::<Result<Vec<_>>>()?;
+        }
+        Ok(c)
+    }
+}
+
+fn node_from_json(j: &Json) -> Result<NodeSpec> {
+    Ok(NodeSpec {
+        name: j.req_str("name")?.to_string(),
+        cpu_quota: j.req_f64("cpu_quota")?,
+        mem_mb: j.req_usize("mem_mb")?,
+        intensity: j.req_f64("intensity")?,
+        rated_power_w: j.req_f64("rated_power_w")?,
+        prior_ms: j.req_f64("prior_ms")?,
+        alpha: j.get("alpha").and_then(Json::as_f64).unwrap_or(0.005),
+        overhead_ms: j.get("overhead_ms").and_then(Json::as_f64).unwrap_or(8.0),
+        time_scale: j.get("time_scale").and_then(Json::as_f64).unwrap_or(20.6),
+        adaptive: j.get("adaptive").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = Config::default();
+        assert_eq!(c.iterations, 50);
+        assert_eq!(c.repetitions, 3);
+        assert_eq!(c.pue, 1.0);
+        assert_eq!(c.host_intensity, 530.0);
+        assert_eq!(c.nodes.len(), 3);
+        // full-load host power ≈ 142 W (paper-scale energy; DESIGN.md §3)
+        assert!((c.host.power_watts(1.0, 1.0) - 142.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{
+              "iterations": 10, "pue": 1.2, "host_intensity": 475.0,
+              "resident_weights": false,
+              "nodes": [
+                {"name": "n0", "cpu_quota": 0.5, "mem_mb": 256, "intensity": 100.0,
+                 "rated_power_w": 40.0, "prior_ms": 100.0}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.iterations, 10);
+        assert_eq!(c.pue, 1.2);
+        assert!(!c.resident_weights);
+        assert_eq!(c.nodes.len(), 1);
+        assert_eq!(c.nodes[0].name, "n0");
+        assert_eq!(c.nodes[0].alpha, 0.005); // default
+        assert_eq!(c.nodes[0].time_scale, 20.6); // default
+        // untouched fields keep defaults
+        assert_eq!(c.repetitions, 3);
+    }
+
+    #[test]
+    fn host_override() {
+        let j = Json::parse(
+            r#"{"host": {"cpu_idle_w": 1, "cpu_peak_w": 2, "gpu_idle_w": 3,
+                          "gpu_peak_w": 4, "ram_gb": 8}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.host.power_watts(1.0, 1.0), 2.0 + 4.0 + 3.0);
+    }
+
+    #[test]
+    fn bad_node_rejected() {
+        let j = Json::parse(r#"{"nodes": [{"name": "x"}]}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Open-loop serving: a request queue fed by an arrival process, drained by
+//! the router (scheduler) into node containers. Demonstrates the framework
+//! as an online service rather than a batch experiment (examples/e2e).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::RunReport;
+use crate::node::{Container, ExecutionRecord, NodeRegistry};
+use crate::scheduler::{Scheduler, TaskDemand};
+use crate::workload::{Arrivals, RequestStream};
+
+/// Result of a serving session.
+pub struct ServeOutcome {
+    pub report: RunReport,
+    /// Mean time requests spent queued before dispatch (ms).
+    pub queue_ms_mean: f64,
+    /// Mean scheduling decision time (ms).
+    pub sched_ms_mean: f64,
+}
+
+/// The serving loop: owns the request queue and drives dispatch.
+pub struct ServingLoop<'a> {
+    pub registry: &'a NodeRegistry,
+    pub containers: &'a [Container],
+    pub demand: TaskDemand,
+}
+
+impl<'a> ServingLoop<'a> {
+    pub fn new(registry: &'a NodeRegistry, containers: &'a [Container]) -> ServingLoop<'a> {
+        assert_eq!(registry.len(), containers.len(), "one container per node");
+        ServingLoop { registry, containers, demand: TaskDemand::default() }
+    }
+
+    /// Serve a request stream. For `Poisson` arrivals, request issue times
+    /// follow the generated gaps in *real time*; the queue drains in FIFO
+    /// order (the executor serializes device work, as one accelerator
+    /// would).
+    pub fn serve(
+        &self,
+        stream: &RequestStream,
+        scheduler: &mut dyn Scheduler,
+        label: &str,
+    ) -> Result<ServeOutcome> {
+        let inputs = stream.inputs();
+        let gaps = stream.arrivals.gaps();
+        let mut queue: VecDeque<(usize, Instant)> = VecDeque::new();
+        let mut records: Vec<ExecutionRecord> = Vec::with_capacity(inputs.len());
+        let mut queue_ms = Vec::with_capacity(inputs.len());
+        let mut sched_ns: Vec<u64> = Vec::with_capacity(inputs.len());
+
+        match &stream.arrivals {
+            Arrivals::ClosedLoop { .. } => {
+                for (i, x) in inputs.iter().enumerate() {
+                    let _ = i;
+                    let t0 = Instant::now();
+                    let pick = scheduler.select(&self.demand, self.registry.nodes());
+                    sched_ns.push(t0.elapsed().as_nanos() as u64);
+                    let idx = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
+                    records.push(self.containers[idx].infer(x.clone())?);
+                    queue_ms.push(0.0);
+                }
+            }
+            Arrivals::Poisson { .. } => {
+                let start = Instant::now();
+                let mut issue_at: Vec<Duration> = Vec::with_capacity(inputs.len());
+                let mut acc = Duration::ZERO;
+                for g in &gaps {
+                    acc += Duration::from_secs_f64(*g);
+                    issue_at.push(acc);
+                }
+                let mut next = 0usize;
+                while records.len() < inputs.len() {
+                    // enqueue everything whose issue time has passed
+                    while next < inputs.len() && start.elapsed() >= issue_at[next] {
+                        queue.push_back((next, Instant::now()));
+                        next += 1;
+                    }
+                    if let Some((i, enq)) = queue.pop_front() {
+                        queue_ms.push(enq.elapsed().as_secs_f64() * 1e3);
+                        let t0 = Instant::now();
+                        let pick = scheduler.select(&self.demand, self.registry.nodes());
+                        sched_ns.push(t0.elapsed().as_nanos() as u64);
+                        let idx = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
+                        records.push(self.containers[idx].infer(inputs[i].clone())?);
+                    } else if next < inputs.len() {
+                        let wait = issue_at[next].saturating_sub(start.elapsed());
+                        std::thread::sleep(wait.min(Duration::from_millis(2)));
+                    }
+                }
+            }
+        }
+
+        let report = RunReport::from_records(label, &records);
+        Ok(ServeOutcome {
+            report,
+            queue_ms_mean: if queue_ms.is_empty() {
+                0.0
+            } else {
+                queue_ms.iter().sum::<f64>() / queue_ms.len() as f64
+            },
+            sched_ms_mean: if sched_ns.is_empty() {
+                0.0
+            } else {
+                sched_ns.iter().sum::<u64>() as f64 / sched_ns.len() as f64 / 1e6
+            },
+        })
+    }
+}

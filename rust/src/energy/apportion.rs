@@ -1,0 +1,155 @@
+//! Per-container energy apportioning.
+//!
+//! The paper (Sec. IV-A1, V-A) measures energy at the *host* level
+//! (CodeCarbon machine mode) and apportions it to Docker containers
+//! proportionally to their cgroup resource quotas — "an accounting method,
+//! not direct per-container measurement". Both that method and the
+//! active-attribution variant (dynamic energy charged to the container
+//! that executed the task) are implemented; experiments default to
+//! active attribution (DESIGN.md §3) and tests compare the two.
+
+use std::collections::BTreeMap;
+
+/// How host energy is attributed to containers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApportionMode {
+    /// The paper's accounting: share = quota_i / Σ quota (idle + dynamic).
+    QuotaProportional,
+    /// Dynamic energy goes to the active container; idle energy is split
+    /// by quota share.
+    ActiveAttribution,
+}
+
+/// Splits host energy among named containers.
+#[derive(Debug, Clone)]
+pub struct Apportioner {
+    pub mode: ApportionMode,
+    /// container -> cpu quota (the Docker `--cpus` value).
+    quotas: BTreeMap<String, f64>,
+}
+
+impl Apportioner {
+    pub fn new(mode: ApportionMode, quotas: &[(&str, f64)]) -> Apportioner {
+        let map: BTreeMap<String, f64> =
+            quotas.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        assert!(!map.is_empty(), "no containers");
+        assert!(map.values().all(|&q| q > 0.0), "quotas must be positive");
+        Apportioner { mode, quotas: map }
+    }
+
+    pub fn quota(&self, name: &str) -> Option<f64> {
+        self.quotas.get(name).copied()
+    }
+
+    pub fn total_quota(&self) -> f64 {
+        self.quotas.values().sum()
+    }
+
+    /// Quota share of a container (the paper's accounting ratio).
+    pub fn share(&self, name: &str) -> f64 {
+        self.quota(name).map(|q| q / self.total_quota()).unwrap_or(0.0)
+    }
+
+    /// Attribute one measurement window.
+    ///
+    /// * `idle_j`: host idle-floor energy during the window.
+    /// * `dynamic_j`: above-idle energy during the window.
+    /// * `active`: container that executed work during the window (if any).
+    ///
+    /// Returns container -> joules. Total is conserved exactly.
+    pub fn attribute(
+        &self,
+        idle_j: f64,
+        dynamic_j: f64,
+        active: Option<&str>,
+    ) -> BTreeMap<String, f64> {
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        match self.mode {
+            ApportionMode::QuotaProportional => {
+                for name in self.quotas.keys() {
+                    out.insert(name.clone(), (idle_j + dynamic_j) * self.share(name));
+                }
+            }
+            ApportionMode::ActiveAttribution => {
+                for name in self.quotas.keys() {
+                    out.insert(name.clone(), idle_j * self.share(name));
+                }
+                match active {
+                    Some(name) if self.quotas.contains_key(name) => {
+                        *out.get_mut(name).unwrap() += dynamic_j;
+                    }
+                    _ => {
+                        // No active container: dynamic energy falls back to
+                        // quota shares so nothing is lost.
+                        for name in self.quotas.keys().cloned().collect::<Vec<_>>() {
+                            let s = self.share(&name);
+                            *out.get_mut(&name).unwrap() += dynamic_j * s;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes() -> Apportioner {
+        // The paper's three nodes: 1.0 / 0.6 / 0.4 CPUs.
+        Apportioner::new(
+            ApportionMode::QuotaProportional,
+            &[("node-high", 1.0), ("node-medium", 0.6), ("node-green", 0.4)],
+        )
+    }
+
+    #[test]
+    fn quota_shares_paper_setup() {
+        let a = nodes();
+        assert!((a.total_quota() - 2.0).abs() < 1e-12);
+        assert!((a.share("node-high") - 0.5).abs() < 1e-12);
+        assert!((a.share("node-medium") - 0.3).abs() < 1e-12);
+        assert!((a.share("node-green") - 0.2).abs() < 1e-12);
+        assert_eq!(a.share("nope"), 0.0);
+    }
+
+    #[test]
+    fn quota_proportional_conserves() {
+        let a = nodes();
+        let out = a.attribute(100.0, 50.0, Some("node-green"));
+        let total: f64 = out.values().sum();
+        assert!((total - 150.0).abs() < 1e-9);
+        // active container irrelevant in this mode
+        assert!((out["node-high"] - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_attribution_charges_worker() {
+        let mut a = nodes();
+        a.mode = ApportionMode::ActiveAttribution;
+        let out = a.attribute(100.0, 50.0, Some("node-green"));
+        // idle split 50/30/20, green also gets all 50 dynamic
+        assert!((out["node-green"] - (20.0 + 50.0)).abs() < 1e-9);
+        assert!((out["node-high"] - 50.0).abs() < 1e-9);
+        let total: f64 = out.values().sum();
+        assert!((total - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_attribution_without_active_falls_back() {
+        let mut a = nodes();
+        a.mode = ApportionMode::ActiveAttribution;
+        let out = a.attribute(10.0, 20.0, None);
+        let total: f64 = out.values().sum();
+        assert!((total - 30.0).abs() < 1e-9);
+        assert!((out["node-high"] - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_quota_rejected() {
+        Apportioner::new(ApportionMode::QuotaProportional, &[("x", 0.0)]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Energy accounting substrate: simulated power sources (the paper's
+//! CodeCarbon + RAPL + nvidia-smi stack, Sec. III-B), an integrating host
+//! meter (Eq. 1), and the cgroup-quota apportioner (Sec. IV-A1).
+
+mod apportion;
+mod power;
+
+pub use apportion::{ApportionMode, Apportioner};
+pub use power::{CpuRapl, GpuSim, HostPowerModel, PowerModel, RamPower, RAM_WATTS_PER_GB};
+
+use std::time::Duration;
+
+/// Integrating host energy meter: the paper's Eq. 1
+/// `E_total = ∫ (P_GPU + P_CPU + P_RAM) dt`, discretized over samples
+/// (CodeCarbon's `measure_power_secs` behaviour).
+#[derive(Debug, Clone)]
+pub struct HostMeter {
+    model: HostPowerModel,
+    energy_j: f64,
+    elapsed: Duration,
+    samples: u64,
+}
+
+impl HostMeter {
+    pub fn new(model: HostPowerModel) -> HostMeter {
+        HostMeter { model, energy_j: 0.0, elapsed: Duration::ZERO, samples: 0 }
+    }
+
+    /// Record one sample period: utilizations in `[0,1]` held for `dt`.
+    pub fn sample(&mut self, dt: Duration, cpu_util: f64, gpu_util: f64) {
+        let p = self.model.power_watts(cpu_util, gpu_util);
+        self.energy_j += p * dt.as_secs_f64();
+        self.elapsed += dt;
+        self.samples += 1;
+    }
+
+    /// Total energy in joules (Eq. 1 integral so far).
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    pub fn energy_kwh(&self) -> f64 {
+        crate::carbon::joules_to_kwh(self.energy_j)
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.elapsed
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Average power over the metered window.
+    pub fn avg_power_w(&self) -> f64 {
+        let s = self.elapsed.as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.energy_j / s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn host() -> HostPowerModel {
+        HostPowerModel {
+            cpu: CpuRapl { idle_w: 40.0, peak_w: 240.0 },
+            gpu: GpuSim { idle_w: 60.0, peak_w: 400.0 },
+            ram: RamPower::new(64.0),
+        }
+    }
+
+    #[test]
+    fn eq1_integration() {
+        let mut m = HostMeter::new(host());
+        // idle for 1s: 40 + 60 + 24 = 124 W
+        m.sample(Duration::from_secs(1), 0.0, 0.0);
+        assert!((m.energy_j() - 124.0).abs() < 1e-9);
+        // full load 1s: 240 + 400 + 24 = 664 W
+        m.sample(Duration::from_secs(1), 1.0, 1.0);
+        assert!((m.energy_j() - (124.0 + 664.0)).abs() < 1e-9);
+        assert_eq!(m.samples(), 2);
+        assert!((m.avg_power_w() - 394.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kwh_conversion() {
+        let mut m = HostMeter::new(host());
+        m.sample(Duration::from_secs(3600), 0.0, 0.0);
+        // 124 W for 1 h = 0.124 kWh
+        assert!((m.energy_kwh() - 0.124).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractional_util_interpolates() {
+        let mut m = HostMeter::new(host());
+        m.sample(Duration::from_secs(1), 0.5, 0.0);
+        // cpu: 40 + 0.5*200 = 140; gpu 60; ram 24 => 224
+        assert!((m.energy_j() - 224.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,121 @@
+//! Simulated power sources standing in for the paper's measurement stack
+//! (DESIGN.md §7): RAPL (CPU), nvidia-smi/pynvml (GPU), and the paper's
+//! fixed 0.375 W/GB DDR4 RAM estimate (Sec. III-B1).
+
+/// The paper's RAM power constant: 0.375 W per gigabyte (DDR4).
+pub const RAM_WATTS_PER_GB: f64 = 0.375;
+
+/// A utilization-driven power source.
+pub trait PowerModel {
+    /// Power draw in watts at utilization `util` ∈ [0, 1].
+    fn power_watts(&self, util: f64) -> f64;
+}
+
+/// Simulated RAPL (Running Average Power Limit) CPU package power:
+/// linear idle→peak in utilization, the standard first-order model.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuRapl {
+    pub idle_w: f64,
+    pub peak_w: f64,
+}
+
+impl PowerModel for CpuRapl {
+    fn power_watts(&self, util: f64) -> f64 {
+        let u = util.clamp(0.0, 1.0);
+        self.idle_w + u * (self.peak_w - self.idle_w)
+    }
+}
+
+/// Simulated GPU power (nvidia-smi / pynvml equivalent).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSim {
+    pub idle_w: f64,
+    pub peak_w: f64,
+}
+
+impl PowerModel for GpuSim {
+    fn power_watts(&self, util: f64) -> f64 {
+        let u = util.clamp(0.0, 1.0);
+        self.idle_w + u * (self.peak_w - self.idle_w)
+    }
+}
+
+/// RAM power: capacity-proportional constant draw (paper Sec. III-B1).
+#[derive(Debug, Clone, Copy)]
+pub struct RamPower {
+    pub gb: f64,
+}
+
+impl RamPower {
+    pub fn new(gb: f64) -> RamPower {
+        assert!(gb >= 0.0);
+        RamPower { gb }
+    }
+}
+
+impl PowerModel for RamPower {
+    fn power_watts(&self, _util: f64) -> f64 {
+        self.gb * RAM_WATTS_PER_GB
+    }
+}
+
+/// The full host: CPU + GPU + RAM (the three sources of Eq. 1).
+#[derive(Debug, Clone, Copy)]
+pub struct HostPowerModel {
+    pub cpu: CpuRapl,
+    pub gpu: GpuSim,
+    pub ram: RamPower,
+}
+
+impl HostPowerModel {
+    pub fn power_watts(&self, cpu_util: f64, gpu_util: f64) -> f64 {
+        self.cpu.power_watts(cpu_util) + self.gpu.power_watts(gpu_util) + self.ram.power_watts(0.0)
+    }
+
+    /// Idle floor of the host.
+    pub fn idle_watts(&self) -> f64 {
+        self.power_watts(0.0, 0.0)
+    }
+
+    /// Dynamic (above-idle) power at the given utilizations.
+    pub fn dynamic_watts(&self, cpu_util: f64, gpu_util: f64) -> f64 {
+        self.power_watts(cpu_util, gpu_util) - self.idle_watts()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rapl_linear() {
+        let c = CpuRapl { idle_w: 10.0, peak_w: 110.0 };
+        assert_eq!(c.power_watts(0.0), 10.0);
+        assert_eq!(c.power_watts(1.0), 110.0);
+        assert_eq!(c.power_watts(0.25), 35.0);
+        // clamping
+        assert_eq!(c.power_watts(-1.0), 10.0);
+        assert_eq!(c.power_watts(2.0), 110.0);
+    }
+
+    #[test]
+    fn ram_paper_constant() {
+        // 1 GB -> 0.375 W, 512 MB -> 0.1875 W (paper Sec. III-B1)
+        assert_eq!(RamPower::new(1.0).power_watts(0.5), 0.375);
+        assert_eq!(RamPower::new(0.5).power_watts(0.0), 0.1875);
+        assert_eq!(RamPower::new(64.0).power_watts(0.0), 24.0);
+    }
+
+    #[test]
+    fn host_composition() {
+        let h = HostPowerModel {
+            cpu: CpuRapl { idle_w: 40.0, peak_w: 240.0 },
+            gpu: GpuSim { idle_w: 60.0, peak_w: 400.0 },
+            ram: RamPower::new(64.0),
+        };
+        assert_eq!(h.idle_watts(), 124.0);
+        assert_eq!(h.power_watts(1.0, 1.0), 664.0);
+        assert_eq!(h.dynamic_watts(1.0, 0.0), 200.0);
+        assert_eq!(h.dynamic_watts(0.0, 0.0), 0.0);
+    }
+}

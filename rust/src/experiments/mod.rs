@@ -1,0 +1,449 @@
+//! Experiment harness: one function per paper table/figure (DESIGN.md §4).
+//! Shared by `carbonedge reproduce`, the benches, and the examples.
+
+use anyhow::Result;
+
+use crate::coordinator::Coordinator;
+use crate::metrics::{average_reports, RunReport};
+use crate::scheduler::{Amp4ecScheduler, CarbonAwareScheduler, Mode, Weights};
+use crate::util::stats::Summary;
+use crate::util::table::{f2, f4, f5, pct, Table};
+use crate::workload::RequestStream;
+
+/// The experiment configurations (Table II's five, plus sweep points).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    Monolithic,
+    Amp4ec,
+    CarbonEdge(Mode),
+    /// Fig. 3 sweep point: custom carbon weight.
+    Sweep(f64),
+}
+
+impl Strategy {
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::Monolithic => "Monolithic".into(),
+            Strategy::Amp4ec => "AMP4EC".into(),
+            Strategy::CarbonEdge(m) => format!(
+                "CE-{}",
+                match m {
+                    Mode::Performance => "Performance",
+                    Mode::Green => "Green",
+                    Mode::Balanced => "Balanced",
+                }
+            ),
+            Strategy::Sweep(w) => format!("w_C={w:.2}"),
+        }
+    }
+
+    pub fn table2_order() -> [Strategy; 5] {
+        [
+            Strategy::Monolithic,
+            Strategy::Amp4ec,
+            Strategy::CarbonEdge(Mode::Performance),
+            Strategy::CarbonEdge(Mode::Balanced),
+            Strategy::CarbonEdge(Mode::Green),
+        ]
+    }
+}
+
+/// One live configuration during an interleaved run.
+struct Runner {
+    label: String,
+    kind: RunnerKind,
+    records: Vec<crate::node::ExecutionRecord>,
+    sched_ns: Vec<u64>,
+}
+
+enum RunnerKind {
+    Mono { container: crate::node::Container },
+    Sched {
+        sched: Box<dyn crate::scheduler::Scheduler>,
+        registry: crate::node::NodeRegistry,
+        containers: Vec<crate::node::Container>,
+    },
+}
+
+impl Runner {
+    fn build(coord: &Coordinator, model: &crate::model::LoadedModel, s: Strategy) -> Result<Runner> {
+        let kind = match s {
+            Strategy::Monolithic => {
+                let key = crate::deployer::register_monolithic(&coord.exec(), model, &coord.cfg)?;
+                let c = crate::node::Container::new(
+                    coord.host_node(),
+                    coord.exec(),
+                    coord.cfg.host,
+                    coord.cfg.pue,
+                    vec![key],
+                );
+                RunnerKind::Mono { container: c }
+            }
+            _ => {
+                let sched: Box<dyn crate::scheduler::Scheduler> = match s {
+                    Strategy::Amp4ec => Box::new(Amp4ecScheduler::new()),
+                    Strategy::CarbonEdge(mode) => {
+                        Box::new(CarbonAwareScheduler::new(mode.name(), mode.weights()))
+                    }
+                    Strategy::Sweep(w) => {
+                        Box::new(CarbonAwareScheduler::new("sweep", Weights::sweep(w)))
+                    }
+                    Strategy::Monolithic => unreachable!(),
+                };
+                let registry = coord.calibrated_registry(model)?;
+                let containers = crate::deployer::deploy_task_level(
+                    &coord.exec(),
+                    model,
+                    registry.nodes(),
+                    &coord.cfg,
+                )?;
+                RunnerKind::Sched { sched, registry, containers }
+            }
+        };
+        Ok(Runner { label: Strategy::label(&s), kind, records: Vec::new(), sched_ns: Vec::new() })
+    }
+
+    fn step(&mut self, input: &crate::runtime::Tensor) -> Result<()> {
+        match &mut self.kind {
+            RunnerKind::Mono { container } => {
+                self.records.push(container.infer(input.clone())?);
+            }
+            RunnerKind::Sched { sched, registry, containers } => {
+                let task = crate::scheduler::TaskDemand::default();
+                let t0 = std::time::Instant::now();
+                let pick = sched.select(&task, registry.nodes());
+                self.sched_ns.push(t0.elapsed().as_nanos() as u64);
+                let i = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
+                self.records.push(containers[i].infer(input.clone())?);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run several configurations **interleaved per inference** (the paper runs
+/// configurations back-to-back on a dedicated DGX; on this shared 1-core
+/// host, interleaving cancels slow host-performance drift so cross-config
+/// ratios — the quantities every table reports — stay stable).
+pub fn run_interleaved(
+    coord: &Coordinator,
+    model_name: &str,
+    strategies: &[Strategy],
+    iterations: usize,
+    repetitions: usize,
+) -> Result<Vec<RunReport>> {
+    let model = coord.load_model(model_name)?;
+    let mut all_reports: Vec<Vec<RunReport>> = vec![Vec::new(); strategies.len()];
+    for rep in 0..repetitions {
+        let stream = RequestStream {
+            image_size: coord.manifest.image_size,
+            arrivals: crate::workload::Arrivals::ClosedLoop { count: iterations },
+            seed: rep as u64 * 1000,
+        };
+        let inputs = stream.inputs();
+        let mut runners = strategies
+            .iter()
+            .map(|s| Runner::build(coord, &model, *s))
+            .collect::<Result<Vec<_>>>()?;
+        for input in &inputs {
+            for r in runners.iter_mut() {
+                r.step(input)?;
+            }
+        }
+        for (i, r) in runners.into_iter().enumerate() {
+            all_reports[i].push(RunReport::from_records(&r.label, &r.records));
+        }
+    }
+    Ok(all_reports.iter().map(|reps| average_reports(reps)).collect())
+}
+
+/// Run one configuration (`repetitions` × `iterations`, averaged) —
+/// the paper's experimental protocol (Sec. IV-A4).
+pub fn run_strategy(
+    coord: &Coordinator,
+    model_name: &str,
+    strategy: Strategy,
+    iterations: usize,
+    repetitions: usize,
+) -> Result<RunReport> {
+    Ok(run_interleaved(coord, model_name, &[strategy], iterations, repetitions)?.remove(0))
+}
+
+// ---------------------------------------------------------------------------
+// Table II — carbon footprint comparison (MobileNetV2)
+// ---------------------------------------------------------------------------
+
+pub struct Table2 {
+    pub reports: Vec<RunReport>,
+}
+
+pub fn table2(coord: &Coordinator, model: &str, iters: usize, reps: usize) -> Result<Table2> {
+    let reports = run_interleaved(coord, model, &Strategy::table2_order(), iters, reps)?;
+    Ok(Table2 { reports })
+}
+
+impl Table2 {
+    pub fn render(&self) -> String {
+        let base = &self.reports[0];
+        let mut t = Table::new(
+            "Table II — Carbon footprint comparison (MobileNetV2)",
+            &["Configuration", "Latency (ms)", "Throughput (req/s)", "Carbon (gCO2/inf)", "Reduction vs Mono"],
+        );
+        for r in &self.reports {
+            let red = if std::ptr::eq(r, base) { "-".to_string() } else { pct(r.reduction_vs(base)) };
+            t.row(vec![
+                r.label.clone(),
+                f2(r.latency_ms.mean),
+                f2(r.throughput_rps),
+                f4(r.carbon_per_inf_g),
+                red,
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn green_reduction(&self) -> f64 {
+        self.reports[4].reduction_vs(&self.reports[0])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — latency vs carbon-efficiency trade-off
+// ---------------------------------------------------------------------------
+
+pub fn fig2_render(t2: &Table2) -> String {
+    let mut t = Table::new(
+        "Fig. 2 — Latency vs carbon efficiency (series data)",
+        &["Configuration", "Latency (ms)", "Carbon efficiency (inf/gCO2)"],
+    );
+    for r in &t2.reports {
+        t.row(vec![r.label.clone(), f2(r.latency_ms.mean), f2(r.carbon_efficiency)]);
+    }
+    let mut out = t.render();
+    out.push_str(&ascii_scatter(
+        &t2.reports
+            .iter()
+            .map(|r| (r.label.clone(), r.latency_ms.mean, r.carbon_efficiency))
+            .collect::<Vec<_>>(),
+    ));
+    out
+}
+
+/// Minimal ASCII scatter so the "figure" exists as a figure.
+fn ascii_scatter(points: &[(String, f64, f64)]) -> String {
+    if points.is_empty() {
+        return String::new();
+    }
+    let (w, h) = (60usize, 14usize);
+    let xmin = points.iter().map(|p| p.1).fold(f64::MAX, f64::min);
+    let xmax = points.iter().map(|p| p.1).fold(f64::MIN, f64::max);
+    let ymin = points.iter().map(|p| p.2).fold(f64::MAX, f64::min);
+    let ymax = points.iter().map(|p| p.2).fold(f64::MIN, f64::max);
+    let xr = (xmax - xmin).max(1e-9);
+    let yr = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![b' '; w]; h];
+    for (i, (_, x, y)) in points.iter().enumerate() {
+        let cx = (((x - xmin) / xr) * (w - 1) as f64).round() as usize;
+        let cy = (((y - ymin) / yr) * (h - 1) as f64).round() as usize;
+        grid[h - 1 - cy][cx] = b'A' + (i as u8);
+    }
+    let mut s = String::new();
+    s.push_str(&format!("  carbon efficiency (inf/g): {ymin:.0}..{ymax:.0} (y) vs latency (ms): {xmin:.0}..{xmax:.0} (x)\n"));
+    for row in grid {
+        s.push_str("  |");
+        s.push_str(std::str::from_utf8(&row).unwrap());
+        s.push('\n');
+    }
+    s.push_str("  +");
+    s.push_str(&"-".repeat(60));
+    s.push('\n');
+    for (i, (label, ..)) in points.iter().enumerate() {
+        s.push_str(&format!("  {} = {}\n", (b'A' + i as u8) as char, label));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Table III — comparison with related carbon-aware systems
+// ---------------------------------------------------------------------------
+
+pub fn table3_render(green_reduction: f64) -> String {
+    let mut t = Table::new(
+        "Table III — Comparison with related carbon-aware systems",
+        &["System", "Target", "Carbon Reduction"],
+    );
+    t.row(vec!["GreenScale [35]".into(), "Edge-Cloud".into(), "10-30%".into()]);
+    t.row(vec!["DRL Scheduler [17]".into(), "Kubernetes".into(), "up to 24%".into()]);
+    t.row(vec!["LLM Edge [16]".into(), "Edge Clusters".into(), "up to 35%".into()]);
+    t.row(vec![
+        "CarbonEdge (ours)".into(),
+        "Edge DL Inference".into(),
+        format!("{:.1}% (measured)", green_reduction * 100.0),
+    ]);
+    t.render()
+}
+
+// ---------------------------------------------------------------------------
+// Table IV — multi-model comparison
+// ---------------------------------------------------------------------------
+
+pub struct Table4Row {
+    pub model: String,
+    pub mono: RunReport,
+    pub green: RunReport,
+}
+
+pub fn table4(coord: &Coordinator, models: &[&str], iters: usize, reps: usize) -> Result<Vec<Table4Row>> {
+    models
+        .iter()
+        .map(|m| {
+            let mut rs = run_interleaved(
+                coord,
+                m,
+                &[Strategy::Monolithic, Strategy::CarbonEdge(Mode::Green)],
+                iters,
+                reps,
+            )?;
+            let green = rs.pop().unwrap();
+            let mono = rs.pop().unwrap();
+            Ok(Table4Row { model: m.to_string(), mono, green })
+        })
+        .collect()
+}
+
+pub fn table4_render(rows: &[Table4Row]) -> String {
+    let mut t = Table::new(
+        "Table IV — Multi-model carbon footprint comparison",
+        &["Model", "Mode", "Latency (ms)", "Carbon (gCO2/inf)", "Reduction"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            "Monolithic".into(),
+            f2(r.mono.latency_ms.mean),
+            f5(r.mono.carbon_per_inf_g),
+            "-".into(),
+        ]);
+        t.row(vec![
+            r.model.clone(),
+            "CE-Green".into(),
+            f2(r.green.latency_ms.mean),
+            f5(r.green.carbon_per_inf_g),
+            pct(r.green.reduction_vs(&r.mono)),
+        ]);
+    }
+    t.render()
+}
+
+// ---------------------------------------------------------------------------
+// Table V — node usage distribution per mode
+// ---------------------------------------------------------------------------
+
+pub struct Table5 {
+    /// (mode, usage % per node in registry order)
+    pub rows: Vec<(String, Vec<f64>)>,
+    pub node_names: Vec<String>,
+}
+
+pub fn table5(coord: &Coordinator, model: &str, iters: usize) -> Result<Table5> {
+    let node_names: Vec<String> = coord.cfg.nodes.iter().map(|n| n.name.clone()).collect();
+    let mut rows = Vec::new();
+    for mode in Mode::all() {
+        let r = run_strategy(coord, model, Strategy::CarbonEdge(mode), iters, 1)?;
+        let names: Vec<&str> = node_names.iter().map(String::as_str).collect();
+        rows.push((mode.name().to_string(), r.usage_pct(&names)));
+    }
+    Ok(Table5 { rows, node_names })
+}
+
+pub fn table5_render(t5: &Table5) -> String {
+    let mut header: Vec<&str> = vec!["Mode"];
+    header.extend(t5.node_names.iter().map(String::as_str));
+    let mut t = Table::new("Table V — Node usage distribution (% of tasks)", &header);
+    for (mode, pcts) in &t5.rows {
+        let mut row = vec![mode.clone()];
+        row.extend(pcts.iter().map(|p| format!("{p:.0}%")));
+        t.row(row);
+    }
+    t.render()
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — weight sweep: carbon-latency trade-off, transition at w_C >= 0.5
+// ---------------------------------------------------------------------------
+
+pub struct SweepPoint {
+    pub w_c: f64,
+    pub report: RunReport,
+}
+
+pub fn fig3_sweep(
+    coord: &Coordinator,
+    model_name: &str,
+    iters: usize,
+    step: f64,
+) -> Result<Vec<SweepPoint>> {
+    let mut ws = Vec::new();
+    let mut w_c: f64 = 0.0;
+    while w_c <= 1.0 + 1e-9 {
+        ws.push(w_c.min(1.0));
+        w_c += step;
+    }
+    let strategies: Vec<Strategy> = ws.iter().map(|&w| Strategy::Sweep(w)).collect();
+    let reports = run_interleaved(coord, model_name, &strategies, iters, 1)?;
+    Ok(ws
+        .into_iter()
+        .zip(reports)
+        .map(|(w_c, report)| SweepPoint { w_c, report })
+        .collect())
+}
+
+pub fn fig3_render(points: &[SweepPoint], mono: &RunReport) -> String {
+    let mut t = Table::new(
+        "Fig. 3 — Weight sweep: carbon-latency trade-off",
+        &["w_C", "Latency (ms)", "Carbon (gCO2/inf)", "Reduction vs Mono", "Dominant node"],
+    );
+    let mut transition = None;
+    for p in points {
+        let dominant = p
+            .report
+            .node_usage
+            .iter()
+            .max_by_key(|(_, c)| *c)
+            .map(|(n, _)| n.clone())
+            .unwrap_or_default();
+        let red = p.report.reduction_vs(mono);
+        if transition.is_none() && red > 0.10 {
+            transition = Some(p.w_c);
+        }
+        t.row(vec![
+            format!("{:.2}", p.w_c),
+            f2(p.report.latency_ms.mean),
+            f4(p.report.carbon_per_inf_g),
+            pct(red),
+            dominant,
+        ]);
+    }
+    let mut out = t.render();
+    if let Some(w) = transition {
+        out.push_str(&format!("Transition to green routing at w_C >= {w:.2}\n"));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Scheduling overhead (Sec. IV-F: 0.03 ms per task)
+// ---------------------------------------------------------------------------
+
+pub fn scheduling_overhead(coord: &Coordinator, model: &str, iters: usize) -> Result<Summary> {
+    let m = coord.load_model(model)?;
+    let mut s = CarbonAwareScheduler::new("green", Mode::Green.weights());
+    let stream = RequestStream {
+        image_size: coord.manifest.image_size,
+        arrivals: crate::workload::Arrivals::ClosedLoop { count: iters },
+        seed: 0,
+    };
+    let run = coord.run_scheduled(&m, &mut s, &stream.inputs())?;
+    let ms: Vec<f64> = run.sched_ns.iter().map(|&ns| ns as f64 / 1e6).collect();
+    Ok(Summary::of(&ms))
+}

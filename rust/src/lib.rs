@@ -1,0 +1,32 @@
+//! # CarbonEdge
+//!
+//! Carbon-aware deep-learning inference framework for sustainable edge
+//! computing — a full reproduction of Zhang et al. (CS.DC 2026) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! * **L3 (this crate)** — the coordinator: carbon monitor, carbon-aware
+//!   scheduler (Eq. 3–4, Algorithm 1), model partitioner (Eq. 5), deployer,
+//!   simulated heterogeneous edge nodes, workload drivers and the experiment
+//!   harness that regenerates every table/figure of the paper.
+//! * **L2** — the JAX model zoo (`python/compile/models.py`), AOT-lowered to
+//!   HLO text artifacts consumed by [`runtime`].
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) backing every conv
+//!   in the zoo.
+//!
+//! Python never runs on the request path: after `make artifacts` the binary
+//! is self-contained.
+
+pub mod carbon;
+pub mod config;
+pub mod coordinator;
+pub mod deployer;
+pub mod energy;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod node;
+pub mod partitioner;
+pub mod runtime;
+pub mod scheduler;
+pub mod util;
+pub mod workload;

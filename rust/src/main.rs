@@ -1,0 +1,220 @@
+//! CarbonEdge CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! carbonedge info                                   # platform + manifest summary
+//! carbonedge golden [--model NAME]                  # end-to-end numerics gate
+//! carbonedge serve --model NAME --mode green ...    # serve a workload, print report
+//! carbonedge reproduce [--table 2|3|4|5] [--fig 2|3] [--all]
+//! carbonedge sweep [--step 0.05] [--iters 20]       # Fig. 3 weight sweep
+//! carbonedge overhead                               # scheduling overhead micro-report
+//! ```
+
+use anyhow::Result;
+
+use carbonedge::config::Config;
+use carbonedge::coordinator::Coordinator;
+use carbonedge::experiments as exp;
+use carbonedge::metrics::RunReport;
+use carbonedge::scheduler::{Amp4ecScheduler, CarbonAwareScheduler, Mode, Scheduler};
+use carbonedge::util::cli::Args;
+use carbonedge::workload::{Arrivals, RequestStream};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    cfg.iterations = args.parse_or("iters", cfg.iterations)?;
+    cfg.repetitions = args.parse_or("reps", cfg.repetitions)?;
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["all", "verbose"])?;
+    let cmd = args.command.clone().unwrap_or_else(|| "info".to_string());
+    let cfg = config_from(&args)?;
+
+    match cmd.as_str() {
+        "info" => {
+            let coord = Coordinator::new(cfg)?;
+            println!("CarbonEdge — carbon-aware edge inference");
+            println!("artifacts: {}", coord.cfg.artifacts_dir);
+            println!("image size: {}x{}", coord.manifest.image_size, coord.manifest.image_size);
+            for (name, m) in &coord.manifest.models {
+                println!(
+                    "  model {name}: {:.2}M params, {:.1}M flops, {} stages",
+                    m.params as f64 / 1e6,
+                    m.flops as f64 / 1e6,
+                    m.stages.len()
+                );
+            }
+            println!("nodes:");
+            for n in &coord.cfg.nodes {
+                println!(
+                    "  {}: {} cpu, {} MB, {} gCO2/kWh",
+                    n.name, n.cpu_quota, n.mem_mb, n.intensity
+                );
+            }
+        }
+        "golden" => {
+            let coord = Coordinator::new(cfg)?;
+            let names: Vec<String> = match args.get("model") {
+                Some(m) => vec![m.to_string()],
+                None => coord.manifest.models.keys().cloned().collect(),
+            };
+            for name in names {
+                let model = coord.load_model(&name)?;
+                let err = coord.golden_check(&model)?;
+                println!("golden {name}: OK (max |Δlogit| = {err:.2e})");
+            }
+        }
+        "serve" => {
+            let model_name = args.str_or("model", "mobilenet_v2");
+            let mode = Mode::parse(&args.str_or("mode", "green"))
+                .ok_or_else(|| anyhow::anyhow!("bad --mode"))?;
+            let count = args.parse_or("requests", 50usize)?;
+            let rate = args.parse_or("rate", 0.0f64)?;
+            let coord = Coordinator::new(cfg)?;
+            let model = coord.load_model(&model_name)?;
+            let registry = coord.calibrated_registry(&model)?;
+            let containers = carbonedge::deployer::deploy_task_level(
+                &coord.exec(),
+                &model,
+                registry.nodes(),
+                &coord.cfg,
+            )?;
+            let arrivals = if rate > 0.0 {
+                Arrivals::Poisson { count, rate_hz: rate, seed: 42 }
+            } else {
+                Arrivals::ClosedLoop { count }
+            };
+            let stream =
+                RequestStream { image_size: coord.manifest.image_size, arrivals, seed: 0 };
+            let mut sched = CarbonAwareScheduler::new(mode.name(), mode.weights());
+            let loop_ = carbonedge::coordinator::ServingLoop::new(&registry, &containers);
+            let out = loop_.serve(&stream, &mut sched, &format!("serve-{}", mode.name()))?;
+            print_report(&out.report);
+            println!("queue wait: {:.3} ms mean", out.queue_ms_mean);
+            println!("scheduling: {:.4} ms mean", out.sched_ms_mean);
+        }
+        "reproduce" => {
+            let coord = Coordinator::new(cfg)?;
+            let all = args.bool_flag("all") || (!args.has("table") && !args.has("fig"));
+            let iters = coord.cfg.iterations;
+            let reps = coord.cfg.repetitions;
+            let model = args.str_or("model", "mobilenet_v2");
+            let mut t2_cache: Option<exp::Table2> = None;
+            let want_table = |n: &str| all || args.get_all("table").contains(&n);
+            let want_fig = |n: &str| all || args.get_all("fig").contains(&n);
+
+            if want_table("2") || want_fig("2") || want_table("3") {
+                let t2 = exp::table2(&coord, &model, iters, reps)?;
+                if want_table("2") {
+                    println!("{}", t2.render());
+                }
+                if want_fig("2") {
+                    println!("{}", exp::fig2_render(&t2));
+                }
+                if want_table("3") {
+                    println!("{}", exp::table3_render(t2.green_reduction()));
+                }
+                t2_cache = Some(t2);
+            }
+            if want_table("4") {
+                let models: Vec<String> = coord.manifest.models.keys().cloned().collect();
+                let refs: Vec<&str> = models.iter().map(String::as_str).collect();
+                let rows = exp::table4(&coord, &refs, iters, reps)?;
+                println!("{}", exp::table4_render(&rows));
+            }
+            if want_table("5") {
+                let t5 = exp::table5(&coord, &model, iters)?;
+                println!("{}", exp::table5_render(&t5));
+            }
+            if want_fig("3") {
+                let step = args.parse_or("step", 0.05f64)?;
+                let mono = match &t2_cache {
+                    Some(t2) => t2.reports[0].clone(),
+                    None => exp::run_strategy(&coord, &model, exp::Strategy::Monolithic, iters, 1)?,
+                };
+                let points = exp::fig3_sweep(&coord, &model, iters, step)?;
+                println!("{}", exp::fig3_render(&points, &mono));
+            }
+            if all {
+                let s = exp::scheduling_overhead(&coord, &model, iters)?;
+                println!(
+                    "Scheduling overhead: {:.4} ms mean / {:.4} ms p95 per task",
+                    s.mean, s.p95
+                );
+            }
+        }
+        "sweep" => {
+            let coord = Coordinator::new(cfg)?;
+            let step = args.parse_or("step", 0.05f64)?;
+            let model = args.str_or("model", "mobilenet_v2");
+            let iters = coord.cfg.iterations;
+            let mono = exp::run_strategy(&coord, &model, exp::Strategy::Monolithic, iters, 1)?;
+            let points = exp::fig3_sweep(&coord, &model, iters, step)?;
+            println!("{}", exp::fig3_render(&points, &mono));
+        }
+        "overhead" => {
+            let coord = Coordinator::new(cfg)?;
+            let model = args.str_or("model", "mobilenet_v2");
+            let s = exp::scheduling_overhead(&coord, &model, coord.cfg.iterations)?;
+            println!(
+                "scheduling overhead: mean {:.4} ms, p50 {:.4} ms, p95 {:.4} ms (n={})",
+                s.mean, s.p50, s.p95, s.n
+            );
+        }
+        "baselines" => {
+            // extra: compare all schedulers (ablation)
+            let coord = Coordinator::new(cfg)?;
+            let model_name = args.str_or("model", "mobilenet_v2");
+            let model = coord.load_model(&model_name)?;
+            let stream = RequestStream::paper_default(coord.manifest.image_size);
+            let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+                Box::new(Amp4ecScheduler::new()),
+                Box::new(CarbonAwareScheduler::new("green", Mode::Green.weights())),
+                Box::new(carbonedge::scheduler::RoundRobinScheduler::new()),
+                Box::new(carbonedge::scheduler::RandomScheduler::new(7)),
+                Box::new(carbonedge::scheduler::LeastLoadedScheduler),
+            ];
+            for s in scheds.iter_mut() {
+                let run = coord.run_scheduled(&model, s.as_mut(), &stream.inputs())?;
+                let r = RunReport::from_records(s.name(), &run.records);
+                print_report(&r);
+            }
+        }
+        other => {
+            anyhow::bail!(
+                "unknown command {other:?}; try info|golden|serve|reproduce|sweep|overhead|baselines"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn print_report(r: &RunReport) {
+    println!(
+        "{:<18} {:>4} inf  latency {:.2} ms (p95 {:.2})  {:.2} req/s  {:.5} gCO2/inf  {:.1} inf/g",
+        r.label,
+        r.inferences,
+        r.latency_ms.mean,
+        r.latency_ms.p95,
+        r.throughput_rps,
+        r.carbon_per_inf_g,
+        r.carbon_efficiency
+    );
+    for (n, c) in &r.node_usage {
+        println!("    {n}: {c} tasks");
+    }
+}

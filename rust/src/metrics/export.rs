@@ -1,0 +1,93 @@
+//! Sustainability-report export (paper Sec. V-B: "organizations can use
+//! the framework to report carbon emissions for sustainability
+//! compliance"): serialize run reports to JSON.
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::RunReport;
+
+/// JSON document for one run report.
+pub fn report_to_json(r: &RunReport) -> Json {
+    obj(vec![
+        ("label", s(&r.label)),
+        ("inferences", num(r.inferences as f64)),
+        (
+            "latency_ms",
+            obj(vec![
+                ("mean", num(r.latency_ms.mean)),
+                ("p50", num(r.latency_ms.p50)),
+                ("p95", num(r.latency_ms.p95)),
+                ("ci95", num(r.latency_ms.ci95())),
+            ]),
+        ),
+        ("throughput_rps", num(r.throughput_rps)),
+        ("energy_kwh", num(r.energy_kwh)),
+        ("carbon_per_inf_g", num(r.carbon_per_inf_g)),
+        ("carbon_total_g", num(r.carbon_total_g)),
+        ("carbon_efficiency_inf_per_g", num(r.carbon_efficiency)),
+        (
+            "node_usage",
+            arr(r.node_usage
+                .iter()
+                .map(|(n, c)| obj(vec![("node", s(n)), ("tasks", num(*c as f64))]))
+                .collect()),
+        ),
+    ])
+}
+
+/// A compliance document over several runs (e.g. one per mode).
+pub fn compliance_document(title: &str, reports: &[RunReport]) -> Json {
+    obj(vec![
+        ("title", s(title)),
+        ("framework", s("CarbonEdge")),
+        ("runs", arr(reports.iter().map(report_to_json).collect())),
+        (
+            "total_carbon_g",
+            num(reports.iter().map(|r| r.carbon_total_g).sum()),
+        ),
+        (
+            "total_inferences",
+            num(reports.iter().map(|r| r.inferences).sum::<u64>() as f64),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::ExecutionRecord;
+    use crate::runtime::Tensor;
+
+    fn report() -> RunReport {
+        let recs: Vec<ExecutionRecord> = (0..3)
+            .map(|_| ExecutionRecord {
+                node: "node-green".into(),
+                exec_ms: 9.0,
+                latency_ms: 200.0,
+                energy_j: 30.0,
+                carbon_g: 0.003,
+                output: Tensor::zeros(vec![1]),
+            })
+            .collect();
+        RunReport::from_records("test", &recs)
+    }
+
+    #[test]
+    fn roundtrips_through_parser() {
+        let j = report_to_json(&report());
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.req_str("label").unwrap(), "test");
+        assert_eq!(back.req_usize("inferences").unwrap(), 3);
+        assert!((back.req_f64("carbon_per_inf_g").unwrap() - 0.003).abs() < 1e-12);
+        assert_eq!(back.path(&["latency_ms"]).unwrap().req_f64("mean").unwrap(), 200.0);
+    }
+
+    #[test]
+    fn compliance_totals() {
+        let doc = compliance_document("Q3", &[report(), report()]);
+        assert_eq!(doc.req_usize("total_inferences").unwrap(), 6);
+        assert!((doc.req_f64("total_carbon_g").unwrap() - 0.018).abs() < 1e-12);
+        assert_eq!(doc.req_arr("runs").unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,182 @@
+//! Metrics collection and experiment reporting: latency/throughput/energy/
+//! carbon aggregation in the exact units the paper's tables use.
+
+mod export;
+
+pub use export::{compliance_document, report_to_json};
+
+use crate::carbon;
+use crate::node::ExecutionRecord;
+use crate::util::stats::Summary;
+
+/// Aggregated results of one experiment configuration
+/// (e.g. "CE-Green / MobileNetV2 / 50 inferences").
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub label: String,
+    pub inferences: u64,
+    /// Mean end-to-end latency (ms) — Table II column 1.
+    pub latency_ms: Summary,
+    /// Throughput (req/s) over the run — Table II column 2.
+    pub throughput_rps: f64,
+    /// Total energy (kWh) over the run.
+    pub energy_kwh: f64,
+    /// Carbon per inference (gCO₂/inf) — Table II column 3.
+    pub carbon_per_inf_g: f64,
+    /// Total carbon (g).
+    pub carbon_total_g: f64,
+    /// Carbon efficiency (inferences per gram) — Fig. 2 y-axis.
+    pub carbon_efficiency: f64,
+    /// Node usage distribution: (node, tasks) — Table V.
+    pub node_usage: Vec<(String, u64)>,
+    /// Mean real PJRT execution time (ms), pre-simulation.
+    pub exec_ms_mean: f64,
+}
+
+impl RunReport {
+    /// Build from per-task execution records (closed-loop run: wall time =
+    /// Σ simulated latencies).
+    pub fn from_records(label: &str, records: &[ExecutionRecord]) -> RunReport {
+        assert!(!records.is_empty(), "empty run");
+        let lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
+        let energy_j: f64 = records.iter().map(|r| r.energy_j).sum();
+        let carbon_g: f64 = records.iter().map(|r| r.carbon_g).sum();
+        let n = records.len() as u64;
+        let wall_s = lat.iter().sum::<f64>() / 1e3;
+        let mut usage: std::collections::BTreeMap<String, u64> = Default::default();
+        for r in records {
+            *usage.entry(r.node.clone()).or_default() += 1;
+        }
+        RunReport {
+            label: label.to_string(),
+            inferences: n,
+            latency_ms: Summary::of(&lat),
+            throughput_rps: n as f64 / wall_s,
+            energy_kwh: carbon::joules_to_kwh(energy_j),
+            carbon_per_inf_g: carbon_g / n as f64,
+            carbon_total_g: carbon_g,
+            carbon_efficiency: carbon::carbon_efficiency(n, carbon_g),
+            node_usage: usage.into_iter().collect(),
+            exec_ms_mean: records.iter().map(|r| r.exec_ms).sum::<f64>() / n as f64,
+        }
+    }
+
+    /// Carbon reduction vs a baseline (positive = this run is greener),
+    /// the paper's "Reduction vs Mono (%)" column.
+    pub fn reduction_vs(&self, baseline: &RunReport) -> f64 {
+        1.0 - self.carbon_per_inf_g / baseline.carbon_per_inf_g
+    }
+
+    /// Node usage as percentages in registry order (Table V row).
+    pub fn usage_pct(&self, node_names: &[&str]) -> Vec<f64> {
+        let total: u64 = self.node_usage.iter().map(|(_, c)| c).sum();
+        node_names
+            .iter()
+            .map(|name| {
+                let c = self
+                    .node_usage
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, c)| *c)
+                    .unwrap_or(0);
+                if total == 0 {
+                    0.0
+                } else {
+                    100.0 * c as f64 / total as f64
+                }
+            })
+            .collect()
+    }
+}
+
+/// Average several repetition reports (the paper repeats 3×).
+pub fn average_reports(reports: &[RunReport]) -> RunReport {
+    assert!(!reports.is_empty());
+    let k = reports.len() as f64;
+    let mut out = reports[0].clone();
+    out.throughput_rps = reports.iter().map(|r| r.throughput_rps).sum::<f64>() / k;
+    out.energy_kwh = reports.iter().map(|r| r.energy_kwh).sum::<f64>() / k;
+    out.carbon_per_inf_g = reports.iter().map(|r| r.carbon_per_inf_g).sum::<f64>() / k;
+    out.carbon_total_g = reports.iter().map(|r| r.carbon_total_g).sum::<f64>() / k;
+    out.carbon_efficiency = reports.iter().map(|r| r.carbon_efficiency).sum::<f64>() / k;
+    out.exec_ms_mean = reports.iter().map(|r| r.exec_ms_mean).sum::<f64>() / k;
+    // latency: pool all means (CI across reps is what the paper reports)
+    let means: Vec<f64> = reports.iter().map(|r| r.latency_ms.mean).collect();
+    out.latency_ms = Summary::of(&means);
+    // node usage: sum counts
+    let mut usage: std::collections::BTreeMap<String, u64> = Default::default();
+    for r in reports {
+        for (n, c) in &r.node_usage {
+            *usage.entry(n.clone()).or_default() += c;
+        }
+    }
+    out.node_usage = usage.into_iter().collect();
+    out.inferences = reports.iter().map(|r| r.inferences).sum();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    fn rec(node: &str, latency_ms: f64, energy_j: f64, carbon_g: f64) -> ExecutionRecord {
+        ExecutionRecord {
+            node: node.into(),
+            exec_ms: latency_ms * 0.9,
+            latency_ms,
+            energy_j,
+            carbon_g,
+            output: Tensor::zeros(vec![1]),
+        }
+    }
+
+    #[test]
+    fn report_units_match_paper() {
+        // 50 inferences at 254.85 ms, 36 J each at 530 g/kWh.
+        let records: Vec<ExecutionRecord> =
+            (0..50).map(|_| rec("host", 254.85, 36.11, 0.005316)).collect();
+        let r = RunReport::from_records("mono", &records);
+        assert_eq!(r.inferences, 50);
+        assert!((r.latency_ms.mean - 254.85).abs() < 1e-9);
+        // throughput = 1/latency for a closed loop: 3.92 req/s
+        assert!((r.throughput_rps - 1000.0 / 254.85).abs() < 1e-6);
+        assert!((r.carbon_per_inf_g - 0.005316).abs() < 1e-9);
+        // efficiency = 1/percarbon ≈ 188 inf/g
+        assert!((r.carbon_efficiency - 1.0 / 0.005316).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reduction_sign_convention() {
+        let base = RunReport::from_records("m", &[rec("h", 100.0, 10.0, 0.0053)]);
+        let green = RunReport::from_records("g", &[rec("g", 107.0, 10.7, 0.0041)]);
+        let red = green.reduction_vs(&base);
+        // (1 - 0.0041/0.0053) = +22.6% — the paper's headline shape.
+        assert!(red > 0.2 && red < 0.25, "{red}");
+        // a dirtier run has negative reduction
+        let perf = RunReport::from_records("p", &[rec("hi", 100.0, 10.0, 0.0067)]);
+        assert!(perf.reduction_vs(&base) < 0.0);
+    }
+
+    #[test]
+    fn usage_percentages() {
+        let records =
+            vec![rec("a", 1.0, 1.0, 0.1), rec("a", 1.0, 1.0, 0.1), rec("b", 1.0, 1.0, 0.1)];
+        let r = RunReport::from_records("x", &records);
+        let pct = r.usage_pct(&["a", "b", "c"]);
+        assert!((pct[0] - 66.666).abs() < 0.01);
+        assert!((pct[1] - 33.333).abs() < 0.01);
+        assert_eq!(pct[2], 0.0);
+    }
+
+    #[test]
+    fn averaging_reports() {
+        let r1 = RunReport::from_records("x", &[rec("a", 100.0, 10.0, 0.004)]);
+        let r2 = RunReport::from_records("x", &[rec("a", 120.0, 12.0, 0.006)]);
+        let avg = average_reports(&[r1, r2]);
+        assert!((avg.latency_ms.mean - 110.0).abs() < 1e-9);
+        assert!((avg.carbon_per_inf_g - 0.005).abs() < 1e-12);
+        assert_eq!(avg.inferences, 2);
+        assert_eq!(avg.node_usage, vec![("a".to_string(), 2)]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Typed view of `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Top-level manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub image_size: usize,
+    pub width: f64,
+    pub num_classes: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub params: usize,
+    pub flops: usize,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub monolithic: String,
+    pub weights_file: String,
+    pub weights_total: usize,
+    pub input_file: String,
+    pub golden: GoldenRecord,
+    pub stages: Vec<StageEntry>,
+    pub weights: Vec<WeightEntry>,
+    pub layers: Vec<LayerEntry>,
+}
+
+/// One distributable stage.
+#[derive(Debug, Clone)]
+pub struct StageEntry {
+    pub name: String,
+    pub artifact: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub params: usize,
+    pub flops: usize,
+    /// Eq. 5 cost of the stage (sum over its layers).
+    pub cost: usize,
+    pub num_weights: usize,
+}
+
+impl StageEntry {
+    /// Activation elements crossing the stage boundary (communication cost).
+    pub fn boundary_elems(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+/// One packed weight tensor.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub stage: usize,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+/// Per-layer record (paper Eq. 5 inputs).
+#[derive(Debug, Clone)]
+pub struct LayerEntry {
+    pub name: String,
+    pub kind: String,
+    pub stage: usize,
+    pub params: usize,
+    pub cost: usize,
+    pub flops: usize,
+}
+
+/// Golden check exported by aot.py.
+#[derive(Debug, Clone)]
+pub struct GoldenRecord {
+    pub seed: usize,
+    pub logits8: Vec<f64>,
+    pub argmax: usize,
+    pub logit_sum: f64,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path}; run `make artifacts` first"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Manifest::from_json(&json)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        for (name, entry) in j.req_obj("models")? {
+            models.insert(name.clone(), ModelEntry::from_json(name, entry)?);
+        }
+        Ok(Manifest {
+            version: j.req_usize("version")?,
+            image_size: j.req_usize("image_size")?,
+            width: j.req_f64("width").unwrap_or(1.0),
+            num_classes: j.req_usize("num_classes")?,
+            models,
+        })
+    }
+}
+
+impl ModelEntry {
+    fn from_json(name: &str, j: &Json) -> Result<ModelEntry> {
+        let stages = j
+            .req_arr("stages")?
+            .iter()
+            .map(StageEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let weights = j
+            .req_arr("weights")?
+            .iter()
+            .map(WeightEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let layers = j
+            .req_arr("layers")?
+            .iter()
+            .map(LayerEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let g = j.get("golden").ok_or_else(|| anyhow::anyhow!("missing golden"))?;
+        Ok(ModelEntry {
+            name: name.to_string(),
+            params: j.req_usize("params")?,
+            flops: j.req_usize("flops")?,
+            num_classes: j.req_usize("num_classes")?,
+            input_shape: j
+                .get("input_shape")
+                .and_then(Json::usize_vec)
+                .ok_or_else(|| anyhow::anyhow!("missing input_shape"))?,
+            monolithic: j.req_str("monolithic")?.to_string(),
+            weights_file: j.req_str("weights_file")?.to_string(),
+            weights_total: j.req_usize("weights_total")?,
+            input_file: j.req_str("input_file")?.to_string(),
+            golden: GoldenRecord {
+                seed: g.req_usize("seed")?,
+                logits8: g
+                    .req_arr("logits8")?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(f64::NAN))
+                    .collect(),
+                argmax: g.req_usize("argmax")?,
+                logit_sum: g.req_f64("logit_sum")?,
+            },
+            stages,
+            weights,
+            layers,
+        })
+    }
+
+    /// Total Eq. 5 cost of the model.
+    pub fn total_cost(&self) -> usize {
+        self.stages.iter().map(|s| s.cost).sum()
+    }
+}
+
+impl StageEntry {
+    fn from_json(j: &Json) -> Result<StageEntry> {
+        Ok(StageEntry {
+            name: j.req_str("name")?.to_string(),
+            artifact: j.req_str("artifact")?.to_string(),
+            in_shape: j
+                .get("in_shape")
+                .and_then(Json::usize_vec)
+                .ok_or_else(|| anyhow::anyhow!("missing in_shape"))?,
+            out_shape: j
+                .get("out_shape")
+                .and_then(Json::usize_vec)
+                .ok_or_else(|| anyhow::anyhow!("missing out_shape"))?,
+            params: j.req_usize("params")?,
+            flops: j.req_usize("flops")?,
+            cost: j.req_usize("cost")?,
+            num_weights: j.req_usize("num_weights")?,
+        })
+    }
+}
+
+impl WeightEntry {
+    fn from_json(j: &Json) -> Result<WeightEntry> {
+        Ok(WeightEntry {
+            stage: j.req_usize("stage")?,
+            shape: j
+                .get("shape")
+                .and_then(Json::usize_vec)
+                .ok_or_else(|| anyhow::anyhow!("missing weight shape"))?,
+            offset: j.req_usize("offset")?,
+        })
+    }
+}
+
+impl LayerEntry {
+    fn from_json(j: &Json) -> Result<LayerEntry> {
+        Ok(LayerEntry {
+            name: j.req_str("name")?.to_string(),
+            kind: j.req_str("kind")?.to_string(),
+            stage: j.req_usize("stage")?,
+            params: j.req_usize("params")?,
+            cost: j.req_usize("cost")?,
+            flops: j.req_usize("flops")?,
+        })
+    }
+}

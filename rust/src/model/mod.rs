@@ -1,0 +1,144 @@
+//! Model registry: parses `artifacts/manifest.json` (written by aot.py)
+//! into typed structures, loads weight sidecars, and exposes the per-layer
+//! cost tables the partitioner consumes.
+
+mod manifest;
+
+pub use manifest::{
+    GoldenRecord, LayerEntry, Manifest, ModelEntry, StageEntry, WeightEntry,
+};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Tensor;
+
+/// A model plus its artifact directory, ready to register with the executor.
+pub struct LoadedModel {
+    pub entry: ModelEntry,
+    pub dir: String,
+    /// Per-stage weight tensors, in HLO argument order.
+    pub stage_weights: Vec<Vec<Tensor>>,
+}
+
+impl LoadedModel {
+    /// Load the packed weights and slice them per stage.
+    pub fn load(dir: &str, entry: &ModelEntry) -> Result<LoadedModel> {
+        let wpath = format!("{dir}/{}", entry.weights_file);
+        let bytes = std::fs::read(&wpath).with_context(|| format!("reading {wpath}"))?;
+        let flat = crate::runtime::f32_from_le_bytes(&bytes)?;
+        anyhow::ensure!(
+            flat.len() == entry.weights_total,
+            "weights file {} has {} f32s, manifest says {}",
+            wpath,
+            flat.len(),
+            entry.weights_total
+        );
+        let mut stage_weights: Vec<Vec<Tensor>> = vec![Vec::new(); entry.stages.len()];
+        for w in &entry.weights {
+            let t = Tensor::from_flat(&flat, w.offset, w.shape.clone())?;
+            stage_weights[w.stage].push(t);
+        }
+        for (si, s) in entry.stages.iter().enumerate() {
+            anyhow::ensure!(
+                stage_weights[si].len() == s.num_weights,
+                "stage {si} expects {} weights, packed {}",
+                s.num_weights,
+                stage_weights[si].len()
+            );
+        }
+        Ok(LoadedModel { entry: entry.clone(), dir: dir.to_string(), stage_weights })
+    }
+
+    /// All weights in monolithic-program argument order.
+    pub fn all_weights(&self) -> Vec<Tensor> {
+        self.stage_weights.iter().flatten().cloned().collect()
+    }
+
+    pub fn monolithic_path(&self) -> String {
+        format!("{}/{}", self.dir, self.entry.monolithic)
+    }
+
+    pub fn stage_path(&self, i: usize) -> String {
+        format!("{}/{}", self.dir, self.entry.stages[i].artifact)
+    }
+
+    /// Golden input image exported by aot.py.
+    pub fn golden_input(&self) -> Result<Tensor> {
+        Tensor::from_bin_file(
+            &format!("{}/{}", self.dir, self.entry.input_file),
+            self.entry.input_shape.clone(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tiny_manifest() -> &'static str {
+        r#"{
+          "image_size": 8, "num_classes": 4, "version": 1, "width": 0.25,
+          "models": {
+            "m": {
+              "params": 10, "flops": 100, "num_classes": 4,
+              "input_shape": [8, 8, 3],
+              "monolithic": "m.hlo.txt",
+              "weights_file": "m.weights.bin",
+              "weights_total": 6,
+              "input_file": "m.input.bin",
+              "golden": {"seed": 0, "logits8": [1.0, 2.0], "argmax": 1, "logit_sum": 3.0},
+              "stages": [
+                {"name": "s0", "artifact": "m.stage0.hlo.txt", "in_shape": [8,8,3],
+                 "out_shape": [4,4,2], "params": 6, "flops": 60, "cost": 50, "num_weights": 2}
+              ],
+              "weights": [
+                {"stage": 0, "shape": [2, 2], "offset": 0},
+                {"stage": 0, "shape": [2], "offset": 4}
+              ],
+              "layers": [
+                {"name": "c1", "kind": "conv2d", "stage": 0, "params": 6, "cost": 50,
+                 "flops": 60, "in_shape": [8,8,3], "out_shape": [4,4,2]}
+              ]
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::from_json(&Json::parse(tiny_manifest()).unwrap()).unwrap();
+        assert_eq!(m.image_size, 8);
+        let e = m.models.get("m").unwrap();
+        assert_eq!(e.params, 10);
+        assert_eq!(e.stages.len(), 1);
+        assert_eq!(e.stages[0].out_shape, vec![4, 4, 2]);
+        assert_eq!(e.weights[1].offset, 4);
+        assert_eq!(e.layers[0].kind, "conv2d");
+        assert_eq!(e.golden.argmax, 1);
+    }
+
+    #[test]
+    fn loaded_model_slices_weights() {
+        let dir = std::env::temp_dir().join("ce_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let flat: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = flat.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("m.weights.bin"), &bytes).unwrap();
+        let m = Manifest::from_json(&Json::parse(tiny_manifest()).unwrap()).unwrap();
+        let lm = LoadedModel::load(dir.to_str().unwrap(), m.models.get("m").unwrap()).unwrap();
+        assert_eq!(lm.stage_weights.len(), 1);
+        assert_eq!(lm.stage_weights[0][0].data, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(lm.stage_weights[0][1].data, vec![4.0, 5.0]);
+        assert_eq!(lm.all_weights().len(), 2);
+    }
+
+    #[test]
+    fn wrong_total_rejected() {
+        let dir = std::env::temp_dir().join("ce_model_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.weights.bin"), [0u8; 8]).unwrap();
+        let m = Manifest::from_json(&Json::parse(tiny_manifest()).unwrap()).unwrap();
+        assert!(LoadedModel::load(dir.to_str().unwrap(), m.models.get("m").unwrap()).is_err());
+    }
+}

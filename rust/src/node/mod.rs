@@ -1,0 +1,308 @@
+//! Simulated heterogeneous edge nodes.
+//!
+//! Stands in for the paper's Docker containers with `--cpus/--memory`
+//! quotas on a DGX host (DESIGN.md §3, §7). A node carries:
+//!
+//! * a **resource spec** (CPU quota, memory, static grid carbon intensity);
+//! * a **latency model** `t = t_exec·(1 + α·(1/quota − 1)) + overhead`
+//!   mapping real PJRT execution time to container time — the paper's own
+//!   numbers imply inference is not quota-saturated (a 0.4-CPU node is only
+//!   ~7 % slower end-to-end), hence the quota-sensitivity factor α ≪ 1;
+//! * **scheduler-visible state**: load, in-flight count, historical average
+//!   execution time (the NSA inputs of Algorithm 1).
+
+mod container;
+
+pub use container::{Container, ExecutionRecord};
+
+use std::sync::{Arc, Mutex};
+
+/// Static description of a simulated edge node (the paper's Table in
+/// Sec. IV-A1 plus the scheduler's rated power draw used in Eq. 4).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    /// Docker `--cpus` equivalent.
+    pub cpu_quota: f64,
+    /// Docker `--memory` equivalent (MB).
+    pub mem_mb: usize,
+    /// Static grid carbon intensity scenario (gCO₂/kWh).
+    pub intensity: f64,
+    /// Node's average power draw in watts — the `P_node` of Eq. 4.
+    pub rated_power_w: f64,
+    /// Prior mean execution time (ms) before any task has run; the
+    /// scheduler needs a cold-start estimate for S_P / S_C.
+    pub prior_ms: f64,
+    /// Fraction of runtime that scales with 1/quota (latency model).
+    pub alpha: f64,
+    /// Fixed per-task container/network overhead (ms).
+    pub overhead_ms: f64,
+    /// Simulated-time dilation applied to real executor time. Compensates
+    /// the model-size substitution (64²/width-0.5 zoo ≈ 20-30× fewer FLOPs
+    /// than the paper's 224² models; DESIGN.md §3/§7) so latencies, scores
+    /// and energies land in the paper's regime.
+    pub time_scale: f64,
+    /// When true the scheduler's T_avg uses measured history (the paper's
+    /// literal reading); when false (default) it uses the static
+    /// capability prior. The paper measured on a *dedicated* DGX where
+    /// history converges to capability; on this shared host measured
+    /// history carries machine noise that does not exist in the paper's
+    /// testbed and can flip rankings (DESIGN.md §3).
+    pub adaptive: bool,
+}
+
+impl NodeSpec {
+    /// The paper's three-node setup (Sec. IV-A1), with rated powers and
+    /// priors calibrated (DESIGN.md §3) so that the score dynamics
+    /// reproduce Table V and the Fig. 3 transition at w_C ≥ 0.5:
+    /// range(S_C) ≈ 0.06 and range(S_P) ≈ 0.18 across nodes, matching the
+    /// paper's reported ranges (0.054 / 0.166).
+    pub fn paper_nodes() -> Vec<NodeSpec> {
+        // α = 0.005: the paper's own Table II implies containerized
+        // inference is essentially quota-insensitive (a 0.4-CPU node is
+        // only ~0.2% slower than CE-Performance on the 1.0-CPU node).
+        // time_scale 20.6 vs the host's 20 models the container stack's
+        // +3% compute cost; together with the 8 ms per-task overhead the
+        // CE modes land ~6-8% above monolithic, the paper's Table II gap.
+        // The coordinator additionally normalizes this scale per model
+        // against a deploy-time mono/staged calibration measurement
+        // (Coordinator::calibration) so host noise cannot flip the shape.
+        vec![
+            NodeSpec {
+                name: "node-high".into(),
+                cpu_quota: 1.0,
+                mem_mb: 1024,
+                intensity: 620.0,
+                rated_power_w: 170.0,
+                prior_ms: 250.0,
+                alpha: 0.005,
+                overhead_ms: 8.0,
+                time_scale: 20.6,
+                adaptive: false,
+            },
+            NodeSpec {
+                name: "node-medium".into(),
+                cpu_quota: 0.6,
+                mem_mb: 512,
+                intensity: 530.0,
+                rated_power_w: 102.0,
+                prior_ms: 417.0,
+                alpha: 0.005,
+                overhead_ms: 8.0,
+                time_scale: 20.6,
+                adaptive: false,
+            },
+            NodeSpec {
+                name: "node-green".into(),
+                cpu_quota: 0.4,
+                mem_mb: 512,
+                intensity: 380.0,
+                rated_power_w: 68.0,
+                prior_ms: 625.0,
+                alpha: 0.005,
+                overhead_ms: 8.0,
+                time_scale: 20.6,
+                adaptive: false,
+            },
+        ]
+    }
+
+    /// Latency model: map real executor time to simulated container time.
+    pub fn simulate_latency_ms(&self, exec_ms: f64) -> f64 {
+        exec_ms * self.time_scale * (1.0 + self.alpha * (1.0 / self.cpu_quota - 1.0))
+            + self.overhead_ms
+    }
+}
+
+/// Mutable scheduler-visible node state.
+#[derive(Debug, Clone, Default)]
+pub struct NodeState {
+    /// Tasks currently executing (S_B's `task_count`; Table V's 100 %
+    /// concentration is only consistent with an *in-flight* reading).
+    pub inflight: usize,
+    /// Completed task count.
+    pub completed: u64,
+    /// Cumulative mean of *measured* execution latency (ms).
+    pub avg_ms: Option<f64>,
+    /// Utilization in [0,1]: busy-time EWMA.
+    pub load: f64,
+    /// Accumulated energy attributed to this node (J).
+    pub energy_j: f64,
+    /// Accumulated carbon (g).
+    pub carbon_g: f64,
+    /// Total busy milliseconds.
+    pub busy_ms: f64,
+}
+
+/// A live node: spec + shared state.
+#[derive(Debug)]
+pub struct EdgeNode {
+    pub spec: NodeSpec,
+    state: Mutex<NodeState>,
+}
+
+impl EdgeNode {
+    pub fn new(spec: NodeSpec) -> Arc<EdgeNode> {
+        Arc::new(EdgeNode { spec, state: Mutex::new(NodeState::default()) })
+    }
+
+    pub fn state(&self) -> NodeState {
+        self.state.lock().unwrap().clone()
+    }
+
+    /// Measured mean execution time (ms), falling back to the prior.
+    pub fn avg_ms(&self) -> f64 {
+        self.state.lock().unwrap().avg_ms.unwrap_or(self.spec.prior_ms)
+    }
+
+    /// The scheduler's T_avg (Eq. 4 / Algorithm 1): measured history when
+    /// the node is `adaptive`, otherwise the static capability prior.
+    pub fn score_ms(&self) -> f64 {
+        if self.spec.adaptive {
+            self.avg_ms()
+        } else {
+            self.spec.prior_ms
+        }
+    }
+
+    pub fn begin_task(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.inflight += 1;
+    }
+
+    /// Record task completion: latency + attributed energy/carbon.
+    pub fn finish_task(&self, latency_ms: f64, energy_j: f64, carbon_g: f64) {
+        let mut s = self.state.lock().unwrap();
+        s.inflight = s.inflight.saturating_sub(1);
+        s.completed += 1;
+        let n = s.completed as f64;
+        s.avg_ms = Some(match s.avg_ms {
+            None => latency_ms,
+            Some(m) => m + (latency_ms - m) / n,
+        });
+        s.busy_ms += latency_ms;
+        s.energy_j += energy_j;
+        s.carbon_g += carbon_g;
+        // Load: EWMA of "busy while another task in flight" — with the
+        // paper's sequential batch-1 workload this stays near zero.
+        let concurrent = s.inflight as f64;
+        s.load = 0.9 * s.load + 0.1 * (concurrent / (concurrent + 1.0));
+    }
+
+    /// Memory check for Algorithm 1's `has_sufficient_resources`.
+    pub fn fits(&self, mem_demand_mb: usize, cpu_demand: f64) -> bool {
+        self.spec.mem_mb >= mem_demand_mb && self.spec.cpu_quota >= cpu_demand
+    }
+}
+
+/// The node fleet.
+#[derive(Debug, Clone)]
+pub struct NodeRegistry {
+    nodes: Vec<Arc<EdgeNode>>,
+}
+
+impl NodeRegistry {
+    pub fn new(specs: Vec<NodeSpec>) -> NodeRegistry {
+        assert!(!specs.is_empty());
+        NodeRegistry { nodes: specs.into_iter().map(EdgeNode::new).collect() }
+    }
+
+    pub fn paper_setup() -> NodeRegistry {
+        NodeRegistry::new(NodeSpec::paper_nodes())
+    }
+
+    pub fn nodes(&self) -> &[Arc<EdgeNode>] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> &Arc<EdgeNode> {
+        &self.nodes[idx]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Arc<EdgeNode>> {
+        self.nodes.iter().find(|n| n.spec.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_nodes_match_setup() {
+        let ns = NodeSpec::paper_nodes();
+        assert_eq!(ns.len(), 3);
+        assert_eq!(ns[0].name, "node-high");
+        assert_eq!(ns[0].cpu_quota, 1.0);
+        assert_eq!(ns[0].mem_mb, 1024);
+        assert_eq!(ns[0].intensity, 620.0);
+        assert_eq!(ns[1].intensity, 530.0);
+        assert_eq!(ns[2].intensity, 380.0);
+        assert_eq!(ns[2].cpu_quota, 0.4);
+    }
+
+    #[test]
+    fn latency_model_mildly_quota_sensitive() {
+        let ns = NodeSpec::paper_nodes();
+        let high = ns[0].simulate_latency_ms(10.0);
+        let green = ns[2].simulate_latency_ms(10.0);
+        // time_scale 20.6 + overhead 8: 10 ms exec -> 214 ms on node-high.
+        assert!((high - (10.0 * 20.6 + 8.0)).abs() < 1e-9);
+        // α=0.005, quota 0.4 -> factor 1.0075: near-identical latency,
+        // matching the paper's ~0.2% green-vs-performance gap.
+        assert!((green - (10.0 * 20.6 * 1.0075 + 8.0)).abs() < 1e-9);
+        assert!(green / high < 1.02);
+    }
+
+    #[test]
+    fn avg_ms_prior_then_cumulative_mean() {
+        let n = EdgeNode::new(NodeSpec::paper_nodes().remove(0));
+        assert_eq!(n.avg_ms(), 250.0); // prior
+        n.begin_task();
+        n.finish_task(100.0, 1.0, 0.1);
+        assert_eq!(n.avg_ms(), 100.0);
+        n.begin_task();
+        n.finish_task(200.0, 1.0, 0.1);
+        assert_eq!(n.avg_ms(), 150.0);
+        let s = n.state();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.inflight, 0);
+        assert!((s.energy_j - 2.0).abs() < 1e-12);
+        assert!((s.carbon_g - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inflight_tracking() {
+        let n = EdgeNode::new(NodeSpec::paper_nodes().remove(2));
+        n.begin_task();
+        n.begin_task();
+        assert_eq!(n.state().inflight, 2);
+        n.finish_task(10.0, 0.0, 0.0);
+        assert_eq!(n.state().inflight, 1);
+    }
+
+    #[test]
+    fn fits_resources() {
+        let n = EdgeNode::new(NodeSpec::paper_nodes().remove(2)); // 0.4 cpu, 512MB
+        assert!(n.fits(256, 0.2));
+        assert!(!n.fits(1024, 0.2));
+        assert!(!n.fits(256, 0.5));
+    }
+
+    #[test]
+    fn registry_lookup() {
+        let r = NodeRegistry::paper_setup();
+        assert_eq!(r.len(), 3);
+        assert!(r.by_name("node-green").is_some());
+        assert!(r.by_name("nope").is_none());
+        assert_eq!(r.get(1).spec.name, "node-medium");
+    }
+}

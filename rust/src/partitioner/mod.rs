@@ -1,0 +1,11 @@
+//! The Model Partitioner (paper Sec. III-E): layer-wise cost analysis
+//! (Eq. 5) and partition-boundary selection, plus the Green Partitioning
+//! Strategy that weighs node carbon intensity into the split.
+
+mod cost;
+mod green;
+mod partition;
+
+pub use cost::{layer_cost, model_cost_profile, CostProfile};
+pub use green::{green_shares, GreenPartitioner};
+pub use partition::{balanced_partition, partition_by_shares, Partition};

@@ -1,0 +1,265 @@
+//! Contiguous stage partitioning: the classic linear-partition problem
+//! (minimize the maximum group cost), solved exactly by DP, plus
+//! share-driven splitting for heterogeneous node speeds.
+
+/// A partition of `n` stages into contiguous groups.
+/// `bounds[k]` is the first stage of group k+1; groups are
+/// `[0, bounds[0]) [bounds[0], bounds[1]) ... [last, n)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub n_stages: usize,
+    pub bounds: Vec<usize>,
+}
+
+impl Partition {
+    /// Group ranges as `(start, end)` pairs (end exclusive). Empty groups
+    /// are allowed (a node that receives no stage).
+    pub fn ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.bounds.len() + 1);
+        let mut start = 0;
+        for &b in &self.bounds {
+            out.push((start, b));
+            start = b;
+        }
+        out.push((start, self.n_stages));
+        out
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.bounds.len() + 1
+    }
+
+    /// Validity: bounds are sorted and within range, groups cover all
+    /// stages exactly once (by construction of `ranges`).
+    pub fn is_valid(&self) -> bool {
+        let mut prev = 0;
+        for &b in &self.bounds {
+            if b < prev || b > self.n_stages {
+                return false;
+            }
+            prev = b;
+        }
+        true
+    }
+
+    /// Max group cost under `costs`.
+    pub fn bottleneck(&self, costs: &[u64]) -> u64 {
+        assert_eq!(costs.len(), self.n_stages);
+        self.ranges().iter().map(|&(s, e)| costs[s..e].iter().sum::<u64>()).max().unwrap_or(0)
+    }
+}
+
+/// Exact DP for the linear partition problem: split `costs` into at most
+/// `k` contiguous groups minimizing the maximum group sum.
+pub fn balanced_partition(costs: &[u64], k: usize) -> Partition {
+    let n = costs.len();
+    assert!(k > 0, "need at least one group");
+    if n == 0 {
+        return Partition { n_stages: 0, bounds: vec![0; k - 1] };
+    }
+    let k = k.min(n.max(1));
+    // prefix sums
+    let mut pre = vec![0u64; n + 1];
+    for i in 0..n {
+        pre[i + 1] = pre[i] + costs[i];
+    }
+    let seg = |a: usize, b: usize| pre[b] - pre[a]; // cost of [a, b)
+
+    // dp[j][i] = min over first i stages in j groups of max group cost
+    let inf = u64::MAX;
+    let mut dp = vec![vec![inf; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0;
+    for j in 1..=k {
+        for i in 1..=n {
+            for m in (j - 1)..i {
+                if dp[j - 1][m] == inf {
+                    continue;
+                }
+                let cand = dp[j - 1][m].max(seg(m, i));
+                if cand < dp[j][i] {
+                    dp[j][i] = cand;
+                    cut[j][i] = m;
+                }
+            }
+        }
+    }
+    // backtrack
+    let mut bounds = Vec::with_capacity(k - 1);
+    let mut i = n;
+    for j in (2..=k).rev() {
+        let m = cut[j][i];
+        bounds.push(m);
+        i = m;
+    }
+    bounds.reverse();
+    Partition { n_stages: n, bounds }
+}
+
+/// Split stages so group cost tracks the given (positive) shares — used by
+/// the Green Partitioning Strategy where node shares mix speed and carbon.
+/// Greedy prefix assignment against cumulative share targets.
+pub fn partition_by_shares(costs: &[u64], shares: &[f64]) -> Partition {
+    let n = costs.len();
+    let k = shares.len();
+    assert!(k > 0);
+    assert!(shares.iter().all(|&s| s >= 0.0));
+    let total_share: f64 = shares.iter().sum();
+    assert!(total_share > 0.0, "all-zero shares");
+    let total_cost: u64 = costs.iter().sum();
+    let mut bounds = Vec::with_capacity(k - 1);
+    let mut acc_target = 0.0;
+    let mut idx = 0usize;
+    let mut acc_cost = 0u64;
+    for share in shares.iter().take(k - 1) {
+        acc_target += share / total_share * total_cost as f64;
+        // advance idx while adding the next stage keeps us closer to target
+        while idx < n {
+            let next = acc_cost + costs[idx];
+            let d_now = (acc_cost as f64 - acc_target).abs();
+            let d_next = (next as f64 - acc_target).abs();
+            if d_next <= d_now {
+                acc_cost = next;
+                idx += 1;
+            } else {
+                break;
+            }
+        }
+        bounds.push(idx);
+    }
+    Partition { n_stages: n, bounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn dp_optimal_simple() {
+        // [1,2,3,4,5] into 2 -> [1,2,3] | [4,5]: bottleneck 9 (optimal)
+        let p = balanced_partition(&[1, 2, 3, 4, 5], 2);
+        assert_eq!(p.bottleneck(&[1, 2, 3, 4, 5]), 9);
+        assert_eq!(p.ranges(), vec![(0, 3), (3, 5)]);
+    }
+
+    #[test]
+    fn dp_handles_spikes() {
+        // a huge middle stage must sit alone
+        let costs = [1, 100, 1, 1];
+        let p = balanced_partition(&costs, 3);
+        assert_eq!(p.bottleneck(&costs), 100);
+        assert!(p.is_valid());
+    }
+
+    #[test]
+    fn k_one_is_whole() {
+        let p = balanced_partition(&[5, 5, 5], 1);
+        assert_eq!(p.ranges(), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn k_ge_n_single_stages() {
+        let costs = [3, 7, 2];
+        let p = balanced_partition(&costs, 5); // clamped to 3 groups
+        assert_eq!(p.bottleneck(&costs), 7);
+    }
+
+    #[test]
+    fn shares_proportional() {
+        // equal shares ~ balanced
+        let costs = [10, 10, 10, 10];
+        let p = partition_by_shares(&costs, &[0.5, 0.5]);
+        assert_eq!(p.ranges(), vec![(0, 2), (2, 4)]);
+        // skewed shares: first node takes more
+        let p = partition_by_shares(&costs, &[0.75, 0.25]);
+        assert_eq!(p.ranges(), vec![(0, 3), (3, 4)]);
+    }
+
+    #[test]
+    fn shares_zero_group_ok() {
+        let costs = [10, 10];
+        let p = partition_by_shares(&costs, &[0.0, 1.0]);
+        assert_eq!(p.ranges(), vec![(0, 0), (0, 2)]);
+        assert!(p.is_valid());
+    }
+
+    #[test]
+    fn prop_dp_no_worse_than_even_split() {
+        check(
+            "DP bottleneck <= naive even split bottleneck",
+            200,
+            |rng| {
+                let n = 1 + rng.below(12);
+                let k = 1 + rng.below(5);
+                let costs: Vec<u64> = (0..n).map(|_| rng.below(1000) as u64 + 1).collect();
+                (costs, k)
+            },
+            |(costs, k)| {
+                let p = balanced_partition(costs, *k);
+                if !p.is_valid() {
+                    return Err("invalid partition".into());
+                }
+                // coverage: ranges concatenate to [0, n)
+                let r = p.ranges();
+                let mut pos = 0;
+                for (s, e) in &r {
+                    if *s != pos || e < s {
+                        return Err(format!("non-contiguous ranges {r:?}"));
+                    }
+                    pos = *e;
+                }
+                if pos != costs.len() {
+                    return Err("ranges do not cover all stages".into());
+                }
+                // optimality vs even split
+                let k_eff = (*k).min(costs.len());
+                let chunk = costs.len().div_ceil(k_eff);
+                let naive = Partition {
+                    n_stages: costs.len(),
+                    bounds: (1..k_eff).map(|j| (j * chunk).min(costs.len())).collect(),
+                };
+                if p.bottleneck(costs) > naive.bottleneck(costs) {
+                    return Err(format!(
+                        "dp {} worse than naive {}",
+                        p.bottleneck(costs),
+                        naive.bottleneck(costs)
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_shares_cover_exactly() {
+        check(
+            "share partition covers stages exactly once",
+            200,
+            |rng| {
+                let n = 1 + rng.below(10);
+                let k = 1 + rng.below(4);
+                let costs: Vec<u64> = (0..n).map(|_| rng.below(500) as u64 + 1).collect();
+                let shares: Vec<f64> = (0..k).map(|_| rng.range(0.01, 1.0)).collect();
+                (costs, shares)
+            },
+            |(costs, shares)| {
+                let p = partition_by_shares(costs, shares);
+                let mut pos = 0;
+                for (s, e) in p.ranges() {
+                    if s != pos {
+                        return Err("gap/overlap".into());
+                    }
+                    pos = e;
+                }
+                if pos != costs.len() {
+                    return Err("missing tail".into());
+                }
+                if p.n_groups() != shares.len() {
+                    return Err("wrong group count".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,220 @@
+//! The executor thread: sole owner of the PJRT client.
+//!
+//! Programs (monolithic models or stages) are registered once with their
+//! weights; weights are uploaded to device-resident buffers at registration
+//! so the per-request hot path uploads only the activation (§Perf-L3
+//! optimization — the `resident=false` mode keeps the naive
+//! literal-per-call path for before/after comparison).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::{Runtime, Tensor};
+
+/// Identifies a registered program (e.g. `"mobilenet_v2/stage0"`).
+pub type ProgramKey = String;
+
+/// Aggregate executor statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub programs: usize,
+    pub executions: u64,
+    pub exec_time: Duration,
+    pub upload_time: Duration,
+}
+
+enum Msg {
+    Register {
+        key: ProgramKey,
+        artifact: String,
+        weights: Vec<Tensor>,
+        resident: bool,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Execute {
+        key: ProgramKey,
+        input: Tensor,
+        reply: mpsc::Sender<Result<(Tensor, Duration)>>,
+    },
+    Stats {
+        reply: mpsc::Sender<ExecStats>,
+    },
+    /// Stop the executor loop even while other handles hold senders.
+    Shutdown,
+}
+
+struct Program {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    /// Device-resident weights (hot path).
+    buffers: Vec<xla::PjRtBuffer>,
+    /// Host literals (naive path, kept for §Perf baseline runs).
+    literals: Vec<xla::Literal>,
+    resident: bool,
+}
+
+/// Executor thread owner; dropping it shuts the thread down.
+pub struct ExecServer {
+    tx: mpsc::Sender<Msg>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+/// Cloneable, `Send` handle used by the coordinator and node simulators.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ExecServer {
+    /// Spawn the executor thread (creates the PJRT CPU client inside it).
+    pub fn start() -> Result<ExecServer> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = thread::Builder::new()
+            .name("carbonedge-executor".into())
+            .spawn(move || {
+                let mut rt = match Runtime::cpu() {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut programs: HashMap<ProgramKey, Program> = HashMap::new();
+                let mut stats = ExecStats::default();
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Register { key, artifact, weights, resident, reply } => {
+                            let r = register(&mut rt, &mut programs, key, &artifact, weights, resident);
+                            stats.programs = programs.len();
+                            let _ = reply.send(r);
+                        }
+                        Msg::Execute { key, input, reply } => {
+                            let r = execute(&rt, &programs, &key, input, &mut stats);
+                            let _ = reply.send(r);
+                        }
+                        Msg::Stats { reply } => {
+                            let _ = reply.send(stats.clone());
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(ExecServer { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        ExecHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for ExecServer {
+    fn drop(&mut self) {
+        // An explicit shutdown message stops the loop even while cloned
+        // ExecHandles still hold senders (closing the channel alone would
+        // deadlock the join below).
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn register(
+    rt: &mut Runtime,
+    programs: &mut HashMap<ProgramKey, Program>,
+    key: ProgramKey,
+    artifact: &str,
+    weights: Vec<Tensor>,
+    resident: bool,
+) -> Result<()> {
+    let exe = rt.load(artifact)?;
+    let mut buffers = Vec::new();
+    let mut literals = Vec::new();
+    if resident {
+        for w in &weights {
+            buffers.push(rt.upload(w)?);
+        }
+    } else {
+        for w in &weights {
+            literals.push(w.to_literal()?);
+        }
+    }
+    programs.insert(key, Program { exe, buffers, literals, resident });
+    Ok(())
+}
+
+fn execute(
+    rt: &Runtime,
+    programs: &HashMap<ProgramKey, Program>,
+    key: &str,
+    input: Tensor,
+    stats: &mut ExecStats,
+) -> Result<(Tensor, Duration)> {
+    let prog = programs.get(key).ok_or_else(|| anyhow!("program {key:?} not registered"))?;
+    let t0 = Instant::now();
+    let out = if prog.resident {
+        let up0 = Instant::now();
+        let x = rt.upload(&input)?;
+        stats.upload_time += up0.elapsed();
+        let mut args: Vec<&xla::PjRtBuffer> = prog.buffers.iter().collect();
+        args.push(&x);
+        rt.execute_buffers(&prog.exe, &args)?
+    } else {
+        let input_lit = input.to_literal()?;
+        let mut args: Vec<&xla::Literal> = prog.literals.iter().collect();
+        args.push(&input_lit);
+        let outs = prog.exe.execute(&args)?;
+        let lit = outs[0][0].to_literal_sync()?.to_tuple1()?;
+        Tensor::from_literal(&lit)?
+    };
+    let dt = t0.elapsed();
+    stats.executions += 1;
+    stats.exec_time += dt;
+    Ok((out, dt))
+}
+
+impl ExecHandle {
+    /// Register a program (idempotent per key; re-registering replaces it).
+    pub fn register(
+        &self,
+        key: &str,
+        artifact: &str,
+        weights: Vec<Tensor>,
+        resident: bool,
+    ) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Register {
+                key: key.to_string(),
+                artifact: artifact.to_string(),
+                weights,
+                resident,
+                reply,
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    /// Execute a registered program; returns output + real device time.
+    pub fn execute(&self, key: &str, input: Tensor) -> Result<(Tensor, Duration)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Execute { key: key.to_string(), input, reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    pub fn stats(&self) -> Result<ExecStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Stats { reply }).map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))
+    }
+}

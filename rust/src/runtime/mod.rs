@@ -1,0 +1,91 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client.
+//!
+//! The `xla` crate's handles are `Rc`-based (neither `Send` nor `Sync`), so
+//! all PJRT work lives on one **executor thread** that owns the client,
+//! the compiled-executable cache and the device-resident weight buffers;
+//! the rest of the system talks to it through the cloneable, `Send`
+//! [`ExecHandle`]. This mirrors a real deployment where a single accelerator
+//! queue serializes kernel launches.
+
+mod executor;
+mod tensor;
+
+pub use executor::{ExecHandle, ExecServer, ExecStats, ProgramKey};
+pub use tensor::{f32_from_le_bytes, Tensor};
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+/// Single-threaded PJRT wrapper: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()?, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an HLO-text artifact, memoized by path.
+    ///
+    /// HLO *text* is the interchange format: jax>=0.5 emits protos with
+    /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids (see DESIGN.md / aot.py).
+    pub fn load(&mut self, path: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(path) {
+            return Ok(Rc::clone(exe));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {path}"))?);
+        self.cache.insert(path.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    pub fn cached_programs(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Upload a host tensor to a device-resident buffer.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?)
+    }
+
+    /// Execute with device-resident buffer arguments; returns the flat f32
+    /// output of the (1-tuple) result plus its shape.
+    pub fn execute_buffers(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Tensor> {
+        let outs = exe.execute_b(args)?;
+        let lit = outs[0][0].to_literal_sync()?.to_tuple1()?;
+        Tensor::from_literal(&lit)
+    }
+
+    /// Execute with host literals (upload per call). Used by tests and the
+    /// §Perf "before" baseline; the hot path uses [`execute_buffers`].
+    pub fn execute_literals(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Tensor> {
+        let outs = exe.execute(args)?;
+        let lit = outs[0][0].to_literal_sync()?.to_tuple1()?;
+        Tensor::from_literal(&lit)
+    }
+}

@@ -1,0 +1,122 @@
+//! Host-side tensor: flat f32 data + shape, with Literal conversions and
+//! binary (de)serialization matching the aot.py sidecar format.
+
+use anyhow::{bail, Context, Result};
+
+/// A dense row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes this tensor occupies (f32).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(dims, data)
+    }
+
+    /// Parse a little-endian f32 binary file (aot.py `.bin` sidecars).
+    pub fn from_bin_file(path: &str, shape: Vec<usize>) -> Result<Tensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        let data = f32_from_le_bytes(&bytes)?;
+        Tensor::new(shape, data)
+    }
+
+    /// Slice a sub-tensor out of a flat buffer (weight unpacking).
+    pub fn from_flat(flat: &[f32], offset: usize, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if offset + n > flat.len() {
+            bail!("weight slice {}..{} out of bounds ({})", offset, offset + n, flat.len());
+        }
+        Tensor::new(shape, flat[offset..offset + n].to_vec())
+    }
+}
+
+/// Decode little-endian f32s.
+pub fn f32_from_le_bytes(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("binary length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_size() {
+        let t = Tensor::zeros(vec![4, 2]);
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.size_bytes(), 32);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_flat_slices() {
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let t = Tensor::from_flat(&flat, 2, vec![2, 2]).unwrap();
+        assert_eq!(t.data, vec![2.0, 3.0, 4.0, 5.0]);
+        assert!(Tensor::from_flat(&flat, 8, vec![2]).is_ok());
+        assert!(Tensor::from_flat(&flat, 8, vec![3]).is_err());
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0, f32::MAX];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(f32_from_le_bytes(&bytes).unwrap(), vals);
+        assert!(f32_from_le_bytes(&bytes[..5]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        // Requires the PJRT-free literal API only.
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,184 @@
+//! Baseline schedulers the paper compares against (Sec. IV-A4) plus the
+//! standard strawmen used in the ablation benches.
+
+use std::sync::Arc;
+
+use crate::node::EdgeNode;
+use crate::util::rng::Rng;
+
+use super::{CarbonAwareScheduler, Scheduler, TaskDemand, Weights};
+
+/// AMP4EC (the authors' prior framework): the same NSA **without** carbon
+/// awareness — Eq. 3 with `w_C = 0` and the remaining weights in
+/// Performance-mode proportions, renormalized.
+pub struct Amp4ecScheduler {
+    inner: CarbonAwareScheduler,
+}
+
+impl Amp4ecScheduler {
+    pub fn new() -> Amp4ecScheduler {
+        // Performance row of Table I with the carbon column removed.
+        let w = Weights { r: 0.25, l: 0.25, p: 0.30, b: 0.15, c: 0.0 }.normalized();
+        Amp4ecScheduler { inner: CarbonAwareScheduler::new("amp4ec", w) }
+    }
+}
+
+impl Default for Amp4ecScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Amp4ecScheduler {
+    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
+        self.inner.select(task, nodes)
+    }
+    fn name(&self) -> &str {
+        "amp4ec"
+    }
+}
+
+/// Round-robin over feasible nodes.
+pub struct RoundRobinScheduler {
+    next: usize,
+}
+
+impl RoundRobinScheduler {
+    pub fn new() -> RoundRobinScheduler {
+        RoundRobinScheduler { next: 0 }
+    }
+}
+
+impl Default for RoundRobinScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for RoundRobinScheduler {
+    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
+        for k in 0..nodes.len() {
+            let i = (self.next + k) % nodes.len();
+            if nodes[i].fits(task.mem_mb, task.cpu) {
+                self.next = (i + 1) % nodes.len();
+                return Some(i);
+            }
+        }
+        None
+    }
+    fn name(&self) -> &str {
+        "round-robin"
+    }
+}
+
+/// Uniform random over feasible nodes (seeded).
+pub struct RandomScheduler {
+    rng: Rng,
+}
+
+impl RandomScheduler {
+    pub fn new(seed: u64) -> RandomScheduler {
+        RandomScheduler { rng: Rng::new(seed) }
+    }
+}
+
+impl Scheduler for RandomScheduler {
+    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
+        let feasible: Vec<usize> =
+            (0..nodes.len()).filter(|&i| nodes[i].fits(task.mem_mb, task.cpu)).collect();
+        if feasible.is_empty() {
+            None
+        } else {
+            Some(feasible[self.rng.below(feasible.len())])
+        }
+    }
+    fn name(&self) -> &str {
+        "random"
+    }
+}
+
+/// Fewest in-flight tasks wins (ties: lowest index).
+pub struct LeastLoadedScheduler;
+
+impl Scheduler for LeastLoadedScheduler {
+    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
+        nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.fits(task.mem_mb, task.cpu))
+            .min_by_key(|(_, n)| n.state().inflight)
+            .map(|(i, _)| i)
+    }
+    fn name(&self) -> &str {
+        "least-loaded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeRegistry;
+
+    #[test]
+    fn amp4ec_ignores_carbon() {
+        // AMP4EC must pick the fast node regardless of its intensity —
+        // exactly why Table II shows it *increasing* carbon vs monolithic.
+        let r = NodeRegistry::paper_setup();
+        let mut s = Amp4ecScheduler::new();
+        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        assert_eq!(r.get(i).spec.name, "node-high");
+        assert_eq!(s.name(), "amp4ec");
+    }
+
+    #[test]
+    fn round_robin_cycles_feasible() {
+        let r = NodeRegistry::paper_setup();
+        let mut s = RoundRobinScheduler::new();
+        let picks: Vec<usize> =
+            (0..6).map(|_| s.select(&TaskDemand::default(), r.nodes()).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_infeasible() {
+        let r = NodeRegistry::paper_setup();
+        // 800MB only fits node-high
+        let task = TaskDemand { mem_mb: 800, ..TaskDemand::default() };
+        let mut s = RoundRobinScheduler::new();
+        for _ in 0..4 {
+            assert_eq!(s.select(&task, r.nodes()), Some(0));
+        }
+    }
+
+    #[test]
+    fn random_is_seeded_and_feasible() {
+        let r = NodeRegistry::paper_setup();
+        let mut a = RandomScheduler::new(9);
+        let mut b = RandomScheduler::new(9);
+        for _ in 0..20 {
+            let x = a.select(&TaskDemand::default(), r.nodes());
+            let y = b.select(&TaskDemand::default(), r.nodes());
+            assert_eq!(x, y);
+            assert!(x.unwrap() < 3);
+        }
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let r = NodeRegistry::paper_setup();
+        r.get(0).begin_task();
+        let mut s = LeastLoadedScheduler;
+        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        assert_ne!(i, 0);
+    }
+
+    #[test]
+    fn all_return_none_when_infeasible() {
+        let r = NodeRegistry::paper_setup();
+        let task = TaskDemand { mem_mb: 1 << 20, ..TaskDemand::default() };
+        assert!(Amp4ecScheduler::new().select(&task, r.nodes()).is_none());
+        assert!(RoundRobinScheduler::new().select(&task, r.nodes()).is_none());
+        assert!(RandomScheduler::new(1).select(&task, r.nodes()).is_none());
+        assert!(LeastLoadedScheduler.select(&task, r.nodes()).is_none());
+    }
+}

@@ -1,0 +1,31 @@
+//! The Carbon-Aware Scheduler — the paper's primary contribution
+//! (Sec. III-C/D): weighted node scoring (Eq. 3), the carbon-efficiency
+//! score S_C (Eq. 4), the three operational modes (Table I), the node
+//! selection algorithm (Algorithm 1), and the non-carbon-aware baselines
+//! (AMP4EC NSA, round-robin, random, least-loaded).
+
+mod baselines;
+mod modes;
+mod normalized;
+mod nsa;
+mod score;
+
+pub use baselines::{Amp4ecScheduler, LeastLoadedScheduler, RandomScheduler, RoundRobinScheduler};
+pub use modes::{Mode, Weights};
+pub use normalized::{ConstrainedGreenScheduler, NormalizedScheduler};
+pub use nsa::{CarbonAwareScheduler, SelectionTrace, LOAD_CUTOFF};
+pub use score::{carbon_score, score_breakdown, ScoreBreakdown, TaskDemand};
+
+use std::sync::Arc;
+
+use crate::node::EdgeNode;
+
+/// Node-selection interface shared by the carbon-aware scheduler and all
+/// baselines. Returns the index of the chosen node (None if no feasible
+/// node exists, Algorithm 1 line 18 with `n* = null`).
+pub trait Scheduler: Send {
+    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize>;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &str;
+}

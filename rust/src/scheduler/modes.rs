@@ -1,0 +1,133 @@
+//! Scheduling modes and weight configurations (paper Table I).
+
+/// Weight vector for Eq. 3: `S = w_R·S_R + w_L·S_L + w_P·S_P + w_B·S_B + w_C·S_C`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weights {
+    pub r: f64,
+    pub l: f64,
+    pub p: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Weights {
+    pub fn sum(&self) -> f64 {
+        self.r + self.l + self.p + self.b + self.c
+    }
+
+    /// Normalize to sum 1 (weights from sweeps/configs may not add up).
+    pub fn normalized(&self) -> Weights {
+        let s = self.sum();
+        assert!(s > 0.0, "zero weight vector");
+        Weights { r: self.r / s, l: self.l / s, p: self.p / s, b: self.b / s, c: self.c / s }
+    }
+
+    /// Custom sweep point (Fig. 3): carbon weight `w_c`, the remaining mass
+    /// distributed over R/L/P/B in Performance mode's proportions.
+    pub fn sweep(w_c: f64) -> Weights {
+        assert!((0.0..=1.0).contains(&w_c));
+        let base = Mode::Performance.weights();
+        let rest = base.r + base.l + base.p + base.b; // 0.95
+        let k = (1.0 - w_c) / rest;
+        Weights { r: base.r * k, l: base.l * k, p: base.p * k, b: base.b * k, c: w_c }
+    }
+}
+
+/// The paper's operational modes (Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Performance,
+    Green,
+    Balanced,
+}
+
+impl Mode {
+    /// Exact Table I weight configurations.
+    pub fn weights(self) -> Weights {
+        match self {
+            Mode::Performance => Weights { r: 0.25, l: 0.25, p: 0.30, b: 0.15, c: 0.05 },
+            Mode::Green => Weights { r: 0.15, l: 0.15, p: 0.10, b: 0.10, c: 0.50 },
+            Mode::Balanced => Weights { r: 0.20, l: 0.20, p: 0.15, b: 0.15, c: 0.30 },
+        }
+    }
+
+    pub fn all() -> [Mode; 3] {
+        [Mode::Performance, Mode::Balanced, Mode::Green]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Performance => "performance",
+            Mode::Green => "green",
+            Mode::Balanced => "balanced",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "performance" | "perf" => Some(Mode::Performance),
+            "green" => Some(Mode::Green),
+            "balanced" => Some(Mode::Balanced),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_exact_values() {
+        let p = Mode::Performance.weights();
+        assert_eq!((p.r, p.l, p.p, p.b, p.c), (0.25, 0.25, 0.30, 0.15, 0.05));
+        let g = Mode::Green.weights();
+        assert_eq!((g.r, g.l, g.p, g.b, g.c), (0.15, 0.15, 0.10, 0.10, 0.50));
+        let b = Mode::Balanced.weights();
+        assert_eq!((b.r, b.l, b.p, b.b, b.c), (0.20, 0.20, 0.15, 0.15, 0.30));
+    }
+
+    #[test]
+    fn table1_rows_sum_to_one() {
+        for m in Mode::all() {
+            assert!((m.weights().sum() - 1.0).abs() < 1e-12, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn normalization() {
+        let w = Weights { r: 2.0, l: 2.0, p: 2.0, b: 2.0, c: 2.0 }.normalized();
+        assert!((w.sum() - 1.0).abs() < 1e-12);
+        assert!((w.c - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_weights_panic() {
+        Weights { r: 0.0, l: 0.0, p: 0.0, b: 0.0, c: 0.0 }.normalized();
+    }
+
+    #[test]
+    fn sweep_endpoints_and_interior() {
+        let w0 = Weights::sweep(0.0);
+        assert!((w0.sum() - 1.0).abs() < 1e-12);
+        assert_eq!(w0.c, 0.0);
+        // At w_c = 0.05 the sweep reproduces Performance mode exactly.
+        let w05 = Weights::sweep(0.05);
+        let p = Mode::Performance.weights();
+        assert!((w05.r - p.r).abs() < 1e-12);
+        assert!((w05.p - p.p).abs() < 1e-12);
+        // w_c = 1: everything on carbon.
+        let w1 = Weights::sweep(1.0);
+        assert!((w1.c - 1.0).abs() < 1e-12);
+        assert!(w1.r.abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(Mode::parse("green"), Some(Mode::Green));
+        assert_eq!(Mode::parse("PERF"), Some(Mode::Performance));
+        assert_eq!(Mode::parse("Balanced"), Some(Mode::Balanced));
+        assert_eq!(Mode::parse("eco"), None);
+    }
+}

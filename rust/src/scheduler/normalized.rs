@@ -1,0 +1,185 @@
+//! Per-decision min-max normalized scheduling — the paper's own proposed
+//! fix (Sec. V-A) for Balanced mode's limited S_C differentiation:
+//! "future work should explore per-decision min-max normalization or
+//! constraint-based optimization". Both are implemented here.
+
+use std::sync::Arc;
+
+use crate::node::EdgeNode;
+
+use super::{score_breakdown, Scheduler, ScoreBreakdown, TaskDemand, Weights, LOAD_CUTOFF};
+
+/// NSA variant that min-max normalizes every score component across the
+/// feasible set before weighting, so a component's *spread* no longer
+/// decides how much influence its weight has.
+pub struct NormalizedScheduler {
+    pub weights: Weights,
+    name: String,
+}
+
+impl NormalizedScheduler {
+    pub fn new(name: &str, weights: Weights) -> NormalizedScheduler {
+        NormalizedScheduler { weights, name: name.to_string() }
+    }
+}
+
+fn minmax(vals: &[f64]) -> Vec<f64> {
+    let lo = vals.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = vals.iter().cloned().fold(f64::MIN, f64::max);
+    if (hi - lo).abs() < 1e-12 {
+        return vec![0.5; vals.len()]; // no differentiation -> neutral
+    }
+    vals.iter().map(|v| (v - lo) / (hi - lo)).collect()
+}
+
+impl Scheduler for NormalizedScheduler {
+    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
+        let mut feasible: Vec<(usize, ScoreBreakdown)> = Vec::new();
+        for (i, n) in nodes.iter().enumerate() {
+            let st = n.state();
+            if st.load > LOAD_CUTOFF || n.score_ms() > task.latency_threshold_ms {
+                continue;
+            }
+            if !n.fits(task.mem_mb, task.cpu) {
+                continue;
+            }
+            feasible.push((i, score_breakdown(n, task, &self.weights)));
+        }
+        if feasible.is_empty() {
+            return None;
+        }
+        if feasible.len() == 1 {
+            return Some(feasible[0].0);
+        }
+        let col = |f: fn(&ScoreBreakdown) -> f64| -> Vec<f64> {
+            feasible.iter().map(|(_, b)| f(b)).collect()
+        };
+        let (r, l, p, bb, c) = (
+            minmax(&col(|b| b.s_r)),
+            minmax(&col(|b| b.s_l)),
+            minmax(&col(|b| b.s_p)),
+            minmax(&col(|b| b.s_b)),
+            minmax(&col(|b| b.s_c)),
+        );
+        let w = &self.weights;
+        feasible
+            .iter()
+            .enumerate()
+            .map(|(k, (i, _))| {
+                (*i, w.r * r[k] + w.l * l[k] + w.p * p[k] + w.b * bb[k] + w.c * c[k])
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Constraint-based variant (the paper's other Sec. V-A suggestion):
+/// among nodes whose expected latency is within `latency_slack` of the
+/// fastest feasible node, pick the lowest-carbon one.
+pub struct ConstrainedGreenScheduler {
+    /// Allowed latency multiple over the fastest node (e.g. 1.15 = +15%).
+    pub latency_slack: f64,
+    name: String,
+}
+
+impl ConstrainedGreenScheduler {
+    pub fn new(latency_slack: f64) -> ConstrainedGreenScheduler {
+        assert!(latency_slack >= 1.0);
+        ConstrainedGreenScheduler { latency_slack, name: "constrained-green".into() }
+    }
+}
+
+impl Scheduler for ConstrainedGreenScheduler {
+    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
+        let feasible: Vec<usize> = (0..nodes.len())
+            .filter(|&i| {
+                let n = &nodes[i];
+                let st = n.state();
+                st.load <= LOAD_CUTOFF
+                    && n.score_ms() <= task.latency_threshold_ms
+                    && n.fits(task.mem_mb, task.cpu)
+            })
+            .collect();
+        let fastest = feasible
+            .iter()
+            .map(|&i| nodes[i].score_ms())
+            .fold(f64::MAX, f64::min);
+        feasible
+            .into_iter()
+            .filter(|&i| nodes[i].score_ms() <= fastest * self.latency_slack)
+            .min_by(|&a, &b| {
+                nodes[a]
+                    .spec
+                    .intensity
+                    .partial_cmp(&nodes[b].spec.intensity)
+                    .unwrap()
+            })
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeRegistry;
+    use crate::scheduler::Mode;
+
+    #[test]
+    fn minmax_normalizes_and_handles_ties() {
+        assert_eq!(minmax(&[1.0, 2.0, 3.0]), vec![0.0, 0.5, 1.0]);
+        assert_eq!(minmax(&[4.0, 4.0]), vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn normalized_balanced_routes_green() {
+        // The paper's motivation: with min-max normalization, Balanced
+        // (w_C = 0.30) *does* differentiate on carbon and flips to the
+        // green node — unlike the raw-score NSA (Table V).
+        let r = NodeRegistry::paper_setup();
+        let mut s = NormalizedScheduler::new("balanced-norm", Mode::Balanced.weights());
+        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        assert_eq!(r.get(i).spec.name, "node-green");
+    }
+
+    #[test]
+    fn normalized_performance_still_routes_fast() {
+        let r = NodeRegistry::paper_setup();
+        let mut s = NormalizedScheduler::new("perf-norm", Mode::Performance.weights());
+        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        assert_eq!(r.get(i).spec.name, "node-high");
+    }
+
+    #[test]
+    fn normalized_single_feasible_node() {
+        let r = NodeRegistry::paper_setup();
+        let task = TaskDemand { mem_mb: 800, ..TaskDemand::default() }; // only node-high
+        let mut s = NormalizedScheduler::new("x", Mode::Green.weights());
+        assert_eq!(s.select(&task, r.nodes()), Some(0));
+        let task = TaskDemand { mem_mb: 4096, ..TaskDemand::default() };
+        assert_eq!(s.select(&task, r.nodes()), None);
+    }
+
+    #[test]
+    fn constrained_green_respects_slack() {
+        let r = NodeRegistry::paper_setup();
+        // priors: high 250ms, green 625ms. Tight slack -> fastest node.
+        let mut tight = ConstrainedGreenScheduler::new(1.05);
+        assert_eq!(r.get(tight.select(&TaskDemand::default(), r.nodes()).unwrap()).spec.name, "node-high");
+        // Loose slack admits the green node.
+        let mut loose = ConstrainedGreenScheduler::new(3.0);
+        assert_eq!(r.get(loose.select(&TaskDemand::default(), r.nodes()).unwrap()).spec.name, "node-green");
+    }
+
+    #[test]
+    #[should_panic]
+    fn slack_below_one_rejected() {
+        ConstrainedGreenScheduler::new(0.9);
+    }
+}

@@ -1,0 +1,181 @@
+//! Score components of Eq. 3 and the carbon-efficiency score of Eq. 4.
+//!
+//! All components are normalized to [0, 1] (Sec. III-C). Formulas follow
+//! Algorithm 1 lines 7–11 exactly:
+//!
+//! * `S_R` — resource availability relative to the task's demand;
+//! * `S_L = 1 − load`;
+//! * `S_P = 1 / (1 + avg_time)` with time in **seconds** (the paper's
+//!   reported S_P range of 0.166 across ~250–600 ms nodes pins the unit);
+//! * `S_B = 1 / (1 + 2·task_count)` with `task_count` = in-flight tasks;
+//! * `S_C = 1 / (1 + I_carbon · E_est)`, `E_est = P_node · T_avg / 3.6e6`
+//!   (the paper's W × ms conversion, Sec. III-C1).
+
+use std::sync::Arc;
+
+use crate::node::EdgeNode;
+
+use super::Weights;
+
+/// Resource demand of an inference task (Algorithm 1's `t`).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskDemand {
+    /// CPU cores needed.
+    pub cpu: f64,
+    /// Memory needed (MB).
+    pub mem_mb: usize,
+    /// Latency threshold for the Algorithm 1 line-3 filter (ms).
+    pub latency_threshold_ms: f64,
+}
+
+impl Default for TaskDemand {
+    fn default() -> Self {
+        // A lightweight CNN inference: fits every paper node.
+        TaskDemand { cpu: 0.2, mem_mb: 256, latency_threshold_ms: 5_000.0 }
+    }
+}
+
+/// All five components plus the weighted total.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreBreakdown {
+    pub s_r: f64,
+    pub s_l: f64,
+    pub s_p: f64,
+    pub s_b: f64,
+    pub s_c: f64,
+    pub total: f64,
+}
+
+/// `S_R`: how comfortably the node's free resources cover the demand,
+/// averaged over CPU and memory and clamped to [0, 1].
+pub fn resource_score(node: &EdgeNode, task: &TaskDemand) -> f64 {
+    let st = node.state();
+    let free_cpu = node.spec.cpu_quota * (1.0 - st.load);
+    let cpu_ratio = (free_cpu / task.cpu.max(1e-9)).min(1.0);
+    let free_mem = node.spec.mem_mb as f64; // static quota in this testbed
+    let mem_ratio = (free_mem / task.mem_mb.max(1) as f64).min(1.0);
+    ((cpu_ratio + mem_ratio) / 2.0).clamp(0.0, 1.0)
+}
+
+/// `S_C` (Eq. 4) from raw quantities.
+pub fn carbon_score(intensity: f64, power_w: f64, avg_time_ms: f64) -> f64 {
+    let e_est = power_w * avg_time_ms / 3.6e6; // the paper's conversion
+    1.0 / (1.0 + intensity * e_est)
+}
+
+/// Full Eq. 3 breakdown for one node.
+pub fn score_breakdown(node: &Arc<EdgeNode>, task: &TaskDemand, w: &Weights) -> ScoreBreakdown {
+    let st = node.state();
+    let s_r = resource_score(node, task);
+    let s_l = (1.0 - st.load).clamp(0.0, 1.0);
+    let avg_ms = node.score_ms();
+    let s_p = 1.0 / (1.0 + avg_ms / 1e3); // seconds
+    let s_b = 1.0 / (1.0 + 2.0 * st.inflight as f64);
+    let s_c = carbon_score(node.spec.intensity, node.spec.rated_power_w, avg_ms);
+    let total = w.r * s_r + w.l * s_l + w.p * s_p + w.b * s_b + w.c * s_c;
+    ScoreBreakdown { s_r, s_l, s_p, s_b, s_c, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeSpec;
+    use crate::scheduler::Mode;
+
+    fn nodes() -> Vec<Arc<EdgeNode>> {
+        NodeSpec::paper_nodes().into_iter().map(EdgeNode::new).collect()
+    }
+
+    #[test]
+    fn eq4_hand_computed() {
+        // S_C = 1 / (1 + I * P*T/3.6e6)
+        let s = carbon_score(620.0, 170.0, 250.0);
+        let e = 170.0 * 250.0 / 3.6e6;
+        assert!((s - 1.0 / (1.0 + 620.0 * e)).abs() < 1e-12);
+        // monotone: lower intensity -> higher score
+        assert!(carbon_score(380.0, 170.0, 250.0) > s);
+        // monotone: lower power -> higher score
+        assert!(carbon_score(620.0, 68.0, 250.0) > s);
+        // zero energy estimate -> perfect score
+        assert_eq!(carbon_score(620.0, 0.0, 250.0), 1.0);
+    }
+
+    #[test]
+    fn components_in_unit_range() {
+        let task = TaskDemand::default();
+        let w = Mode::Green.weights();
+        for n in nodes() {
+            let b = score_breakdown(&n, &task, &w);
+            for v in [b.s_r, b.s_l, b.s_p, b.s_b, b.s_c] {
+                assert!((0.0..=1.0).contains(&v), "{b:?}");
+            }
+            assert!(b.total <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn calibrated_ranges_match_paper() {
+        // DESIGN.md §3: the cold-start score ranges reproduce the paper's
+        // reported differentiation: range(S_C) ≈ 0.054, range(S_P) ≈ 0.166.
+        let task = TaskDemand::default();
+        let w = Mode::Balanced.weights();
+        let bs: Vec<ScoreBreakdown> =
+            nodes().iter().map(|n| score_breakdown(n, &task, &w)).collect();
+        let range = |f: fn(&ScoreBreakdown) -> f64| {
+            let vals: Vec<f64> = bs.iter().map(f).collect();
+            vals.iter().cloned().fold(f64::MIN, f64::max)
+                - vals.iter().cloned().fold(f64::MAX, f64::min)
+        };
+        let rc = range(|b| b.s_c);
+        let rp = range(|b| b.s_p);
+        assert!((rc - 0.054).abs() < 0.02, "range(S_C) = {rc}");
+        assert!((rp - 0.166).abs() < 0.04, "range(S_P) = {rp}");
+        // S_C must differentiate less than S_P (the paper's Balanced-mode
+        // explanation, Sec. IV-F).
+        assert!(rc < rp);
+    }
+
+    #[test]
+    fn idle_nodes_equal_load_and_balance() {
+        let task = TaskDemand::default();
+        let w = Mode::Performance.weights();
+        let bs: Vec<ScoreBreakdown> =
+            nodes().iter().map(|n| score_breakdown(n, &task, &w)).collect();
+        for b in &bs {
+            assert_eq!(b.s_l, 1.0);
+            assert_eq!(b.s_b, 1.0);
+            assert_eq!(b.s_r, 1.0); // demand fits every node comfortably
+        }
+    }
+
+    #[test]
+    fn inflight_lowers_balance_score() {
+        let ns = nodes();
+        let task = TaskDemand::default();
+        let w = Mode::Performance.weights();
+        ns[0].begin_task();
+        let b = score_breakdown(&ns[0], &task, &w);
+        assert!((b.s_b - 1.0 / 3.0).abs() < 1e-12); // 1/(1+2*1)
+        ns[0].begin_task();
+        let b2 = score_breakdown(&ns[0], &task, &w);
+        assert!((b2.s_b - 0.2).abs() < 1e-12); // 1/(1+2*2)
+    }
+
+    #[test]
+    fn sp_uses_seconds() {
+        let ns = nodes();
+        // node-high prior 250 ms -> S_P = 1/1.25 = 0.8
+        let b = score_breakdown(&ns[0], &TaskDemand::default(), &Mode::Green.weights());
+        assert!((b.s_p - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_total_formula() {
+        let ns = nodes();
+        let task = TaskDemand::default();
+        let w = Weights { r: 0.1, l: 0.2, p: 0.3, b: 0.15, c: 0.25 };
+        let b = score_breakdown(&ns[1], &task, &w);
+        let expect = 0.1 * b.s_r + 0.2 * b.s_l + 0.3 * b.s_p + 0.15 * b.s_b + 0.25 * b.s_c;
+        assert!((b.total - expect).abs() < 1e-12);
+    }
+}

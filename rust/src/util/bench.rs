@@ -1,0 +1,173 @@
+//! Micro-benchmark harness substrate (criterion is not in the offline crate
+//! set). Used by `benches/*.rs` (with `harness = false`) and the §Perf pass.
+//!
+//! Method: warmup, then timed batches until both a minimum wall-clock budget
+//! and a minimum iteration count are met; reports mean/p50/p95 per-iteration
+//! time with a 95% CI.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub per_iter: Summary, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.per_iter;
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  ±{:>5.1}%",
+            self.name,
+            self.iters,
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p95),
+            s.ci95_rel() * 100.0
+        )
+    }
+}
+
+/// Human-friendly seconds formatting.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Benchmark runner with configurable budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+
+    /// Time `f` repeatedly; one sample per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed samples.
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        BenchResult { name: name.to_string(), iters: samples.len(), per_iter: Summary::of(&samples) }
+    }
+
+    /// Like `run` but each call of `f` performs `batch` iterations
+    /// (for sub-microsecond operations where per-call timing is too noisy).
+    pub fn run_batched<F: FnMut()>(&self, name: &str, batch: usize, mut f: F) -> BenchResult {
+        assert!(batch > 0);
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s.elapsed().as_secs_f64() / batch as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len() * batch,
+            per_iter: Summary::of(&samples),
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box wrapper,
+/// kept behind our own name so benches read uniformly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(100),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let r = b.run("sleep1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.per_iter.mean >= 0.001, "mean {}", r.per_iter.mean);
+        assert!(r.per_iter.mean < 0.05);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn batched_counts_iters() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.run_batched("add", 1000, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 5000);
+        assert!(r.per_iter.mean < 1e-3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let b = Bencher::quick();
+        let r = b.run("myname", || {});
+        assert!(r.report().contains("myname"));
+    }
+}

@@ -1,0 +1,148 @@
+//! CLI argument-parsing substrate (clap is not in the offline crate set).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! repeated flags, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, flags, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{flag}: {value:?} ({why})")]
+    Invalid { flag: String, value: String, why: String },
+}
+
+impl Args {
+    /// Parse raw args (not including argv[0]). `switches` lists boolean
+    /// flags that take no value.
+    pub fn parse(raw: &[String], switches: &[&str]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let value = if let Some(v) = inline {
+                    v
+                } else if switches.contains(&name.as_str()) {
+                    "true".to_string()
+                } else {
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                        _ => return Err(CliError::MissingValue(name)),
+                    }
+                };
+                out.flags.entry(name).or_default().push(value);
+            } else if out.command.is_none() && out.positional.is_empty() && out.flags.is_empty() {
+                out.command = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(switches: &[&str]) -> Result<Args, CliError> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, switches)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags.get(name).map(|v| v.iter().map(String::as_str).collect()).unwrap_or_default()
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::Invalid {
+                flag: name.into(),
+                value: v.into(),
+                why: format!("expected {}", std::any::type_name::<T>()),
+            }),
+        }
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true" | "1" | "yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse(&sv(&["serve", "--model", "mobilenet_v2", "--mode=green"]), &[]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("model"), Some("mobilenet_v2"));
+        assert_eq!(a.get("mode"), Some("green"));
+    }
+
+    #[test]
+    fn switches_take_no_value() {
+        let a = Args::parse(&sv(&["bench", "--verbose", "--n", "5"]), &["verbose"]).unwrap();
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.parse_or::<usize>("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["x", "--n"]), &[]).is_err());
+        assert!(Args::parse(&sv(&["x", "--n", "--m", "1"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_parse_errors() {
+        let a = Args::parse(&sv(&["x", "--n", "abc"]), &[]).unwrap();
+        assert!(a.parse_or::<usize>("n", 0).is_err());
+        assert_eq!(a.parse_or::<f64>("missing", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn repeated_flags() {
+        let a = Args::parse(&sv(&["x", "--m", "a", "--m", "b"]), &[]).unwrap();
+        assert_eq!(a.get_all("m"), vec!["a", "b"]);
+        assert_eq!(a.get("m"), Some("b")); // last wins
+    }
+
+    #[test]
+    fn positionals() {
+        let a = Args::parse(&sv(&["run", "--x", "1", "p1", "p2"]), &[]).unwrap();
+        assert_eq!(a.positional, vec!["p1", "p2"]);
+    }
+
+    #[test]
+    fn no_command() {
+        let a = Args::parse(&sv(&["--x", "1"]), &[]).unwrap();
+        assert_eq!(a.command, None);
+        assert_eq!(a.get("x"), Some("1"));
+    }
+}

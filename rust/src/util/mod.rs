@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (DESIGN.md §7): JSON, CLI parsing, PRNG, statistics, table rendering,
+//! thread pool, and a micro-benchmark harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,233 @@
+//! Statistics substrate: summary stats, percentiles, confidence intervals,
+//! and a fixed-bucket latency histogram. Backs the metrics module and the
+//! bench harness (criterion is not in the offline crate set).
+
+/// Summary of a sample (latencies, energies, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+
+    /// Half-width of the 95% confidence interval on the mean
+    /// (normal approximation; the paper reports 95% CIs the same way).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * self.std / (self.n as f64).sqrt()
+    }
+
+    /// CI as a fraction of the mean (the paper reports "<15% of mean").
+    pub fn ci95_rel(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.ci95() / self.mean.abs()
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+/// Log-scaled latency histogram (microseconds to seconds).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    lo: f64,
+    ratio: f64,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Histogram {
+    /// `lo`..`hi` in whatever unit the caller uses, `n` log-spaced buckets.
+    pub fn new(lo: f64, hi: f64, n: usize) -> Histogram {
+        assert!(lo > 0.0 && hi > lo && n > 0);
+        Histogram {
+            buckets: vec![0; n + 2], // +underflow +overflow
+            lo,
+            ratio: (hi / lo).powf(1.0 / n as f64),
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        let idx = if v < self.lo {
+            0
+        } else {
+            let i = ((v / self.lo).ln() / self.ratio.ln()).floor() as usize + 1;
+            i.min(self.buckets.len() - 1)
+        };
+        self.buckets[idx] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                if i == 0 {
+                    return self.lo;
+                }
+                return self.lo * self.ratio.powi(i as i32); // upper edge
+            }
+        }
+        self.lo * self.ratio.powi(self.buckets.len() as i32)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.ci95(), 0.0);
+        assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn percentile_interpolation() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ci95_shrinks_with_n() {
+        let a = Summary::of(&vec![1.0, 2.0, 3.0, 2.0, 1.0, 3.0, 2.0, 2.0]);
+        let bigger: Vec<f64> = std::iter::repeat([1.0, 2.0, 3.0, 2.0]).take(100).flatten().collect();
+        let b = Summary::of(&bigger);
+        assert!(b.ci95() < a.ci95());
+    }
+
+    #[test]
+    fn histogram_mean_and_quantile() {
+        let mut h = Histogram::new(0.1, 1000.0, 50);
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count, 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        let q50 = h.quantile(0.5);
+        assert!(q50 > 30.0 && q50 < 80.0, "q50 {q50}");
+        let q99 = h.quantile(0.99);
+        assert!(q99 >= 90.0, "q99 {q99}");
+    }
+
+    #[test]
+    fn histogram_under_overflow() {
+        let mut h = Histogram::new(1.0, 10.0, 4);
+        h.record(0.01);
+        h.record(1e9);
+        assert_eq!(h.count, 2);
+        assert!(h.quantile(0.0) >= 1.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new(1.0, 100.0, 10);
+        let mut b = Histogram::new(1.0, 100.0, 10);
+        a.record(5.0);
+        b.record(50.0);
+        a.merge(&b);
+        assert_eq!(a.count, 2);
+        assert!((a.mean() - 27.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,116 @@
+//! ASCII table rendering for the experiment harness — every paper table is
+//! reprinted in this format by `carbonedge reproduce` and `cargo bench`.
+
+/// A simple right-padded ASCII table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep = |w: &Vec<usize>| -> String {
+            let mut s = String::from("+");
+            for w in w {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<width$} |", cells[i], width = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        out
+    }
+}
+
+/// Format helpers shared by the experiment printers.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+pub fn f4(v: f64) -> String {
+    format!("{v:.4}")
+}
+pub fn f5(v: f64) -> String {
+    format!("{v:.5}")
+}
+pub fn pct(v: f64) -> String {
+    format!("{:+.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["xx".into(), "y".into()]);
+        let out = t.render();
+        assert!(out.contains("| a  | bbbb |"));
+        assert!(out.contains("| xx | y    |"));
+        assert!(out.starts_with("T\n+----+------+"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        Table::new("", &["a"]).row(vec!["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.005), "1.00");
+        assert_eq!(f4(0.00414), "0.0041");
+        assert_eq!(pct(0.229), "+22.9%");
+        assert_eq!(pct(-0.267), "-26.7%");
+        assert_eq!(f5(0.001234), "0.00123");
+    }
+}
