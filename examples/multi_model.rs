@@ -18,7 +18,10 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(Config::default())?;
     let models: Vec<String> = coord.manifest.models.keys().cloned().collect();
     let refs: Vec<&str> = models.iter().map(String::as_str).collect();
-    println!("evaluating {} architectures x (Monolithic, CE-Green), {iters} inferences each", refs.len());
+    println!(
+        "evaluating {} architectures x (Monolithic, CE-Green), {iters} inferences each",
+        refs.len()
+    );
 
     let rows = exp::table4(&coord, &refs, iters, 1)?;
     println!("{}", exp::table4_render(&rows));

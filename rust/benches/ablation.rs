@@ -113,7 +113,12 @@ fn main() -> anyhow::Result<()> {
     let mut green = CarbonAwareScheduler::new("green", Mode::Green.weights());
     let run = coord.run_scheduled(&model, &mut green, &inputs)?;
     let r = RunReport::from_records("task-level (CE-Green)", &run.records);
-    t.row(vec![r.label.clone(), f2(r.latency_ms.mean), f4(r.carbon_per_inf_g), "single node".into()]);
+    t.row(vec![
+        r.label.clone(),
+        f2(r.latency_ms.mean),
+        f4(r.carbon_per_inf_g),
+        "single node".into(),
+    ]);
     let recs = coord.run_pipeline(&model, 0.5, &inputs, 4.0)?;
     let rp = RunReport::from_records("green pipeline (w=0.5)", &recs);
     t.row(vec![

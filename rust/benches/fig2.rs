@@ -6,7 +6,8 @@ use carbonedge::experiments as exp;
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config::default();
-    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let iters: usize =
+        std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
     let reps: usize = std::env::var("CE_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
     let coord = Coordinator::new(cfg)?;
     let t2 = exp::table2(&coord, "mobilenet_v2", iters, reps)?;

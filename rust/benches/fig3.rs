@@ -7,7 +7,8 @@ use carbonedge::experiments as exp;
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config::default();
-    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    let iters: usize =
+        std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
     let coord = Coordinator::new(cfg)?;
     let mono = exp::run_strategy(&coord, "mobilenet_v2", exp::Strategy::Monolithic, iters, 1)?;
     let points = exp::fig3_sweep(&coord, "mobilenet_v2", iters, 0.05)?;

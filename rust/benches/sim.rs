@@ -1,0 +1,40 @@
+//! Simulator throughput bench: how many virtual requests per wall-clock
+//! second the discrete-event engine sustains. Target (ISSUE 1 / ROADMAP
+//! L3.5): ≥ 1M simulated requests/s on the paper-3-node scenario.
+//!
+//! Needs no artifacts — run with `cargo bench --bench sim`.
+
+use std::time::Instant;
+
+use carbonedge::scheduler::{CarbonAwareScheduler, Mode};
+use carbonedge::sim::{scenarios, Simulation};
+
+fn throughput(name: &str, nodes: usize, requests: usize, runs: usize) -> f64 {
+    let sc = scenarios::build(name, nodes, requests, 42).expect("known scenario");
+    let mut best = f64::MAX;
+    for _ in 0..runs {
+        let mut sched = CarbonAwareScheduler::new("green", Mode::Green.weights());
+        let t0 = Instant::now();
+        let r = Simulation::run(&sc, &mut sched);
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(r.completed + r.rejected, requests as u64);
+        best = best.min(dt);
+    }
+    requests as f64 / best
+}
+
+fn main() {
+    println!("simulator throughput (best of 3, CE-Green)");
+    let rps = throughput("paper-3-node", 0, 1_000_000, 3);
+    let verdict = if rps >= 1e6 { "meets the 1M target" } else { "BELOW the 1M target" };
+    println!("  paper-3-node     1M requests   {:>8.2}M sim-req/s  ({verdict})", rps / 1e6);
+
+    let rps = throughput("fleet-100", 100, 200_000, 3);
+    println!("  fleet-100      200k requests   {:>8.2}M sim-req/s", rps / 1e6);
+
+    let rps = throughput("bursty", 0, 500_000, 3);
+    println!("  bursty         500k requests   {:>8.2}M sim-req/s", rps / 1e6);
+
+    let rps = throughput("churn", 0, 200_000, 3);
+    println!("  churn          200k requests   {:>8.2}M sim-req/s", rps / 1e6);
+}

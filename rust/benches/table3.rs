@@ -7,7 +7,8 @@ use carbonedge::experiments as exp;
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config::default();
-    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let iters: usize =
+        std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
     let coord = Coordinator::new(cfg)?;
     // Table III only needs the Green-vs-Mono reduction: run those two.
     let mono = exp::run_strategy(&coord, "mobilenet_v2", exp::Strategy::Monolithic, iters, 1)?;

@@ -6,7 +6,8 @@ use carbonedge::experiments as exp;
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config::default();
-    let iters: usize = std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let iters: usize =
+        std::env::var("CE_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
     let coord = Coordinator::new(cfg)?;
     let t5 = exp::table5(&coord, "mobilenet_v2", iters)?;
     println!("{}", exp::table5_render(&t5));

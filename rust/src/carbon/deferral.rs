@@ -56,7 +56,13 @@ impl DeferralPolicy {
 
     /// Expected carbon saving (grams) of the decision for a task of
     /// `energy_kwh`.
-    pub fn saving_g(&self, trace: &IntensityTrace, now_s: f64, deadline_s: f64, energy_kwh: f64) -> f64 {
+    pub fn saving_g(
+        &self,
+        trace: &IntensityTrace,
+        now_s: f64,
+        deadline_s: f64,
+        energy_kwh: f64,
+    ) -> f64 {
         match self.decide(trace, now_s, deadline_s) {
             DeferDecision::RunNow { .. } => 0.0,
             DeferDecision::Defer { intensity, .. } => {

@@ -57,16 +57,16 @@ impl IntensityTrace {
                 if points.is_empty() {
                     return 0.0;
                 }
-                // step-hold: last sample with time <= t (or first sample)
-                let mut current = points[0].1;
-                for &(ts, v) in points {
-                    if ts <= t {
-                        current = v;
-                    } else {
-                        break;
-                    }
+                // Step-hold: last sample with time <= t (or the first
+                // sample when t precedes the trace). Samples are
+                // time-sorted, so a binary search replaces the old O(n)
+                // scan — this sits on the simulator's per-completion path.
+                let idx = points.partition_point(|&(ts, _)| ts <= t);
+                if idx == 0 {
+                    points[0].1
+                } else {
+                    points[idx - 1].1
                 }
-                current
             }
         }
     }
@@ -106,7 +106,12 @@ mod tests {
 
     #[test]
     fn diurnal_oscillates_and_clamps() {
-        let t = IntensityTrace::Diurnal { mean: 100.0, amplitude: 150.0, period_s: 86400.0, phase_s: 0.0 };
+        let t = IntensityTrace::Diurnal {
+            mean: 100.0,
+            amplitude: 150.0,
+            period_s: 86400.0,
+            phase_s: 0.0,
+        };
         // peak at period/4
         assert!((t.at(21600.0) - 250.0).abs() < 1.0);
         // trough clamps at zero (mean-amp < 0)
@@ -126,5 +131,59 @@ mod tests {
         // before first sample: first value
         assert_eq!(IntensityTrace::Trace(vec![(5.0, 42.0)]).at(0.0), 42.0);
         assert_eq!(IntensityTrace::Trace(vec![]).at(1.0), 0.0);
+    }
+
+    #[test]
+    fn prop_trace_binary_search_matches_linear_scan() {
+        // The pre-optimization reference implementation.
+        fn linear(points: &[(f64, f64)], t: f64) -> f64 {
+            if points.is_empty() {
+                return 0.0;
+            }
+            let mut current = points[0].1;
+            for &(ts, v) in points {
+                if ts <= t {
+                    current = v;
+                } else {
+                    break;
+                }
+            }
+            current
+        }
+        crate::util::proptest::check(
+            "partition_point lookup == step-hold linear scan",
+            500,
+            |rng| {
+                // 0..8 samples (0 = the empty case) at strictly increasing
+                // times that may start negative; queries range from well
+                // before the first sample to well past the last.
+                let n = rng.below(8);
+                let mut ts = rng.range(-5.0, 5.0);
+                let mut points = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ts += rng.range(0.1, 10.0);
+                    points.push((ts, rng.range(0.0, 900.0)));
+                }
+                let queries: Vec<f64> = (0..8).map(|_| rng.range(-20.0, 90.0)).collect();
+                (points, queries)
+            },
+            |(points, queries)| {
+                let trace = IntensityTrace::Trace(points.clone());
+                for &q in queries {
+                    let fast = trace.at(q);
+                    let slow = linear(points, q);
+                    if fast != slow {
+                        return Err(format!("at({q}) = {fast}, linear scan = {slow}"));
+                    }
+                }
+                // Exact sample times must also agree (boundary inclusivity).
+                for &(ts, _) in points {
+                    if trace.at(ts) != linear(points, ts) {
+                        return Err(format!("boundary mismatch at t = {ts}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

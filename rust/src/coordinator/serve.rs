@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::metrics::RunReport;
 use crate::node::{Container, ExecutionRecord, NodeRegistry};
 use crate::scheduler::{Scheduler, TaskDemand};
+use crate::util::stats::mean_or_zero;
 use crate::workload::{Arrivals, RequestStream};
 
 /// Result of a serving session.
@@ -49,15 +50,14 @@ impl<'a> ServingLoop<'a> {
         let mut queue: VecDeque<(usize, Instant)> = VecDeque::new();
         let mut records: Vec<ExecutionRecord> = Vec::with_capacity(inputs.len());
         let mut queue_ms = Vec::with_capacity(inputs.len());
-        let mut sched_ns: Vec<u64> = Vec::with_capacity(inputs.len());
+        let mut sched_ms: Vec<f64> = Vec::with_capacity(inputs.len());
 
         match &stream.arrivals {
             Arrivals::ClosedLoop { .. } => {
-                for (i, x) in inputs.iter().enumerate() {
-                    let _ = i;
+                for x in &inputs {
                     let t0 = Instant::now();
                     let pick = scheduler.select(&self.demand, self.registry.nodes());
-                    sched_ns.push(t0.elapsed().as_nanos() as u64);
+                    sched_ms.push(t0.elapsed().as_secs_f64() * 1e3);
                     let idx = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
                     records.push(self.containers[idx].infer(x.clone())?);
                     queue_ms.push(0.0);
@@ -82,7 +82,7 @@ impl<'a> ServingLoop<'a> {
                         queue_ms.push(enq.elapsed().as_secs_f64() * 1e3);
                         let t0 = Instant::now();
                         let pick = scheduler.select(&self.demand, self.registry.nodes());
-                        sched_ns.push(t0.elapsed().as_nanos() as u64);
+                        sched_ms.push(t0.elapsed().as_secs_f64() * 1e3);
                         let idx = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
                         records.push(self.containers[idx].infer(inputs[i].clone())?);
                     } else if next < inputs.len() {
@@ -96,16 +96,8 @@ impl<'a> ServingLoop<'a> {
         let report = RunReport::from_records(label, &records);
         Ok(ServeOutcome {
             report,
-            queue_ms_mean: if queue_ms.is_empty() {
-                0.0
-            } else {
-                queue_ms.iter().sum::<f64>() / queue_ms.len() as f64
-            },
-            sched_ms_mean: if sched_ns.is_empty() {
-                0.0
-            } else {
-                sched_ns.iter().sum::<u64>() as f64 / sched_ns.len() as f64 / 1e6
-            },
+            queue_ms_mean: mean_or_zero(&queue_ms),
+            sched_ms_mean: mean_or_zero(&sched_ms),
         })
     }
 }

@@ -29,11 +29,16 @@ pub fn register_monolithic(exec: &ExecHandle, model: &LoadedModel, cfg: &Config)
 }
 
 /// Registers every stage program (with warm-up). Keys: `"<model>/stage<i>"`.
-pub fn register_stages(exec: &ExecHandle, model: &LoadedModel, cfg: &Config) -> Result<Vec<String>> {
+pub fn register_stages(
+    exec: &ExecHandle,
+    model: &LoadedModel,
+    cfg: &Config,
+) -> Result<Vec<String>> {
     let mut keys = Vec::with_capacity(model.entry.stages.len());
     for (i, stage) in model.entry.stages.iter().enumerate() {
         let key = format!("{}/stage{}", model.entry.name, i);
-        exec.register(&key, &model.stage_path(i), model.stage_weights[i].clone(), cfg.resident_weights)?;
+        let weights = model.stage_weights[i].clone();
+        exec.register(&key, &model.stage_path(i), weights, cfg.resident_weights)?;
         exec.execute(&key, crate::runtime::Tensor::zeros(stage.in_shape.clone()))?;
         keys.push(key);
     }

@@ -66,7 +66,11 @@ enum RunnerKind {
 }
 
 impl Runner {
-    fn build(coord: &Coordinator, model: &crate::model::LoadedModel, s: Strategy) -> Result<Runner> {
+    fn build(
+        coord: &Coordinator,
+        model: &crate::model::LoadedModel,
+        s: Strategy,
+    ) -> Result<Runner> {
         let kind = match s {
             Strategy::Monolithic => {
                 let key = crate::deployer::register_monolithic(&coord.exec(), model, &coord.cfg)?;
@@ -187,10 +191,20 @@ impl Table2 {
         let base = &self.reports[0];
         let mut t = Table::new(
             "Table II — Carbon footprint comparison (MobileNetV2)",
-            &["Configuration", "Latency (ms)", "Throughput (req/s)", "Carbon (gCO2/inf)", "Reduction vs Mono"],
+            &[
+                "Configuration",
+                "Latency (ms)",
+                "Throughput (req/s)",
+                "Carbon (gCO2/inf)",
+                "Reduction vs Mono",
+            ],
         );
         for r in &self.reports {
-            let red = if std::ptr::eq(r, base) { "-".to_string() } else { pct(r.reduction_vs(base)) };
+            let red = if std::ptr::eq(r, base) {
+                "-".to_string()
+            } else {
+                pct(r.reduction_vs(base))
+            };
             t.row(vec![
                 r.label.clone(),
                 f2(r.latency_ms.mean),
@@ -248,7 +262,9 @@ fn ascii_scatter(points: &[(String, f64, f64)]) -> String {
         grid[h - 1 - cy][cx] = b'A' + (i as u8);
     }
     let mut s = String::new();
-    s.push_str(&format!("  carbon efficiency (inf/g): {ymin:.0}..{ymax:.0} (y) vs latency (ms): {xmin:.0}..{xmax:.0} (x)\n"));
+    s.push_str(&format!(
+        "  carbon efficiency (inf/g): {ymin:.0}..{ymax:.0} (y) vs latency (ms): {xmin:.0}..{xmax:.0} (x)\n"
+    ));
     for row in grid {
         s.push_str("  |");
         s.push_str(std::str::from_utf8(&row).unwrap());
@@ -293,7 +309,12 @@ pub struct Table4Row {
     pub green: RunReport,
 }
 
-pub fn table4(coord: &Coordinator, models: &[&str], iters: usize, reps: usize) -> Result<Vec<Table4Row>> {
+pub fn table4(
+    coord: &Coordinator,
+    models: &[&str],
+    iters: usize,
+    reps: usize,
+) -> Result<Vec<Table4Row>> {
     models
         .iter()
         .map(|m| {
@@ -446,4 +467,97 @@ pub fn scheduling_overhead(coord: &Coordinator, model: &str, iters: usize) -> Re
     let run = coord.run_scheduled(&m, &mut s, &stream.inputs())?;
     let ms: Vec<f64> = run.sched_ns.iter().map(|&ns| ns as f64 / 1e6).collect();
     Ok(Summary::of(&ms))
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-time experiments (the L3.5 simulator — no artifacts required)
+// ---------------------------------------------------------------------------
+
+use crate::scheduler::RoundRobinScheduler;
+use crate::sim::{scenarios, Scenario, SimReport, Simulation};
+
+/// Run one scheduling mode over a scenario in virtual time.
+pub fn sim_run_mode(sc: &Scenario, mode: Mode) -> SimReport {
+    let mut s = CarbonAwareScheduler::new(mode.name(), mode.weights());
+    Simulation::run(sc, &mut s)
+}
+
+/// The Table-II cast at fleet scale: monolithic single-host baseline plus
+/// the three CE modes, all over the same arrival process and seed.
+pub fn sim_mode_comparison(sc: &Scenario) -> Vec<SimReport> {
+    let mono_sc = scenarios::monolithic_of(sc);
+    // Round-robin over one node = plain FIFO host execution; no load cutoff,
+    // so the baseline completes every request no matter the backlog.
+    let mut mono_sched = RoundRobinScheduler::new();
+    let mut out = vec![Simulation::run(&mono_sc, &mut mono_sched)];
+    for mode in Mode::all() {
+        out.push(sim_run_mode(sc, mode));
+    }
+    out
+}
+
+pub fn sim_comparison_render(reports: &[SimReport]) -> String {
+    let mut t = Table::new(
+        "Virtual fleet — mode comparison",
+        &["Scheduler", "Latency (ms)", "p95 (ms)", "Throughput (req/s)", "gCO2/req", "Reduction"],
+    );
+    let base = reports[0].carbon_per_req_g;
+    for (i, r) in reports.iter().enumerate() {
+        let red = if i == 0 { "-".to_string() } else { pct(1.0 - r.carbon_per_req_g / base) };
+        t.row(vec![
+            r.scheduler.clone(),
+            f2(r.latency_ms.mean),
+            f2(r.latency_ms.p95),
+            f2(r.throughput_rps),
+            format!("{:.6}", r.carbon_per_req_g),
+            red,
+        ]);
+    }
+    t.render()
+}
+
+/// One point of the virtual weight sweep.
+pub struct SimSweepPoint {
+    pub w_c: f64,
+    pub report: SimReport,
+}
+
+/// Fig. 3 transplanted to virtual time: sweep w_C ∈ {0, step, …, 1} over a
+/// scenario at fleet scale. Each point reuses the scenario (same arrivals,
+/// same seed) with a fresh scheduler.
+pub fn sim_weight_sweep(sc: &Scenario, step: f64) -> Vec<SimSweepPoint> {
+    assert!(step > 0.0 && step <= 1.0);
+    let mut points = Vec::new();
+    let mut w_c: f64 = 0.0;
+    while w_c <= 1.0 + 1e-9 {
+        let w = w_c.min(1.0);
+        let mut s = CarbonAwareScheduler::new("sweep", Weights::sweep(w));
+        points.push(SimSweepPoint { w_c: w, report: Simulation::run(sc, &mut s) });
+        w_c += step;
+    }
+    points
+}
+
+pub fn sim_sweep_render(points: &[SimSweepPoint]) -> String {
+    let mut t = Table::new(
+        "Virtual weight sweep — carbon/latency trade-off at fleet scale",
+        &["w_C", "Latency (ms)", "p95 (ms)", "gCO2/req", "Dominant node"],
+    );
+    for p in points {
+        let dominant = p
+            .report
+            .nodes
+            .iter()
+            .max_by_key(|n| n.tasks)
+            .map(|n| n.name.clone())
+            .unwrap_or_default();
+        t.row(vec![
+            format!("{:.2}", p.w_c),
+            f2(p.report.latency_ms.mean),
+            f2(p.report.latency_ms.p95),
+            format!("{:.6}", p.report.carbon_per_req_g),
+            dominant,
+        ]);
+    }
+    t.render()
 }

@@ -8,13 +8,18 @@
 //!   scheduler (Eq. 3–4, Algorithm 1), model partitioner (Eq. 5), deployer,
 //!   simulated heterogeneous edge nodes, workload drivers and the experiment
 //!   harness that regenerates every table/figure of the paper.
+//! * **L3.5** — the [`sim`] discrete-event fleet simulator: the same
+//!   schedulers, node models and carbon accounting driven on a *virtual*
+//!   clock instead of the real executor. Real execution for fidelity
+//!   (golden numerics, paper tables), simulation for scale (thousand-node
+//!   fleets, millions of requests, time-varying grids, churn).
 //! * **L2** — the JAX model zoo (`python/compile/models.py`), AOT-lowered to
 //!   HLO text artifacts consumed by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) backing every conv
 //!   in the zoo.
 //!
 //! Python never runs on the request path: after `make artifacts` the binary
-//! is self-contained.
+//! is self-contained — and the [`sim`] layer needs no artifacts at all.
 
 pub mod carbon;
 pub mod config;
@@ -28,5 +33,6 @@ pub mod node;
 pub mod partitioner;
 pub mod runtime;
 pub mod scheduler;
+pub mod sim;
 pub mod util;
 pub mod workload;

@@ -7,6 +7,9 @@
 //! carbonedge reproduce [--table 2|3|4|5] [--fig 2|3] [--all]
 //! carbonedge sweep [--step 0.05] [--iters 20]       # Fig. 3 weight sweep
 //! carbonedge overhead                               # scheduling overhead micro-report
+//! carbonedge sim --scenario <name|list> [--nodes N] [--requests M]
+//!               [--seed S] [--mode green [--json]] [--sweep [--step 0.1]]
+//!                                                   # virtual-time fleet simulator
 //! ```
 
 use anyhow::Result;
@@ -40,7 +43,7 @@ fn config_from(args: &Args) -> Result<Config> {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["all", "verbose"])?;
+    let args = Args::from_env(&["all", "verbose", "sweep", "json"])?;
     let cmd = args.command.clone().unwrap_or_else(|| "info".to_string());
     let cfg = config_from(&args)?;
 
@@ -194,9 +197,54 @@ fn run() -> Result<()> {
                 print_report(&r);
             }
         }
+        "sim" => {
+            // Pure virtual time — no artifacts, no Coordinator.
+            let name = args.str_or("scenario", "paper-3-node");
+            if name == "list" {
+                println!("scenarios:");
+                for n in carbonedge::sim::SCENARIO_NAMES {
+                    println!("  {n}");
+                }
+                return Ok(());
+            }
+            let nodes = args.parse_or("nodes", 0usize)?;
+            let requests = args.parse_or("requests", 0usize)?;
+            let seed = args.parse_or("seed", 42u64)?;
+            // Validate here so bad CLI input gets a clean error, not a
+            // library assert panic.
+            if name == "churn" && nodes > 0 && nodes < 3 {
+                anyhow::bail!("the churn scenario needs --nodes >= 3 (survivors must exist)");
+            }
+            let sc = carbonedge::sim::scenarios::build(&name, nodes, requests, seed)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scenario {name:?}; try one of {:?}",
+                        carbonedge::sim::SCENARIO_NAMES
+                    )
+                })?;
+            if args.bool_flag("sweep") {
+                let step = args.parse_or("step", 0.1f64)?;
+                if !(step > 0.0 && step <= 1.0) {
+                    anyhow::bail!("--step must be in (0, 1], got {step}");
+                }
+                let points = exp::sim_weight_sweep(&sc, step);
+                println!("{}", exp::sim_sweep_render(&points));
+            } else if let Some(mode_s) = args.get("mode") {
+                let mode = Mode::parse(mode_s).ok_or_else(|| anyhow::anyhow!("bad --mode"))?;
+                let report = exp::sim_run_mode(&sc, mode);
+                if args.bool_flag("json") {
+                    println!("{}", carbonedge::metrics::sim_report_to_json(&report));
+                } else {
+                    println!("{}", report.render());
+                }
+            } else {
+                let reports = exp::sim_mode_comparison(&sc);
+                println!("{}", exp::sim_comparison_render(&reports));
+            }
+        }
         other => {
             anyhow::bail!(
-                "unknown command {other:?}; try info|golden|serve|reproduce|sweep|overhead|baselines"
+                "unknown command {other:?}; try info|golden|serve|reproduce|sweep|overhead|baselines|sim"
             );
         }
     }

@@ -35,6 +35,50 @@ pub fn report_to_json(r: &RunReport) -> Json {
     ])
 }
 
+/// JSON document for one virtual-time simulation report (the L3.5
+/// counterpart of [`report_to_json`]) — same compliance pipeline, fed by
+/// the fleet simulator instead of real execution.
+pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
+    obj(vec![
+        ("scenario", s(&r.scenario)),
+        ("scheduler", s(&r.scheduler)),
+        ("seed", num(r.seed as f64)),
+        ("requests", num(r.requests as f64)),
+        ("completed", num(r.completed as f64)),
+        ("rejected", num(r.rejected as f64)),
+        ("migrated", num(r.migrated as f64)),
+        ("makespan_s", num(r.makespan_s)),
+        ("throughput_rps", num(r.throughput_rps)),
+        (
+            "latency_ms",
+            obj(vec![
+                ("mean", num(r.latency_ms.mean)),
+                ("p50", num(r.latency_ms.p50)),
+                ("p95", num(r.latency_ms.p95)),
+            ]),
+        ),
+        ("wait_ms_mean", num(r.wait_ms.mean)),
+        ("energy_kwh", num(r.energy_kwh_total)),
+        ("carbon_total_g", num(r.carbon_g_total)),
+        ("carbon_per_req_g", num(r.carbon_per_req_g)),
+        (
+            "nodes",
+            arr(r.nodes
+                .iter()
+                .map(|n| {
+                    obj(vec![
+                        ("node", s(&n.name)),
+                        ("tasks", num(n.tasks as f64)),
+                        ("busy_ms", num(n.busy_ms)),
+                        ("energy_kwh", num(n.energy_kwh)),
+                        ("carbon_g", num(n.carbon_g)),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
+}
+
 /// A compliance document over several runs (e.g. one per mode).
 pub fn compliance_document(title: &str, reports: &[RunReport]) -> Json {
     obj(vec![
@@ -81,6 +125,22 @@ mod tests {
         assert_eq!(back.req_usize("inferences").unwrap(), 3);
         assert!((back.req_f64("carbon_per_inf_g").unwrap() - 0.003).abs() < 1e-12);
         assert_eq!(back.path(&["latency_ms"]).unwrap().req_f64("mean").unwrap(), 200.0);
+    }
+
+    #[test]
+    fn sim_report_roundtrips_through_parser() {
+        let sc = crate::sim::scenarios::build("paper-3-node", 0, 20, 1).unwrap();
+        let mut sched = crate::scheduler::CarbonAwareScheduler::new(
+            "green",
+            crate::scheduler::Mode::Green.weights(),
+        );
+        let r = crate::sim::Simulation::run(&sc, &mut sched);
+        let back = Json::parse(&sim_report_to_json(&r).to_string()).unwrap();
+        assert_eq!(back.req_str("scenario").unwrap(), "paper-3-node");
+        assert_eq!(back.req_str("scheduler").unwrap(), "green");
+        assert_eq!(back.req_usize("requests").unwrap(), 20);
+        assert_eq!(back.req_arr("nodes").unwrap().len(), 3);
+        assert!(back.req_f64("carbon_total_g").unwrap() > 0.0);
     }
 
     #[test]

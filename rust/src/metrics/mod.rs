@@ -3,7 +3,7 @@
 
 mod export;
 
-pub use export::{compliance_document, report_to_json};
+pub use export::{compliance_document, report_to_json, sim_report_to_json};
 
 use crate::carbon;
 use crate::node::ExecutionRecord;

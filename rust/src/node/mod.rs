@@ -132,6 +132,11 @@ pub struct NodeState {
     pub carbon_g: f64,
     /// Total busy milliseconds.
     pub busy_ms: f64,
+    /// Dynamic grid-intensity override (gCO₂/kWh). `None` means the static
+    /// spec scenario applies; the fleet simulator sets this from a
+    /// time-varying [`crate::carbon::IntensityTrace`] so schedulers score
+    /// against the *current* virtual-time intensity.
+    pub intensity_override: Option<f64>,
 }
 
 /// A live node: spec + shared state.
@@ -165,9 +170,30 @@ impl EdgeNode {
         }
     }
 
+    /// Grid intensity the scheduler should score against right now:
+    /// the dynamic override (set by the simulator from a time-varying
+    /// trace) when present, otherwise the static spec scenario.
+    pub fn intensity(&self) -> f64 {
+        self.state.lock().unwrap().intensity_override.unwrap_or(self.spec.intensity)
+    }
+
+    /// Install/update the dynamic intensity override (virtual-time grids).
+    pub fn set_intensity(&self, grams_per_kwh: f64) {
+        self.state.lock().unwrap().intensity_override = Some(grams_per_kwh);
+    }
+
     pub fn begin_task(&self) {
         let mut s = self.state.lock().unwrap();
         s.inflight += 1;
+    }
+
+    /// Withdraw a task that was assigned (`begin_task`) but never executed —
+    /// the simulator uses this when a node departs with work still queued.
+    /// Unlike [`EdgeNode::finish_task`] it leaves the completion count and
+    /// latency history untouched.
+    pub fn cancel_task(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.inflight = s.inflight.saturating_sub(1);
     }
 
     /// Record task completion: latency + attributed energy/carbon.
@@ -287,6 +313,29 @@ mod tests {
         assert_eq!(n.state().inflight, 2);
         n.finish_task(10.0, 0.0, 0.0);
         assert_eq!(n.state().inflight, 1);
+    }
+
+    #[test]
+    fn cancel_task_skips_history() {
+        let n = EdgeNode::new(NodeSpec::paper_nodes().remove(0));
+        n.begin_task();
+        n.cancel_task();
+        let s = n.state();
+        assert_eq!(s.inflight, 0);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.avg_ms, None);
+        n.cancel_task(); // saturates, never underflows
+        assert_eq!(n.state().inflight, 0);
+    }
+
+    #[test]
+    fn dynamic_intensity_override() {
+        let n = EdgeNode::new(NodeSpec::paper_nodes().remove(0));
+        assert_eq!(n.intensity(), 620.0); // static spec scenario
+        n.set_intensity(95.0);
+        assert_eq!(n.intensity(), 95.0);
+        n.set_intensity(700.0);
+        assert_eq!(n.intensity(), 700.0);
     }
 
     #[test]

@@ -91,7 +91,8 @@ impl ExecServer {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         Msg::Register { key, artifact, weights, resident, reply } => {
-                            let r = register(&mut rt, &mut programs, key, &artifact, weights, resident);
+                            let r =
+                                register(&mut rt, &mut programs, key, &artifact, weights, resident);
                             stats.programs = programs.len();
                             let _ = reply.send(r);
                         }

@@ -95,29 +95,31 @@ impl ConstrainedGreenScheduler {
 
 impl Scheduler for ConstrainedGreenScheduler {
     fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
-        let feasible: Vec<usize> = (0..nodes.len())
-            .filter(|&i| {
-                let n = &nodes[i];
+        // One state snapshot per node: (index, T_avg, current intensity) —
+        // re-reading through the node accessors inside the comparators
+        // below would re-lock the state mutex per comparison.
+        let feasible: Vec<(usize, f64, f64)> = nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| {
                 let st = n.state();
-                st.load <= LOAD_CUTOFF
-                    && n.score_ms() <= task.latency_threshold_ms
+                let ms = n.score_ms();
+                if st.load <= LOAD_CUTOFF
+                    && ms <= task.latency_threshold_ms
                     && n.fits(task.mem_mb, task.cpu)
+                {
+                    Some((i, ms, st.intensity_override.unwrap_or(n.spec.intensity)))
+                } else {
+                    None
+                }
             })
             .collect();
-        let fastest = feasible
-            .iter()
-            .map(|&i| nodes[i].score_ms())
-            .fold(f64::MAX, f64::min);
+        let fastest = feasible.iter().map(|&(_, ms, _)| ms).fold(f64::MAX, f64::min);
         feasible
             .into_iter()
-            .filter(|&i| nodes[i].score_ms() <= fastest * self.latency_slack)
-            .min_by(|&a, &b| {
-                nodes[a]
-                    .spec
-                    .intensity
-                    .partial_cmp(&nodes[b].spec.intensity)
-                    .unwrap()
-            })
+            .filter(|&(_, ms, _)| ms <= fastest * self.latency_slack)
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .map(|(i, _, _)| i)
     }
 
     fn name(&self) -> &str {
@@ -171,10 +173,12 @@ mod tests {
         let r = NodeRegistry::paper_setup();
         // priors: high 250ms, green 625ms. Tight slack -> fastest node.
         let mut tight = ConstrainedGreenScheduler::new(1.05);
-        assert_eq!(r.get(tight.select(&TaskDemand::default(), r.nodes()).unwrap()).spec.name, "node-high");
+        let pick = tight.select(&TaskDemand::default(), r.nodes()).unwrap();
+        assert_eq!(r.get(pick).spec.name, "node-high");
         // Loose slack admits the green node.
         let mut loose = ConstrainedGreenScheduler::new(3.0);
-        assert_eq!(r.get(loose.select(&TaskDemand::default(), r.nodes()).unwrap()).spec.name, "node-green");
+        let pick = loose.select(&TaskDemand::default(), r.nodes()).unwrap();
+        assert_eq!(r.get(pick).spec.name, "node-green");
     }
 
     #[test]

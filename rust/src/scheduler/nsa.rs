@@ -130,9 +130,11 @@ mod tests {
     #[test]
     fn selection_sticky_over_repeated_tasks() {
         // Table V: 100% concentration per mode across 50 sequential tasks.
-        for (mode, expect) in
-            [(Mode::Performance, "node-high"), (Mode::Balanced, "node-high"), (Mode::Green, "node-green")]
-        {
+        for (mode, expect) in [
+            (Mode::Performance, "node-high"),
+            (Mode::Balanced, "node-high"),
+            (Mode::Green, "node-green"),
+        ] {
             let r = reg();
             let mut s = sched(mode);
             for step in 0..50 {

@@ -49,7 +49,10 @@ pub struct ScoreBreakdown {
 /// `S_R`: how comfortably the node's free resources cover the demand,
 /// averaged over CPU and memory and clamped to [0, 1].
 pub fn resource_score(node: &EdgeNode, task: &TaskDemand) -> f64 {
-    let st = node.state();
+    resource_score_from(&node.state(), node, task)
+}
+
+fn resource_score_from(st: &crate::node::NodeState, node: &EdgeNode, task: &TaskDemand) -> f64 {
     let free_cpu = node.spec.cpu_quota * (1.0 - st.load);
     let cpu_ratio = (free_cpu / task.cpu.max(1e-9)).min(1.0);
     let free_mem = node.spec.mem_mb as f64; // static quota in this testbed
@@ -64,14 +67,31 @@ pub fn carbon_score(intensity: f64, power_w: f64, avg_time_ms: f64) -> f64 {
 }
 
 /// Full Eq. 3 breakdown for one node.
+///
+/// Takes a single state snapshot and derives every component from it —
+/// this sits on the simulator's scheduling hot path (one call per node per
+/// arrival), so re-reading through the locking accessors (`state()`,
+/// `score_ms()`, `intensity()`) per component would triple the mutex
+/// traffic.
 pub fn score_breakdown(node: &Arc<EdgeNode>, task: &TaskDemand, w: &Weights) -> ScoreBreakdown {
     let st = node.state();
-    let s_r = resource_score(node, task);
+    let s_r = resource_score_from(&st, node, task);
     let s_l = (1.0 - st.load).clamp(0.0, 1.0);
-    let avg_ms = node.score_ms();
+    // The T_avg rule of EdgeNode::score_ms, from the snapshot in hand.
+    let avg_ms = if node.spec.adaptive {
+        st.avg_ms.unwrap_or(node.spec.prior_ms)
+    } else {
+        node.spec.prior_ms
+    };
     let s_p = 1.0 / (1.0 + avg_ms / 1e3); // seconds
     let s_b = 1.0 / (1.0 + 2.0 * st.inflight as f64);
-    let s_c = carbon_score(node.spec.intensity, node.spec.rated_power_w, avg_ms);
+    // Dynamic (virtual-time) intensity when the simulator installed one,
+    // static scenario otherwise.
+    let s_c = carbon_score(
+        st.intensity_override.unwrap_or(node.spec.intensity),
+        node.spec.rated_power_w,
+        avg_ms,
+    );
     let total = w.r * s_r + w.l * s_l + w.p * s_p + w.b * s_b + w.c * s_c;
     ScoreBreakdown { s_r, s_l, s_p, s_b, s_c, total }
 }
@@ -167,6 +187,21 @@ mod tests {
         // node-high prior 250 ms -> S_P = 1/1.25 = 0.8
         let b = score_breakdown(&ns[0], &TaskDemand::default(), &Mode::Green.weights());
         assert!((b.s_p - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dynamic_intensity_flows_into_s_c() {
+        let ns = nodes();
+        let task = TaskDemand::default();
+        let w = Mode::Green.weights();
+        let before = score_breakdown(&ns[0], &task, &w);
+        // node-high (620) told its grid just went hydro-clean: S_C must rise
+        // to exactly the carbon_score at the overridden intensity.
+        ns[0].set_intensity(45.0);
+        let after = score_breakdown(&ns[0], &task, &w);
+        assert!(after.s_c > before.s_c);
+        let want = carbon_score(45.0, ns[0].spec.rated_power_w, ns[0].score_ms());
+        assert!((after.s_c - want).abs() < 1e-12);
     }
 
     #[test]

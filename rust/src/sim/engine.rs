@@ -1,0 +1,533 @@
+//! The discrete-event engine: a binary-heap event queue over virtual time
+//! driving per-node FIFO queues with bounded concurrency.
+//!
+//! Determinism: every event carries a monotone sequence number that breaks
+//! timestamp ties, all randomness flows from two seeded [`Rng`] streams
+//! (arrivals and service jitter), and per-node accounting is an index-
+//! addressed [`LedgerEntry`] table — identical seeds therefore yield
+//! identical [`SimReport`]s.
+
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
+
+use crate::carbon::{emissions_g, joules_to_kwh, IntensityTrace, LedgerEntry};
+use crate::node::EdgeNode;
+use crate::scheduler::{Scheduler, TaskDemand};
+use crate::util::rng::Rng;
+
+use super::report::SimReport;
+use super::scenarios::Scenario;
+
+/// Engine knobs shared by every scenario.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Master seed: arrival and service streams are derived from it.
+    pub seed: u64,
+    /// Mean *real-executor* time per request (ms) fed into the node latency
+    /// model — the paper's MobileNetV2 runs ≈ 9.6 ms of PJRT time.
+    pub base_exec_ms: f64,
+    /// Lognormal service jitter σ (0 = deterministic service times). The
+    /// multiplier `exp(σ·N(0,1) − σ²/2)` is mean-preserving.
+    pub jitter_sigma: f64,
+    /// Power usage effectiveness for Eq. 2.
+    pub pue: f64,
+    /// Resource demand presented to the scheduler for every request.
+    pub demand: TaskDemand,
+    /// How often (virtual seconds) time-varying intensities are pushed into
+    /// the scheduler-visible node state. Static traces are never refreshed.
+    pub intensity_refresh_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            seed: 42,
+            base_exec_ms: 9.6,
+            jitter_sigma: 0.08,
+            pue: crate::carbon::DEFAULT_PUE,
+            demand: TaskDemand::default(),
+            intensity_refresh_s: 60.0,
+        }
+    }
+}
+
+/// Open-loop request arrival process in virtual time.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Equally spaced arrivals at `rate_hz`.
+    Uniform { rate_hz: f64 },
+    /// Poisson arrivals at `rate_hz`.
+    Poisson { rate_hz: f64 },
+    /// Two-state Markov-modulated Poisson process: dwell times are
+    /// exponential with mean `mean_dwell_s`, arrivals are Poisson at the
+    /// current state's rate. Models bursty edge traffic.
+    Mmpp { rate_low_hz: f64, rate_high_hz: f64, mean_dwell_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Long-run mean arrival rate (Hz).
+    pub fn mean_rate_hz(&self) -> f64 {
+        match self {
+            ArrivalProcess::Uniform { rate_hz } | ArrivalProcess::Poisson { rate_hz } => *rate_hz,
+            // Equal mean dwell in both states -> equal time share.
+            ArrivalProcess::Mmpp { rate_low_hz, rate_high_hz, .. } => {
+                (rate_low_hz + rate_high_hz) / 2.0
+            }
+        }
+    }
+}
+
+/// Stateful gap generator for one run.
+struct ArrivalGen {
+    process: ArrivalProcess,
+    rng: Rng,
+    /// MMPP state: currently in the high-rate burst state?
+    high: bool,
+    /// MMPP: virtual seconds left in the current state.
+    dwell_left_s: f64,
+}
+
+impl ArrivalGen {
+    fn new(process: ArrivalProcess, seed: u64) -> ArrivalGen {
+        let mut rng = Rng::new(seed);
+        let dwell_left_s = match &process {
+            ArrivalProcess::Mmpp { mean_dwell_s, .. } => {
+                assert!(*mean_dwell_s > 0.0, "MMPP dwell must be positive");
+                rng.exp(1.0 / mean_dwell_s)
+            }
+            _ => 0.0,
+        };
+        ArrivalGen { process, rng, high: false, dwell_left_s }
+    }
+
+    fn next_gap_s(&mut self) -> f64 {
+        match self.process {
+            ArrivalProcess::Uniform { rate_hz } => {
+                assert!(rate_hz > 0.0);
+                1.0 / rate_hz
+            }
+            ArrivalProcess::Poisson { rate_hz } => self.rng.exp(rate_hz),
+            ArrivalProcess::Mmpp { rate_low_hz, rate_high_hz, mean_dwell_s } => {
+                let mut elapsed = 0.0;
+                loop {
+                    let rate = if self.high { rate_high_hz } else { rate_low_hz };
+                    let gap = self.rng.exp(rate);
+                    if gap <= self.dwell_left_s {
+                        self.dwell_left_s -= gap;
+                        return elapsed + gap;
+                    }
+                    // Advance to the state switch and resample (memoryless).
+                    elapsed += self.dwell_left_s;
+                    self.dwell_left_s = self.rng.exp(1.0 / mean_dwell_s);
+                    self.high = !self.high;
+                }
+            }
+        }
+    }
+}
+
+/// A node joining or leaving the fleet at a virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    pub at_s: f64,
+    pub node: usize,
+    pub up: bool,
+}
+
+enum EventKind {
+    Arrival,
+    Completion { node: usize, arrival_s: f64, service_ms: f64, energy_j: f64 },
+    Churn { node: usize, up: bool },
+}
+
+struct Event {
+    t_s: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+// BinaryHeap is a max-heap; compare reversed on (time, seq) so the earliest
+// event pops first and ties resolve in insertion order — the total order
+// that makes the simulation deterministic.
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.t_s.total_cmp(&self.t_s).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Event {}
+
+/// One simulation run over a [`Scenario`].
+pub struct Simulation<'a> {
+    sc: &'a Scenario,
+    nodes: Vec<Arc<EdgeNode>>,
+    active: Vec<bool>,
+    /// Scheduler-visible view: the active nodes (rebuilt only on churn, so
+    /// the per-request hot path allocates nothing).
+    cache: Vec<Arc<EdgeNode>>,
+    /// Cache position → global node index.
+    cache_idx: Vec<usize>,
+    /// Per-node FIFO of waiting requests (arrival timestamps, seconds).
+    queues: Vec<VecDeque<f64>>,
+    in_service: Vec<usize>,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    service_rng: Rng,
+    /// Per-node energy/carbon/task totals, indexed by node id — the
+    /// per-completion hot path must not pay a string-keyed map lookup.
+    node_ledger: Vec<LedgerEntry>,
+    latency_ms: Vec<f64>,
+    wait_ms: Vec<f64>,
+    energy_total_j: f64,
+    carbon_total_g: f64,
+    arrived: u64,
+    completed: u64,
+    rejected: u64,
+    migrated: u64,
+    makespan_s: f64,
+    last_refresh_s: f64,
+}
+
+impl<'a> Simulation<'a> {
+    /// Run `scenario` under `scheduler` and return the aggregated report.
+    /// Node state is built fresh from the scenario specs, so identical
+    /// (scenario, seed, fresh scheduler) triples produce identical reports.
+    pub fn run(scenario: &'a Scenario, scheduler: &mut dyn Scheduler) -> SimReport {
+        let n = scenario.specs.len();
+        assert!(n > 0, "scenario needs at least one node");
+        assert_eq!(scenario.traces.len(), n, "one trace per node");
+        assert_eq!(scenario.capacity.len(), n, "one capacity per node");
+        assert!(scenario.capacity.iter().all(|&c| c > 0), "capacity must be positive");
+
+        let mut sim = Simulation {
+            sc: scenario,
+            nodes: scenario.specs.iter().cloned().map(EdgeNode::new).collect(),
+            active: vec![true; n],
+            cache: Vec::new(),
+            cache_idx: Vec::new(),
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            in_service: vec![0; n],
+            heap: BinaryHeap::new(),
+            seq: 0,
+            service_rng: Rng::new(scenario.config.seed ^ 0x5DEECE66D),
+            node_ledger: vec![LedgerEntry::default(); n],
+            latency_ms: Vec::with_capacity(scenario.requests),
+            wait_ms: Vec::with_capacity(scenario.requests),
+            energy_total_j: 0.0,
+            carbon_total_g: 0.0,
+            arrived: 0,
+            completed: 0,
+            rejected: 0,
+            migrated: 0,
+            makespan_s: 0.0,
+            last_refresh_s: f64::NEG_INFINITY,
+        };
+        sim.rebuild_cache();
+
+        for ev in &scenario.churn {
+            assert!(ev.node < n, "churn event names node {} of {}", ev.node, n);
+            sim.push(ev.at_s, EventKind::Churn { node: ev.node, up: ev.up });
+        }
+
+        let mut arrivals = ArrivalGen::new(scenario.arrivals.clone(), scenario.config.seed);
+        if scenario.requests > 0 {
+            let first = arrivals.next_gap_s();
+            sim.push(first, EventKind::Arrival);
+        }
+
+        while let Some(ev) = sim.heap.pop() {
+            let t = ev.t_s;
+            match ev.kind {
+                EventKind::Arrival => {
+                    sim.arrived += 1;
+                    sim.refresh_intensities(t);
+                    match scheduler.select(&sim.sc.config.demand, &sim.cache) {
+                        None => sim.rejected += 1,
+                        Some(ci) => {
+                            let g = sim.cache_idx[ci];
+                            sim.dispatch(g, t, t);
+                        }
+                    }
+                    if sim.arrived < scenario.requests as u64 {
+                        let gap = arrivals.next_gap_s();
+                        sim.push(t + gap, EventKind::Arrival);
+                    }
+                }
+                EventKind::Completion { node, arrival_s, service_ms, energy_j } => {
+                    sim.complete(node, t, arrival_s, service_ms, energy_j);
+                }
+                EventKind::Churn { node, up } => {
+                    sim.churn(node, up, t, scheduler);
+                }
+            }
+        }
+
+        sim.into_report(scheduler.name())
+    }
+
+    fn push(&mut self, t_s: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { t_s, seq, kind });
+    }
+
+    fn rebuild_cache(&mut self) {
+        self.cache.clear();
+        self.cache_idx.clear();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if self.active[i] {
+                self.cache.push(Arc::clone(n));
+                self.cache_idx.push(i);
+            }
+        }
+    }
+
+    /// Push time-varying intensities into scheduler-visible node state,
+    /// throttled to `intensity_refresh_s` of virtual time. Static traces
+    /// never need a refresh (the spec value already applies).
+    fn refresh_intensities(&mut self, t_s: f64) {
+        if t_s - self.last_refresh_s < self.sc.config.intensity_refresh_s {
+            return;
+        }
+        self.last_refresh_s = t_s;
+        for (i, trace) in self.sc.traces.iter().enumerate() {
+            if !matches!(trace, IntensityTrace::Static(_)) {
+                self.nodes[i].set_intensity(trace.at(t_s));
+            }
+        }
+    }
+
+    /// Assign a request (original arrival time `arrival_s`) to node `g` at
+    /// virtual time `now`. `begin_task` here — before service starts — so
+    /// schedulers observe backlog (queued + executing) as `inflight`.
+    fn dispatch(&mut self, g: usize, arrival_s: f64, now_s: f64) {
+        debug_assert!(self.active[g], "dispatch onto inactive node {g}");
+        self.nodes[g].begin_task();
+        self.queues[g].push_back(arrival_s);
+        self.try_start(g, now_s);
+    }
+
+    fn try_start(&mut self, g: usize, now_s: f64) {
+        while self.in_service[g] < self.sc.capacity[g] {
+            let Some(arrival_s) = self.queues[g].pop_front() else { break };
+            let sigma = self.sc.config.jitter_sigma;
+            let jitter = if sigma > 0.0 {
+                (sigma * self.service_rng.normal() - 0.5 * sigma * sigma).exp()
+            } else {
+                1.0
+            };
+            let exec_ms = self.sc.config.base_exec_ms * jitter;
+            let service_ms = self.sc.specs[g].simulate_latency_ms(exec_ms);
+            let energy_j = self.sc.specs[g].rated_power_w * service_ms / 1e3;
+            self.wait_ms.push((now_s - arrival_s) * 1e3);
+            self.in_service[g] += 1;
+            self.push(
+                now_s + service_ms / 1e3,
+                EventKind::Completion { node: g, arrival_s, service_ms, energy_j },
+            );
+        }
+    }
+
+    fn complete(&mut self, g: usize, t_s: f64, arrival_s: f64, service_ms: f64, energy_j: f64) {
+        self.in_service[g] -= 1;
+        // Emissions price the *completion-time* grid intensity (Eq. 2) —
+        // this is where Diurnal/Trace bite on the accounting path.
+        let intensity = self.sc.traces[g].at(t_s);
+        let kwh = joules_to_kwh(energy_j);
+        let carbon_g = emissions_g(kwh, intensity, self.sc.config.pue);
+        self.nodes[g].finish_task(service_ms, energy_j, carbon_g);
+        let entry = &mut self.node_ledger[g];
+        entry.energy_kwh += kwh;
+        entry.carbon_g += carbon_g;
+        entry.tasks += 1;
+        self.energy_total_j += energy_j;
+        self.carbon_total_g += carbon_g;
+        self.latency_ms.push((t_s - arrival_s) * 1e3);
+        self.completed += 1;
+        self.makespan_s = self.makespan_s.max(t_s);
+        self.try_start(g, t_s);
+    }
+
+    fn churn(&mut self, g: usize, up: bool, t_s: f64, scheduler: &mut dyn Scheduler) {
+        if up {
+            if !self.active[g] {
+                self.active[g] = true;
+                self.rebuild_cache();
+            }
+            return;
+        }
+        if !self.active[g] {
+            return;
+        }
+        self.active[g] = false;
+        self.rebuild_cache();
+        // Tasks already in service drain gracefully (their completion events
+        // stand); queued work migrates through the scheduler to the
+        // remaining fleet, keeping its original arrival timestamps.
+        let pending: Vec<f64> = self.queues[g].drain(..).collect();
+        for arrival_s in pending {
+            self.nodes[g].cancel_task();
+            match scheduler.select(&self.sc.config.demand, &self.cache) {
+                None => self.rejected += 1,
+                Some(ci) => {
+                    let ng = self.cache_idx[ci];
+                    self.migrated += 1;
+                    self.dispatch(ng, arrival_s, t_s);
+                }
+            }
+        }
+    }
+
+    fn into_report(self, scheduler_name: &str) -> SimReport {
+        let nodes = self
+            .sc
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let e = self.node_ledger[i];
+                super::report::NodeUsage {
+                    name: spec.name.clone(),
+                    tasks: e.tasks,
+                    busy_ms: self.nodes[i].state().busy_ms,
+                    energy_kwh: e.energy_kwh,
+                    carbon_g: e.carbon_g,
+                }
+            })
+            .collect();
+        SimReport {
+            scenario: self.sc.name.clone(),
+            scheduler: scheduler_name.to_string(),
+            seed: self.sc.config.seed,
+            requests: self.arrived,
+            completed: self.completed,
+            rejected: self.rejected,
+            migrated: self.migrated,
+            makespan_s: self.makespan_s,
+            throughput_rps: if self.makespan_s > 0.0 {
+                self.completed as f64 / self.makespan_s
+            } else {
+                0.0
+            },
+            latency_ms: super::report::summary_or_zero(&self.latency_ms),
+            wait_ms: super::report::summary_or_zero(&self.wait_ms),
+            energy_kwh_total: joules_to_kwh(self.energy_total_j),
+            carbon_g_total: self.carbon_total_g,
+            carbon_per_req_g: if self.completed > 0 {
+                self.carbon_total_g / self.completed as f64
+            } else {
+                0.0
+            },
+            nodes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeSpec;
+    use crate::scheduler::{CarbonAwareScheduler, Mode, RoundRobinScheduler};
+    use crate::sim::scenarios;
+
+    fn one_node_scenario(requests: usize, rate_hz: f64, capacity: usize) -> Scenario {
+        let specs = vec![NodeSpec::paper_nodes().remove(0)];
+        Scenario {
+            name: "one-node".into(),
+            traces: vec![IntensityTrace::Static(specs[0].intensity)],
+            capacity: vec![capacity],
+            specs,
+            arrivals: ArrivalProcess::Uniform { rate_hz },
+            requests,
+            churn: Vec::new(),
+            config: SimConfig { jitter_sigma: 0.0, ..SimConfig::default() },
+        }
+    }
+
+    #[test]
+    fn virtual_clock_and_fifo_order() {
+        // Uniform arrivals slower than service: zero queueing, latency ==
+        // service time, makespan == last arrival + service.
+        let sc = one_node_scenario(10, 1.0, 1);
+        let service_ms = sc.specs[0].simulate_latency_ms(sc.config.base_exec_ms);
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        assert_eq!(r.completed, 10);
+        assert_eq!(r.rejected, 0);
+        assert!((r.latency_ms.mean - service_ms).abs() < 1e-9, "{}", r.latency_ms.mean);
+        assert!(r.wait_ms.max.abs() < 1e-9);
+        assert!((r.makespan_s - (10.0 + service_ms / 1e3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturation_builds_fifo_queue() {
+        // Arrivals 10× faster than service: waits grow linearly; FIFO means
+        // later arrivals wait longer (p95 >> p50).
+        let sc = one_node_scenario(200, 50.0, 1);
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        assert_eq!(r.completed, 200);
+        assert!(r.wait_ms.p95 > r.wait_ms.p50 * 1.5, "{:?}", r.wait_ms);
+        assert!(r.latency_ms.mean > r.wait_ms.mean);
+    }
+
+    #[test]
+    fn capacity_bounds_concurrency() {
+        // Doubling capacity halves the backlog for an overloaded node.
+        let mut rr = RoundRobinScheduler::new();
+        let slow = Simulation::run(&one_node_scenario(200, 50.0, 1), &mut rr);
+        let fast = Simulation::run(&one_node_scenario(200, 50.0, 2), &mut rr);
+        assert!(fast.wait_ms.mean < slow.wait_ms.mean * 0.6);
+        assert!(fast.makespan_s < slow.makespan_s);
+    }
+
+    #[test]
+    fn mmpp_gaps_positive_and_deterministic() {
+        let p = ArrivalProcess::Mmpp { rate_low_hz: 2.0, rate_high_hz: 40.0, mean_dwell_s: 5.0 };
+        let mut a = ArrivalGen::new(p.clone(), 7);
+        let mut b = ArrivalGen::new(p.clone(), 7);
+        let mut total = 0.0;
+        for _ in 0..5_000 {
+            let ga = a.next_gap_s();
+            assert_eq!(ga, b.next_gap_s());
+            assert!(ga > 0.0);
+            total += ga;
+        }
+        // 5k arrivals at mean rate 21 Hz ≈ 238 s of virtual time.
+        let mean_rate = 5_000.0 / total;
+        assert!((mean_rate - p.mean_rate_hz()).abs() / p.mean_rate_hz() < 0.25, "{mean_rate}");
+    }
+
+    #[test]
+    fn event_order_breaks_ties_by_sequence() {
+        let a = Event { t_s: 1.0, seq: 0, kind: EventKind::Arrival };
+        let b = Event { t_s: 1.0, seq: 1, kind: EventKind::Arrival };
+        let c = Event { t_s: 0.5, seq: 2, kind: EventKind::Arrival };
+        let mut h = BinaryHeap::new();
+        h.push(b);
+        h.push(a);
+        h.push(c);
+        assert_eq!(h.pop().unwrap().seq, 2); // earliest time first
+        assert_eq!(h.pop().unwrap().seq, 0); // then insertion order
+        assert_eq!(h.pop().unwrap().seq, 1);
+    }
+
+    #[test]
+    fn identical_seeds_identical_reports() {
+        let sc = scenarios::build("paper-3-node", 0, 2_000, 9).unwrap();
+        let run = || {
+            let mut s = CarbonAwareScheduler::new("green", Mode::Green.weights());
+            Simulation::run(&sc, &mut s)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,112 @@
+//! Fleet synthesis: generate N-node heterogeneous fleets from the
+//! [`crate::carbon::REGIONS`] table with seeded parameter spreads, so
+//! scheduler sweeps can run against hundreds of nodes that still live in
+//! the paper's calibrated parameter regime.
+
+use crate::carbon::REGIONS;
+use crate::node::NodeSpec;
+use crate::util::rng::Rng;
+
+/// CPU-quota tiers mirroring the paper's high/medium/green containers plus
+/// a beefier edge-server class.
+const QUOTA_TIERS: [f64; 4] = [1.0, 0.8, 0.6, 0.4];
+
+/// Synthesize `n` node specs. Regions cycle through [`REGIONS`] (so any
+/// fleet ≥ 8 nodes spans coal-heavy to nordic-hydro grids); quota, power,
+/// prior latency and intensity get seeded spreads around paper-calibrated
+/// centers. Deterministic in `(n, seed)`.
+pub fn synth_fleet(n: usize, seed: u64) -> Vec<NodeSpec> {
+    assert!(n > 0, "fleet needs at least one node");
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let region = REGIONS[i % REGIONS.len()];
+            let quota = QUOTA_TIERS[rng.below(QUOTA_TIERS.len())];
+            // Rated power scales with compute class, ±15% part-to-part.
+            let rated_power_w = (40.0 + 130.0 * quota) * rng.range(0.85, 1.15);
+            // Capability prior: the paper's node-high does 250 ms at quota
+            // 1.0; slower classes scale roughly inversely, ±10%.
+            let prior_ms = 250.0 / quota * rng.range(0.9, 1.1);
+            NodeSpec {
+                name: format!("{}-{i:03}", region.name),
+                cpu_quota: quota,
+                mem_mb: if quota >= 0.8 { 1024 } else { 512 },
+                intensity: region.intensity * rng.range(0.9, 1.1),
+                rated_power_w,
+                prior_ms,
+                alpha: 0.005,
+                overhead_ms: 8.0,
+                time_scale: 20.6,
+                adaptive: false,
+            }
+        })
+        .collect()
+}
+
+/// Per-node service concurrency for a synthesized fleet: full-quota nodes
+/// run two requests at once, the rest one.
+pub fn capacities(specs: &[NodeSpec]) -> Vec<usize> {
+    specs.iter().map(|s| if s.cpu_quota >= 1.0 { 2 } else { 1 }).collect()
+}
+
+/// Aggregate service capacity (requests/s) of a fleet under the latency
+/// model at `base_exec_ms` — the scale arrival rates are set against.
+pub fn service_capacity_hz(specs: &[NodeSpec], capacity: &[usize], base_exec_ms: f64) -> f64 {
+    specs
+        .iter()
+        .zip(capacity)
+        .map(|(s, &c)| c as f64 / (s.simulate_latency_ms(base_exec_ms) / 1e3))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_n_and_seed() {
+        let a = synth_fleet(20, 3);
+        let b = synth_fleet(20, 3);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.intensity, y.intensity);
+            assert_eq!(x.rated_power_w, y.rated_power_w);
+            assert_eq!(x.prior_ms, y.prior_ms);
+        }
+        let c = synth_fleet(20, 4);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.intensity != y.intensity));
+    }
+
+    #[test]
+    fn parameters_stay_in_calibrated_regime() {
+        for s in synth_fleet(100, 1) {
+            assert!((0.4..=1.0).contains(&s.cpu_quota));
+            assert!(s.rated_power_w > 30.0 && s.rated_power_w < 220.0, "{}", s.rated_power_w);
+            assert!((200.0..=700.0).contains(&s.prior_ms), "{}", s.prior_ms);
+            assert!(s.intensity > 30.0 && s.intensity < 1000.0);
+            assert!(s.mem_mb == 512 || s.mem_mb == 1024);
+        }
+    }
+
+    #[test]
+    fn regions_cycle_for_grid_diversity() {
+        let fleet = synth_fleet(16, 2);
+        let mut prefixes: Vec<&str> =
+            fleet.iter().map(|s| s.name.rsplit_once('-').unwrap().0).collect();
+        prefixes.sort();
+        prefixes.dedup();
+        assert_eq!(prefixes.len(), crate::carbon::REGIONS.len());
+    }
+
+    #[test]
+    fn capacity_and_fleet_rate() {
+        let specs = synth_fleet(10, 5);
+        let caps = capacities(&specs);
+        assert_eq!(caps.len(), 10);
+        assert!(caps.iter().all(|&c| c == 1 || c == 2));
+        let hz = service_capacity_hz(&specs, &caps, 9.6);
+        // 10 nodes at ~200-560 ms per request: single-digit to tens of Hz.
+        assert!(hz > 5.0 && hz < 120.0, "{hz}");
+    }
+}

@@ -1,0 +1,35 @@
+//! # L3.5 — the discrete-event fleet simulator
+//!
+//! The real `ServingLoop` executes one request at a time against PJRT and
+//! sleeps on the wall clock — high fidelity, but physically incapable of the
+//! regimes where carbon-aware policies actually differentiate: load
+//! contention, temporal intensity variation, and fleet heterogeneity
+//! (GreenScale, Ecomap). This module trades the real executor for the
+//! calibrated per-node models the repo already has and runs everything on a
+//! **virtual clock**:
+//!
+//! * a deterministic binary-heap event queue over virtual seconds;
+//! * per-node FIFO queues with bounded concurrency;
+//! * service times from the `NodeSpec` latency model
+//!   (`t_exec·(1 + α·(1/quota − 1)) + overhead`) with seeded lognormal
+//!   jitter via [`crate::util::rng`];
+//! * energy from `rated_power_w`, emissions via
+//!   [`crate::carbon::emissions_g`] evaluated against the **time-varying**
+//!   [`crate::carbon::IntensityTrace`] at each task's virtual completion
+//!   time — `Diurnal`/`Trace` finally sit on the scheduling path;
+//! * scheduling through the existing [`crate::scheduler::Scheduler`] trait:
+//!   schedulers see queue depth + in-flight as `inflight`, and the current
+//!   virtual-time grid intensity via `EdgeNode::intensity()`.
+//!
+//! Identical seeds produce identical [`SimReport`]s; millions of simulated
+//! requests run in seconds (`benches/sim.rs`). The scenario library lives
+//! in [`scenarios`]; fleet synthesis in [`fleet`].
+
+mod engine;
+pub mod fleet;
+mod report;
+pub mod scenarios;
+
+pub use engine::{ArrivalProcess, ChurnEvent, SimConfig, Simulation};
+pub use report::{NodeUsage, SimReport};
+pub use scenarios::{Scenario, SCENARIO_NAMES};

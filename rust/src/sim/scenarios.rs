@@ -1,0 +1,271 @@
+//! The scenario library: named, parameterized fleet/workload setups for
+//! `carbonedge sim --scenario <name>`. Every scenario is deterministic in
+//! `(nodes, requests, seed)`.
+//!
+//! * **`paper-3-node`** — the paper's Sec. IV-A1 testbed (node-high /
+//!   node-medium / node-green, static grids) replayed open-loop at 6 req/s,
+//!   enough pressure that modes genuinely contend for nodes instead of the
+//!   closed-loop 100%-concentration regime of Table V.
+//! * **`fleet-100`** — an N-node (default 100) heterogeneous fleet
+//!   synthesized from the `REGIONS` table ([`crate::sim::fleet`]), Poisson
+//!   arrivals at 60% of aggregate service capacity: the scale regime where
+//!   carbon-aware scoring has real routing freedom.
+//! * **`diurnal-solar`** — N nodes (default 12) whose grids follow
+//!   [`IntensityTrace::Diurnal`] (amplitude 40% of the regional mean) over a
+//!   six-hour virtual horizon; exercises time-varying intensity on both the
+//!   scheduling and the accounting path.
+//! * **`bursty`** — the paper's 3 nodes under a two-state MMPP arrival
+//!   process (quiet 25% / burst 150% of fleet capacity, 20 s mean dwell):
+//!   queueing behaviour under load spikes.
+//! * **`churn`** — an N-node fleet (default 10) where one node is down from
+//!   t = 0 and a third of the fleet departs mid-run and returns later;
+//!   queued work migrates, and nothing may ever be scheduled onto a
+//!   departed node.
+
+use crate::carbon::IntensityTrace;
+use crate::node::NodeSpec;
+
+use super::engine::{ArrivalProcess, ChurnEvent, SimConfig};
+use super::fleet;
+
+/// Names accepted by [`build`] (and `carbonedge sim --scenario`).
+pub const SCENARIO_NAMES: &[&str] =
+    &["paper-3-node", "fleet-100", "diurnal-solar", "bursty", "churn"];
+
+/// A fully specified simulation setup.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub specs: Vec<NodeSpec>,
+    /// Per-node intensity trace (same order as `specs`).
+    pub traces: Vec<IntensityTrace>,
+    /// Per-node service concurrency bound.
+    pub capacity: Vec<usize>,
+    pub arrivals: ArrivalProcess,
+    /// Number of requests the arrival process generates.
+    pub requests: usize,
+    pub churn: Vec<ChurnEvent>,
+    pub config: SimConfig,
+}
+
+/// Build a named scenario. `nodes == 0` and `requests == 0` select
+/// per-scenario defaults. Returns `None` for unknown names.
+pub fn build(name: &str, nodes: usize, requests: usize, seed: u64) -> Option<Scenario> {
+    let requests = if requests == 0 { 20_000 } else { requests };
+    match name {
+        "paper-3-node" => Some(paper_3_node(requests, seed)),
+        "fleet-100" => Some(fleet_n(if nodes == 0 { 100 } else { nodes }, requests, seed)),
+        "diurnal-solar" => Some(diurnal_solar(if nodes == 0 { 12 } else { nodes }, requests, seed)),
+        "bursty" => Some(bursty(nodes, requests, seed)),
+        "churn" => Some(churn(if nodes == 0 { 10 } else { nodes }, requests, seed)),
+        _ => None,
+    }
+}
+
+fn static_traces(specs: &[NodeSpec]) -> Vec<IntensityTrace> {
+    specs.iter().map(|s| IntensityTrace::Static(s.intensity)).collect()
+}
+
+fn paper_3_node(requests: usize, seed: u64) -> Scenario {
+    let specs = NodeSpec::paper_nodes();
+    Scenario {
+        name: "paper-3-node".into(),
+        traces: static_traces(&specs),
+        capacity: vec![1; specs.len()],
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz: 6.0 },
+        requests,
+        churn: Vec::new(),
+        config: SimConfig { seed, ..SimConfig::default() },
+    }
+}
+
+fn fleet_n(n: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig { seed, ..SimConfig::default() };
+    let specs = fleet::synth_fleet(n, seed);
+    let capacity = fleet::capacities(&specs);
+    let rate_hz = 0.6 * fleet::service_capacity_hz(&specs, &capacity, config.base_exec_ms);
+    Scenario {
+        name: "fleet-100".into(),
+        traces: static_traces(&specs),
+        capacity,
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz },
+        requests,
+        churn: Vec::new(),
+        config,
+    }
+}
+
+/// Virtual horizon the diurnal scenario spreads its arrivals over: the
+/// first quarter of the day curve, where solar-driven intensity moves
+/// monotonically away from the nightly mean.
+pub const DIURNAL_HORIZON_S: f64 = 21_600.0;
+
+fn diurnal_solar(n: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig { seed, ..SimConfig::default() };
+    let specs = fleet::synth_fleet(n, seed);
+    let traces = specs
+        .iter()
+        .map(|s| IntensityTrace::Diurnal {
+            mean: s.intensity,
+            amplitude: 0.4 * s.intensity,
+            period_s: 86_400.0,
+            phase_s: 0.0,
+        })
+        .collect();
+    let capacity = fleet::capacities(&specs);
+    Scenario {
+        name: "diurnal-solar".into(),
+        traces,
+        capacity,
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz: requests as f64 / DIURNAL_HORIZON_S },
+        requests,
+        churn: Vec::new(),
+        config,
+    }
+}
+
+fn bursty(nodes: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig { seed, ..SimConfig::default() };
+    let paper = nodes == 0 || nodes == 3;
+    let specs = if paper { NodeSpec::paper_nodes() } else { fleet::synth_fleet(nodes, seed) };
+    let capacity = if paper { vec![1; specs.len()] } else { fleet::capacities(&specs) };
+    let cap_hz = fleet::service_capacity_hz(&specs, &capacity, config.base_exec_ms);
+    Scenario {
+        name: "bursty".into(),
+        traces: static_traces(&specs),
+        capacity,
+        specs,
+        arrivals: ArrivalProcess::Mmpp {
+            rate_low_hz: 0.25 * cap_hz,
+            rate_high_hz: 1.5 * cap_hz,
+            mean_dwell_s: 20.0,
+        },
+        requests,
+        churn: Vec::new(),
+        config,
+    }
+}
+
+fn churn(n: usize, requests: usize, seed: u64) -> Scenario {
+    assert!(n >= 3, "churn scenario needs at least 3 nodes");
+    let config = SimConfig { seed, ..SimConfig::default() };
+    let specs = fleet::synth_fleet(n, seed);
+    let capacity = fleet::capacities(&specs);
+    let rate_hz = 0.5 * fleet::service_capacity_hz(&specs, &capacity, config.base_exec_ms);
+    let horizon_s = requests as f64 / rate_hz;
+    // Node n-1 is dead from the start (must never receive work); the first
+    // third of the fleet departs at 30% of the horizon and rejoins at 70%.
+    let mut churn = vec![ChurnEvent { at_s: 0.0, node: n - 1, up: false }];
+    for i in 0..(n / 3).max(1) {
+        churn.push(ChurnEvent { at_s: 0.3 * horizon_s, node: i, up: false });
+        churn.push(ChurnEvent { at_s: 0.7 * horizon_s, node: i, up: true });
+    }
+    Scenario {
+        name: "churn".into(),
+        traces: static_traces(&specs),
+        capacity,
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz },
+        requests,
+        churn,
+        config,
+    }
+}
+
+/// Single-node monolithic baseline for `sc`: the same arrival process and
+/// request budget against one host-class node — full-load host power at the
+/// host grid scenario (Config::default's 530 gCO₂/kWh), the paper's
+/// "Monolithic" row transplanted into virtual time.
+pub fn monolithic_of(sc: &Scenario) -> Scenario {
+    let host_w = crate::config::default_host_power().power_watts(1.0, 1.0);
+    let spec = NodeSpec {
+        name: "host-mono".into(),
+        cpu_quota: 1.0,
+        mem_mb: 4096,
+        intensity: 530.0,
+        rated_power_w: host_w,
+        prior_ms: 250.0,
+        alpha: 0.0,
+        overhead_ms: 0.0,
+        time_scale: 20.6,
+        adaptive: false,
+    };
+    Scenario {
+        name: format!("{}-monolithic", sc.name),
+        traces: vec![IntensityTrace::Static(spec.intensity)],
+        capacity: vec![1],
+        specs: vec![spec],
+        arrivals: sc.arrivals.clone(),
+        requests: sc.requests,
+        churn: Vec::new(),
+        config: sc.config.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_name_builds() {
+        for name in SCENARIO_NAMES {
+            let sc = build(name, 0, 0, 7).unwrap_or_else(|| panic!("{name} did not build"));
+            assert_eq!(sc.specs.len(), sc.traces.len());
+            assert_eq!(sc.specs.len(), sc.capacity.len());
+            assert_eq!(sc.requests, 20_000);
+            assert_eq!(sc.config.seed, 7);
+            assert!(sc.arrivals.mean_rate_hz() > 0.0, "{name}");
+        }
+        assert!(build("atlantis", 0, 0, 7).is_none());
+    }
+
+    #[test]
+    fn defaults_match_docs() {
+        assert_eq!(build("paper-3-node", 0, 0, 1).unwrap().specs.len(), 3);
+        assert_eq!(build("fleet-100", 0, 0, 1).unwrap().specs.len(), 100);
+        assert_eq!(build("diurnal-solar", 0, 0, 1).unwrap().specs.len(), 12);
+        assert_eq!(build("bursty", 0, 0, 1).unwrap().specs.len(), 3);
+        assert_eq!(build("churn", 0, 0, 1).unwrap().specs.len(), 10);
+        // node/request overrides respected
+        let sc = build("fleet-100", 25, 500, 1).unwrap();
+        assert_eq!(sc.specs.len(), 25);
+        assert_eq!(sc.requests, 500);
+    }
+
+    #[test]
+    fn diurnal_uses_time_varying_traces() {
+        let sc = build("diurnal-solar", 0, 0, 1).unwrap();
+        for tr in &sc.traces {
+            assert!(matches!(tr, IntensityTrace::Diurnal { .. }));
+        }
+        // Horizon scaling: arrivals spread over the quarter-day window.
+        let rate = sc.arrivals.mean_rate_hz();
+        assert!((rate - 20_000.0 / DIURNAL_HORIZON_S).abs() < 1e-9);
+    }
+
+    #[test]
+    fn churn_has_dead_node_and_waves() {
+        let sc = build("churn", 9, 0, 3).unwrap();
+        assert_eq!(sc.churn[0], ChurnEvent { at_s: 0.0, node: 8, up: false });
+        let downs = sc.churn.iter().filter(|e| !e.up).count();
+        let ups = sc.churn.iter().filter(|e| e.up).count();
+        assert_eq!(downs, 1 + 3); // dead node + n/3 wave
+        assert_eq!(ups, 3);
+    }
+
+    #[test]
+    fn monolithic_baseline_is_single_host() {
+        let sc = build("paper-3-node", 0, 0, 5).unwrap();
+        let mono = monolithic_of(&sc);
+        assert_eq!(mono.specs.len(), 1);
+        assert_eq!(mono.specs[0].name, "host-mono");
+        assert_eq!(mono.specs[0].intensity, 530.0);
+        // ≈142 W full-load host (config::default_host_power calibration)
+        assert!((mono.specs[0].rated_power_w - 142.0).abs() < 1e-9);
+        assert_eq!(mono.requests, sc.requests);
+        assert_eq!(mono.config.seed, sc.config.seed);
+    }
+}

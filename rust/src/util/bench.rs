@@ -91,7 +91,11 @@ impl Bencher {
             f();
             samples.push(s.elapsed().as_secs_f64());
         }
-        BenchResult { name: name.to_string(), iters: samples.len(), per_iter: Summary::of(&samples) }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            per_iter: Summary::of(&samples),
+        }
     }
 
     /// Like `run` but each call of `f` performs `batch` iterations

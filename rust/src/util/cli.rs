@@ -100,7 +100,8 @@ mod tests {
 
     #[test]
     fn subcommand_and_flags() {
-        let a = Args::parse(&sv(&["serve", "--model", "mobilenet_v2", "--mode=green"]), &[]).unwrap();
+        let a =
+            Args::parse(&sv(&["serve", "--model", "mobilenet_v2", "--mode=green"]), &[]).unwrap();
         assert_eq!(a.command.as_deref(), Some("serve"));
         assert_eq!(a.get("model"), Some("mobilenet_v2"));
         assert_eq!(a.get("mode"), Some("green"));

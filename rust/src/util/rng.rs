@@ -21,7 +21,9 @@ fn splitmix64(state: &mut u64) -> u64 {
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+        let s =
+            [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        Rng { s }
     }
 
     pub fn next_u64(&mut self) -> u64 {
@@ -95,6 +97,40 @@ mod tests {
     #[test]
     fn different_seeds_differ() {
         assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn seed_stable_exact_integer_and_uniform_values() {
+        // Pinned against an independent reference implementation of
+        // splitmix64 + xoshiro256**. Generation is pure integer arithmetic
+        // (the uniform maps through an exact power-of-two multiply), so
+        // these must match bit-for-bit on every platform — the simulator's
+        // determinism guarantee rests on it.
+        let mut r = Rng::new(42);
+        assert_eq!(r.next_u64(), 1546998764402558742);
+        assert_eq!(r.next_u64(), 6990951692964543102);
+        assert_eq!(r.next_u64(), 12544586762248559009);
+        let mut r = Rng::new(7);
+        assert_eq!(r.f64(), 0.7005764821796896);
+        assert_eq!(r.f64(), 0.2787512294737843);
+        assert_eq!(r.f64(), 0.8396274618764198);
+    }
+
+    #[test]
+    fn seed_stable_exp_and_normal() {
+        // exp/normal route through libm (ln, sqrt, cos), which is
+        // correctly rounded to within 1 ulp everywhere we build — pin to a
+        // tolerance far above 1 ulp but far below any behavioural change.
+        let mut r = Rng::new(9);
+        for want in [0.0012933912623040553, 0.1448349383570217, 0.07104812619394953] {
+            let got = r.exp(2.0);
+            assert!((got - want).abs() < 1e-12, "exp: {got} vs {want}");
+        }
+        let mut r = Rng::new(5);
+        for want in [-0.6609817491416791, 0.6293137312379913, 0.25954642531212807] {
+            let got = r.normal();
+            assert!((got - want).abs() < 1e-9, "normal: {got} vs {want}");
+        }
     }
 
     #[test]

@@ -58,6 +58,17 @@ impl Summary {
     }
 }
 
+/// Mean of a sample, 0.0 for an empty slice — the reporting convention for
+/// optional measurements (queue waits, scheduling overhead) where "no
+/// samples" means "nothing to report", not a panic.
+pub fn mean_or_zero(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
 /// Linear-interpolated percentile over a pre-sorted slice.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty());
@@ -182,6 +193,13 @@ mod tests {
     }
 
     #[test]
+    fn mean_or_zero_handles_empty() {
+        assert_eq!(mean_or_zero(&[]), 0.0);
+        assert_eq!(mean_or_zero(&[3.0]), 3.0);
+        assert!((mean_or_zero(&[1.0, 2.0, 6.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn percentile_interpolation() {
         let xs = [10.0, 20.0, 30.0, 40.0];
         assert_eq!(percentile(&xs, 0.0), 10.0);
@@ -192,7 +210,8 @@ mod tests {
     #[test]
     fn ci95_shrinks_with_n() {
         let a = Summary::of(&vec![1.0, 2.0, 3.0, 2.0, 1.0, 3.0, 2.0, 2.0]);
-        let bigger: Vec<f64> = std::iter::repeat([1.0, 2.0, 3.0, 2.0]).take(100).flatten().collect();
+        let bigger: Vec<f64> =
+            std::iter::repeat([1.0, 2.0, 3.0, 2.0]).take(100).flatten().collect();
         let b = Summary::of(&bigger);
         assert!(b.ci95() < a.ci95());
     }

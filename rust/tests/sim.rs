@@ -1,0 +1,225 @@
+//! Integration tests for the L3.5 discrete-event fleet simulator. Unlike
+//! `tests/integration.rs` these need no artifacts: everything runs on the
+//! virtual clock.
+
+use carbonedge::carbon::IntensityTrace;
+use carbonedge::experiments as exp;
+use carbonedge::node::NodeSpec;
+use carbonedge::scheduler::{CarbonAwareScheduler, LeastLoadedScheduler, Mode};
+use carbonedge::sim::{scenarios, ArrivalProcess, ChurnEvent, Scenario, SimConfig, Simulation};
+
+fn green_run(sc: &Scenario) -> carbonedge::sim::SimReport {
+    let mut s = CarbonAwareScheduler::new("green", Mode::Green.weights());
+    Simulation::run(sc, &mut s)
+}
+
+#[test]
+fn deterministic_across_runs_for_every_scenario() {
+    for name in scenarios::SCENARIO_NAMES {
+        let sc = scenarios::build(name, 0, 2_000, 7).unwrap();
+        let a = green_run(&sc);
+        let b = green_run(&sc);
+        assert_eq!(a, b, "{name} diverged across identical runs");
+        // A different seed genuinely changes the run.
+        let sc2 = scenarios::build(name, 0, 2_000, 8).unwrap();
+        let c = green_run(&sc2);
+        assert_ne!(a.latency_ms, c.latency_ms, "{name} ignored the seed");
+    }
+}
+
+#[test]
+fn conservation_per_node_ledger_sums_to_fleet_totals() {
+    for name in scenarios::SCENARIO_NAMES {
+        let sc = scenarios::build(name, 0, 2_000, 11).unwrap();
+        let r = green_run(&sc);
+        assert_eq!(r.requests, 2_000, "{name}");
+        assert_eq!(r.completed + r.rejected, r.requests, "{name}: requests leaked");
+        let (tasks, energy_kwh, carbon_g) = r.node_sums();
+        assert_eq!(tasks, r.completed, "{name}: task conservation");
+        assert!(
+            (energy_kwh - r.energy_kwh_total).abs() <= 1e-9 * r.energy_kwh_total.max(1e-30),
+            "{name}: energy ledger {energy_kwh} != total {}",
+            r.energy_kwh_total
+        );
+        assert!(
+            (carbon_g - r.carbon_g_total).abs() <= 1e-9 * r.carbon_g_total.max(1e-30),
+            "{name}: carbon ledger {carbon_g} != total {}",
+            r.carbon_g_total
+        );
+        assert!(r.completed > 0, "{name}: nothing completed");
+        assert!(r.makespan_s > 0.0 && r.throughput_rps > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn paper_3_node_reproduces_qualitative_result_in_virtual_time() {
+    let sc = scenarios::build("paper-3-node", 0, 10_000, 42).unwrap();
+    let reports = exp::sim_mode_comparison(&sc);
+    let (mono, perf, _balanced, green) = (&reports[0], &reports[1], &reports[2], &reports[3]);
+    assert_eq!(green.scheduler, "green");
+    assert_eq!(perf.scheduler, "performance");
+    // The paper's headline shape, at open-loop fleet scale: Green cuts
+    // carbon vs both the monolithic host and Performance mode, while
+    // Performance is no greener than monolithic.
+    assert!(
+        green.carbon_per_req_g < 0.85 * mono.carbon_per_req_g,
+        "green {} vs mono {}",
+        green.carbon_per_req_g,
+        mono.carbon_per_req_g
+    );
+    assert!(
+        green.carbon_per_req_g < 0.85 * perf.carbon_per_req_g,
+        "green {} vs perf {}",
+        green.carbon_per_req_g,
+        perf.carbon_per_req_g
+    );
+    assert!(perf.carbon_per_req_g > 0.99 * mono.carbon_per_req_g);
+    // Under contention Green leans on node-green hardest, Performance on
+    // node-high — and the single mono host queues far worse than the fleet.
+    let top = |r: &carbonedge::sim::SimReport| {
+        r.nodes.iter().max_by_key(|n| n.tasks).unwrap().name.clone()
+    };
+    assert_eq!(top(green), "node-green");
+    assert_eq!(top(perf), "node-high");
+    assert!(mono.latency_ms.mean > green.latency_ms.mean);
+}
+
+#[test]
+fn weight_sweep_trades_carbon_for_latency_monotonically() {
+    let sc = scenarios::build("paper-3-node", 0, 8_000, 13).unwrap();
+    let points = exp::sim_weight_sweep(&sc, 0.25);
+    assert_eq!(points.len(), 5); // w_C ∈ {0, .25, .5, .75, 1}
+    let carbons: Vec<f64> = points.iter().map(|p| p.report.carbon_per_req_g).collect();
+    // Monotone in trend: each step may wiggle ≤ 2% (service jitter), the
+    // ends must differ decisively.
+    for w in carbons.windows(2) {
+        assert!(w[1] <= w[0] * 1.02, "carbon rose along the sweep: {carbons:?}");
+    }
+    assert!(
+        carbons[4] < 0.8 * carbons[0],
+        "sweep ends not decisive: {carbons:?}"
+    );
+    // The carbon savings are bought with latency: the full-carbon extreme
+    // is slower than the full-performance extreme.
+    assert!(points[4].report.latency_ms.mean > points[0].report.latency_ms.mean);
+}
+
+#[test]
+fn churn_scenario_never_uses_departed_nodes() {
+    let sc = scenarios::build("churn", 0, 3_000, 21).unwrap();
+    let r = green_run(&sc);
+    // The node that is down from t = 0 must never see a single task.
+    let dead = &sc.specs[sc.specs.len() - 1].name;
+    assert_eq!(r.node(dead).unwrap().tasks, 0, "dead node {dead} ran work");
+    assert_eq!(r.completed + r.rejected, r.requests);
+}
+
+#[test]
+fn churn_migrates_queued_work_to_survivors() {
+    // Deterministic migration: two identical nodes saturated 4× over
+    // capacity, one departs mid-run with a long queue.
+    let mk = || NodeSpec {
+        name: String::new(),
+        cpu_quota: 1.0,
+        mem_mb: 1024,
+        intensity: 500.0,
+        rated_power_w: 100.0,
+        prior_ms: 250.0,
+        alpha: 0.0,
+        overhead_ms: 0.0,
+        time_scale: 20.6,
+        adaptive: false,
+    };
+    let mut a = mk();
+    a.name = "a".into();
+    let mut b = mk();
+    b.name = "b".into();
+    // service ≈ 198 ms ⇒ 2 nodes sustain ~10 req/s; arrivals at 40 req/s.
+    let sc = Scenario {
+        name: "mini-churn".into(),
+        traces: vec![IntensityTrace::Static(500.0), IntensityTrace::Static(500.0)],
+        capacity: vec![1, 1],
+        specs: vec![a, b],
+        arrivals: ArrivalProcess::Uniform { rate_hz: 40.0 },
+        requests: 400,
+        churn: vec![ChurnEvent { at_s: 5.0, node: 0, up: false }],
+        config: SimConfig { seed: 3, jitter_sigma: 0.0, ..SimConfig::default() },
+    };
+    let mut sched = LeastLoadedScheduler;
+    let r = Simulation::run(&sc, &mut sched);
+    assert!(r.migrated > 0, "queued work did not migrate");
+    assert_eq!(r.completed, 400); // node b absorbed everything
+    // Node a stopped exactly when it departed: it completed only what was
+    // in service or already finished, far less than half the run.
+    let a_tasks = r.node("a").unwrap().tasks;
+    assert!(a_tasks > 0 && a_tasks < 100, "node a ran {a_tasks} tasks");
+    assert_eq!(r.node("b").unwrap().tasks + a_tasks, 400);
+}
+
+#[test]
+fn bursty_arrivals_queue_worse_than_steady_poisson_at_equal_load() {
+    let bursty = scenarios::build("bursty", 0, 6_000, 17).unwrap();
+    let mut steady = bursty.clone();
+    steady.name = "steady-twin".into();
+    steady.arrivals = ArrivalProcess::Poisson { rate_hz: bursty.arrivals.mean_rate_hz() };
+    let rb = green_run(&bursty);
+    let rs = green_run(&steady);
+    assert_eq!(rb.completed + rb.rejected, 6_000);
+    assert!(
+        rb.wait_ms.p95 > 1.2 * rs.wait_ms.p95,
+        "bursts should queue worse: mmpp p95 {} vs poisson p95 {}",
+        rb.wait_ms.p95,
+        rs.wait_ms.p95
+    );
+}
+
+#[test]
+fn diurnal_intensity_prices_emissions_at_completion_time() {
+    let sc = scenarios::build("diurnal-solar", 0, 4_000, 5).unwrap();
+    // Round-robin so the near-idle fleet still exercises every node's trace.
+    let mut sched = carbonedge::scheduler::RoundRobinScheduler::new();
+    let r = Simulation::run(&sc, &mut sched);
+    // Arrivals spread over the first quarter of the day curve, where the
+    // sinusoid sits strictly above its mean — so every node's *effective*
+    // intensity (carbon / energy) must exceed its static spec scenario.
+    // A static-intensity bug would make them exactly equal.
+    let mut checked = 0;
+    for (spec, usage) in sc.specs.iter().zip(&r.nodes) {
+        if usage.tasks == 0 {
+            continue;
+        }
+        let effective = usage.carbon_g / usage.energy_kwh;
+        assert!(
+            effective > 1.05 * spec.intensity,
+            "{}: effective {effective} vs static {}",
+            spec.name,
+            spec.intensity
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, sc.specs.len(), "round-robin should exercise every node");
+}
+
+#[test]
+fn fleet_scale_spreads_load_across_the_region_table() {
+    let sc = scenarios::build("fleet-100", 0, 5_000, 29).unwrap();
+    assert_eq!(sc.specs.len(), 100);
+    let mut s = CarbonAwareScheduler::new("balanced", Mode::Balanced.weights());
+    let r = Simulation::run(&sc, &mut s);
+    assert_eq!(r.completed + r.rejected, 5_000);
+    let active_nodes = r.nodes.iter().filter(|n| n.tasks > 0).count();
+    assert!(active_nodes > 20, "only {active_nodes} of 100 nodes saw work");
+    // Heterogeneous grids: the busiest nodes should skew cleaner than the
+    // fleet-average intensity under a carbon-weighted mode.
+    let fleet_mean =
+        sc.specs.iter().map(|sp| sp.intensity).sum::<f64>() / sc.specs.len() as f64;
+    let mut by_tasks: Vec<(u64, f64)> =
+        r.nodes.iter().zip(&sc.specs).map(|(n, sp)| (n.tasks, sp.intensity)).collect();
+    by_tasks.sort_by(|x, y| y.0.cmp(&x.0));
+    let busiest_mean =
+        by_tasks[..10].iter().map(|(_, i)| i).sum::<f64>() / 10.0;
+    assert!(
+        busiest_mean < fleet_mean,
+        "busiest-10 intensity {busiest_mean} not cleaner than fleet mean {fleet_mean}"
+    );
+}
