@@ -1,7 +1,9 @@
 //! Fleet simulation tour (the L3.5 virtual-time layer): replay the paper's
-//! 3-node testbed open-loop, sweep the carbon weight at fleet scale, and
-//! watch a churning 100-node fleet — all in a few wall-clock seconds,
-//! no artifacts required.
+//! 3-node testbed open-loop, sweep the carbon weight at fleet scale, watch
+//! a churning fleet migrate its queues, see idle-floor accounting make
+//! consolidation visible, and park morning-peak work for the midday solar
+//! trough with in-engine deferral — all in a few wall-clock seconds, no
+//! artifacts required.
 //!
 //! ```sh
 //! cargo run --release --example fleet_sim -- [--requests 20000] [--seed 42]
@@ -29,12 +31,25 @@ fn main() -> anyhow::Result<()> {
     let points = exp::sim_weight_sweep(&fleet, 0.25);
     println!("{}", exp::sim_sweep_render(&points));
 
-    // 3. Churn: nodes leave mid-run, queued work migrates, nothing lands
-    //    on a departed node.
+    // 3. Churn: nodes leave mid-run, queued work migrates (against freshly
+    //    refreshed grid intensities), nothing lands on a departed node.
     let churn = scenarios::build("churn", 0, requests, seed).unwrap();
     let mut sched = CarbonAwareScheduler::new("green", Mode::Green.weights());
     let r = Simulation::run(&churn, &mut sched);
     println!("{}", r.render());
     println!("churn: {} migrated, {} rejected", r.migrated, r.rejected);
+
+    // 4. Consolidation: the same workload on 3 busy nodes vs 12 mostly-idle
+    //    ones — idle floors (HostPowerModel: ~54 W of the ~142 W rated) are
+    //    what make "fewer, busier nodes" measurably greener.
+    let (small, large) = exp::sim_consolidation(3, 12, requests, seed);
+    println!("{}", exp::sim_consolidation_render(&small, &large));
+
+    // 5. In-engine deferral on a real-shape day curve (bundled
+    //    ElectricityMaps-style CSV): arrivals get 6 h of slack and the
+    //    engine parks dirty-hour work until cleaner forecast slots.
+    let day = scenarios::build("real-trace", 0, requests, seed).unwrap();
+    let (deferred, baseline) = exp::sim_deferral_comparison(&day);
+    println!("{}", exp::sim_deferral_render(&deferred, &baseline));
     Ok(())
 }

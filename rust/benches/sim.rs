@@ -37,4 +37,13 @@ fn main() {
 
     let rps = throughput("churn", 0, 200_000, 3);
     println!("  churn          200k requests   {:>8.2}M sim-req/s", rps / 1e6);
+
+    // Deferral + CSV-trace lookups on the hot path (every arrival consults
+    // the forecast, every parked task re-enters the heap).
+    let rps = throughput("real-trace", 0, 200_000, 3);
+    println!("  real-trace     200k requests   {:>8.2}M sim-req/s  (deferral on)", rps / 1e6);
+
+    // Idle-floor accrual + piecewise intensity integration at report time.
+    let rps = throughput("consolidation", 0, 200_000, 3);
+    println!("  consolidation  200k requests   {:>8.2}M sim-req/s  (idle floors)", rps / 1e6);
 }

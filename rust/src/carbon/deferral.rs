@@ -35,17 +35,25 @@ impl DeferralPolicy {
     /// `deadline_s` (absolute, experiment clock).
     pub fn decide(&self, trace: &IntensityTrace, now_s: f64, deadline_s: f64) -> DeferDecision {
         assert!(deadline_s >= now_s);
+        assert!(self.resolution_s > 0.0, "forecast resolution must be positive");
         let now_i = trace.at(now_s);
         let mut best_t = now_s;
         let mut best_i = now_i;
+        // Sample every `resolution_s` from now, clamping the final sample to
+        // the deadline itself: when the slack is not a multiple of the
+        // resolution, the naive `t += resolution` walk overshoots and never
+        // prices a trough sitting on the deadline boundary.
         let mut t = now_s;
-        while t <= deadline_s {
+        loop {
             let i = trace.at(t);
             if i < best_i {
                 best_i = i;
                 best_t = t;
             }
-            t += self.resolution_s;
+            if t >= deadline_s {
+                break;
+            }
+            t = (t + self.resolution_s).min(deadline_s);
         }
         if best_t > now_s && best_i < now_i * (1.0 - self.min_gain) {
             DeferDecision::Defer { at_s: best_t, intensity: best_i }
@@ -119,6 +127,26 @@ mod tests {
         // trough -> no saving available
         let s2 = p.saving_g(&diurnal(), 64_800.0, 64_800.0 + 3_600.0, kwh);
         assert_eq!(s2, 0.0);
+    }
+
+    #[test]
+    fn trough_on_deadline_boundary_is_sampled() {
+        // Regression: slack (999 s) is not a multiple of the resolution
+        // (300 s), and the only trough sits exactly at the deadline. The
+        // old `t += resolution` walk sampled 0/300/600/900 and then
+        // overshot past 999, returning RunNow.
+        let p = DeferralPolicy { resolution_s: 300.0, min_gain: 0.05 };
+        let trace = IntensityTrace::Trace(vec![(0.0, 500.0), (999.0, 100.0)]);
+        match p.decide(&trace, 0.0, 999.0) {
+            DeferDecision::Defer { at_s, intensity } => {
+                assert_eq!(at_s, 999.0);
+                assert_eq!(intensity, 100.0);
+            }
+            other => panic!("deadline-boundary trough missed: {other:?}"),
+        }
+        // Zero slack degenerates to a single sample at now.
+        let d = p.decide(&trace, 0.0, 0.0);
+        assert_eq!(d, DeferDecision::RunNow { intensity: 500.0 });
     }
 
     #[test]

@@ -41,10 +41,48 @@ pub enum IntensityTrace {
     /// Approximates solar-driven grids (low at noon, high at night).
     Diurnal { mean: GramsPerKwh, amplitude: f64, period_s: f64, phase_s: f64 },
     /// Piecewise-constant samples `(t_seconds, intensity)`, step-held.
+    /// `at`/`integral` rely on the samples being time-sorted; build through
+    /// [`IntensityTrace::from_samples`] (which normalizes) unless the data
+    /// is sorted by construction.
     Trace(Vec<(f64, GramsPerKwh)>),
 }
 
 impl IntensityTrace {
+    /// Validating `Trace` constructor: rejects non-finite times and
+    /// non-finite or negative intensities, and sorts the samples by time
+    /// (stable, so equal-time duplicates keep their input order and the
+    /// last one wins under step-hold). `Trace::at` binary-searches and
+    /// therefore silently mis-reads unsorted data — every external source
+    /// (the CSV loader in particular) must come through here.
+    pub fn from_samples(
+        mut points: Vec<(f64, GramsPerKwh)>,
+    ) -> Result<IntensityTrace, String> {
+        for &(t, v) in &points {
+            if !t.is_finite() {
+                return Err(format!("non-finite sample time {t}"));
+            }
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("bad intensity {v} at t = {t} (must be finite and >= 0)"));
+            }
+        }
+        points.sort_by(|a, b| a.0.total_cmp(&b.0));
+        Ok(IntensityTrace::Trace(points))
+    }
+
+    /// Parse a single-zone ElectricityMaps-style CSV (see
+    /// [`zone_traces_from_csv`] for the format). Errors if the file holds
+    /// more than one zone.
+    pub fn from_csv(text: &str) -> Result<IntensityTrace, String> {
+        let mut zones = zone_traces_from_csv(text)?;
+        if zones.len() != 1 {
+            return Err(format!(
+                "expected a single zone, found {} — use zone_traces_from_csv",
+                zones.len()
+            ));
+        }
+        Ok(zones.remove(0).1)
+    }
+
     /// Intensity at time `t` seconds from experiment start.
     pub fn at(&self, t: f64) -> GramsPerKwh {
         match self {
@@ -79,6 +117,190 @@ impl IntensityTrace {
             .sum::<f64>()
             / samples as f64
     }
+
+    /// `∫ I(t) dt` over `[t0, t1]`, in (gCO₂/kWh)·s — the piecewise
+    /// intensity-time integral the simulator prices idle-floor energy
+    /// against (a single-instant sample would mis-charge any interval that
+    /// spans a grid swing). Exact for `Static`, `Trace` (piecewise
+    /// constant) and unclamped `Diurnal`; clamped diurnals (amplitude >
+    /// mean) fall back to midpoint sampling at ~period/1024 resolution.
+    pub fn integral(&self, t0: f64, t1: f64) -> f64 {
+        assert!(t1 >= t0, "integral bounds reversed: [{t0}, {t1}]");
+        match self {
+            IntensityTrace::Static(v) => v * (t1 - t0),
+            IntensityTrace::Diurnal { mean, amplitude, period_s, phase_s } => {
+                if amplitude.abs() <= *mean {
+                    // Never clamps: exact antiderivative of mean + a·sin(ω(t−φ)).
+                    let w = 2.0 * std::f64::consts::PI / period_s;
+                    let prim = |t: f64| mean * t - amplitude / w * (w * (t - phase_s)).cos();
+                    prim(t1) - prim(t0)
+                } else {
+                    let steps =
+                        (((t1 - t0) / (period_s / 1024.0)).ceil() as usize).clamp(1, 1 << 22);
+                    let h = (t1 - t0) / steps as f64;
+                    (0..steps).map(|i| self.at(t0 + (i as f64 + 0.5) * h)).sum::<f64>() * h
+                }
+            }
+            IntensityTrace::Trace(points) => {
+                if points.is_empty() {
+                    return 0.0;
+                }
+                // Walk the step-held segments overlapping [t0, t1].
+                let mut total = 0.0;
+                let mut t = t0;
+                let mut idx = points.partition_point(|&(ts, _)| ts <= t0);
+                loop {
+                    let v = if idx == 0 { points[0].1 } else { points[idx - 1].1 };
+                    let next = if idx < points.len() { points[idx].0.min(t1) } else { t1 };
+                    total += v * (next - t);
+                    if next >= t1 {
+                        break;
+                    }
+                    t = next;
+                    idx += 1;
+                }
+                total
+            }
+        }
+    }
+}
+
+/// Parse an ElectricityMaps-style CSV export into per-zone intensity
+/// traces, sorted by zone name. Accepted layouts (comma-separated, one
+/// optional header row, `#` comments and blank lines ignored):
+///
+/// * `timestamp,intensity` — a single anonymous zone (named `"trace"`);
+/// * `timestamp,zone,intensity` — multiple zones in one file.
+///
+/// `timestamp` is either plain seconds (used verbatim) or an ISO-8601 UTC
+/// datetime `YYYY-MM-DDTHH:MM[:SS][Z]` (space separator also accepted);
+/// datetime files are normalized so the earliest sample across all zones
+/// sits at `t = 0`, keeping multi-zone traces mutually aligned. Rows may
+/// arrive in any order — each zone goes through the validating
+/// [`IntensityTrace::from_samples`] constructor.
+pub fn zone_traces_from_csv(text: &str) -> Result<Vec<(String, IntensityTrace)>, String> {
+    let mut zones: std::collections::BTreeMap<String, Vec<(f64, f64)>> = Default::default();
+    let mut saw_datetime = false;
+    let mut saw_numeric = false;
+    let mut header_skipped = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let (ts_raw, zone, value_raw) = match fields.as_slice() {
+            [t, v] => (*t, "trace", *v),
+            [t, z, v] => (*t, *z, *v),
+            _ => {
+                return Err(format!(
+                    "line {}: expected 2 or 3 columns, got {}",
+                    lineno + 1,
+                    fields.len()
+                ))
+            }
+        };
+        let t = if let Ok(secs) = ts_raw.parse::<f64>() {
+            saw_numeric = true;
+            secs
+        } else if let Some(secs) = parse_datetime_s(ts_raw) {
+            saw_datetime = true;
+            secs
+        } else if !header_skipped && zones.is_empty() && value_raw.parse::<f64>().is_err() {
+            // A header row has a non-parsable timestamp AND a non-numeric
+            // value column; a malformed first data row (bad timestamp,
+            // numeric intensity) must be an error, not a silent skip.
+            header_skipped = true;
+            continue;
+        } else {
+            return Err(format!("line {}: bad timestamp {ts_raw:?}", lineno + 1));
+        };
+        if saw_numeric && saw_datetime {
+            // Numeric stamps are kept verbatim while datetimes get
+            // normalized to the file's earliest sample — mixing the two
+            // would silently leave the datetime rows at epoch scale.
+            return Err(format!(
+                "line {}: mixing numeric-seconds and datetime timestamps",
+                lineno + 1
+            ));
+        }
+        let v: f64 = value_raw
+            .parse()
+            .map_err(|_| format!("line {}: bad intensity {value_raw:?}", lineno + 1))?;
+        zones.entry(zone.to_string()).or_default().push((t, v));
+    }
+    if zones.is_empty() {
+        return Err("no samples in CSV".into());
+    }
+    if saw_datetime {
+        let t0 = zones.values().flatten().map(|&(t, _)| t).fold(f64::MAX, f64::min);
+        for pts in zones.values_mut() {
+            for p in pts.iter_mut() {
+                p.0 -= t0;
+            }
+        }
+    }
+    zones
+        .into_iter()
+        .map(|(name, pts)| match IntensityTrace::from_samples(pts) {
+            Ok(tr) => Ok((name, tr)),
+            Err(e) => Err(format!("zone {name:?}: {e}")),
+        })
+        .collect()
+}
+
+/// `YYYY-MM-DDTHH:MM[:SS][Z]` (or with a space separator) → seconds since
+/// the Unix epoch, UTC. Returns `None` on anything malformed.
+fn parse_datetime_s(s: &str) -> Option<f64> {
+    let s = s.trim().trim_end_matches('Z');
+    let (date, time) = s.split_once(|c| c == 'T' || c == ' ')?;
+    let mut dp = date.split('-');
+    let y: i64 = dp.next()?.parse().ok()?;
+    let m: u32 = dp.next()?.parse().ok()?;
+    let d: u32 = dp.next()?.parse().ok()?;
+    if dp.next().is_some() || !(1..=12).contains(&m) || !(1..=days_in_month(y, m)).contains(&d) {
+        return None;
+    }
+    let mut tp = time.split(':');
+    let hh: u32 = tp.next()?.parse().ok()?;
+    let mm: u32 = tp.next()?.parse().ok()?;
+    let ss: f64 = match tp.next() {
+        Some(x) => x.parse().ok()?,
+        None => 0.0,
+    };
+    if tp.next().is_some() || hh >= 24 || mm >= 60 || !(0.0..60.0).contains(&ss) {
+        return None;
+    }
+    Some(days_from_civil(y, m, d) as f64 * 86_400.0
+        + hh as f64 * 3_600.0
+        + mm as f64 * 60.0
+        + ss)
+}
+
+fn days_in_month(y: i64, m: u32) -> u32 {
+    match m {
+        1 | 3 | 5 | 7 | 8 | 10 | 12 => 31,
+        4 | 6 | 9 | 11 => 30,
+        _ => {
+            if (y % 4 == 0 && y % 100 != 0) || y % 400 == 0 {
+                29
+            } else {
+                28
+            }
+        }
+    }
+}
+
+/// Days since 1970-01-01 for a proleptic-Gregorian civil date (Howard
+/// Hinnant's `days_from_civil` algorithm — exact for all i64-range years).
+fn days_from_civil(y: i64, m: u32, d: u32) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = y - era * 400; // [0, 399]
+    let mp = (m as i64 + 9) % 12; // March-based month, [0, 11]
+    let doy = (153 * mp + 2) / 5 + d as i64 - 1; // [0, 365]
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy; // [0, 146096]
+    era * 146_097 + doe - 719_468
 }
 
 #[cfg(test)]
@@ -131,6 +353,182 @@ mod tests {
         // before first sample: first value
         assert_eq!(IntensityTrace::Trace(vec![(5.0, 42.0)]).at(0.0), 42.0);
         assert_eq!(IntensityTrace::Trace(vec![]).at(1.0), 0.0);
+    }
+
+    #[test]
+    fn from_samples_sorts_and_validates() {
+        // Unsorted input is normalized, not mis-read.
+        let t = IntensityTrace::from_samples(vec![(20.0, 700.0), (0.0, 500.0), (10.0, 300.0)])
+            .unwrap();
+        assert_eq!(t.at(5.0), 500.0);
+        assert_eq!(t.at(15.0), 300.0);
+        assert_eq!(t.at(25.0), 700.0);
+        // Bad values are rejected outright.
+        assert!(IntensityTrace::from_samples(vec![(f64::NAN, 1.0)]).is_err());
+        assert!(IntensityTrace::from_samples(vec![(0.0, -5.0)]).is_err());
+        assert!(IntensityTrace::from_samples(vec![(0.0, f64::INFINITY)]).is_err());
+        // Empty is a valid (all-zero) trace, matching Trace(vec![]).
+        assert!(IntensityTrace::from_samples(Vec::new()).is_ok());
+    }
+
+    #[test]
+    fn prop_from_samples_normalizes_unsorted_input() {
+        crate::util::proptest::check(
+            "from_samples(shuffled) reads identically to the sorted trace",
+            300,
+            |rng| {
+                let n = rng.below(10);
+                let mut ts = rng.range(-5.0, 5.0);
+                let mut sorted = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ts += rng.range(0.1, 10.0);
+                    sorted.push((ts, rng.range(0.0, 900.0)));
+                }
+                let mut shuffled = sorted.clone();
+                rng.shuffle(&mut shuffled);
+                let queries: Vec<f64> = (0..8).map(|_| rng.range(-20.0, 120.0)).collect();
+                (sorted, shuffled, queries)
+            },
+            |(sorted, shuffled, queries)| {
+                let reference = IntensityTrace::Trace(sorted.clone());
+                let built = IntensityTrace::from_samples(shuffled.clone())
+                    .map_err(|e| format!("valid input rejected: {e}"))?;
+                for &q in queries {
+                    if built.at(q) != reference.at(q) {
+                        return Err(format!(
+                            "at({q}) = {} after normalization, want {}",
+                            built.at(q),
+                            reference.at(q)
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn integral_static_and_trace_exact() {
+        assert_eq!(IntensityTrace::Static(530.0).integral(10.0, 20.0), 5300.0);
+        assert_eq!(IntensityTrace::Static(530.0).integral(5.0, 5.0), 0.0);
+        let t = IntensityTrace::Trace(vec![(0.0, 500.0), (10.0, 300.0), (20.0, 700.0)]);
+        // Spanning all three segments: 5s@500 + 10s@300 + 5s@700.
+        assert!((t.integral(5.0, 25.0) - (2500.0 + 3000.0 + 3500.0)).abs() < 1e-9);
+        // Entirely before the first sample: step-hold extends backwards.
+        assert!((t.integral(-10.0, -5.0) - 2500.0).abs() < 1e-9);
+        // Entirely past the last sample.
+        assert!((t.integral(30.0, 40.0) - 7000.0).abs() < 1e-9);
+        // Inside one segment.
+        assert!((t.integral(12.0, 14.0) - 600.0).abs() < 1e-9);
+        assert_eq!(IntensityTrace::Trace(vec![]).integral(0.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn integral_diurnal_matches_midpoint_sampling() {
+        let t = IntensityTrace::Diurnal {
+            mean: 530.0,
+            amplitude: 180.0,
+            period_s: 86_400.0,
+            phase_s: 3_600.0,
+        };
+        // Full period: the sinusoid integrates away, leaving mean·period.
+        assert!((t.integral(0.0, 86_400.0) - 530.0 * 86_400.0).abs() < 1e-4);
+        // Partial window: analytic result vs a fine midpoint reference.
+        let (t0, t1) = (10_000.0, 47_000.0);
+        let steps = 400_000;
+        let h = (t1 - t0) / steps as f64;
+        let numeric: f64 =
+            (0..steps).map(|i| t.at(t0 + (i as f64 + 0.5) * h)).sum::<f64>() * h;
+        let analytic = t.integral(t0, t1);
+        assert!(
+            (analytic - numeric).abs() / numeric.abs() < 1e-6,
+            "analytic {analytic} vs numeric {numeric}"
+        );
+        // Clamped curve (amplitude > mean) stays non-negative and finite.
+        let c = IntensityTrace::Diurnal {
+            mean: 100.0,
+            amplitude: 150.0,
+            period_s: 86_400.0,
+            phase_s: 0.0,
+        };
+        let v = c.integral(0.0, 86_400.0);
+        assert!(v > 0.0 && v < 250.0 * 86_400.0, "{v}");
+    }
+
+    #[test]
+    fn csv_single_zone_numeric_seconds() {
+        let csv = "timestamp,intensity\n0,500\n10,300\n20,700\n";
+        let t = IntensityTrace::from_csv(csv).unwrap();
+        assert_eq!(t.at(5.0), 500.0);
+        assert_eq!(t.at(15.0), 300.0);
+        // Unsorted rows are normalized by the validating constructor.
+        let t2 = IntensityTrace::from_csv("20,700\n0,500\n10,300\n").unwrap();
+        assert_eq!(t2.at(5.0), 500.0);
+        assert_eq!(t2.at(25.0), 700.0);
+    }
+
+    #[test]
+    fn csv_multi_zone_datetimes_normalized_and_aligned() {
+        let csv = "\
+datetime,zone,carbon_intensity_gco2eq_per_kwh
+2024-06-01T00:00:00Z,DE,420
+2024-06-01T01:00:00Z,DE,410
+# a comment
+2024-06-01T00:00:00Z,DK,180
+2024-06-01T01:00:00Z,DK,175
+";
+        let zones = zone_traces_from_csv(csv).unwrap();
+        assert_eq!(zones.len(), 2);
+        assert_eq!(zones[0].0, "DE"); // BTreeMap order: sorted by name
+        assert_eq!(zones[1].0, "DK");
+        // Earliest sample normalized to t = 0; the next hour at t = 3600.
+        assert_eq!(zones[0].1.at(0.0), 420.0);
+        assert_eq!(zones[0].1.at(3_599.0), 420.0);
+        assert_eq!(zones[0].1.at(3_600.0), 410.0);
+        assert_eq!(zones[1].1.at(3_600.0), 175.0);
+        // Multi-zone file through the single-zone entrypoint is an error.
+        assert!(IntensityTrace::from_csv(csv).is_err());
+    }
+
+    #[test]
+    fn csv_rejects_malformed_rows() {
+        assert!(zone_traces_from_csv("").is_err());
+        assert!(zone_traces_from_csv("just,one,header,row\n").is_err()); // 4 columns
+        assert!(zone_traces_from_csv("0,abc\n").is_err()); // bad intensity
+        assert!(zone_traces_from_csv("0,100\nnot-a-time,200\n").is_err()); // 2nd bad stamp
+        assert!(zone_traces_from_csv("0,-10\n").is_err()); // negative intensity
+        // A malformed FIRST data row (bad timestamp, numeric intensity) is
+        // an error, not a silent header skip — hour 25 does not exist.
+        assert!(zone_traces_from_csv("2024-06-01T25:00:00Z,DE,420\n").is_err());
+        // Mixing numeric-seconds and datetime stamps would leave the
+        // datetime rows at epoch scale after normalization: reject it.
+        assert!(zone_traces_from_csv("0,500\n2024-06-01T00:00:00Z,300\n").is_err());
+        assert!(zone_traces_from_csv("2024-06-01T00:00:00Z,300\n3600,500\n").is_err());
+    }
+
+    #[test]
+    fn datetime_parsing_civil_arithmetic() {
+        assert_eq!(days_from_civil(1970, 1, 1), 0);
+        assert_eq!(days_from_civil(1970, 1, 2), 1);
+        assert_eq!(days_from_civil(1969, 12, 31), -1);
+        // Leap handling: 2024 is a leap year, 2023 is not.
+        assert_eq!(days_from_civil(2024, 3, 1) - days_from_civil(2024, 2, 28), 2);
+        assert_eq!(days_from_civil(2023, 3, 1) - days_from_civil(2023, 2, 28), 1);
+        assert_eq!(days_from_civil(2000, 3, 1) - days_from_civil(2000, 2, 29), 1);
+        // Datetime → epoch seconds, with and without seconds/Z.
+        assert_eq!(parse_datetime_s("1970-01-01T00:00:00Z"), Some(0.0));
+        assert_eq!(parse_datetime_s("1970-01-02 06:30"), Some(86_400.0 + 6.5 * 3_600.0));
+        assert_eq!(parse_datetime_s("1970-01-01T00:00:30"), Some(30.0));
+        assert_eq!(parse_datetime_s("garbage"), None);
+        assert_eq!(parse_datetime_s("1970-13-01T00:00"), None);
+        assert_eq!(parse_datetime_s("1970-01-01T25:00"), None);
+        // Nonexistent civil dates are rejected, not wrapped into the next
+        // month; real leap days parse.
+        assert_eq!(parse_datetime_s("2024-02-30T00:00"), None);
+        assert_eq!(parse_datetime_s("2023-02-29T00:00"), None);
+        assert_eq!(parse_datetime_s("2024-04-31T00:00"), None);
+        assert!(parse_datetime_s("2024-02-29T00:00").is_some());
+        assert!(parse_datetime_s("2000-02-29T00:00").is_some());
     }
 
     #[test]

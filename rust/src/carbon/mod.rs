@@ -8,7 +8,7 @@ mod intensity;
 
 pub use budget::{Admission, BudgetBook, CarbonBudget};
 pub use deferral::{DeferDecision, DeferralPolicy};
-pub use intensity::{region, IntensityTrace, Region, REGIONS};
+pub use intensity::{region, zone_traces_from_csv, IntensityTrace, Region, REGIONS};
 
 /// Grid carbon intensity in gCO₂/kWh.
 pub type GramsPerKwh = f64;

@@ -113,6 +113,7 @@ fn node_from_json(j: &Json) -> Result<NodeSpec> {
         mem_mb: j.req_usize("mem_mb")?,
         intensity: j.req_f64("intensity")?,
         rated_power_w: j.req_f64("rated_power_w")?,
+        idle_w: j.get("idle_w").and_then(Json::as_f64).unwrap_or(0.0),
         prior_ms: j.req_f64("prior_ms")?,
         alpha: j.get("alpha").and_then(Json::as_f64).unwrap_or(0.005),
         overhead_ms: j.get("overhead_ms").and_then(Json::as_f64).unwrap_or(8.0),

@@ -128,6 +128,7 @@ impl Coordinator {
             mem_mb: 32 * 1024,
             intensity: self.cfg.host_intensity,
             rated_power_w: self.cfg.host.power_watts(1.0, 1.0),
+            idle_w: 0.0,
             prior_ms: 250.0,
             alpha: 0.0,
             overhead_ms: 0.0,

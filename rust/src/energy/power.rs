@@ -77,9 +77,23 @@ impl HostPowerModel {
         self.power_watts(0.0, 0.0)
     }
 
+    /// Full-load draw of the host (both sources saturated).
+    pub fn rated_watts(&self) -> f64 {
+        self.power_watts(1.0, 1.0)
+    }
+
     /// Dynamic (above-idle) power at the given utilizations.
     pub fn dynamic_watts(&self, cpu_util: f64, gpu_util: f64) -> f64 {
         self.power_watts(cpu_util, gpu_util) - self.idle_watts()
+    }
+
+    /// Project this host onto the simulator's two-part node model:
+    /// `(rated_power_w, idle_w)` for a [`crate::node::NodeSpec`]. The
+    /// simulator charges `idle_w` across virtual uptime and
+    /// `rated - idle` per busy millisecond, which reproduces this model's
+    /// `power_watts` at both utilization extremes.
+    pub fn node_power_split(&self) -> (f64, f64) {
+        (self.rated_watts(), self.idle_watts())
     }
 }
 
@@ -117,5 +131,7 @@ mod tests {
         assert_eq!(h.power_watts(1.0, 1.0), 664.0);
         assert_eq!(h.dynamic_watts(1.0, 0.0), 200.0);
         assert_eq!(h.dynamic_watts(0.0, 0.0), 0.0);
+        assert_eq!(h.rated_watts(), 664.0);
+        assert_eq!(h.node_power_split(), (664.0, 124.0));
     }
 }

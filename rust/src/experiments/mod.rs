@@ -538,6 +538,84 @@ pub fn sim_weight_sweep(sc: &Scenario, step: f64) -> Vec<SimSweepPoint> {
     points
 }
 
+/// In-engine deferral A/B: run `sc` (which should carry a
+/// `config.deferral`) in Green mode against an otherwise-identical twin
+/// with deferral disabled. Returns `(deferred_run, baseline_run)` — same
+/// arrivals, same seed, same fleet; the only difference is whether slack
+/// is spent chasing cleaner forecast slots.
+pub fn sim_deferral_comparison(sc: &Scenario) -> (SimReport, SimReport) {
+    let mut twin = sc.clone();
+    twin.name = format!("{}-no-defer", sc.name);
+    twin.config.deferral = None;
+    (sim_run_mode(sc, Mode::Green), sim_run_mode(&twin, Mode::Green))
+}
+
+pub fn sim_deferral_render(deferred: &SimReport, baseline: &SimReport) -> String {
+    let mut t = Table::new(
+        "In-engine carbon deferral — A/B on the same workload",
+        &["Run", "gCO2/req", "Deferred", "Missed", "Latency p95 (ms)", "Makespan (s)"],
+    );
+    for r in [baseline, deferred] {
+        t.row(vec![
+            r.scenario.clone(),
+            format!("{:.6}", r.carbon_per_req_g),
+            r.deferred.to_string(),
+            r.deadline_missed.to_string(),
+            f2(r.latency_ms.p95),
+            f2(r.makespan_s),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "deferral cuts gCO2/req by {}\n",
+        pct(1.0 - deferred.carbon_per_req_g / baseline.carbon_per_req_g)
+    ));
+    out
+}
+
+/// The consolidation experiment idle accounting unlocks: replay the *same*
+/// workload (same arrival process, same seed — the `consolidation`
+/// scenario derives its rate from a fixed 3-node reference) against a
+/// small fleet and a large one, in Green mode. Dynamic energy is nearly
+/// identical; every extra node adds an idle floor, so the small fleet
+/// emits less. Returns `(small_run, large_run)`.
+pub fn sim_consolidation(
+    n_small: usize,
+    n_large: usize,
+    requests: usize,
+    seed: u64,
+) -> (SimReport, SimReport) {
+    assert!(n_small >= 1 && n_large > n_small);
+    let small = scenarios::build("consolidation", n_small, requests, seed).unwrap();
+    let large = scenarios::build("consolidation", n_large, requests, seed).unwrap();
+    (sim_run_mode(&small, Mode::Green), sim_run_mode(&large, Mode::Green))
+}
+
+pub fn sim_consolidation_render(small: &SimReport, large: &SimReport) -> String {
+    let mut t = Table::new(
+        "Consolidation — idle floors vs fleet size (same workload)",
+        &["Fleet", "Nodes", "gCO2/req", "Idle kWh", "Dynamic kWh", "Latency p95 (ms)"],
+    );
+    for r in [small, large] {
+        t.row(vec![
+            r.scenario.clone(),
+            r.nodes.len().to_string(),
+            format!("{:.6}", r.carbon_per_req_g),
+            format!("{:.6}", r.energy_idle_kwh_total),
+            format!("{:.6}", r.energy_dynamic_kwh_total),
+            f2(r.latency_ms.p95),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "consolidating onto {} nodes cuts gCO2/req by {} vs {} nodes\n",
+        small.nodes.len(),
+        pct(1.0 - small.carbon_per_req_g / large.carbon_per_req_g),
+        large.nodes.len(),
+    ));
+    out
+}
+
 pub fn sim_sweep_render(points: &[SimSweepPoint]) -> String {
     let mut t = Table::new(
         "Virtual weight sweep — carbon/latency trade-off at fleet scale",

@@ -12,7 +12,14 @@
 //!   schedulers, node models and carbon accounting driven on a *virtual*
 //!   clock instead of the real executor. Real execution for fidelity
 //!   (golden numerics, paper tables), simulation for scale (thousand-node
-//!   fleets, millions of requests, time-varying grids, churn).
+//!   fleets, millions of requests, time-varying grids, churn). Its energy
+//!   model is two-part — per-node idle floors integrated against the grid
+//!   trace plus task-attributed dynamic power — so consolidation effects
+//!   are first-class, and arrivals carrying deadline slack can be
+//!   *deferred in-engine* to cleaner forecast slots
+//!   ([`carbon::DeferralPolicy`]), including against real
+//!   ElectricityMaps-style CSV intensity traces
+//!   ([`carbon::zone_traces_from_csv`]).
 //! * **L2** — the JAX model zoo (`python/compile/models.py`), AOT-lowered to
 //!   HLO text artifacts consumed by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) backing every conv

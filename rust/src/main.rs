@@ -9,6 +9,9 @@
 //! carbonedge overhead                               # scheduling overhead micro-report
 //! carbonedge sim --scenario <name|list> [--nodes N] [--requests M]
 //!               [--seed S] [--mode green [--json]] [--sweep [--step 0.1]]
+//!               [--idle-w W] [--slack S [--headroom S] [--defer-resolution S]
+//!               [--defer-min-gain F]] [--no-defer] [--compare-defer]
+//!               [--trace-csv PATH] [--consolidate LARGE] [--help]
 //!                                                   # virtual-time fleet simulator
 //! ```
 
@@ -43,8 +46,18 @@ fn config_from(args: &Args) -> Result<Config> {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["all", "verbose", "sweep", "json"])?;
+    let args = Args::from_env(&["all", "verbose", "sweep", "json", "help", "no-defer", "compare-defer"])?;
     let cmd = args.command.clone().unwrap_or_else(|| "info".to_string());
+    // Handle --help before any command arm so no command ever runs its
+    // workload when the user only asked for usage text.
+    if args.bool_flag("help") {
+        if cmd == "sim" {
+            print_sim_help();
+        } else {
+            print_usage();
+        }
+        return Ok(());
+    }
     let cfg = config_from(&args)?;
 
     match cmd.as_str() {
@@ -215,13 +228,114 @@ fn run() -> Result<()> {
             if name == "churn" && nodes > 0 && nodes < 3 {
                 anyhow::bail!("the churn scenario needs --nodes >= 3 (survivors must exist)");
             }
-            let sc = carbonedge::sim::scenarios::build(&name, nodes, requests, seed)
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown scenario {name:?}; try one of {:?}",
-                        carbonedge::sim::SCENARIO_NAMES
-                    )
-                })?;
+            if let Some(large) = args.get("consolidate") {
+                // Idle-floor A/B: same workload on a small vs large fleet.
+                // It builds its own pair of consolidation scenarios, so any
+                // other sim knob would be silently ignored — reject loudly
+                // instead.
+                for flag in [
+                    "trace-csv",
+                    "idle-w",
+                    "slack",
+                    "headroom",
+                    "defer-resolution",
+                    "defer-min-gain",
+                    "mode",
+                    "step",
+                ] {
+                    if args.has(flag) {
+                        anyhow::bail!("--consolidate does not combine with --{flag}");
+                    }
+                }
+                for switch in ["sweep", "json", "no-defer", "compare-defer"] {
+                    if args.bool_flag(switch) {
+                        anyhow::bail!("--consolidate does not combine with --{switch}");
+                    }
+                }
+                if args.has("scenario") && name != "consolidation" {
+                    anyhow::bail!("--consolidate always runs the consolidation scenario");
+                }
+                let large: usize = large
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--consolidate expects a fleet size"))?;
+                let small = if nodes == 0 { 3 } else { nodes };
+                if large <= small {
+                    anyhow::bail!("--consolidate {large} must exceed the small fleet ({small})");
+                }
+                let (s, l) = exp::sim_consolidation(small, large, requests, seed);
+                println!("{}", exp::sim_consolidation_render(&s, &l));
+                return Ok(());
+            }
+            let mut sc = if let Some(path) = args.get("trace-csv") {
+                if name != "real-trace" {
+                    anyhow::bail!("--trace-csv only applies to --scenario real-trace");
+                }
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+                carbonedge::sim::scenarios::real_trace_from_csv(&text, nodes, requests, seed)
+                    .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?
+            } else {
+                carbonedge::sim::scenarios::build(&name, nodes, requests, seed).ok_or_else(
+                    || {
+                        anyhow::anyhow!(
+                            "unknown scenario {name:?}; try one of {:?}",
+                            carbonedge::sim::SCENARIO_NAMES
+                        )
+                    },
+                )?
+            };
+            if let Some(w) = args.get("idle-w") {
+                let w: f64 = w
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--idle-w expects watts, got {w:?}"))?;
+                if !w.is_finite() || w < 0.0 {
+                    anyhow::bail!("--idle-w must be finite and >= 0");
+                }
+                for spec in &mut sc.specs {
+                    spec.idle_w = w;
+                }
+            }
+            let defer_knobs =
+                ["slack", "headroom", "defer-resolution", "defer-min-gain"];
+            if args.bool_flag("no-defer") {
+                sc.config.deferral = None;
+            } else if defer_knobs.iter().any(|f| args.has(f)) {
+                // Any single knob tunes the scenario's existing deferral
+                // (real-trace defaults) or enables it from the defaults —
+                // `--defer-min-gain` alone must not be silently ignored.
+                // Validate here so bad knob values are clean CLI errors,
+                // not library assert panics mid-run.
+                let base = sc.config.deferral.clone().unwrap_or_default();
+                let slack_s = args.parse_or("slack", base.slack_s)?;
+                let headroom_s = args.parse_or("headroom", base.headroom_s)?;
+                let resolution_s = args.parse_or("defer-resolution", base.policy.resolution_s)?;
+                let min_gain = args.parse_or("defer-min-gain", base.policy.min_gain)?;
+                if !slack_s.is_finite() || slack_s < 0.0 || !headroom_s.is_finite() || headroom_s < 0.0 {
+                    anyhow::bail!("--slack and --headroom must be finite and >= 0");
+                }
+                if !resolution_s.is_finite() || resolution_s <= 0.0 {
+                    anyhow::bail!("--defer-resolution must be > 0, got {resolution_s}");
+                }
+                if !min_gain.is_finite() || !(0.0..=1.0).contains(&min_gain) {
+                    anyhow::bail!("--defer-min-gain must be in [0, 1], got {min_gain}");
+                }
+                sc.config.deferral = Some(carbonedge::sim::DeferralSpec {
+                    slack_s,
+                    headroom_s,
+                    policy: carbonedge::carbon::DeferralPolicy { resolution_s, min_gain },
+                });
+            }
+            if args.bool_flag("compare-defer") {
+                if sc.config.deferral.is_none() {
+                    anyhow::bail!(
+                        "--compare-defer needs deferral on: use --slack or a deferral \
+                         scenario like real-trace"
+                    );
+                }
+                let (deferred, baseline) = exp::sim_deferral_comparison(&sc);
+                println!("{}", exp::sim_deferral_render(&deferred, &baseline));
+                return Ok(());
+            }
             if args.bool_flag("sweep") {
                 let step = args.parse_or("step", 0.1f64)?;
                 if !(step > 0.0 && step <= 1.0) {
@@ -249,6 +363,62 @@ fn run() -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "\
+carbonedge — carbon-aware edge inference (CarbonEdge reproduction)
+
+  carbonedge info                                  platform + manifest summary
+  carbonedge golden [--model NAME]                 end-to-end numerics gate
+  carbonedge serve --model NAME --mode green ...   serve a workload, print report
+  carbonedge reproduce [--table 2|3|4|5] [--fig 2|3] [--all]
+  carbonedge sweep [--step 0.05] [--iters 20]      Fig. 3 weight sweep
+  carbonedge overhead                              scheduling overhead micro-report
+  carbonedge baselines                             scheduler ablation
+  carbonedge sim --help                            virtual-time fleet simulator"
+    );
+}
+
+fn print_sim_help() {
+    println!(
+        "\
+carbonedge sim — virtual-time fleet simulator (no artifacts needed)
+
+  --scenario NAME        scenario to run (default paper-3-node; `list` prints all)
+  --nodes N              fleet-size override (0 = scenario default)
+  --requests M           request count (0 = 20000)
+  --seed S               master seed (default 42)
+  --mode MODE            run one CE mode (green|balanced|performance); default
+                         runs the monolithic baseline plus all three modes
+  --json                 with --mode: emit the report as JSON
+  --sweep [--step F]     w_C weight sweep instead of a mode run
+
+energy model:
+  --idle-w W             set every node's idle-floor draw to W watts; idle
+                         energy accrues over virtual uptime, integrated
+                         against each node's intensity trace (report splits
+                         energy into idle + dynamic)
+  --consolidate LARGE    idle-floor A/B: replay the same workload on a small
+                         fleet (--nodes, default 3) and on LARGE nodes
+
+carbon deferral (any knob enables deferral, or tunes a scenario that
+defers by default, like real-trace):
+  --slack S              give every arrival S seconds of deadline slack and
+                         let the in-engine policy park work for cleaner slots
+  --headroom S           safety margin kept before the deadline (default 900)
+  --defer-resolution S   forecast sampling resolution (default 300)
+  --defer-min-gain F     minimum relative gain to defer (default 0.05)
+  --no-defer             strip deferral from scenarios that default to it
+  --compare-defer        run the scenario with and without deferral, report
+                         the gCO2/req delta and deadline misses
+
+real traces:
+  --trace-csv PATH       with --scenario real-trace: load an
+                         ElectricityMaps-style CSV (timestamp[,zone],gCO2/kWh)
+                         instead of the bundled synthetic day"
+    );
 }
 
 fn print_report(r: &RunReport) {

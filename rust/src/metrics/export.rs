@@ -47,6 +47,8 @@ pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
         ("completed", num(r.completed as f64)),
         ("rejected", num(r.rejected as f64)),
         ("migrated", num(r.migrated as f64)),
+        ("deferred", num(r.deferred as f64)),
+        ("deadline_missed", num(r.deadline_missed as f64)),
         ("makespan_s", num(r.makespan_s)),
         ("throughput_rps", num(r.throughput_rps)),
         (
@@ -59,7 +61,11 @@ pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
         ),
         ("wait_ms_mean", num(r.wait_ms.mean)),
         ("energy_kwh", num(r.energy_kwh_total)),
+        ("energy_dynamic_kwh", num(r.energy_dynamic_kwh_total)),
+        ("energy_idle_kwh", num(r.energy_idle_kwh_total)),
         ("carbon_total_g", num(r.carbon_g_total)),
+        ("carbon_dynamic_g", num(r.carbon_dynamic_g_total)),
+        ("carbon_idle_g", num(r.carbon_idle_g_total)),
         ("carbon_per_req_g", num(r.carbon_per_req_g)),
         (
             "nodes",
@@ -70,8 +76,13 @@ pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
                         ("node", s(&n.name)),
                         ("tasks", num(n.tasks as f64)),
                         ("busy_ms", num(n.busy_ms)),
-                        ("energy_kwh", num(n.energy_kwh)),
-                        ("carbon_g", num(n.carbon_g)),
+                        ("uptime_s", num(n.uptime_s)),
+                        ("energy_kwh", num(n.energy_kwh())),
+                        ("energy_dynamic_kwh", num(n.energy_dynamic_kwh)),
+                        ("energy_idle_kwh", num(n.energy_idle_kwh)),
+                        ("carbon_g", num(n.carbon_g())),
+                        ("carbon_dynamic_g", num(n.carbon_dynamic_g)),
+                        ("carbon_idle_g", num(n.carbon_idle_g)),
                     ])
                 })
                 .collect()),
@@ -141,6 +152,33 @@ mod tests {
         assert_eq!(back.req_usize("requests").unwrap(), 20);
         assert_eq!(back.req_arr("nodes").unwrap().len(), 3);
         assert!(back.req_f64("carbon_total_g").unwrap() > 0.0);
+        // Two-part energy split + deferral counters survive the roundtrip.
+        assert_eq!(back.req_usize("deferred").unwrap(), 0);
+        assert_eq!(back.req_usize("deadline_missed").unwrap(), 0);
+        assert_eq!(back.req_f64("energy_idle_kwh").unwrap(), 0.0); // paper nodes: no floor
+        let total = back.req_f64("energy_kwh").unwrap();
+        let dynamic = back.req_f64("energy_dynamic_kwh").unwrap();
+        assert!((total - dynamic).abs() < 1e-15);
+        let node0 = &back.req_arr("nodes").unwrap()[0];
+        assert!(node0.req_f64("uptime_s").unwrap() > 0.0);
+        assert!(node0.req_f64("carbon_idle_g").unwrap() == 0.0);
+    }
+
+    #[test]
+    fn sim_report_json_carries_idle_split() {
+        let sc = crate::sim::scenarios::build("consolidation", 3, 50, 2).unwrap();
+        let mut sched = crate::scheduler::CarbonAwareScheduler::new(
+            "green",
+            crate::scheduler::Mode::Green.weights(),
+        );
+        let r = crate::sim::Simulation::run(&sc, &mut sched);
+        let back = Json::parse(&sim_report_to_json(&r).to_string()).unwrap();
+        let idle = back.req_f64("energy_idle_kwh").unwrap();
+        let dynamic = back.req_f64("energy_dynamic_kwh").unwrap();
+        let total = back.req_f64("energy_kwh").unwrap();
+        assert!(idle > 0.0, "consolidation nodes carry an idle floor");
+        assert!((idle + dynamic - total).abs() <= 1e-12 * total);
+        assert!(back.req_f64("carbon_idle_g").unwrap() > 0.0);
     }
 
     #[test]

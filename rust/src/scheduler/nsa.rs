@@ -217,6 +217,7 @@ mod tests {
                     mem_mb: 128 + rng.below(2048),
                     intensity: rng.range(40.0, 900.0),
                     rated_power_w: rng.range(5.0, 400.0),
+                    idle_w: 0.0,
                     prior_ms: rng.range(10.0, 2000.0),
                     alpha: rng.range(0.0, 1.0),
                     overhead_ms: rng.range(0.0, 10.0),
@@ -280,6 +281,7 @@ mod tests {
                         mem_mb: 1024,
                         intensity,
                         rated_power_w: 100.0,
+                        idle_w: 0.0,
                         prior_ms: 300.0,
                         alpha: 0.0,
                         overhead_ms: 0.0,

@@ -55,7 +55,15 @@ pub fn resource_score(node: &EdgeNode, task: &TaskDemand) -> f64 {
 fn resource_score_from(st: &crate::node::NodeState, node: &EdgeNode, task: &TaskDemand) -> f64 {
     let free_cpu = node.spec.cpu_quota * (1.0 - st.load);
     let cpu_ratio = (free_cpu / task.cpu.max(1e-9)).min(1.0);
-    let free_mem = node.spec.mem_mb as f64; // static quota in this testbed
+    // Memory mirrors the CPU term: the quota minus what in-flight tasks
+    // already hold. Charging the full quota as free would keep S_R's
+    // memory term at 1.0 no matter the load. In-flight reservations are
+    // estimated as `inflight × task.mem_mb` — exact in this testbed and
+    // the simulator, where every request in a run presents the same
+    // `TaskDemand`; heterogeneous demands would need per-node reserved-
+    // memory tracking in `NodeState`.
+    let held_mb = st.inflight as f64 * task.mem_mb as f64;
+    let free_mem = (node.spec.mem_mb as f64 - held_mb).max(0.0);
     let mem_ratio = (free_mem / task.mem_mb.max(1) as f64).min(1.0);
     ((cpu_ratio + mem_ratio) / 2.0).clamp(0.0, 1.0)
 }
@@ -179,6 +187,28 @@ mod tests {
         ns[0].begin_task();
         let b2 = score_breakdown(&ns[0], &task, &w);
         assert!((b2.s_b - 0.2).abs() < 1e-12); // 1/(1+2*2)
+    }
+
+    #[test]
+    fn inflight_demand_depletes_resource_memory_term() {
+        // node-green: 512 MB quota against the default 256 MB demand.
+        let n = EdgeNode::new(NodeSpec::paper_nodes().remove(2));
+        let task = TaskDemand::default();
+        let w = Mode::Green.weights();
+        assert_eq!(score_breakdown(&n, &task, &w).s_r, 1.0);
+        // One task in flight: 256 MB still free — exactly one demand fits.
+        n.begin_task();
+        assert_eq!(score_breakdown(&n, &task, &w).s_r, 1.0);
+        // Two in flight: memory exhausted, the term collapses to 0 and S_R
+        // to the CPU half (load is still 0, so cpu_ratio = 1).
+        n.begin_task();
+        let b = score_breakdown(&n, &task, &w);
+        assert!((b.s_r - 0.5).abs() < 1e-12, "s_r = {}", b.s_r);
+        // Partial depletion: a 128 MB demand sees 256/128 -> ratio capped
+        // at 1; a 384 MB demand sees 512-2*384 < 0 clamped to 0.
+        let big = TaskDemand { mem_mb: 384, ..task };
+        let bb = score_breakdown(&n, &big, &w);
+        assert!((bb.s_r - 0.5).abs() < 1e-12, "s_r = {}", bb.s_r);
     }
 
     #[test]

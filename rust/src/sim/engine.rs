@@ -4,19 +4,51 @@
 //! Determinism: every event carries a monotone sequence number that breaks
 //! timestamp ties, all randomness flows from two seeded [`Rng`] streams
 //! (arrivals and service jitter), and per-node accounting is an index-
-//! addressed [`LedgerEntry`] table — identical seeds therefore yield
-//! identical [`SimReport`]s.
+//! addressed ledger table — identical seeds therefore yield identical
+//! [`SimReport`]s.
+//!
+//! Energy is a **two-part model**: every powered-on node accrues its
+//! [`crate::node::NodeSpec::idle_w`] floor over virtual uptime (priced by
+//! piecewise integration of its [`IntensityTrace`], not at a single
+//! instant), and each task adds `dynamic_power_w × service` on top, priced
+//! at completion-time intensity (Eq. 2). Arrivals carrying slack may be
+//! **deferred** in-engine: a [`crate::carbon::DeferralPolicy`] parks them
+//! as [`EventKind::DeferredRelease`] events targeting the cleanest
+//! forecast slot inside their deadline.
 
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 
-use crate::carbon::{emissions_g, joules_to_kwh, IntensityTrace, LedgerEntry};
+use crate::carbon::{
+    emissions_g, joules_to_kwh, DeferDecision, DeferralPolicy, IntensityTrace, LedgerEntry,
+};
 use crate::node::EdgeNode;
 use crate::scheduler::{Scheduler, TaskDemand};
 use crate::util::rng::Rng;
 
 use super::report::SimReport;
 use super::scenarios::Scenario;
+
+/// In-engine temporal deferral: arrivals get `slack_s` of slack, and the
+/// policy may park them until a cleaner forecast slot. The policy is only
+/// consulted up to `deadline − headroom_s` so a released task still has
+/// room to queue and execute before its deadline.
+#[derive(Debug, Clone)]
+pub struct DeferralSpec {
+    /// Slack granted to every arrival: `deadline = arrival + slack_s`.
+    pub slack_s: f64,
+    /// Safety margin kept between the latest considered release slot and
+    /// the deadline (covers queueing + service after release).
+    pub headroom_s: f64,
+    /// The forecast-scanning policy (resolution + minimum gain).
+    pub policy: DeferralPolicy,
+}
+
+impl Default for DeferralSpec {
+    fn default() -> DeferralSpec {
+        DeferralSpec { slack_s: 3_600.0, headroom_s: 900.0, policy: DeferralPolicy::default() }
+    }
+}
 
 /// Engine knobs shared by every scenario.
 #[derive(Debug, Clone)]
@@ -36,6 +68,9 @@ pub struct SimConfig {
     /// How often (virtual seconds) time-varying intensities are pushed into
     /// the scheduler-visible node state. Static traces are never refreshed.
     pub intensity_refresh_s: f64,
+    /// Carbon-aware temporal deferral; `None` (the default) runs every
+    /// arrival immediately, the pre-deferral behaviour.
+    pub deferral: Option<DeferralSpec>,
 }
 
 impl Default for SimConfig {
@@ -47,6 +82,7 @@ impl Default for SimConfig {
             pue: crate::carbon::DEFAULT_PUE,
             demand: TaskDemand::default(),
             intensity_refresh_s: 60.0,
+            deferral: None,
         }
     }
 }
@@ -136,7 +172,15 @@ pub struct ChurnEvent {
 
 enum EventKind {
     Arrival,
-    Completion { node: usize, arrival_s: f64, service_ms: f64, energy_j: f64 },
+    /// A deferred request released at its chosen slot: re-scheduled against
+    /// fresh intensities and dispatched unconditionally (no re-deferral, so
+    /// a parked task can never livelock). Note the release re-runs node
+    /// selection, so a task parked for one node's trough may land elsewhere
+    /// if the fleet shifted meanwhile — the min-gain threshold is enforced
+    /// at decision time, not at execution. Deciding placement and timing
+    /// jointly is future work (ROADMAP).
+    DeferredRelease { arrival_s: f64, deadline_s: f64 },
+    Completion { node: usize, arrival_s: f64, deadline_s: f64, service_ms: f64, energy_j: f64 },
     Churn { node: usize, up: bool },
 }
 
@@ -176,15 +220,21 @@ pub struct Simulation<'a> {
     cache: Vec<Arc<EdgeNode>>,
     /// Cache position → global node index.
     cache_idx: Vec<usize>,
-    /// Per-node FIFO of waiting requests (arrival timestamps, seconds).
-    queues: Vec<VecDeque<f64>>,
+    /// Per-node FIFO of waiting requests: `(arrival_s, deadline_s)`.
+    queues: Vec<VecDeque<(f64, f64)>>,
     in_service: Vec<usize>,
     heap: BinaryHeap<Event>,
     seq: u64,
     service_rng: Rng,
-    /// Per-node energy/carbon/task totals, indexed by node id — the
-    /// per-completion hot path must not pay a string-keyed map lookup.
+    /// Per-node *dynamic* energy/carbon/task totals, indexed by node id —
+    /// the per-completion hot path must not pay a string-keyed map lookup.
     node_ledger: Vec<LedgerEntry>,
+    /// Idle-floor accounting: when the node last powered on (None = down),
+    /// plus accumulated uptime / idle energy / idle carbon.
+    up_since: Vec<Option<f64>>,
+    uptime_s: Vec<f64>,
+    idle_energy_j: Vec<f64>,
+    idle_carbon_g: Vec<f64>,
     latency_ms: Vec<f64>,
     wait_ms: Vec<f64>,
     energy_total_j: f64,
@@ -193,7 +243,12 @@ pub struct Simulation<'a> {
     completed: u64,
     rejected: u64,
     migrated: u64,
+    deferred: u64,
+    deadline_missed: u64,
     makespan_s: f64,
+    /// Timestamp of the last event processed — the horizon idle-floor
+    /// accrual runs to (events pop in time order, so this is monotone).
+    t_last: f64,
     last_refresh_s: f64,
 }
 
@@ -207,6 +262,9 @@ impl<'a> Simulation<'a> {
         assert_eq!(scenario.traces.len(), n, "one trace per node");
         assert_eq!(scenario.capacity.len(), n, "one capacity per node");
         assert!(scenario.capacity.iter().all(|&c| c > 0), "capacity must be positive");
+        if let Some(d) = &scenario.config.deferral {
+            assert!(d.slack_s >= 0.0 && d.headroom_s >= 0.0, "negative deferral slack");
+        }
 
         let mut sim = Simulation {
             sc: scenario,
@@ -220,6 +278,10 @@ impl<'a> Simulation<'a> {
             seq: 0,
             service_rng: Rng::new(scenario.config.seed ^ 0x5DEECE66D),
             node_ledger: vec![LedgerEntry::default(); n],
+            up_since: vec![Some(0.0); n],
+            uptime_s: vec![0.0; n],
+            idle_energy_j: vec![0.0; n],
+            idle_carbon_g: vec![0.0; n],
             latency_ms: Vec::with_capacity(scenario.requests),
             wait_ms: Vec::with_capacity(scenario.requests),
             energy_total_j: 0.0,
@@ -228,7 +290,10 @@ impl<'a> Simulation<'a> {
             completed: 0,
             rejected: 0,
             migrated: 0,
+            deferred: 0,
+            deadline_missed: 0,
             makespan_s: 0.0,
+            t_last: 0.0,
             last_refresh_s: f64::NEG_INFINITY,
         };
         sim.rebuild_cache();
@@ -246,24 +311,27 @@ impl<'a> Simulation<'a> {
 
         while let Some(ev) = sim.heap.pop() {
             let t = ev.t_s;
+            sim.t_last = sim.t_last.max(t);
             match ev.kind {
                 EventKind::Arrival => {
                     sim.arrived += 1;
                     sim.refresh_intensities(t);
-                    match scheduler.select(&sim.sc.config.demand, &sim.cache) {
-                        None => sim.rejected += 1,
-                        Some(ci) => {
-                            let g = sim.cache_idx[ci];
-                            sim.dispatch(g, t, t);
-                        }
-                    }
+                    let deadline = match &sim.sc.config.deferral {
+                        Some(d) => t + d.slack_s,
+                        None => f64::INFINITY,
+                    };
+                    sim.admit(t, t, deadline, true, scheduler);
                     if sim.arrived < scenario.requests as u64 {
                         let gap = arrivals.next_gap_s();
                         sim.push(t + gap, EventKind::Arrival);
                     }
                 }
-                EventKind::Completion { node, arrival_s, service_ms, energy_j } => {
-                    sim.complete(node, t, arrival_s, service_ms, energy_j);
+                EventKind::DeferredRelease { arrival_s, deadline_s } => {
+                    sim.refresh_intensities(t);
+                    sim.admit(arrival_s, t, deadline_s, false, scheduler);
+                }
+                EventKind::Completion { node, arrival_s, deadline_s, service_ms, energy_j } => {
+                    sim.complete(node, t, arrival_s, deadline_s, service_ms, energy_j);
                 }
                 EventKind::Churn { node, up } => {
                     sim.churn(node, up, t, scheduler);
@@ -298,6 +366,12 @@ impl<'a> Simulation<'a> {
         if t_s - self.last_refresh_s < self.sc.config.intensity_refresh_s {
             return;
         }
+        self.force_refresh_intensities(t_s);
+    }
+
+    /// Unthrottled refresh — used where stale intensities would silently
+    /// misroute a *batch* of work (churn migration re-dispatch).
+    fn force_refresh_intensities(&mut self, t_s: f64) {
         self.last_refresh_s = t_s;
         for (i, trace) in self.sc.traces.iter().enumerate() {
             if !matches!(trace, IntensityTrace::Static(_)) {
@@ -306,19 +380,52 @@ impl<'a> Simulation<'a> {
         }
     }
 
+    /// Route one request through the scheduler; with `allow_defer`, first
+    /// ask the deferral policy (against the chosen node's forecast) whether
+    /// a cleaner slot inside the deadline is worth parking for.
+    fn admit(
+        &mut self,
+        arrival_s: f64,
+        now_s: f64,
+        deadline_s: f64,
+        allow_defer: bool,
+        scheduler: &mut dyn Scheduler,
+    ) {
+        let sc = self.sc;
+        match scheduler.select(&sc.config.demand, &self.cache) {
+            None => self.rejected += 1,
+            Some(ci) => {
+                let g = self.cache_idx[ci];
+                if allow_defer && deadline_s.is_finite() {
+                    if let Some(d) = &sc.config.deferral {
+                        let horizon = (deadline_s - d.headroom_s).max(now_s);
+                        if let DeferDecision::Defer { at_s, .. } =
+                            d.policy.decide(&sc.traces[g], now_s, horizon)
+                        {
+                            self.deferred += 1;
+                            self.push(at_s, EventKind::DeferredRelease { arrival_s, deadline_s });
+                            return;
+                        }
+                    }
+                }
+                self.dispatch(g, arrival_s, now_s, deadline_s);
+            }
+        }
+    }
+
     /// Assign a request (original arrival time `arrival_s`) to node `g` at
     /// virtual time `now`. `begin_task` here — before service starts — so
     /// schedulers observe backlog (queued + executing) as `inflight`.
-    fn dispatch(&mut self, g: usize, arrival_s: f64, now_s: f64) {
+    fn dispatch(&mut self, g: usize, arrival_s: f64, now_s: f64, deadline_s: f64) {
         debug_assert!(self.active[g], "dispatch onto inactive node {g}");
         self.nodes[g].begin_task();
-        self.queues[g].push_back(arrival_s);
+        self.queues[g].push_back((arrival_s, deadline_s));
         self.try_start(g, now_s);
     }
 
     fn try_start(&mut self, g: usize, now_s: f64) {
         while self.in_service[g] < self.sc.capacity[g] {
-            let Some(arrival_s) = self.queues[g].pop_front() else { break };
+            let Some((arrival_s, deadline_s)) = self.queues[g].pop_front() else { break };
             let sigma = self.sc.config.jitter_sigma;
             let jitter = if sigma > 0.0 {
                 (sigma * self.service_rng.normal() - 0.5 * sigma * sigma).exp()
@@ -327,17 +434,27 @@ impl<'a> Simulation<'a> {
             };
             let exec_ms = self.sc.config.base_exec_ms * jitter;
             let service_ms = self.sc.specs[g].simulate_latency_ms(exec_ms);
-            let energy_j = self.sc.specs[g].rated_power_w * service_ms / 1e3;
+            // Dynamic (above-idle) energy only: the idle floor is accrued
+            // over uptime, so a saturated node draws exactly rated power.
+            let energy_j = self.sc.specs[g].dynamic_power_w() * service_ms / 1e3;
             self.wait_ms.push((now_s - arrival_s) * 1e3);
             self.in_service[g] += 1;
             self.push(
                 now_s + service_ms / 1e3,
-                EventKind::Completion { node: g, arrival_s, service_ms, energy_j },
+                EventKind::Completion { node: g, arrival_s, deadline_s, service_ms, energy_j },
             );
         }
     }
 
-    fn complete(&mut self, g: usize, t_s: f64, arrival_s: f64, service_ms: f64, energy_j: f64) {
+    fn complete(
+        &mut self,
+        g: usize,
+        t_s: f64,
+        arrival_s: f64,
+        deadline_s: f64,
+        service_ms: f64,
+        energy_j: f64,
+    ) {
         self.in_service[g] -= 1;
         // Emissions price the *completion-time* grid intensity (Eq. 2) —
         // this is where Diurnal/Trace bite on the accounting path.
@@ -353,14 +470,48 @@ impl<'a> Simulation<'a> {
         self.carbon_total_g += carbon_g;
         self.latency_ms.push((t_s - arrival_s) * 1e3);
         self.completed += 1;
+        if t_s > deadline_s {
+            self.deadline_missed += 1;
+        }
         self.makespan_s = self.makespan_s.max(t_s);
+        // A churned-down node keeps its power floor while in-service work
+        // drains; the last drain completion finally powers it off.
+        if !self.active[g] && self.in_service[g] == 0 && self.up_since[g].is_some() {
+            self.accrue_idle(g, t_s);
+            self.up_since[g] = None;
+        }
         self.try_start(g, t_s);
+    }
+
+    /// Close the node's open uptime interval at `until_s`, charging the
+    /// idle floor for it: energy is `idle_w × Δt`, carbon integrates the
+    /// intensity trace piecewise across the interval (a single-instant
+    /// price would mis-charge any interval spanning a grid swing).
+    fn accrue_idle(&mut self, g: usize, until_s: f64) {
+        let Some(since) = self.up_since[g] else { return };
+        let dt = until_s - since;
+        if dt > 0.0 {
+            self.uptime_s[g] += dt;
+            let idle_w = self.sc.specs[g].idle_w;
+            if idle_w > 0.0 {
+                let intensity_dt = self.sc.traces[g].integral(since, until_s);
+                self.idle_energy_j[g] += idle_w * dt;
+                // idle_w·∫I dt is W·(g/kWh)·s; /3.6e6 converts W·s → kWh.
+                self.idle_carbon_g[g] += self.sc.config.pue * idle_w * intensity_dt / 3.6e6;
+            }
+        }
+        self.up_since[g] = Some(until_s);
     }
 
     fn churn(&mut self, g: usize, up: bool, t_s: f64, scheduler: &mut dyn Scheduler) {
         if up {
             if !self.active[g] {
                 self.active[g] = true;
+                // A node rejoining while still draining never powered off:
+                // its uptime interval is still open and stays continuous.
+                if self.up_since[g].is_none() {
+                    self.up_since[g] = Some(t_s);
+                }
                 self.rebuild_cache();
             }
             return;
@@ -369,25 +520,47 @@ impl<'a> Simulation<'a> {
             return;
         }
         self.active[g] = false;
+        // Power off now only if nothing is executing; otherwise the floor
+        // keeps burning until the last in-service task drains (complete()
+        // closes the interval) — a box cannot finish work while drawing
+        // only above-idle power.
+        if self.in_service[g] == 0 {
+            self.accrue_idle(g, t_s);
+            self.up_since[g] = None;
+        }
         self.rebuild_cache();
         // Tasks already in service drain gracefully (their completion events
         // stand); queued work migrates through the scheduler to the
-        // remaining fleet, keeping its original arrival timestamps.
-        let pending: Vec<f64> = self.queues[g].drain(..).collect();
-        for arrival_s in pending {
+        // remaining fleet, keeping its original arrival timestamps. Refresh
+        // intensities first (unthrottled): the whole backlog re-routes in
+        // one batch, and placing it against grids up to intensity_refresh_s
+        // stale would systematically misroute it.
+        if !self.queues[g].is_empty() {
+            self.force_refresh_intensities(t_s);
+        }
+        let pending: Vec<(f64, f64)> = self.queues[g].drain(..).collect();
+        for (arrival_s, deadline_s) in pending {
             self.nodes[g].cancel_task();
             match scheduler.select(&self.sc.config.demand, &self.cache) {
                 None => self.rejected += 1,
                 Some(ci) => {
                     let ng = self.cache_idx[ci];
                     self.migrated += 1;
-                    self.dispatch(ng, arrival_s, t_s);
+                    self.dispatch(ng, arrival_s, t_s, deadline_s);
                 }
             }
         }
     }
 
-    fn into_report(self, scheduler_name: &str) -> SimReport {
+    fn into_report(mut self, scheduler_name: &str) -> SimReport {
+        // Close every node still powered on at the simulation horizon.
+        let horizon = self.t_last;
+        for g in 0..self.sc.specs.len() {
+            self.accrue_idle(g, horizon);
+        }
+        let energy_idle_kwh_total = joules_to_kwh(self.idle_energy_j.iter().sum::<f64>());
+        let carbon_idle_g_total: f64 = self.idle_carbon_g.iter().sum();
+        let energy_dynamic_kwh_total = joules_to_kwh(self.energy_total_j);
         let nodes = self
             .sc
             .specs
@@ -399,8 +572,11 @@ impl<'a> Simulation<'a> {
                     name: spec.name.clone(),
                     tasks: e.tasks,
                     busy_ms: self.nodes[i].state().busy_ms,
-                    energy_kwh: e.energy_kwh,
-                    carbon_g: e.carbon_g,
+                    uptime_s: self.uptime_s[i],
+                    energy_dynamic_kwh: e.energy_kwh,
+                    energy_idle_kwh: joules_to_kwh(self.idle_energy_j[i]),
+                    carbon_dynamic_g: e.carbon_g,
+                    carbon_idle_g: self.idle_carbon_g[i],
                 }
             })
             .collect();
@@ -412,6 +588,8 @@ impl<'a> Simulation<'a> {
             completed: self.completed,
             rejected: self.rejected,
             migrated: self.migrated,
+            deferred: self.deferred,
+            deadline_missed: self.deadline_missed,
             makespan_s: self.makespan_s,
             throughput_rps: if self.makespan_s > 0.0 {
                 self.completed as f64 / self.makespan_s
@@ -420,10 +598,14 @@ impl<'a> Simulation<'a> {
             },
             latency_ms: super::report::summary_or_zero(&self.latency_ms),
             wait_ms: super::report::summary_or_zero(&self.wait_ms),
-            energy_kwh_total: joules_to_kwh(self.energy_total_j),
-            carbon_g_total: self.carbon_total_g,
+            energy_kwh_total: energy_dynamic_kwh_total + energy_idle_kwh_total,
+            energy_dynamic_kwh_total,
+            energy_idle_kwh_total,
+            carbon_g_total: self.carbon_total_g + carbon_idle_g_total,
+            carbon_dynamic_g_total: self.carbon_total_g,
+            carbon_idle_g_total,
             carbon_per_req_g: if self.completed > 0 {
-                self.carbon_total_g / self.completed as f64
+                (self.carbon_total_g + carbon_idle_g_total) / self.completed as f64
             } else {
                 0.0
             },
@@ -529,5 +711,151 @@ mod tests {
             Simulation::run(&sc, &mut s)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn idle_floor_accrues_over_uptime() {
+        // One idle-capable node, light load: idle energy = idle_w × horizon,
+        // dynamic energy = (rated − idle) × busy time.
+        let mut sc = one_node_scenario(10, 1.0, 1);
+        sc.specs[0].idle_w = 40.0;
+        let service_ms = sc.specs[0].simulate_latency_ms(sc.config.base_exec_ms);
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        let horizon = 10.0 + service_ms / 1e3; // last completion = last event
+        let n = &r.nodes[0];
+        assert!((n.uptime_s - horizon).abs() < 1e-9, "uptime {}", n.uptime_s);
+        let want_idle_kwh = 40.0 * horizon / 3.6e6;
+        assert!((n.energy_idle_kwh - want_idle_kwh).abs() < 1e-15);
+        let want_dyn_kwh = (170.0 - 40.0) * (10.0 * service_ms / 1e3) / 3.6e6;
+        assert!(
+            (n.energy_dynamic_kwh - want_dyn_kwh).abs() < 1e-12,
+            "dyn {} want {}",
+            n.energy_dynamic_kwh,
+            want_dyn_kwh
+        );
+        // Static trace: idle carbon = idle energy × intensity.
+        assert!((n.carbon_idle_g - want_idle_kwh * 620.0).abs() < 1e-12);
+        assert!((r.energy_kwh_total - (n.energy_idle_kwh + n.energy_dynamic_kwh)).abs() < 1e-15);
+        // With idle_w = 0 the idle side vanishes and dynamic equals the old
+        // single-part accounting.
+        let r0 = Simulation::run(&one_node_scenario(10, 1.0, 1), &mut s);
+        assert_eq!(r0.energy_idle_kwh_total, 0.0);
+        assert!(r0.nodes[0].energy_dynamic_kwh > want_dyn_kwh); // full 170 W
+    }
+
+    #[test]
+    fn churned_down_node_stops_accruing_idle() {
+        let mut sc = one_node_scenario(5, 1.0, 1);
+        sc.specs.push(sc.specs[0].clone());
+        sc.specs[1].name = "idle-bystander".into();
+        sc.specs[1].idle_w = 100.0;
+        sc.traces.push(IntensityTrace::Static(500.0));
+        sc.capacity.push(1);
+        // The bystander powers off at t = 2 and returns at t = 4.
+        sc.churn = vec![
+            ChurnEvent { at_s: 2.0, node: 1, up: false },
+            ChurnEvent { at_s: 4.0, node: 1, up: true },
+        ];
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        // Node 0 never churns: its uptime is the whole horizon. The
+        // bystander's uptime is exactly two powered-off seconds shorter.
+        let by = r.node("idle-bystander").unwrap();
+        assert!(by.uptime_s > 0.0);
+        assert!(
+            (r.nodes[0].uptime_s - by.uptime_s - 2.0).abs() < 1e-9,
+            "node0 up {} vs bystander up {}",
+            r.nodes[0].uptime_s,
+            by.uptime_s
+        );
+        let want_idle_kwh = 100.0 * by.uptime_s / 3.6e6;
+        assert!((by.energy_idle_kwh - want_idle_kwh).abs() < 1e-15);
+        assert!((by.carbon_idle_g - want_idle_kwh * 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn draining_node_keeps_its_idle_floor_until_work_finishes() {
+        // One node, one ~10 s task started before a churn-down at t = 1:
+        // the box cannot power off mid-execution, so the idle floor runs
+        // until the completion at ~10.5 s, not until the churn instant.
+        let mut sc = one_node_scenario(1, 2.0, 1);
+        sc.specs[0].idle_w = 40.0;
+        sc.config.base_exec_ms = 485.0; // service = 485·20.6 + 8 ≈ 9999 ms
+        sc.churn = vec![ChurnEvent { at_s: 1.0, node: 0, up: false }];
+        let service_s = sc.specs[0].simulate_latency_ms(485.0) / 1e3;
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        assert_eq!(r.completed, 1);
+        let n = &r.nodes[0];
+        let want_uptime = 0.5 + service_s; // arrival at 0.5, drains to completion
+        assert!(
+            (n.uptime_s - want_uptime).abs() < 1e-9,
+            "uptime {} want {want_uptime} (churn-time cutoff would give 1.0)",
+            n.uptime_s
+        );
+        assert!((n.energy_idle_kwh - 40.0 * want_uptime / 3.6e6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn deferral_parks_work_until_cleaner_slot() {
+        // Single node on a stepped trace: dirty for the first 100 s, clean
+        // afterwards. Every arrival lands in the dirty window with enough
+        // slack to reach the clean one.
+        let mut sc = one_node_scenario(10, 1.0, 1);
+        sc.traces = vec![
+            IntensityTrace::from_samples(vec![(0.0, 800.0), (100.0, 100.0)]).unwrap(),
+        ];
+        sc.config.deferral = Some(DeferralSpec {
+            slack_s: 200.0,
+            headroom_s: 10.0,
+            policy: DeferralPolicy { resolution_s: 5.0, min_gain: 0.05 },
+        });
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        assert_eq!(r.completed, 10);
+        assert_eq!(r.deferred, 10, "every dirty-window arrival should park");
+        assert_eq!(r.deadline_missed, 0);
+        // All work executed in the clean window: carbon priced at 100, and
+        // the effective intensity of dynamic energy says so.
+        let eff = r.carbon_dynamic_g_total / r.energy_dynamic_kwh_total;
+        assert!((eff - 100.0).abs() < 1e-6, "effective intensity {eff}");
+        // The no-deferral twin burns the same energy at 8× the intensity.
+        let mut twin = sc.clone();
+        twin.config.deferral = None;
+        let rt = Simulation::run(&twin, &mut s);
+        assert_eq!(rt.deferred, 0);
+        assert!(rt.carbon_dynamic_g_total > 7.0 * r.carbon_dynamic_g_total);
+        // Parked time shows up as wait, not as lost requests.
+        assert!(r.wait_ms.mean > 60_000.0, "parked wait {}", r.wait_ms.mean);
+    }
+
+    #[test]
+    fn deadline_misses_are_counted() {
+        // Deferral with zero headroom and a ~50 s service time: arrivals at
+        // 10/20/30 s (deadlines 110/120/130) all defer into the clean
+        // window at ~100 s, then serialize on the single node — every
+        // completion lands past its deadline.
+        let mut sc = one_node_scenario(3, 0.1, 1);
+        sc.config.base_exec_ms = 2_427.0; // ≈ 50 s of service
+        sc.traces = vec![
+            IntensityTrace::from_samples(vec![(0.0, 800.0), (100.0, 100.0)]).unwrap(),
+        ];
+        sc.config.deferral = Some(DeferralSpec {
+            slack_s: 100.0,
+            headroom_s: 0.0,
+            policy: DeferralPolicy { resolution_s: 7.0, min_gain: 0.05 },
+        });
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        assert_eq!(r.completed, 3);
+        assert_eq!(r.deferred, 3);
+        assert_eq!(r.deadline_missed, 3, "all completions land past their deadlines");
+        // The same setup with generous headroom never defers past what the
+        // deadline can absorb — zero misses is reachable by configuration.
+        let mut safe = sc.clone();
+        safe.config.base_exec_ms = SimConfig::default().base_exec_ms;
+        let rs = Simulation::run(&safe, &mut s);
+        assert_eq!(rs.deadline_missed, 0, "short service leaves the deadline intact");
     }
 }

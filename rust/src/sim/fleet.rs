@@ -24,6 +24,10 @@ pub fn synth_fleet(n: usize, seed: u64) -> Vec<NodeSpec> {
             let quota = QUOTA_TIERS[rng.below(QUOTA_TIERS.len())];
             // Rated power scales with compute class, ±15% part-to-part.
             let rated_power_w = (40.0 + 130.0 * quota) * rng.range(0.85, 1.15);
+            // Idle floor at 30% of full load — the edge-box regime GreenScale
+            // reports (base power is a large, fixed fraction of peak).
+            // Derived, not drawn, so the seeded parameter stream is stable.
+            let idle_w = 0.3 * rated_power_w;
             // Capability prior: the paper's node-high does 250 ms at quota
             // 1.0; slower classes scale roughly inversely, ±10%.
             let prior_ms = 250.0 / quota * rng.range(0.9, 1.1);
@@ -33,6 +37,7 @@ pub fn synth_fleet(n: usize, seed: u64) -> Vec<NodeSpec> {
                 mem_mb: if quota >= 0.8 { 1024 } else { 512 },
                 intensity: region.intensity * rng.range(0.9, 1.1),
                 rated_power_w,
+                idle_w,
                 prior_ms,
                 alpha: 0.005,
                 overhead_ms: 8.0,
@@ -83,6 +88,8 @@ mod tests {
         for s in synth_fleet(100, 1) {
             assert!((0.4..=1.0).contains(&s.cpu_quota));
             assert!(s.rated_power_w > 30.0 && s.rated_power_w < 220.0, "{}", s.rated_power_w);
+            assert!((s.idle_w - 0.3 * s.rated_power_w).abs() < 1e-12);
+            assert!(s.dynamic_power_w() > 0.0);
             assert!((200.0..=700.0).contains(&s.prior_ms), "{}", s.prior_ms);
             assert!(s.intensity > 30.0 && s.intensity < 1000.0);
             assert!(s.mem_mb == 512 || s.mem_mb == 1024);

@@ -13,10 +13,19 @@
 //! * service times from the `NodeSpec` latency model
 //!   (`t_exec·(1 + α·(1/quota − 1)) + overhead`) with seeded lognormal
 //!   jitter via [`crate::util::rng`];
-//! * energy from `rated_power_w`, emissions via
-//!   [`crate::carbon::emissions_g`] evaluated against the **time-varying**
-//!   [`crate::carbon::IntensityTrace`] at each task's virtual completion
-//!   time — `Diurnal`/`Trace` finally sit on the scheduling path;
+//! * a **two-part energy model**: every powered-on node accrues its
+//!   `NodeSpec::idle_w` floor across virtual uptime (integrated piecewise
+//!   against its intensity trace), and each task adds
+//!   `dynamic_power_w × service` on top, priced via
+//!   [`crate::carbon::emissions_g`] at the **completion-time** value of the
+//!   time-varying [`crate::carbon::IntensityTrace`] — so both consolidation
+//!   effects (fewer busy nodes beat many idle ones) and `Diurnal`/`Trace`
+//!   grids sit on the accounting path;
+//! * **in-engine carbon deferral** ([`DeferralSpec`]): arrivals carrying
+//!   slack may be parked by a [`crate::carbon::DeferralPolicy`] until a
+//!   cleaner forecast slot, with `deferred`/`deadline_missed` counters in
+//!   the report; the `real-trace` scenario exercises it against an
+//!   ElectricityMaps-style CSV day curve;
 //! * scheduling through the existing [`crate::scheduler::Scheduler`] trait:
 //!   schedulers see queue depth + in-flight as `inflight`, and the current
 //!   virtual-time grid intensity via `EdgeNode::intensity()`.
@@ -30,6 +39,6 @@ pub mod fleet;
 mod report;
 pub mod scenarios;
 
-pub use engine::{ArrivalProcess, ChurnEvent, SimConfig, Simulation};
+pub use engine::{ArrivalProcess, ChurnEvent, DeferralSpec, SimConfig, Simulation};
 pub use report::{NodeUsage, SimReport};
 pub use scenarios::{Scenario, SCENARIO_NAMES};

@@ -21,16 +21,36 @@
 //!   t = 0 and a third of the fleet departs mid-run and returns later;
 //!   queued work migrates, and nothing may ever be scheduled onto a
 //!   departed node.
+//! * **`real-trace`** — nodes driven by a real-shape (ElectricityMaps-style
+//!   CSV) day of hourly grid intensities for three zones, arrivals over the
+//!   first half-day, and **in-engine deferral on by default** (6 h slack):
+//!   morning-peak work parks until the midday solar trough.
+//! * **`consolidation`** — an N-node (default 12) fleet of identical
+//!   idle-capable hosts ([`crate::energy::HostPowerModel`] split: ≈142 W
+//!   rated / ≈54 W idle floor) under a load only ~3 nodes' worth: run it at
+//!   two fleet sizes to watch idle floors dominate — fewer busy nodes beat
+//!   many idle ones ([`crate::experiments::sim_consolidation`]).
 
-use crate::carbon::IntensityTrace;
+use crate::carbon::{zone_traces_from_csv, IntensityTrace};
 use crate::node::NodeSpec;
 
-use super::engine::{ArrivalProcess, ChurnEvent, SimConfig};
+use super::engine::{ArrivalProcess, ChurnEvent, DeferralSpec, SimConfig};
 use super::fleet;
 
 /// Names accepted by [`build`] (and `carbonedge sim --scenario`).
-pub const SCENARIO_NAMES: &[&str] =
-    &["paper-3-node", "fleet-100", "diurnal-solar", "bursty", "churn"];
+pub const SCENARIO_NAMES: &[&str] = &[
+    "paper-3-node",
+    "fleet-100",
+    "diurnal-solar",
+    "bursty",
+    "churn",
+    "real-trace",
+    "consolidation",
+];
+
+/// One synthetic ElectricityMaps-style day (hourly, 3 zones) bundled for
+/// the `real-trace` scenario; `--trace-csv` substitutes a real export.
+pub const BUNDLED_GRID_DAY_CSV: &str = include_str!("data/grid_day.csv");
 
 /// A fully specified simulation setup.
 #[derive(Debug, Clone)]
@@ -58,6 +78,13 @@ pub fn build(name: &str, nodes: usize, requests: usize, seed: u64) -> Option<Sce
         "diurnal-solar" => Some(diurnal_solar(if nodes == 0 { 12 } else { nodes }, requests, seed)),
         "bursty" => Some(bursty(nodes, requests, seed)),
         "churn" => Some(churn(if nodes == 0 { 10 } else { nodes }, requests, seed)),
+        "real-trace" => Some(
+            real_trace_from_csv(BUNDLED_GRID_DAY_CSV, nodes, requests, seed)
+                .expect("bundled grid-day CSV is valid"),
+        ),
+        "consolidation" => {
+            Some(consolidation(if nodes == 0 { 12 } else { nodes }, requests, seed))
+        }
         _ => None,
     }
 }
@@ -175,6 +202,106 @@ fn churn(n: usize, requests: usize, seed: u64) -> Scenario {
     }
 }
 
+/// Virtual window the `real-trace` scenario spreads its arrivals over: the
+/// first half of the day curve, so morning-peak arrivals have a midday
+/// solar trough inside their deferral slack.
+pub const REAL_TRACE_ARRIVAL_WINDOW_S: f64 = 43_200.0;
+
+/// Deferral slack the `real-trace` scenario grants every arrival (6 h).
+pub const REAL_TRACE_SLACK_S: f64 = 21_600.0;
+
+/// Build the `real-trace` scenario from any ElectricityMaps-style CSV (the
+/// bundled day by default; `carbonedge sim --trace-csv` feeds a real
+/// export through here). One node per zone when `nodes == 0`, otherwise
+/// `nodes` nodes cycling the zones. Paper-node chassis carry the traces;
+/// each spec's static `intensity` is set to its zone's day-mean so
+/// cold-start scores stay coherent with the grid it actually runs on.
+pub fn real_trace_from_csv(
+    csv: &str,
+    nodes: usize,
+    requests: usize,
+    seed: u64,
+) -> Result<Scenario, String> {
+    let zones = zone_traces_from_csv(csv)?;
+    let requests = if requests == 0 { 20_000 } else { requests };
+    let n = if nodes == 0 { zones.len() } else { nodes };
+    let chassis = NodeSpec::paper_nodes();
+    let mut specs = Vec::with_capacity(n);
+    let mut traces = Vec::with_capacity(n);
+    for i in 0..n {
+        let (zone, trace) = &zones[i % zones.len()];
+        let mut spec = chassis[i % chassis.len()].clone();
+        spec.name = format!("edge-{zone}-{i:02}");
+        spec.intensity = trace.mean(86_400.0, 288);
+        specs.push(spec);
+        traces.push(trace.clone());
+    }
+    Ok(Scenario {
+        name: "real-trace".into(),
+        traces,
+        capacity: vec![2; n],
+        specs,
+        arrivals: ArrivalProcess::Poisson {
+            rate_hz: requests as f64 / REAL_TRACE_ARRIVAL_WINDOW_S,
+        },
+        requests,
+        churn: Vec::new(),
+        config: SimConfig {
+            seed,
+            deferral: Some(DeferralSpec {
+                slack_s: REAL_TRACE_SLACK_S,
+                headroom_s: 900.0,
+                policy: crate::carbon::DeferralPolicy::default(),
+            }),
+            ..SimConfig::default()
+        },
+    })
+}
+
+/// Fixed reference fleet size whose service capacity the `consolidation`
+/// arrival rate is derived from — so the *same* workload can be replayed
+/// against any fleet size and only the number of idle floors changes.
+pub const CONSOLIDATION_REF_NODES: usize = 3;
+
+fn consolidation(n: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig { seed, ..SimConfig::default() };
+    // Identical hosts (same grid, same chassis) so the only thing a bigger
+    // fleet adds is idle floors. Power split comes from the calibrated
+    // HostPowerModel: ≈142 W flat out, ≈54 W doing nothing.
+    let (rated_power_w, idle_w) = crate::config::default_host_power().node_power_split();
+    let specs: Vec<NodeSpec> = (0..n)
+        .map(|i| NodeSpec {
+            name: format!("edge-{i:03}"),
+            cpu_quota: 1.0,
+            mem_mb: 1024,
+            intensity: 475.0, // global-average grid
+            rated_power_w,
+            idle_w,
+            prior_ms: 250.0,
+            alpha: 0.005,
+            overhead_ms: 8.0,
+            time_scale: 20.6,
+            adaptive: false,
+        })
+        .collect();
+    let capacity = vec![1; n];
+    // Load worth ~65% of a 3-node reference fleet, independent of `n` —
+    // all hosts are identical, so one node's capacity times the reference
+    // count gives the same workload at every fleet size (including n < 3).
+    let per_node_hz = fleet::service_capacity_hz(&specs[..1], &capacity[..1], config.base_exec_ms);
+    let rate_hz = 0.65 * CONSOLIDATION_REF_NODES as f64 * per_node_hz;
+    Scenario {
+        name: "consolidation".into(),
+        traces: static_traces(&specs),
+        capacity,
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz },
+        requests,
+        churn: Vec::new(),
+        config,
+    }
+}
+
 /// Single-node monolithic baseline for `sc`: the same arrival process and
 /// request budget against one host-class node — full-load host power at the
 /// host grid scenario (Config::default's 530 gCO₂/kWh), the paper's
@@ -187,6 +314,9 @@ pub fn monolithic_of(sc: &Scenario) -> Scenario {
         mem_mb: 4096,
         intensity: 530.0,
         rated_power_w: host_w,
+        // Idle-free like the paper nodes: the monolithic row is the Table II
+        // calibration anchor, where all power is task-attributed.
+        idle_w: 0.0,
         prior_ms: 250.0,
         alpha: 0.0,
         overhead_ms: 0.0,
@@ -229,10 +359,69 @@ mod tests {
         assert_eq!(build("diurnal-solar", 0, 0, 1).unwrap().specs.len(), 12);
         assert_eq!(build("bursty", 0, 0, 1).unwrap().specs.len(), 3);
         assert_eq!(build("churn", 0, 0, 1).unwrap().specs.len(), 10);
+        assert_eq!(build("real-trace", 0, 0, 1).unwrap().specs.len(), 3); // one per zone
+        assert_eq!(build("consolidation", 0, 0, 1).unwrap().specs.len(), 12);
         // node/request overrides respected
         let sc = build("fleet-100", 25, 500, 1).unwrap();
         assert_eq!(sc.specs.len(), 25);
         assert_eq!(sc.requests, 500);
+    }
+
+    #[test]
+    fn real_trace_scenario_carries_zone_traces_and_deferral() {
+        let sc = build("real-trace", 0, 0, 3).unwrap();
+        // Traces are real (piecewise) and mutually distinct zones.
+        for tr in &sc.traces {
+            assert!(matches!(tr, IntensityTrace::Trace(_)));
+        }
+        let names: Vec<&str> = sc.specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["edge-DE-00", "edge-DK-01", "edge-PL-02"]);
+        // Static intensity mirrors the zone's day-mean (cold-start scores).
+        for (spec, tr) in sc.specs.iter().zip(&sc.traces) {
+            assert!((spec.intensity - tr.mean(86_400.0, 288)).abs() < 1e-9);
+        }
+        // DK is the clean zone, PL the dirty one.
+        assert!(sc.specs[1].intensity < sc.specs[0].intensity);
+        assert!(sc.specs[0].intensity < sc.specs[2].intensity);
+        // Deferral on by default with the documented 6 h slack.
+        let d = sc.config.deferral.as_ref().expect("real-trace defers by default");
+        assert_eq!(d.slack_s, REAL_TRACE_SLACK_S);
+        // Arrivals span the first half day.
+        let rate = sc.arrivals.mean_rate_hz();
+        assert!((rate - 20_000.0 / REAL_TRACE_ARRIVAL_WINDOW_S).abs() < 1e-9);
+        // Node override cycles zones.
+        let big = build("real-trace", 7, 100, 3).unwrap();
+        assert_eq!(big.specs.len(), 7);
+        assert!(big.specs[3].name.contains("DE"));
+        // A broken CSV is a clean error, not a panic.
+        assert!(real_trace_from_csv("datetime,zone\n", 0, 0, 1).is_err());
+    }
+
+    #[test]
+    fn consolidation_scenario_isolates_idle_floors() {
+        let small = build("consolidation", 3, 1_000, 7).unwrap();
+        let large = build("consolidation", 12, 1_000, 7).unwrap();
+        // The workload is identical across fleet sizes…
+        assert_eq!(small.arrivals.mean_rate_hz(), large.arrivals.mean_rate_hz());
+        assert_eq!(small.requests, large.requests);
+        // …and every host is the same idle-capable box on the same grid.
+        let (rated, idle) = crate::config::default_host_power().node_power_split();
+        for s in small.specs.iter().chain(&large.specs) {
+            assert_eq!(s.rated_power_w, rated);
+            assert_eq!(s.idle_w, idle);
+            assert_eq!(s.intensity, 475.0);
+        }
+        assert!(idle > 0.3 * rated && idle < 0.5 * rated, "idle {idle} of rated {rated}");
+        // The rate keeps ~3 nodes busy: 65% of the 3-node capacity.
+        let cap3 = fleet::service_capacity_hz(
+            &small.specs[..3],
+            &small.capacity[..3],
+            small.config.base_exec_ms,
+        );
+        assert!((small.arrivals.mean_rate_hz() - 0.65 * cap3).abs() < 1e-9);
+        // The same-workload contract holds even below the reference size.
+        let tiny = build("consolidation", 2, 1_000, 7).unwrap();
+        assert_eq!(tiny.arrivals.mean_rate_hz(), large.arrivals.mean_rate_hz());
     }
 
     #[test]
