@@ -1,9 +1,9 @@
 //! Fleet simulation tour (the L3.5 virtual-time layer): replay the paper's
 //! 3-node testbed open-loop, sweep the carbon weight at fleet scale, watch
 //! a churning fleet migrate its queues, see idle-floor accounting make
-//! consolidation visible, and park morning-peak work for the midday solar
-//! trough with in-engine deferral — all in a few wall-clock seconds, no
-//! artifacts required.
+//! consolidation visible, park morning-peak work for the midday solar
+//! trough with in-engine deferral, and put PV + battery microgrids behind
+//! the fleet — all in a few wall-clock seconds, no artifacts required.
 //!
 //! ```sh
 //! cargo run --release --example fleet_sim -- [--requests 20000] [--seed 42]
@@ -51,5 +51,12 @@ fn main() -> anyhow::Result<()> {
     let day = scenarios::build("real-trace", 0, requests, seed).unwrap();
     let (deferred, baseline) = exp::sim_deferral_comparison(&day);
     println!("{}", exp::sim_deferral_render(&deferred, &baseline));
+
+    // 6. Microgrids: a day on PV + battery-backed nodes (400 W arrays,
+    //    600 Wh batteries) vs the identical grid-only fleet, plus what
+    //    carbon-aware routing adds over round-robin — the sun covers the
+    //    day, the battery bridges the evening, the grid fills pre-dawn.
+    let (mg_green, plain_green, mg_rr) = exp::sim_microgrid(0, requests, seed);
+    println!("{}", exp::sim_microgrid_render(&mg_green, &plain_green, &mg_rr));
     Ok(())
 }

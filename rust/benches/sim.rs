@@ -46,4 +46,13 @@ fn main() {
     // Idle-floor accrual + piecewise intensity integration at report time.
     let rps = throughput("consolidation", 0, 200_000, 3);
     println!("  consolidation  200k requests   {:>8.2}M sim-req/s  (idle floors)", rps / 1e6);
+
+    // Microgrid settlement on the hot path: every draw change covers a
+    // slice PV-first/battery/grid, every refresh re-blends the effective
+    // intensity and samples the SoC timeline.
+    let rps = throughput("solar-battery", 0, 200_000, 3);
+    println!("  solar-battery  200k requests   {:>8.2}M sim-req/s  (pv+battery)", rps / 1e6);
+
+    let rps = throughput("microgrid-fleet", 0, 200_000, 3);
+    println!("  microgrid-flt  200k requests   {:>8.2}M sim-req/s  (mixed supply)", rps / 1e6);
 }

@@ -456,6 +456,82 @@ mod tests {
     }
 
     #[test]
+    fn prop_integral_matches_fine_riemann_sum() {
+        // The microgrid supply settlement and the idle-floor pricing both
+        // lean on `integral`: check it against a 200k-step midpoint
+        // Riemann sum of `at` across all three variants, with slice
+        // bounds that regularly straddle (or sit exactly on) trace
+        // samples. Tolerance is 0.1% of the max-value × window scale —
+        // generous enough for the reference sum's own discretization
+        // error at step-held jumps and clamped-diurnal kinks, far below
+        // any mispriced segment.
+        crate::util::proptest::check(
+            "integral == fine midpoint Riemann sum",
+            60,
+            |rng| {
+                let trace = match rng.below(3) {
+                    0 => IntensityTrace::Static(rng.range(0.0, 900.0)),
+                    1 => IntensityTrace::Diurnal {
+                        mean: rng.range(50.0, 600.0),
+                        // May exceed the mean: exercises the clamped
+                        // (midpoint-sampled) fallback path too.
+                        amplitude: rng.range(0.0, 700.0),
+                        period_s: rng.range(1_000.0, 50_000.0),
+                        phase_s: rng.range(-25_000.0, 25_000.0),
+                    },
+                    _ => {
+                        let n = 1 + rng.below(8);
+                        let mut t = rng.range(-50.0, 50.0);
+                        let mut pts = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            t += rng.range(1.0, 200.0);
+                            pts.push((t, rng.range(0.0, 900.0)));
+                        }
+                        IntensityTrace::Trace(pts)
+                    }
+                };
+                let mut t0 = rng.range(-100.0, 500.0);
+                let mut t1 = t0 + rng.range(0.0, 2_000.0);
+                // Every third case pins a bound to an exact sample time:
+                // the boundary-inclusivity cases the settlement hits when
+                // a slice ends on a trace step.
+                if let IntensityTrace::Trace(pts) = &trace {
+                    match rng.below(3) {
+                        0 => {
+                            t0 = pts[rng.below(pts.len())].0;
+                            t1 = t1.max(t0);
+                        }
+                        1 => t1 = t0.max(pts[rng.below(pts.len())].0),
+                        _ => {}
+                    }
+                }
+                (trace, t0, t1)
+            },
+            |(trace, t0, t1)| {
+                let dt = t1 - t0;
+                let steps = 200_000;
+                let h = dt / steps as f64;
+                let riemann: f64 = if dt == 0.0 {
+                    0.0
+                } else {
+                    (0..steps).map(|i| trace.at(t0 + (i as f64 + 0.5) * h)).sum::<f64>() * h
+                };
+                let got = trace.integral(*t0, *t1);
+                let tol = 1.5 * dt + 1e-9;
+                if (got - riemann).abs() > tol {
+                    return Err(format!(
+                        "integral({t0}, {t1}) = {got}, Riemann = {riemann} (tol {tol})"
+                    ));
+                }
+                if got < -1e-12 {
+                    return Err(format!("negative integral {got} of a non-negative trace"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn csv_single_zone_numeric_seconds() {
         let csv = "timestamp,intensity\n0,500\n10,300\n20,700\n";
         let t = IntensityTrace::from_csv(csv).unwrap();

@@ -476,6 +476,18 @@ pub fn scheduling_overhead(coord: &Coordinator, model: &str, iters: usize) -> Re
 use crate::scheduler::RoundRobinScheduler;
 use crate::sim::{scenarios, Scenario, SimReport, Simulation};
 
+/// Relative reduction of `new` vs `base` rendered as a percentage — `-`
+/// when the base is zero or not finite (a run where nothing completed, or
+/// a fully PV/battery-supplied fleet), so comparison tables never print
+/// NaN.
+fn reduction_pct(new: f64, base: f64) -> String {
+    if base > 0.0 && base.is_finite() && new.is_finite() {
+        pct(1.0 - new / base)
+    } else {
+        "-".to_string()
+    }
+}
+
 /// Run one scheduling mode over a scenario in virtual time.
 pub fn sim_run_mode(sc: &Scenario, mode: Mode) -> SimReport {
     let mut s = CarbonAwareScheduler::new(mode.name(), mode.weights());
@@ -503,7 +515,7 @@ pub fn sim_comparison_render(reports: &[SimReport]) -> String {
     );
     let base = reports[0].carbon_per_req_g;
     for (i, r) in reports.iter().enumerate() {
-        let red = if i == 0 { "-".to_string() } else { pct(1.0 - r.carbon_per_req_g / base) };
+        let red = if i == 0 { "-".to_string() } else { reduction_pct(r.carbon_per_req_g, base) };
         t.row(vec![
             r.scheduler.clone(),
             f2(r.latency_ms.mean),
@@ -568,7 +580,7 @@ pub fn sim_deferral_render(deferred: &SimReport, baseline: &SimReport) -> String
     let mut out = t.render();
     out.push_str(&format!(
         "deferral cuts gCO2/req by {}\n",
-        pct(1.0 - deferred.carbon_per_req_g / baseline.carbon_per_req_g)
+        reduction_pct(deferred.carbon_per_req_g, baseline.carbon_per_req_g)
     ));
     out
 }
@@ -610,8 +622,66 @@ pub fn sim_consolidation_render(small: &SimReport, large: &SimReport) -> String 
     out.push_str(&format!(
         "consolidating onto {} nodes cuts gCO2/req by {} vs {} nodes\n",
         small.nodes.len(),
-        pct(1.0 - small.carbon_per_req_g / large.carbon_per_req_g),
+        reduction_pct(small.carbon_per_req_g, large.carbon_per_req_g),
         large.nodes.len(),
+    ));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Microgrids: PV + battery supply vs grid-only (the L3.5 supply-side A/B)
+// ---------------------------------------------------------------------------
+
+/// The experiment local supply unlocks: run `sc` (which should carry
+/// microgrids) in Green mode, the identical fleet with every microgrid
+/// stripped in Green mode, and the microgrid fleet under carbon-agnostic
+/// round-robin. Returns `(mg_green, plain_green, mg_round_robin)` — same
+/// arrivals, same seed; the deltas isolate (a) what the local supply is
+/// worth and (b) what carbon-aware routing adds on top of it.
+pub fn sim_microgrid_comparison(sc: &Scenario) -> (SimReport, SimReport, SimReport) {
+    assert!(!sc.microgrids.is_empty(), "scenario carries no microgrids");
+    let plain = scenarios::microgrid_disabled_twin(sc);
+    let mut rr = RoundRobinScheduler::new();
+    (sim_run_mode(sc, Mode::Green), sim_run_mode(&plain, Mode::Green), Simulation::run(sc, &mut rr))
+}
+
+/// [`sim_microgrid_comparison`] over the `solar-battery` scenario —
+/// `carbonedge sim --scenario solar-battery --compare-microgrid` and
+/// `examples/fleet_sim.rs` both land here.
+pub fn sim_microgrid(
+    nodes: usize,
+    requests: usize,
+    seed: u64,
+) -> (SimReport, SimReport, SimReport) {
+    let sc = scenarios::build("solar-battery", nodes, requests, seed).unwrap();
+    sim_microgrid_comparison(&sc)
+}
+
+pub fn sim_microgrid_render(
+    mg_green: &SimReport,
+    plain_green: &SimReport,
+    mg_rr: &SimReport,
+) -> String {
+    let mut t = Table::new(
+        "Microgrid — PV + battery supply vs grid-only (same workload)",
+        &["Run", "Scheduler", "gCO2/req", "PV kWh", "Battery kWh", "Grid kWh", "Latency p95 (ms)"],
+    );
+    for r in [plain_green, mg_rr, mg_green] {
+        t.row(vec![
+            r.scenario.clone(),
+            r.scheduler.clone(),
+            format!("{:.6}", r.carbon_per_req_g),
+            format!("{:.6}", r.energy_pv_kwh_total),
+            format!("{:.6}", r.energy_battery_kwh_total),
+            format!("{:.6}", r.energy_grid_kwh_total),
+            f2(r.latency_ms.p95),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "microgrids cut gCO2/req by {} (green mode); carbon-aware routing adds {} over round-robin\n",
+        reduction_pct(mg_green.carbon_per_req_g, plain_green.carbon_per_req_g),
+        reduction_pct(mg_green.carbon_per_req_g, mg_rr.carbon_per_req_g),
     ));
     out
 }

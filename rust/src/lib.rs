@@ -19,7 +19,12 @@
 //!   *deferred in-engine* to cleaner forecast slots
 //!   ([`carbon::DeferralPolicy`]), including against real
 //!   ElectricityMaps-style CSV intensity traces
-//!   ([`carbon::zone_traces_from_csv`]).
+//!   ([`carbon::zone_traces_from_csv`]). Nodes may sit behind a local
+//!   [`microgrid`] (PV + battery): draw is covered PV-first, then battery,
+//!   then grid, and the blended *effective* intensity — a function of
+//!   sunlight and state of charge — feeds the schedulers through
+//!   `EdgeNode::intensity_override`, so carbon-aware modes follow the sun
+//!   and the charge.
 //! * **L2** — the JAX model zoo (`python/compile/models.py`), AOT-lowered to
 //!   HLO text artifacts consumed by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) backing every conv
@@ -35,6 +40,7 @@ pub mod deployer;
 pub mod energy;
 pub mod experiments;
 pub mod metrics;
+pub mod microgrid;
 pub mod model;
 pub mod node;
 pub mod partitioner;

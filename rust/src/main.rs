@@ -11,7 +11,9 @@
 //!               [--seed S] [--mode green [--json]] [--sweep [--step 0.1]]
 //!               [--idle-w W] [--slack S [--headroom S] [--defer-resolution S]
 //!               [--defer-min-gain F]] [--no-defer] [--compare-defer]
-//!               [--trace-csv PATH] [--consolidate LARGE] [--help]
+//!               [--trace-csv PATH] [--consolidate LARGE] [--list-scenarios]
+//!               [--pv-peak-w W | --pv-csv PATH] [--battery-wh WH]
+//!               [--battery-rt-eff F] [--compare-microgrid] [--help]
 //!                                                   # virtual-time fleet simulator
 //! ```
 
@@ -46,7 +48,17 @@ fn config_from(args: &Args) -> Result<Config> {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["all", "verbose", "sweep", "json", "help", "no-defer", "compare-defer"])?;
+    let args = Args::from_env(&[
+        "all",
+        "verbose",
+        "sweep",
+        "json",
+        "help",
+        "no-defer",
+        "compare-defer",
+        "list-scenarios",
+        "compare-microgrid",
+    ])?;
     let cmd = args.command.clone().unwrap_or_else(|| "info".to_string());
     // Handle --help before any command arm so no command ever runs its
     // workload when the user only asked for usage text.
@@ -213,7 +225,7 @@ fn run() -> Result<()> {
         "sim" => {
             // Pure virtual time — no artifacts, no Coordinator.
             let name = args.str_or("scenario", "paper-3-node");
-            if name == "list" {
+            if args.bool_flag("list-scenarios") || name == "list" {
                 println!("scenarios:");
                 for n in carbonedge::sim::SCENARIO_NAMES {
                     println!("  {n}");
@@ -242,12 +254,16 @@ fn run() -> Result<()> {
                     "defer-min-gain",
                     "mode",
                     "step",
+                    "pv-peak-w",
+                    "pv-csv",
+                    "battery-wh",
+                    "battery-rt-eff",
                 ] {
                     if args.has(flag) {
                         anyhow::bail!("--consolidate does not combine with --{flag}");
                     }
                 }
-                for switch in ["sweep", "json", "no-defer", "compare-defer"] {
+                for switch in ["sweep", "json", "no-defer", "compare-defer", "compare-microgrid"] {
                     if args.bool_flag(switch) {
                         anyhow::bail!("--consolidate does not combine with --{switch}");
                     }
@@ -276,11 +292,15 @@ fn run() -> Result<()> {
                     .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?
             } else {
                 carbonedge::sim::scenarios::build(&name, nodes, requests, seed).ok_or_else(
-                    || {
-                        anyhow::anyhow!(
-                            "unknown scenario {name:?}; try one of {:?}",
+                    || match carbonedge::sim::scenarios::suggest(&name) {
+                        Some(close) => anyhow::anyhow!(
+                            "unknown scenario {name:?}; did you mean {close:?}? \
+                             (--list-scenarios prints all)"
+                        ),
+                        None => anyhow::anyhow!(
+                            "unknown scenario {name:?}; --list-scenarios prints all of {:?}",
                             carbonedge::sim::SCENARIO_NAMES
-                        )
+                        ),
                     },
                 )?
             };
@@ -294,6 +314,75 @@ fn run() -> Result<()> {
                 for spec in &mut sc.specs {
                     spec.idle_w = w;
                 }
+            }
+            // Any microgrid knob equips *every* node with a PV + battery
+            // microgrid built from the flags (replacing whatever the
+            // scenario shipped): --pv-peak-w gives a diurnal half-sine
+            // array, --pv-csv a trace-driven one (watts), --battery-wh a
+            // 1C battery starting half-charged.
+            let mg_knobs = ["pv-peak-w", "pv-csv", "battery-wh", "battery-rt-eff"];
+            if mg_knobs.iter().any(|f| args.has(f)) {
+                if args.has("pv-peak-w") && args.has("pv-csv") {
+                    anyhow::bail!("--pv-peak-w and --pv-csv are mutually exclusive");
+                }
+                let mut supplies_anything = args.has("pv-csv");
+                let pv = if let Some(path) = args.get("pv-csv") {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+                    carbonedge::microgrid::PvProfile::from_csv(&text)
+                        .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?
+                } else {
+                    let peak: f64 = args.parse_or("pv-peak-w", 0.0f64)?;
+                    if !peak.is_finite() || peak < 0.0 {
+                        anyhow::bail!("--pv-peak-w must be finite and >= 0, got {peak}");
+                    }
+                    supplies_anything |= peak > 0.0;
+                    carbonedge::microgrid::PvProfile::diurnal(peak)
+                };
+                let battery_wh: f64 = args.parse_or("battery-wh", 0.0f64)?;
+                let rt_eff: f64 = args.parse_or("battery-rt-eff", 0.9f64)?;
+                // A microgrid that supplies nothing would still flip every
+                // node onto the slice-settled accounting path (and grow the
+                // report with all-zero supply columns): reject it instead.
+                if !supplies_anything && battery_wh == 0.0 {
+                    anyhow::bail!(
+                        "microgrid flags supply nothing: give --pv-peak-w > 0, --pv-csv, \
+                         or --battery-wh > 0"
+                    );
+                }
+                let battery =
+                    carbonedge::microgrid::BatterySpec::simple(battery_wh, rt_eff, 0.5);
+                let spec = carbonedge::microgrid::MicrogridSpec { pv, battery };
+                if let Err(e) = spec.validate() {
+                    anyhow::bail!("bad microgrid flags: {e}");
+                }
+                sc.microgrids = vec![Some(spec); sc.specs.len()];
+            }
+            if args.bool_flag("compare-microgrid") {
+                // This arm runs its own fixed green-mode A/B and returns:
+                // any other run-shaping knob would be silently ignored —
+                // reject loudly instead (the --consolidate precedent).
+                let conflicts =
+                    ["mode", "step", "slack", "headroom", "defer-resolution", "defer-min-gain"];
+                for flag in conflicts {
+                    if args.has(flag) {
+                        anyhow::bail!("--compare-microgrid does not combine with --{flag}");
+                    }
+                }
+                for switch in ["sweep", "json", "no-defer", "compare-defer"] {
+                    if args.bool_flag(switch) {
+                        anyhow::bail!("--compare-microgrid does not combine with --{switch}");
+                    }
+                }
+                if sc.microgrids.is_empty() {
+                    anyhow::bail!(
+                        "--compare-microgrid needs microgrids: use a microgrid scenario \
+                         (solar-battery, microgrid-fleet) or --pv-peak-w/--battery-wh"
+                    );
+                }
+                let (mg_green, plain_green, mg_rr) = exp::sim_microgrid_comparison(&sc);
+                println!("{}", exp::sim_microgrid_render(&mg_green, &plain_green, &mg_rr));
+                return Ok(());
             }
             let defer_knobs =
                 ["slack", "headroom", "defer-resolution", "defer-min-gain"];
@@ -386,7 +475,8 @@ fn print_sim_help() {
         "\
 carbonedge sim — virtual-time fleet simulator (no artifacts needed)
 
-  --scenario NAME        scenario to run (default paper-3-node; `list` prints all)
+  --scenario NAME        scenario to run (default paper-3-node)
+  --list-scenarios       print the scenario names and exit
   --nodes N              fleet-size override (0 = scenario default)
   --requests M           request count (0 = 20000)
   --seed S               master seed (default 42)
@@ -402,6 +492,17 @@ energy model:
                          energy into idle + dynamic)
   --consolidate LARGE    idle-floor A/B: replay the same workload on a small
                          fleet (--nodes, default 3) and on LARGE nodes
+
+microgrids (any knob puts a PV + battery microgrid behind every node;
+draw is covered PV-first, then battery, then grid, and schedulers score
+the blended effective intensity):
+  --pv-peak-w W          diurnal half-sine PV array peaking at W watts
+                         (sunrise 06:00, solar noon 12:00)
+  --pv-csv PATH          PV generation trace instead (timestamp,watts CSV)
+  --battery-wh WH        1C battery of WH watt-hours, starting half-charged
+  --battery-rt-eff F     round-trip efficiency in (0, 1] (default 0.9)
+  --compare-microgrid    A/B: green mode with microgrids, the grid-only
+                         twin, and carbon-agnostic round-robin
 
 carbon deferral (any knob enables deferral, or tunes a scenario that
 defers by default, like real-trace):

@@ -35,9 +35,22 @@ pub fn report_to_json(r: &RunReport) -> Json {
     ])
 }
 
+/// Finite number → `Json::Num`, anything else (NaN/±inf from a degenerate
+/// run — zero completions, zero-carbon denominators) → `Json::Null`, so
+/// the export is always valid RFC 8259 JSON.
+fn fnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
 /// JSON document for one virtual-time simulation report (the L3.5
 /// counterpart of [`report_to_json`]) — same compliance pipeline, fed by
-/// the fleet simulator instead of real execution.
+/// the fleet simulator instead of real execution. Derived rates/ratios go
+/// through [`fnum`]: a run where nothing completed serializes them as
+/// `0`/`null`, never as bare `NaN` (which is not JSON).
 pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
     obj(vec![
         ("scenario", s(&r.scenario)),
@@ -49,24 +62,27 @@ pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
         ("migrated", num(r.migrated as f64)),
         ("deferred", num(r.deferred as f64)),
         ("deadline_missed", num(r.deadline_missed as f64)),
-        ("makespan_s", num(r.makespan_s)),
-        ("throughput_rps", num(r.throughput_rps)),
+        ("makespan_s", fnum(r.makespan_s)),
+        ("throughput_rps", fnum(r.throughput_rps)),
         (
             "latency_ms",
             obj(vec![
-                ("mean", num(r.latency_ms.mean)),
-                ("p50", num(r.latency_ms.p50)),
-                ("p95", num(r.latency_ms.p95)),
+                ("mean", fnum(r.latency_ms.mean)),
+                ("p50", fnum(r.latency_ms.p50)),
+                ("p95", fnum(r.latency_ms.p95)),
             ]),
         ),
-        ("wait_ms_mean", num(r.wait_ms.mean)),
-        ("energy_kwh", num(r.energy_kwh_total)),
-        ("energy_dynamic_kwh", num(r.energy_dynamic_kwh_total)),
-        ("energy_idle_kwh", num(r.energy_idle_kwh_total)),
-        ("carbon_total_g", num(r.carbon_g_total)),
-        ("carbon_dynamic_g", num(r.carbon_dynamic_g_total)),
-        ("carbon_idle_g", num(r.carbon_idle_g_total)),
-        ("carbon_per_req_g", num(r.carbon_per_req_g)),
+        ("wait_ms_mean", fnum(r.wait_ms.mean)),
+        ("energy_kwh", fnum(r.energy_kwh_total)),
+        ("energy_dynamic_kwh", fnum(r.energy_dynamic_kwh_total)),
+        ("energy_idle_kwh", fnum(r.energy_idle_kwh_total)),
+        ("energy_pv_kwh", fnum(r.energy_pv_kwh_total)),
+        ("energy_battery_kwh", fnum(r.energy_battery_kwh_total)),
+        ("energy_grid_kwh", fnum(r.energy_grid_kwh_total)),
+        ("carbon_total_g", fnum(r.carbon_g_total)),
+        ("carbon_dynamic_g", fnum(r.carbon_dynamic_g_total)),
+        ("carbon_idle_g", fnum(r.carbon_idle_g_total)),
+        ("carbon_per_req_g", fnum(r.carbon_per_req_g)),
         (
             "nodes",
             arr(r.nodes
@@ -75,14 +91,25 @@ pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
                     obj(vec![
                         ("node", s(&n.name)),
                         ("tasks", num(n.tasks as f64)),
-                        ("busy_ms", num(n.busy_ms)),
-                        ("uptime_s", num(n.uptime_s)),
-                        ("energy_kwh", num(n.energy_kwh())),
-                        ("energy_dynamic_kwh", num(n.energy_dynamic_kwh)),
-                        ("energy_idle_kwh", num(n.energy_idle_kwh)),
-                        ("carbon_g", num(n.carbon_g())),
-                        ("carbon_dynamic_g", num(n.carbon_dynamic_g)),
-                        ("carbon_idle_g", num(n.carbon_idle_g)),
+                        ("busy_ms", fnum(n.busy_ms)),
+                        ("uptime_s", fnum(n.uptime_s)),
+                        ("energy_kwh", fnum(n.energy_kwh())),
+                        ("energy_dynamic_kwh", fnum(n.energy_dynamic_kwh)),
+                        ("energy_idle_kwh", fnum(n.energy_idle_kwh)),
+                        ("carbon_g", fnum(n.carbon_g())),
+                        ("carbon_dynamic_g", fnum(n.carbon_dynamic_g)),
+                        ("carbon_idle_g", fnum(n.carbon_idle_g)),
+                        ("microgrid", Json::Bool(n.microgrid)),
+                        ("energy_pv_kwh", fnum(n.energy_pv_kwh)),
+                        ("energy_battery_kwh", fnum(n.energy_battery_kwh)),
+                        ("energy_grid_kwh", fnum(n.energy_grid_kwh)),
+                        (
+                            "soc_timeline",
+                            arr(n.soc_timeline
+                                .iter()
+                                .map(|&(t, soc)| arr(vec![fnum(t), fnum(soc)]))
+                                .collect()),
+                        ),
                     ])
                 })
                 .collect()),
@@ -179,6 +206,60 @@ mod tests {
         assert!(idle > 0.0, "consolidation nodes carry an idle floor");
         assert!((idle + dynamic - total).abs() <= 1e-12 * total);
         assert!(back.req_f64("carbon_idle_g").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sim_report_json_carries_microgrid_supply_split() {
+        let sc = crate::sim::scenarios::build("solar-battery", 2, 60, 3).unwrap();
+        let mut sched = crate::scheduler::CarbonAwareScheduler::new(
+            "green",
+            crate::scheduler::Mode::Green.weights(),
+        );
+        let r = crate::sim::Simulation::run(&sc, &mut sched);
+        let text = sim_report_to_json(&r).to_string();
+        let back = Json::parse(&text).unwrap();
+        let pv = back.req_f64("energy_pv_kwh").unwrap();
+        let batt = back.req_f64("energy_battery_kwh").unwrap();
+        let grid = back.req_f64("energy_grid_kwh").unwrap();
+        let total = back.req_f64("energy_kwh").unwrap();
+        assert!(pv > 0.0, "a day of solar-battery must use PV");
+        assert!((pv + batt + grid - total).abs() <= 1e-9 * total);
+        let node0 = &back.req_arr("nodes").unwrap()[0];
+        assert_eq!(node0.get("microgrid").unwrap().as_bool(), Some(true));
+        let soc = node0.req_arr("soc_timeline").unwrap();
+        assert!(soc.len() >= 2, "SoC timeline missing");
+        for sample in soc {
+            let pair = sample.as_arr().unwrap();
+            let frac = pair[1].as_f64().unwrap();
+            assert!((0.0..=1.0 + 1e-9).contains(&frac), "SoC {frac} out of range");
+        }
+    }
+
+    #[test]
+    fn sim_report_json_zero_completions_never_emits_nan() {
+        // A demand no node can fit: every request is rejected, all the
+        // derived rates hit their zero-completion guards, and the export
+        // stays valid JSON (0/null, never NaN).
+        let mut sc = crate::sim::scenarios::build("paper-3-node", 0, 50, 1).unwrap();
+        sc.config.demand = crate::scheduler::TaskDemand {
+            cpu: 64.0,
+            mem_mb: 1 << 20,
+            latency_threshold_ms: 5_000.0,
+        };
+        let mut sched = crate::scheduler::CarbonAwareScheduler::new(
+            "green",
+            crate::scheduler::Mode::Green.weights(),
+        );
+        let r = crate::sim::Simulation::run(&sc, &mut sched);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.rejected, 50);
+        assert_eq!(r.throughput_rps, 0.0);
+        assert_eq!(r.carbon_per_req_g, 0.0);
+        let text = sim_report_to_json(&r).to_string();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.req_usize("completed").unwrap(), 0);
+        assert_eq!(back.req_f64("carbon_per_req_g").unwrap(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,506 @@
+//! Local microgrids: PV + battery behind an edge node, making the node's
+//! *effective* carbon intensity depend on sunlight and state of charge.
+//!
+//! The paper prices every joule at the grid's intensity; real edge sites
+//! increasingly sit behind local solar and storage (the renewable-
+//! availability effect GreenScale shows dominates edge carbon). This
+//! module models that supply side:
+//!
+//! * [`PvProfile`] — photovoltaic generation in watts over virtual time,
+//!   backed by the same [`IntensityTrace`] machinery the grid curves use
+//!   (`Static`/`Diurnal`/`Trace` variants, CSV ingestion), so the
+//!   `at`/`integral` semantics are shared with the carbon accounting path;
+//! * [`BatterySpec`] — capacity, charge/discharge rate limits, round-trip
+//!   efficiency (applied on the charge side) and initial state of charge;
+//! * [`Microgrid`] — the runtime state: over any virtual-time slice, node
+//!   draw is covered **PV-first, then battery, then grid**
+//!   ([`Microgrid::cover`]), and excess PV charges the battery (anything
+//!   beyond the charger rate or the headroom is curtailed). Only charging
+//!   from local PV is modelled — the battery never charges from the grid,
+//!   so stored energy is always zero-carbon.
+//!
+//! The fleet simulator ([`crate::sim`]) attaches an optional
+//! [`MicrogridSpec`] per node, settles every change of node draw through
+//! [`Microgrid::cover`], and pushes [`Microgrid::effective_intensity`]
+//! into `EdgeNode::intensity_override` — so every existing
+//! [`crate::scheduler::Scheduler`] transparently follows the sun and the
+//! charge without knowing microgrids exist.
+
+use crate::carbon::{GramsPerKwh, IntensityTrace};
+
+/// Seconds per hour — the Wh ↔ J conversion used throughout.
+const WH_TO_J: f64 = 3_600.0;
+
+/// Photovoltaic generation profile: watts as a function of virtual time,
+/// reusing [`IntensityTrace`] (value = watts, not gCO₂/kWh).
+#[derive(Debug, Clone)]
+pub struct PvProfile {
+    trace: IntensityTrace,
+}
+
+impl PvProfile {
+    /// No local generation (0 W at all times).
+    pub fn none() -> PvProfile {
+        PvProfile { trace: IntensityTrace::Static(0.0) }
+    }
+
+    /// Clamped half-sine day curve peaking at `peak_w`: sunrise at 06:00,
+    /// solar noon at 12:00, sunset at 18:00, zero overnight (the negative
+    /// half of the sinusoid clamps to zero).
+    pub fn diurnal(peak_w: f64) -> PvProfile {
+        PvProfile::diurnal_with_sunrise(peak_w, 21_600.0)
+    }
+
+    /// Like [`PvProfile::diurnal`] with the sunrise moved to `sunrise_s`
+    /// (virtual seconds): generation is positive over
+    /// `(sunrise, sunrise + 12 h)` of every day. Lets a fleet stagger its
+    /// sites across "longitudes".
+    pub fn diurnal_with_sunrise(peak_w: f64, sunrise_s: f64) -> PvProfile {
+        assert!(peak_w.is_finite() && peak_w >= 0.0, "bad PV peak {peak_w}");
+        PvProfile {
+            trace: IntensityTrace::Diurnal {
+                mean: 0.0,
+                amplitude: peak_w,
+                period_s: 86_400.0,
+                phase_s: sunrise_s,
+            },
+        }
+    }
+
+    /// Generation trace from explicit `(t_seconds, watts)` samples
+    /// (step-held, validated and time-sorted).
+    pub fn from_samples(points: Vec<(f64, f64)>) -> Result<PvProfile, String> {
+        IntensityTrace::from_samples(points).map(|trace| PvProfile { trace })
+    }
+
+    /// Generation trace from a single-zone CSV (`timestamp,watts`) — the
+    /// same format [`IntensityTrace::from_csv`] accepts for grid curves.
+    pub fn from_csv(text: &str) -> Result<PvProfile, String> {
+        IntensityTrace::from_csv(text).map(|trace| PvProfile { trace })
+    }
+
+    /// Instantaneous generation at `t` (W).
+    pub fn power_w(&self, t: f64) -> f64 {
+        self.trace.at(t).max(0.0)
+    }
+
+    /// Energy generated over `[t0, t1]` (J = W·s), via the trace's exact
+    /// piecewise/analytic integral.
+    pub fn energy_j(&self, t0: f64, t1: f64) -> f64 {
+        self.trace.integral(t0, t1).max(0.0)
+    }
+}
+
+/// Battery parameters. Rates are symmetric power limits; the round-trip
+/// efficiency is applied entirely on the charge side (storing `x` joules
+/// of PV yields `rt_efficiency · x` joules of usable charge), which keeps
+/// discharge accounting exact.
+#[derive(Debug, Clone)]
+pub struct BatterySpec {
+    pub capacity_wh: f64,
+    pub max_charge_w: f64,
+    pub max_discharge_w: f64,
+    /// Round-trip efficiency in `(0, 1]`.
+    pub rt_efficiency: f64,
+    /// Initial state of charge as a fraction of capacity, in `[0, 1]`.
+    pub initial_soc: f64,
+}
+
+impl BatterySpec {
+    /// No storage: zero capacity, zero rates.
+    pub fn none() -> BatterySpec {
+        BatterySpec {
+            capacity_wh: 0.0,
+            max_charge_w: 0.0,
+            max_discharge_w: 0.0,
+            rt_efficiency: 1.0,
+            initial_soc: 0.0,
+        }
+    }
+
+    /// A `capacity_wh` battery with 1C symmetric rate limits (a 600 Wh
+    /// battery charges/discharges at up to 600 W).
+    pub fn simple(capacity_wh: f64, rt_efficiency: f64, initial_soc: f64) -> BatterySpec {
+        BatterySpec {
+            capacity_wh,
+            max_charge_w: capacity_wh,
+            max_discharge_w: capacity_wh,
+            rt_efficiency,
+            initial_soc,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("capacity_wh", self.capacity_wh),
+            ("max_charge_w", self.max_charge_w),
+            ("max_discharge_w", self.max_discharge_w),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("battery {name} must be finite and >= 0, got {v}"));
+            }
+        }
+        let eff = self.rt_efficiency;
+        if !eff.is_finite() || !(eff > 0.0 && eff <= 1.0) {
+            return Err(format!("battery rt_efficiency must be in (0, 1], got {eff}"));
+        }
+        if !self.initial_soc.is_finite() || !(0.0..=1.0).contains(&self.initial_soc) {
+            return Err(format!("battery initial_soc must be in [0, 1], got {}", self.initial_soc));
+        }
+        Ok(())
+    }
+}
+
+/// Immutable per-node microgrid configuration a scenario carries; the
+/// simulator builds a fresh [`Microgrid`] runtime state from it per run,
+/// keeping runs deterministic.
+#[derive(Debug, Clone)]
+pub struct MicrogridSpec {
+    pub pv: PvProfile,
+    pub battery: BatterySpec,
+}
+
+impl MicrogridSpec {
+    /// Convenience: a diurnal PV array peaking at `pv_peak_w` plus a 1C
+    /// battery of `battery_wh` starting at `initial_soc`.
+    pub fn solar(
+        pv_peak_w: f64,
+        battery_wh: f64,
+        rt_efficiency: f64,
+        initial_soc: f64,
+    ) -> MicrogridSpec {
+        MicrogridSpec {
+            pv: PvProfile::diurnal(pv_peak_w),
+            battery: BatterySpec::simple(battery_wh, rt_efficiency, initial_soc),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.battery.validate()
+    }
+}
+
+/// How one virtual-time slice of node demand was supplied (all in joules).
+/// Invariant: `pv_j + battery_j + grid_j == draw_w · Δt` — the simulator's
+/// energy-conservation tests lean on it.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SliceFlow {
+    /// PV generation consumed directly by the node.
+    pub pv_j: f64,
+    /// Battery discharge consumed by the node.
+    pub battery_j: f64,
+    /// Grid import consumed by the node (the only carbon-bearing term).
+    pub grid_j: f64,
+    /// Excess PV routed into the battery (input side, before losses).
+    pub charged_j: f64,
+    /// Excess PV neither consumed nor storable (rate/headroom limits).
+    pub curtailed_j: f64,
+}
+
+/// Runtime microgrid state: spec + current stored energy.
+#[derive(Debug, Clone)]
+pub struct Microgrid {
+    pub spec: MicrogridSpec,
+    /// Stored energy (J), always in `[0, capacity]`.
+    soc_j: f64,
+}
+
+impl Microgrid {
+    pub fn new(spec: MicrogridSpec) -> Microgrid {
+        if let Err(e) = spec.validate() {
+            panic!("invalid microgrid spec: {e}");
+        }
+        let soc_j = spec.battery.initial_soc * spec.battery.capacity_wh * WH_TO_J;
+        Microgrid { spec, soc_j }
+    }
+
+    /// State of charge as a fraction of capacity (0 for a zero-capacity
+    /// battery).
+    pub fn soc_frac(&self) -> f64 {
+        let cap_j = self.spec.battery.capacity_wh * WH_TO_J;
+        if cap_j > 0.0 {
+            self.soc_j / cap_j
+        } else {
+            0.0
+        }
+    }
+
+    /// Stored energy in Wh.
+    pub fn soc_wh(&self) -> f64 {
+        self.soc_j / WH_TO_J
+    }
+
+    /// Cover a constant draw of `draw_w` watts over `[t0, t1]`: PV first,
+    /// then battery (rate- and charge-limited), then grid; excess PV
+    /// charges the battery up to the charger rate and the headroom
+    /// (efficiency-adjusted), the rest is curtailed. Returns the supply
+    /// split; mutates the state of charge.
+    pub fn cover(&mut self, t0: f64, t1: f64, draw_w: f64) -> SliceFlow {
+        let dt = t1 - t0;
+        assert!(dt >= 0.0, "cover slice reversed: [{t0}, {t1}]");
+        if dt == 0.0 {
+            return SliceFlow::default();
+        }
+        let b = &self.spec.battery;
+        let cap_j = b.capacity_wh * WH_TO_J;
+        let demand_j = (draw_w * dt).max(0.0);
+        let pv_avail_j = self.spec.pv.energy_j(t0, t1);
+        let pv_j = demand_j.min(pv_avail_j);
+        let mut residual_j = demand_j - pv_j;
+        let battery_j = residual_j.min(b.max_discharge_w * dt).min(self.soc_j).max(0.0);
+        self.soc_j = (self.soc_j - battery_j).max(0.0);
+        residual_j -= battery_j;
+        let grid_j = residual_j.max(0.0);
+        let excess_j = (pv_avail_j - pv_j).max(0.0);
+        let headroom_in_j = (cap_j - self.soc_j).max(0.0) / b.rt_efficiency;
+        let charged_j = excess_j.min(b.max_charge_w * dt).min(headroom_in_j);
+        self.soc_j = (self.soc_j + charged_j * b.rt_efficiency).min(cap_j);
+        SliceFlow { pv_j, battery_j, grid_j, charged_j, curtailed_j: excess_j - charged_j }
+    }
+
+    /// Blended effective carbon intensity (gCO₂/kWh) of serving `draw_w`
+    /// at instant `t` against a grid currently at `grid_intensity`: the
+    /// grid-supplied fraction of the draw (after instantaneous PV and the
+    /// battery) scales the grid intensity. PV and battery joules are
+    /// zero-carbon, so a sunlit or charged node reads as clean to every
+    /// scheduler scoring `EdgeNode::intensity()`.
+    ///
+    /// The battery term is capped at the power the *current charge* can
+    /// sustain for `sustain_s` seconds (the advertising window — the
+    /// simulator passes its intensity-refresh interval), not just the
+    /// discharge rate limit: a near-empty battery must not advertise its
+    /// full rate and have the scheduler pile a whole refresh window of
+    /// load onto joules that drain in the first instant.
+    pub fn effective_intensity(
+        &self,
+        t: f64,
+        draw_w: f64,
+        grid_intensity: GramsPerKwh,
+        sustain_s: f64,
+    ) -> GramsPerKwh {
+        assert!(sustain_s > 0.0, "sustain window must be positive");
+        let pv_w = self.spec.pv.power_w(t);
+        let batt_w = self.spec.battery.max_discharge_w.min(self.soc_j / sustain_s);
+        if draw_w <= 0.0 {
+            // Marginal view for a zero-draw node: the first watt would be
+            // local whenever any local supply exists.
+            return if pv_w > 0.0 || batt_w > 0.0 { 0.0 } else { grid_intensity };
+        }
+        let residual_w = (draw_w - pv_w - batt_w).max(0.0);
+        grid_intensity * residual_w / draw_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pv_diurnal_shape() {
+        let pv = PvProfile::diurnal(400.0);
+        assert_eq!(pv.power_w(0.0), 0.0); // midnight
+        assert_eq!(pv.power_w(10_000.0), 0.0); // pre-dawn
+        assert!((pv.power_w(43_200.0) - 400.0).abs() < 1e-9); // solar noon
+        assert!(pv.power_w(30_000.0) > 0.0 && pv.power_w(30_000.0) < 400.0);
+        assert_eq!(pv.power_w(70_000.0), 0.0); // night
+        // Daily yield of a clamped half-sine: peak · (2/π) · 12 h.
+        let day_j = pv.energy_j(0.0, 86_400.0);
+        let want = 400.0 * (2.0 / std::f64::consts::PI) * 43_200.0;
+        assert!((day_j - want).abs() / want < 1e-3, "day {day_j} want {want}");
+        // Staggered sunrise shifts the window.
+        let east = PvProfile::diurnal_with_sunrise(400.0, 0.0);
+        assert!(east.power_w(10_000.0) > 0.0);
+        assert_eq!(east.power_w(50_000.0), 0.0);
+        assert_eq!(PvProfile::none().power_w(43_200.0), 0.0);
+        assert_eq!(PvProfile::none().energy_j(0.0, 86_400.0), 0.0);
+    }
+
+    #[test]
+    fn pv_from_samples_and_csv() {
+        let pv = PvProfile::from_samples(vec![(0.0, 0.0), (100.0, 250.0), (200.0, 0.0)]).unwrap();
+        assert_eq!(pv.power_w(150.0), 250.0);
+        assert!((pv.energy_j(0.0, 300.0) - 250.0 * 100.0).abs() < 1e-9);
+        assert!(PvProfile::from_samples(vec![(0.0, -1.0)]).is_err());
+        let csv = PvProfile::from_csv("0,0\n100,250\n200,0\n").unwrap();
+        assert_eq!(csv.power_w(150.0), 250.0);
+        assert!(PvProfile::from_csv("garbage").is_err());
+    }
+
+    #[test]
+    fn battery_validation() {
+        assert!(BatterySpec::none().validate().is_ok());
+        assert!(BatterySpec::simple(600.0, 0.9, 0.5).validate().is_ok());
+        assert!(BatterySpec::simple(-1.0, 0.9, 0.5).validate().is_err());
+        assert!(BatterySpec::simple(600.0, 0.0, 0.5).validate().is_err());
+        assert!(BatterySpec::simple(600.0, 1.1, 0.5).validate().is_err());
+        assert!(BatterySpec::simple(600.0, 0.9, 1.5).validate().is_err());
+        assert!(BatterySpec::simple(f64::NAN, 0.9, 0.5).validate().is_err());
+        // 1C convention
+        let b = BatterySpec::simple(600.0, 0.9, 0.5);
+        assert_eq!(b.max_charge_w, 600.0);
+        assert_eq!(b.max_discharge_w, 600.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid microgrid spec")]
+    fn microgrid_rejects_bad_spec() {
+        Microgrid::new(MicrogridSpec::solar(100.0, 100.0, 2.0, 0.5));
+    }
+
+    #[test]
+    fn cover_pv_first_then_battery_then_grid() {
+        // Constant 500 W PV, 1000 Wh battery at 50%.
+        let mut mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::from_samples(vec![(0.0, 500.0)]).unwrap(),
+            battery: BatterySpec::simple(1_000.0, 1.0, 0.5),
+        });
+        // Draw under PV: all PV, battery untouched (and charging from excess).
+        let f = mg.cover(0.0, 10.0, 300.0);
+        assert!((f.pv_j - 3_000.0).abs() < 1e-9);
+        assert_eq!(f.battery_j, 0.0);
+        assert_eq!(f.grid_j, 0.0);
+        assert!((f.charged_j - 2_000.0).abs() < 1e-9); // 200 W excess × 10 s
+        assert!((f.pv_j + f.battery_j + f.grid_j - 3_000.0).abs() < 1e-9);
+        // Draw over PV but within battery rate: PV + battery, no grid.
+        let f = mg.cover(10.0, 20.0, 900.0);
+        assert!((f.pv_j - 5_000.0).abs() < 1e-9);
+        assert!((f.battery_j - 4_000.0).abs() < 1e-9);
+        assert_eq!(f.grid_j, 0.0);
+        // Draw over PV + battery rate (1C = 1000 W): grid takes the rest.
+        let f = mg.cover(20.0, 30.0, 2_000.0);
+        assert!((f.pv_j - 5_000.0).abs() < 1e-9);
+        assert!((f.battery_j - 10_000.0).abs() < 1e-9); // rate-capped
+        assert!((f.grid_j - 5_000.0).abs() < 1e-9);
+        assert!((f.pv_j + f.battery_j + f.grid_j - 20_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn battery_never_exceeds_bounds() {
+        let mut mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::from_samples(vec![(0.0, 1_000.0)]).unwrap(),
+            battery: BatterySpec::simple(10.0, 1.0, 0.9), // 10 Wh = 36 kJ
+        });
+        // Massive excess: SoC caps at capacity.
+        mg.cover(0.0, 3_600.0, 0.0);
+        assert!((mg.soc_frac() - 1.0).abs() < 1e-12);
+        assert!((mg.soc_wh() - 10.0).abs() < 1e-12);
+        // Massive draw with no PV window left: SoC floors at zero, grid
+        // absorbs everything beyond the stored energy.
+        let mut dark = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec::simple(10.0, 1.0, 1.0),
+        });
+        let f = dark.cover(0.0, 3_600.0, 100.0); // 360 kJ demand vs 36 kJ stored
+        assert!(dark.soc_frac().abs() < 1e-12);
+        assert!((f.battery_j - 36_000.0).abs() < 1e-9);
+        assert!((f.grid_j - (360_000.0 - 36_000.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn charge_respects_rate_efficiency_and_headroom() {
+        // 1000 W of excess PV into a 100 W charger: input rate-capped.
+        let mut mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::from_samples(vec![(0.0, 1_000.0)]).unwrap(),
+            battery: BatterySpec {
+                capacity_wh: 1_000.0,
+                max_charge_w: 100.0,
+                max_discharge_w: 100.0,
+                rt_efficiency: 0.8,
+                initial_soc: 0.0,
+            },
+        });
+        let f = mg.cover(0.0, 10.0, 0.0);
+        assert!((f.charged_j - 1_000.0).abs() < 1e-9); // 100 W × 10 s input
+        assert!((f.curtailed_j - 9_000.0).abs() < 1e-9);
+        // Only 80% of the input lands as stored charge.
+        assert!((mg.soc_wh() - 1_000.0 * 0.8 / 3_600.0).abs() < 1e-12);
+        // Near-full battery: charging stops at the headroom, not past it.
+        let mut full = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::from_samples(vec![(0.0, 1_000.0)]).unwrap(),
+            battery: BatterySpec {
+                capacity_wh: 1.0, // 3600 J
+                max_charge_w: 1_000.0,
+                max_discharge_w: 1_000.0,
+                rt_efficiency: 0.5,
+                initial_soc: 0.5,
+            },
+        });
+        let f = full.cover(0.0, 100.0, 0.0); // 100 kJ excess vs 1800 J headroom
+        assert!((f.charged_j - 1_800.0 / 0.5).abs() < 1e-9); // input = headroom/η
+        assert!((full.soc_frac() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cover_conserves_demand_exactly() {
+        let mut mg = Microgrid::new(MicrogridSpec::solar(400.0, 600.0, 0.9, 0.3));
+        let mut t = 0.0;
+        for (dt, draw) in [(500.0, 54.0), (10_000.0, 142.0), (40_000.0, 0.0), (20_000.0, 300.0)] {
+            let f = mg.cover(t, t + dt, draw);
+            let demand = draw * dt;
+            assert!(
+                (f.pv_j + f.battery_j + f.grid_j - demand).abs() <= 1e-9 * demand.max(1.0),
+                "slice at t={t}: {f:?} vs demand {demand}"
+            );
+            assert!((0.0..=1.0 + 1e-12).contains(&mg.soc_frac()));
+            t += dt;
+        }
+        // Zero-length slices are exact no-ops.
+        let before = mg.soc_frac();
+        assert_eq!(mg.cover(t, t, 1_000.0), SliceFlow::default());
+        assert_eq!(mg.soc_frac(), before);
+    }
+
+    #[test]
+    fn effective_intensity_blends_supply() {
+        const WINDOW: f64 = 60.0;
+        // PV 300 W at noon, charged 1C-600 battery, grid at 500 g/kWh.
+        let mg = Microgrid::new(MicrogridSpec::solar(300.0, 600.0, 0.9, 1.0));
+        let noon = 43_200.0;
+        // 200 W draw fully PV-covered: effectively zero-carbon.
+        assert_eq!(mg.effective_intensity(noon, 200.0, 500.0, WINDOW), 0.0);
+        // 1500 W draw at noon: 300 PV + 600 battery + 600 grid -> 40% grid.
+        let eff = mg.effective_intensity(noon, 1_500.0, 500.0, WINDOW);
+        assert!((eff - 500.0 * 600.0 / 1_500.0).abs() < 1e-9);
+        // Midnight, battery charged: discharge rate still covers 600 W.
+        assert_eq!(mg.effective_intensity(0.0, 600.0, 500.0, WINDOW), 0.0);
+        let eff = mg.effective_intensity(0.0, 1_200.0, 500.0, WINDOW);
+        assert!((eff - 250.0).abs() < 1e-9);
+        // Depleted battery at midnight: pure grid.
+        let empty = Microgrid::new(MicrogridSpec::solar(300.0, 600.0, 0.9, 0.0));
+        assert_eq!(empty.effective_intensity(0.0, 100.0, 500.0, WINDOW), 500.0);
+        // Zero draw: marginal watt is local iff any local supply exists.
+        assert_eq!(mg.effective_intensity(0.0, 0.0, 500.0, WINDOW), 0.0);
+        assert_eq!(empty.effective_intensity(0.0, 0.0, 500.0, WINDOW), 500.0);
+        assert_eq!(empty.effective_intensity(noon, 0.0, 500.0, WINDOW), 0.0); // sun is up
+    }
+
+    #[test]
+    fn effective_intensity_caps_battery_at_sustainable_power() {
+        // 1800 J of charge over a 60 s advertising window sustains 30 W —
+        // a near-empty battery must not advertise its full 500 W rate (the
+        // SoC→0 cliff would misroute a whole refresh window of load onto
+        // joules that drain in the first instant).
+        let low = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec {
+                capacity_wh: 10.0, // 36 kJ
+                max_charge_w: 500.0,
+                max_discharge_w: 500.0,
+                rt_efficiency: 1.0,
+                initial_soc: 0.05, // 1800 J
+            },
+        });
+        let eff = low.effective_intensity(0.0, 100.0, 500.0, 60.0);
+        assert!((eff - 500.0 * (100.0 - 30.0) / 100.0).abs() < 1e-9, "eff {eff}");
+        // A longer window sustains even less; a shorter one more.
+        let eff_long = low.effective_intensity(0.0, 100.0, 500.0, 600.0);
+        assert!(eff_long > eff);
+        let eff_short = low.effective_intensity(0.0, 100.0, 500.0, 3.0);
+        assert!(eff_short < eff);
+        // Fully charged, the rate limit (not the charge) is what binds.
+        let full = Microgrid::new(MicrogridSpec::solar(0.0, 10.0, 1.0, 1.0));
+        let eff = full.effective_intensity(0.0, 100.0, 500.0, 60.0);
+        // 1C on 10 Wh = 10 W rate, though 36 kJ / 60 s could push 600 W.
+        assert!((eff - 500.0 * (100.0 - 10.0) / 100.0).abs() < 1e-9, "eff {eff}");
+    }
+}

@@ -26,9 +26,19 @@
 //!   cleaner forecast slot, with `deferred`/`deadline_missed` counters in
 //!   the report; the `real-trace` scenario exercises it against an
 //!   ElectricityMaps-style CSV day curve;
+//! * **per-node microgrids** ([`crate::microgrid`]): a node may sit behind
+//!   a PV array + battery; both parts of its draw are then covered
+//!   PV-first, then battery, then grid (settled slice-by-slice along the
+//!   virtual clock), only the grid share bears carbon, and the report
+//!   splits supply into pv/battery/grid per node with SoC timelines. The
+//!   blended *effective* intensity — a function of sunlight and state of
+//!   charge — feeds `EdgeNode::intensity_override`, so carbon-aware modes
+//!   follow the sun and the charge (`solar-battery`, `microgrid-fleet`
+//!   scenarios; [`crate::experiments::sim_microgrid`]);
 //! * scheduling through the existing [`crate::scheduler::Scheduler`] trait:
 //!   schedulers see queue depth + in-flight as `inflight`, and the current
-//!   virtual-time grid intensity via `EdgeNode::intensity()`.
+//!   virtual-time grid (or blended microgrid) intensity via
+//!   `EdgeNode::intensity()`.
 //!
 //! Identical seeds produce identical [`SimReport`]s; millions of simulated
 //! requests run in seconds (`benches/sim.rs`). The scenario library lives

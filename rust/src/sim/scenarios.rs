@@ -30,8 +30,21 @@
 //!   rated / ≈54 W idle floor) under a load only ~3 nodes' worth: run it at
 //!   two fleet sizes to watch idle floors dominate — fewer busy nodes beat
 //!   many idle ones ([`crate::experiments::sim_consolidation`]).
+//! * **`solar-battery`** — an N-node (default 4) fleet of identical
+//!   idle-capable hosts on a static 475 g/kWh grid, each behind a PV +
+//!   battery microgrid (400 W peak half-sine array, 600 Wh 1C battery
+//!   starting overnight-depleted at 30%), arrivals spread over one virtual
+//!   day: daytime draw is PV-covered, the battery bridges the evening, and
+//!   only the pre-dawn hours import grid power
+//!   ([`crate::experiments::sim_microgrid`] runs the grid-only A/B).
+//! * **`microgrid-fleet`** — an N-node (default 12) heterogeneous
+//!   `REGIONS` fleet where every *even-indexed* node carries a microgrid
+//!   (PV staggered across "longitudes", a well-charged battery); under a
+//!   carbon-aware mode the blended effective intensities steer load toward
+//!   the charged/sunlit half of the fleet.
 
 use crate::carbon::{zone_traces_from_csv, IntensityTrace};
+use crate::microgrid::{BatterySpec, MicrogridSpec, PvProfile};
 use crate::node::NodeSpec;
 
 use super::engine::{ArrivalProcess, ChurnEvent, DeferralSpec, SimConfig};
@@ -46,6 +59,8 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "churn",
     "real-trace",
     "consolidation",
+    "solar-battery",
+    "microgrid-fleet",
 ];
 
 /// One synthetic ElectricityMaps-style day (hourly, 3 zones) bundled for
@@ -65,6 +80,9 @@ pub struct Scenario {
     /// Number of requests the arrival process generates.
     pub requests: usize,
     pub churn: Vec<ChurnEvent>,
+    /// Optional PV + battery microgrid per node (same order as `specs`).
+    /// Empty means "no microgrids anywhere"; otherwise one slot per node.
+    pub microgrids: Vec<Option<MicrogridSpec>>,
     pub config: SimConfig,
 }
 
@@ -85,8 +103,58 @@ pub fn build(name: &str, nodes: usize, requests: usize, seed: u64) -> Option<Sce
         "consolidation" => {
             Some(consolidation(if nodes == 0 { 12 } else { nodes }, requests, seed))
         }
+        "solar-battery" => {
+            Some(solar_battery(if nodes == 0 { 4 } else { nodes }, requests, seed))
+        }
+        "microgrid-fleet" => {
+            Some(microgrid_fleet(if nodes == 0 { 12 } else { nodes }, requests, seed))
+        }
         _ => None,
     }
+}
+
+/// Closest scenario name to `name` — the CLI's "did you mean" hint.
+/// Containment (a typed prefix/fragment of ≥ 3 chars) wins; otherwise a
+/// small edit distance. `None` when nothing is plausibly close.
+pub fn suggest(name: &str) -> Option<&'static str> {
+    let n = name.to_ascii_lowercase();
+    if n.is_empty() {
+        return None;
+    }
+    if n.len() >= 3 {
+        // Prefix beats containment beats edit distance: `solar` should
+        // point at `solar-battery`, not at whichever name drifts closest.
+        if let Some(c) = SCENARIO_NAMES.iter().copied().find(|c| c.starts_with(n.as_str())) {
+            return Some(c);
+        }
+        if let Some(c) =
+            SCENARIO_NAMES.iter().copied().find(|c| c.contains(n.as_str()) || n.contains(c))
+        {
+            return Some(c);
+        }
+    }
+    let (d, best) = SCENARIO_NAMES
+        .iter()
+        .copied()
+        .map(|c| (levenshtein(&n, c), c))
+        .min_by_key(|&(d, _)| d)?;
+    (d <= 2 + best.len() / 4).then_some(best)
+}
+
+/// Plain Levenshtein edit distance (two-row DP).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 fn static_traces(specs: &[NodeSpec]) -> Vec<IntensityTrace> {
@@ -103,6 +171,7 @@ fn paper_3_node(requests: usize, seed: u64) -> Scenario {
         arrivals: ArrivalProcess::Poisson { rate_hz: 6.0 },
         requests,
         churn: Vec::new(),
+        microgrids: Vec::new(),
         config: SimConfig { seed, ..SimConfig::default() },
     }
 }
@@ -120,6 +189,7 @@ fn fleet_n(n: usize, requests: usize, seed: u64) -> Scenario {
         arrivals: ArrivalProcess::Poisson { rate_hz },
         requests,
         churn: Vec::new(),
+        microgrids: Vec::new(),
         config,
     }
 }
@@ -150,6 +220,7 @@ fn diurnal_solar(n: usize, requests: usize, seed: u64) -> Scenario {
         arrivals: ArrivalProcess::Poisson { rate_hz: requests as f64 / DIURNAL_HORIZON_S },
         requests,
         churn: Vec::new(),
+        microgrids: Vec::new(),
         config,
     }
 }
@@ -172,6 +243,7 @@ fn bursty(nodes: usize, requests: usize, seed: u64) -> Scenario {
         },
         requests,
         churn: Vec::new(),
+        microgrids: Vec::new(),
         config,
     }
 }
@@ -198,6 +270,7 @@ fn churn(n: usize, requests: usize, seed: u64) -> Scenario {
         arrivals: ArrivalProcess::Poisson { rate_hz },
         requests,
         churn,
+        microgrids: Vec::new(),
         config,
     }
 }
@@ -246,6 +319,7 @@ pub fn real_trace_from_csv(
         },
         requests,
         churn: Vec::new(),
+        microgrids: Vec::new(),
         config: SimConfig {
             seed,
             deferral: Some(DeferralSpec {
@@ -298,8 +372,106 @@ fn consolidation(n: usize, requests: usize, seed: u64) -> Scenario {
         arrivals: ArrivalProcess::Poisson { rate_hz },
         requests,
         churn: Vec::new(),
+        microgrids: Vec::new(),
         config,
     }
+}
+
+/// Virtual horizon the `solar-battery` scenario spreads its arrivals over:
+/// one full day, so the PV window, the battery bridge and the grid-only
+/// pre-dawn hours all sit inside the run.
+pub const SOLAR_BATTERY_HORIZON_S: f64 = 86_400.0;
+
+/// `solar-battery` microgrid sizing: a 400 W-peak half-sine PV array and a
+/// 600 Wh 1C battery starting overnight-depleted at 30% SoC, 90%
+/// round-trip efficient. Against the ≈54 W idle floor this covers daytime
+/// draw from the sun, bridges the evening from storage, and leaves only
+/// the pre-dawn hours on the grid.
+pub const SOLAR_BATTERY_PV_PEAK_W: f64 = 400.0;
+pub const SOLAR_BATTERY_WH: f64 = 600.0;
+
+fn solar_battery(n: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig { seed, ..SimConfig::default() };
+    // Identical idle-capable hosts (the consolidation chassis) on the
+    // global-average grid: the only carbon lever is the local supply side.
+    let (rated_power_w, idle_w) = crate::config::default_host_power().node_power_split();
+    let specs: Vec<NodeSpec> = (0..n)
+        .map(|i| NodeSpec {
+            name: format!("solar-edge-{i:02}"),
+            cpu_quota: 1.0,
+            mem_mb: 1024,
+            intensity: 475.0,
+            rated_power_w,
+            idle_w,
+            prior_ms: 250.0,
+            alpha: 0.005,
+            overhead_ms: 8.0,
+            time_scale: 20.6,
+            adaptive: false,
+        })
+        .collect();
+    let microgrids = (0..n)
+        .map(|_| Some(MicrogridSpec::solar(SOLAR_BATTERY_PV_PEAK_W, SOLAR_BATTERY_WH, 0.9, 0.3)))
+        .collect();
+    Scenario {
+        name: "solar-battery".into(),
+        traces: static_traces(&specs),
+        capacity: vec![1; n],
+        specs,
+        arrivals: ArrivalProcess::Poisson {
+            rate_hz: requests as f64 / SOLAR_BATTERY_HORIZON_S,
+        },
+        requests,
+        churn: Vec::new(),
+        microgrids,
+        config,
+    }
+}
+
+fn microgrid_fleet(n: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig { seed, ..SimConfig::default() };
+    let specs = fleet::synth_fleet(n, seed);
+    let capacity = fleet::capacities(&specs);
+    // 40% of fleet capacity: the microgrid half of the fleet can absorb
+    // most of the load without saturating, so carbon-aware routing has
+    // real freedom to follow the charge.
+    let rate_hz = 0.4 * fleet::service_capacity_hz(&specs, &capacity, config.base_exec_ms);
+    // Every even-indexed node gets a microgrid: PV sized at 3× the node's
+    // rated draw with sunrises staggered across "longitudes", plus a 1C
+    // battery (3 Wh per rated watt) starting well charged at 90% — the
+    // charged/sunlit half of the fleet reads as near-zero effective
+    // intensity while its storage lasts.
+    let microgrids = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            (i % 2 == 0).then(|| MicrogridSpec {
+                pv: PvProfile::diurnal_with_sunrise(3.0 * s.rated_power_w, i as f64 * 1_800.0),
+                battery: BatterySpec::simple(3.0 * s.rated_power_w, 0.9, 0.9),
+            })
+        })
+        .collect();
+    Scenario {
+        name: "microgrid-fleet".into(),
+        traces: static_traces(&specs),
+        capacity,
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz },
+        requests,
+        churn: Vec::new(),
+        microgrids,
+        config,
+    }
+}
+
+/// Grid-only twin of `sc`: same fleet, arrivals and seed with every
+/// microgrid removed — the baseline a supply-side split is measured
+/// against ([`crate::experiments::sim_microgrid_comparison`]).
+pub fn microgrid_disabled_twin(sc: &Scenario) -> Scenario {
+    let mut twin = sc.clone();
+    twin.name = format!("{}-no-mg", sc.name);
+    twin.microgrids = Vec::new();
+    twin
 }
 
 /// Single-node monolithic baseline for `sc`: the same arrival process and
@@ -331,6 +503,7 @@ pub fn monolithic_of(sc: &Scenario) -> Scenario {
         arrivals: sc.arrivals.clone(),
         requests: sc.requests,
         churn: Vec::new(),
+        microgrids: Vec::new(),
         config: sc.config.clone(),
     }
 }
@@ -361,6 +534,8 @@ mod tests {
         assert_eq!(build("churn", 0, 0, 1).unwrap().specs.len(), 10);
         assert_eq!(build("real-trace", 0, 0, 1).unwrap().specs.len(), 3); // one per zone
         assert_eq!(build("consolidation", 0, 0, 1).unwrap().specs.len(), 12);
+        assert_eq!(build("solar-battery", 0, 0, 1).unwrap().specs.len(), 4);
+        assert_eq!(build("microgrid-fleet", 0, 0, 1).unwrap().specs.len(), 12);
         // node/request overrides respected
         let sc = build("fleet-100", 25, 500, 1).unwrap();
         assert_eq!(sc.specs.len(), 25);
@@ -443,6 +618,77 @@ mod tests {
         let ups = sc.churn.iter().filter(|e| e.up).count();
         assert_eq!(downs, 1 + 3); // dead node + n/3 wave
         assert_eq!(ups, 3);
+    }
+
+    #[test]
+    fn solar_battery_scenario_shape() {
+        let sc = build("solar-battery", 0, 0, 7).unwrap();
+        assert_eq!(sc.microgrids.len(), sc.specs.len());
+        assert!(sc.microgrids.iter().all(Option::is_some));
+        for mg in sc.microgrids.iter().flatten() {
+            assert!(mg.validate().is_ok());
+            assert_eq!(mg.battery.capacity_wh, SOLAR_BATTERY_WH);
+            assert_eq!(mg.battery.initial_soc, 0.3);
+            // PV window: dark at midnight, peak power at solar noon.
+            assert_eq!(mg.pv.power_w(0.0), 0.0);
+            assert!((mg.pv.power_w(43_200.0) - SOLAR_BATTERY_PV_PEAK_W).abs() < 1e-9);
+        }
+        // Identical idle-capable hosts on the same static grid.
+        let (rated, idle) = crate::config::default_host_power().node_power_split();
+        for s in &sc.specs {
+            assert_eq!(s.rated_power_w, rated);
+            assert_eq!(s.idle_w, idle);
+            assert_eq!(s.intensity, 475.0);
+        }
+        // Arrivals spread over the full day, independent of fleet size.
+        let rate = sc.arrivals.mean_rate_hz();
+        assert!((rate - 20_000.0 / SOLAR_BATTERY_HORIZON_S).abs() < 1e-9);
+        // The grid-only twin drops every microgrid and nothing else.
+        let twin = microgrid_disabled_twin(&sc);
+        assert!(twin.microgrids.is_empty());
+        assert_eq!(twin.name, "solar-battery-no-mg");
+        assert_eq!(twin.requests, sc.requests);
+        assert_eq!(twin.config.seed, sc.config.seed);
+        assert_eq!(twin.specs.len(), sc.specs.len());
+    }
+
+    #[test]
+    fn microgrid_fleet_alternates_supply() {
+        let sc = build("microgrid-fleet", 0, 500, 5).unwrap();
+        assert_eq!(sc.microgrids.len(), 12);
+        for (i, mg) in sc.microgrids.iter().enumerate() {
+            assert_eq!(mg.is_some(), i % 2 == 0, "node {i}");
+            if let Some(mg) = mg {
+                assert!(mg.validate().is_ok());
+                // Battery sized and charged to carry the node through the run.
+                assert!((mg.battery.capacity_wh - 3.0 * sc.specs[i].rated_power_w).abs() < 1e-9);
+                assert_eq!(mg.battery.initial_soc, 0.9);
+            }
+        }
+        // Staggered sunrises: node 0 generates right after t = 0, node 8
+        // (sunrise 4 h) is still dark then.
+        assert!(sc.microgrids[0].as_ref().unwrap().pv.power_w(600.0) > 0.0);
+        assert_eq!(sc.microgrids[8].as_ref().unwrap().pv.power_w(600.0), 0.0);
+        // Load is well inside the fleet's capacity.
+        let cap = fleet::service_capacity_hz(&sc.specs, &sc.capacity, sc.config.base_exec_ms);
+        assert!((sc.arrivals.mean_rate_hz() - 0.4 * cap).abs() < 1e-9);
+    }
+
+    #[test]
+    fn suggest_close_scenario_names() {
+        assert_eq!(suggest("solar"), Some("solar-battery"));
+        assert_eq!(suggest("paper3node"), Some("paper-3-node"));
+        assert_eq!(suggest("brsty"), Some("bursty"));
+        assert_eq!(suggest("consolidations"), Some("consolidation"));
+        assert_eq!(suggest("microgrid"), Some("microgrid-fleet"));
+        assert_eq!(suggest("CHURN"), Some("churn"));
+        assert_eq!(suggest("atlantis"), None);
+        assert_eq!(suggest(""), None);
+        assert_eq!(suggest("x"), None);
+        // Exact distances: the helper is a plain Levenshtein.
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
     }
 
     #[test]

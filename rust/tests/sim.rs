@@ -77,6 +77,54 @@ fn conservation_per_node_ledger_sums_to_fleet_totals() {
                 <= 1e-12 * r.carbon_g_total.max(1e-30),
             "{name}: carbon split does not sum to total"
         );
+        // Supply-side conservation: per node, pv + battery + grid covers
+        // exactly idle + dynamic (grid-only nodes trivially, microgrid
+        // nodes through the slice-settled ledger), the rows sum to the
+        // supply totals, and the supply totals sum to the energy total.
+        for n in &r.nodes {
+            let supply = n.energy_pv_kwh + n.energy_battery_kwh + n.energy_grid_kwh;
+            let demand = n.energy_dynamic_kwh + n.energy_idle_kwh;
+            assert!(
+                (supply - demand).abs() <= 1e-6 * demand.max(1e-30),
+                "{name}/{}: supply {supply} != demand {demand}",
+                n.name
+            );
+            assert!(
+                n.energy_pv_kwh >= 0.0 && n.energy_battery_kwh >= 0.0 && n.energy_grid_kwh >= 0.0,
+                "{name}/{}: negative supply term",
+                n.name
+            );
+            // Battery bounds: SoC samples stay inside [0, 1] and exist
+            // exactly for microgrid nodes.
+            assert_eq!(n.soc_timeline.is_empty(), !n.microgrid, "{name}/{}", n.name);
+            for &(t, soc) in &n.soc_timeline {
+                assert!(t >= 0.0, "{name}/{}: SoC sample before t=0", n.name);
+                assert!(
+                    (0.0..=1.0 + 1e-9).contains(&soc),
+                    "{name}/{}: SoC {soc} out of bounds",
+                    n.name
+                );
+            }
+        }
+        let (pv, batt, grid) = r.node_sums_supply();
+        assert!(
+            (pv - r.energy_pv_kwh_total).abs() <= 1e-9 * r.energy_pv_kwh_total.max(1e-30),
+            "{name}: pv ledger"
+        );
+        assert!(
+            (batt - r.energy_battery_kwh_total).abs()
+                <= 1e-9 * r.energy_battery_kwh_total.max(1e-30),
+            "{name}: battery ledger"
+        );
+        assert!(
+            (grid - r.energy_grid_kwh_total).abs() <= 1e-9 * r.energy_grid_kwh_total.max(1e-30),
+            "{name}: grid ledger"
+        );
+        assert!(
+            (pv + batt + grid - r.energy_kwh_total).abs()
+                <= 1e-6 * r.energy_kwh_total.max(1e-30),
+            "{name}: supply does not sum to total energy"
+        );
         assert!(r.completed > 0, "{name}: nothing completed");
         assert!(r.makespan_s > 0.0 && r.throughput_rps > 0.0, "{name}");
     }
@@ -175,6 +223,7 @@ fn churn_migrates_queued_work_to_survivors() {
         arrivals: ArrivalProcess::Uniform { rate_hz: 40.0 },
         requests: 400,
         churn: vec![ChurnEvent { at_s: 5.0, node: 0, up: false }],
+        microgrids: Vec::new(),
         config: SimConfig { seed: 3, jitter_sigma: 0.0, ..SimConfig::default() },
     };
     let mut sched = LeastLoadedScheduler;
@@ -374,6 +423,7 @@ fn churn_migration_rescores_against_fresh_intensities() {
         arrivals: ArrivalProcess::Uniform { rate_hz: 20.0 },
         requests: 300,
         churn: vec![ChurnEvent { at_s: 120.0, node: 0, up: false }],
+        microgrids: Vec::new(),
         config: SimConfig {
             seed: 1,
             jitter_sigma: 0.0,
@@ -398,4 +448,103 @@ fn churn_migration_rescores_against_fresh_intensities() {
     // Work finished before the churn stays on the sink's ledger.
     let sink_tasks = r.node("sink").unwrap().tasks;
     assert!(sink_tasks > 0 && sink_tasks < 100, "sink ran {sink_tasks}");
+}
+
+#[test]
+fn solar_battery_microgrids_beat_grid_only_twin() {
+    // The ISSUE 3 acceptance gate: identical fleets and arrivals, green
+    // mode — the PV + battery fleet must emit < 0.85× the gCO₂/req of the
+    // same fleet with microgrids disabled, deterministically.
+    let sc = scenarios::build("solar-battery", 0, 6_000, 19).unwrap();
+    let (mg, plain, rr) = exp::sim_microgrid_comparison(&sc);
+    assert_eq!(mg.requests, 6_000);
+    assert_eq!(mg.completed, 6_000, "microgrid run must complete everything");
+    assert_eq!(plain.completed, 6_000);
+    assert!(
+        mg.carbon_per_req_g < 0.85 * plain.carbon_per_req_g,
+        "microgrids {} g/req vs grid-only {} g/req",
+        mg.carbon_per_req_g,
+        plain.carbon_per_req_g
+    );
+    // The supply story behind the cut: PV covers the day, the battery
+    // bridges the evening, the grid only fills the pre-dawn gap.
+    assert!(mg.energy_pv_kwh_total > 0.0, "no PV used over a full day");
+    assert!(mg.energy_battery_kwh_total > 0.0, "battery never discharged");
+    assert!(mg.energy_grid_kwh_total > 0.0, "pre-dawn hours should import grid power");
+    assert!(mg.energy_grid_kwh_total < 0.2 * mg.energy_kwh_total, "grid should be the residual");
+    // The twin draws everything from the grid at identical total energy
+    // (same fleet, same arrivals, same service times).
+    assert_eq!(plain.energy_pv_kwh_total, 0.0);
+    assert_eq!(plain.energy_battery_kwh_total, 0.0);
+    assert!(
+        (plain.energy_grid_kwh_total - plain.energy_kwh_total).abs()
+            <= 1e-9 * plain.energy_kwh_total
+    );
+    assert!(
+        (mg.energy_kwh_total - plain.energy_kwh_total).abs() <= 1e-6 * plain.energy_kwh_total,
+        "microgrids change supply, not demand: {} vs {}",
+        mg.energy_kwh_total,
+        plain.energy_kwh_total
+    );
+    // Per-node energy conservation to 1e-6 relative tolerance.
+    for n in &mg.nodes {
+        let supply = n.energy_pv_kwh + n.energy_battery_kwh + n.energy_grid_kwh;
+        let demand = n.energy_dynamic_kwh + n.energy_idle_kwh;
+        assert!(
+            (supply - demand).abs() <= 1e-6 * demand.max(1e-30),
+            "{}: {supply} vs {demand}",
+            n.name
+        );
+    }
+    // Same seed ⇒ identical SimReports, bit for bit.
+    let (mg2, plain2, rr2) = exp::sim_microgrid_comparison(&sc);
+    assert_eq!(mg, mg2);
+    assert_eq!(plain, plain2);
+    assert_eq!(rr, rr2);
+    // The render never prints NaN, even when a run is (near-)zero-carbon.
+    let rendered = exp::sim_microgrid_render(&mg, &plain, &rr);
+    assert!(!rendered.contains("NaN"), "{rendered}");
+    assert!(rendered.contains("microgrids cut gCO2/req"));
+}
+
+#[test]
+fn carbon_aware_routing_follows_charge_on_microgrid_fleet() {
+    // Half the fleet (even indices) sits behind charged batteries +
+    // staggered PV: green mode reads their near-zero blended effective
+    // intensity through the override and concentrates load there, beating
+    // carbon-agnostic round-robin on gCO₂/req.
+    let sc = scenarios::build("microgrid-fleet", 0, 6_000, 23).unwrap();
+    let green = green_run(&sc);
+    let mut rr_sched = carbonedge::scheduler::RoundRobinScheduler::new();
+    let rr = Simulation::run(&sc, &mut rr_sched);
+    assert_eq!(green.completed + green.rejected, 6_000);
+    assert_eq!(rr.completed + rr.rejected, 6_000);
+    let mg_share = |r: &carbonedge::sim::SimReport| {
+        let mg_tasks: u64 =
+            r.nodes.iter().enumerate().filter(|(i, _)| i % 2 == 0).map(|(_, n)| n.tasks).sum();
+        mg_tasks as f64 / r.completed.max(1) as f64
+    };
+    let green_share = mg_share(&green);
+    let rr_share = mg_share(&rr);
+    assert!(
+        green_share > 0.6,
+        "green should route toward charged nodes: microgrid share {green_share}"
+    );
+    assert!(
+        green_share > rr_share + 0.05,
+        "green {green_share} should concentrate harder than round-robin {rr_share}"
+    );
+    assert!(
+        green.carbon_per_req_g < 0.9 * rr.carbon_per_req_g,
+        "green {} g/req vs round-robin {} g/req",
+        green.carbon_per_req_g,
+        rr.carbon_per_req_g
+    );
+    // The grid-only twin strips the advantage: green loses its edge there.
+    let plain = scenarios::microgrid_disabled_twin(&sc);
+    let green_plain = green_run(&plain);
+    assert!(
+        green.carbon_per_req_g < green_plain.carbon_per_req_g,
+        "local supply must lower green's own footprint"
+    );
 }
