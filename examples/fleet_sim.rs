@@ -2,8 +2,10 @@
 //! 3-node testbed open-loop, sweep the carbon weight at fleet scale, watch
 //! a churning fleet migrate its queues, see idle-floor accounting make
 //! consolidation visible, park morning-peak work for the midday solar
-//! trough with in-engine deferral, and put PV + battery microgrids behind
-//! the fleet — all in a few wall-clock seconds, no artifacts required.
+//! trough with in-engine deferral, put PV + battery microgrids behind
+//! the fleet, and let the joint defer+route scheduler answer *where and
+//! when* in one verdict — all in a few wall-clock seconds, no artifacts
+//! required.
 //!
 //! ```sh
 //! cargo run --release --example fleet_sim -- [--requests 20000] [--seed 42]
@@ -58,5 +60,16 @@ fn main() -> anyhow::Result<()> {
     //    day, the battery bridges the evening, the grid fills pre-dawn.
     let (mg_green, plain_green, mg_rr) = exp::sim_microgrid(0, requests, seed);
     println!("{}", exp::sim_microgrid_render(&mg_green, &plain_green, &mg_rr));
+
+    // 7. Joint defer+route: the deferral-routing scenario (zone fleet,
+    //    single service slots, ~1 s tasks) under the DeferAwareGreen
+    //    scheduler's one-verdict API vs the legacy route-then-defer gate.
+    //    Route-then-defer stampedes the clean zone at its trough and
+    //    spills onto dirty grids; the joint verdict parks spill arrivals
+    //    for *other* nodes' troughs and spreads releases across the
+    //    plateau — fewer gCO2/req, no extra deadline misses.
+    let dr = scenarios::build("deferral-routing", 0, requests, seed).unwrap();
+    let (joint, rtd) = exp::sim_deferral_routing_comparison(&dr);
+    println!("{}", exp::sim_deferral_routing_render(&joint, &rtd));
     Ok(())
 }

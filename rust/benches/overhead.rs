@@ -6,23 +6,25 @@ use carbonedge::config::Config;
 use carbonedge::coordinator::Coordinator;
 use carbonedge::experiments as exp;
 use carbonedge::node::NodeRegistry;
-use carbonedge::scheduler::{CarbonAwareScheduler, Mode, Scheduler, TaskDemand};
+use carbonedge::scheduler::{CarbonAwareScheduler, FleetView, Mode, Scheduler, TaskDemand};
 use carbonedge::util::bench::{black_box, Bencher};
 
 fn main() -> anyhow::Result<()> {
-    // Isolated: pure Algorithm-1 selection over the 3-node fleet.
+    // Isolated: snapshot + Algorithm-1 decision over the 3-node fleet —
+    // the full per-task scheduling cost of the decide API.
     let registry = NodeRegistry::paper_setup();
     let task = TaskDemand::default();
     let b = Bencher::default();
     for mode in Mode::all() {
         let mut s = CarbonAwareScheduler::new(mode.name(), mode.weights());
-        let r = b.run_batched(&format!("nsa-select/{}", mode.name()), 1000, || {
-            black_box(s.select(&task, registry.nodes()));
+        let r = b.run_batched(&format!("nsa-decide/{}", mode.name()), 1000, || {
+            let fleet = FleetView::observe(registry.nodes());
+            black_box(s.decide(&task, &fleet));
         });
         println!("{}", r.report());
     }
 
-    // Scaling: selection cost vs fleet size.
+    // Scaling: decision cost vs fleet size.
     for n in [3usize, 10, 50, 100] {
         let specs: Vec<_> = (0..n)
             .map(|i| {
@@ -33,8 +35,9 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let reg = NodeRegistry::new(specs);
         let mut s = CarbonAwareScheduler::new("green", Mode::Green.weights());
-        let r = b.run_batched(&format!("nsa-select/fleet-{n}"), 500, || {
-            black_box(s.select(&task, reg.nodes()));
+        let r = b.run_batched(&format!("nsa-decide/fleet-{n}"), 500, || {
+            let fleet = FleetView::observe(reg.nodes());
+            black_box(s.decide(&task, &fleet));
         });
         println!("{}", r.report());
     }

@@ -31,35 +31,61 @@ impl Default for DeferralPolicy {
 }
 
 impl DeferralPolicy {
-    /// Decide for a task arriving at `now_s` with slack until
-    /// `deadline_s` (absolute, experiment clock).
-    pub fn decide(&self, trace: &IntensityTrace, now_s: f64, deadline_s: f64) -> DeferDecision {
-        assert!(deadline_s >= now_s);
+    /// Sample an intensity function from `now_s` to `horizon_s` at the
+    /// policy resolution, clamping the final sample to the horizon itself:
+    /// when the window is not a multiple of the resolution, a naive
+    /// `t += resolution` walk overshoots and never prices a trough sitting
+    /// on the horizon boundary. This is the single source of the sampling
+    /// walk — [`DeferralPolicy::decide`] and the simulator's `FleetView`
+    /// forecasts (grid-only *and* microgrid-blended) both build on it, so
+    /// their slot grids always agree.
+    pub fn forecast(
+        &self,
+        intensity_at: impl Fn(f64) -> f64,
+        now_s: f64,
+        horizon_s: f64,
+    ) -> Vec<(f64, f64)> {
+        assert!(horizon_s >= now_s, "forecast window reversed");
         assert!(self.resolution_s > 0.0, "forecast resolution must be positive");
-        let now_i = trace.at(now_s);
-        let mut best_t = now_s;
-        let mut best_i = now_i;
-        // Sample every `resolution_s` from now, clamping the final sample to
-        // the deadline itself: when the slack is not a multiple of the
-        // resolution, the naive `t += resolution` walk overshoots and never
-        // prices a trough sitting on the deadline boundary.
+        let mut out =
+            Vec::with_capacity(((horizon_s - now_s) / self.resolution_s) as usize + 2);
         let mut t = now_s;
         loop {
-            let i = trace.at(t);
+            out.push((t, intensity_at(t)));
+            if t >= horizon_s {
+                break;
+            }
+            t = (t + self.resolution_s).min(horizon_s);
+        }
+        out
+    }
+
+    /// Decide over a pre-sampled forecast whose first entry is "now". An
+    /// empty forecast (a task with no usable slack) always runs now.
+    pub fn decide_samples(&self, forecast: &[(f64, f64)]) -> DeferDecision {
+        let Some(&(t0, now_i)) = forecast.first() else {
+            return DeferDecision::RunNow { intensity: 0.0 };
+        };
+        let mut best_t = t0;
+        let mut best_i = now_i;
+        for &(t, i) in forecast {
             if i < best_i {
                 best_i = i;
                 best_t = t;
             }
-            if t >= deadline_s {
-                break;
-            }
-            t = (t + self.resolution_s).min(deadline_s);
         }
-        if best_t > now_s && best_i < now_i * (1.0 - self.min_gain) {
+        if best_t > t0 && best_i < now_i * (1.0 - self.min_gain) {
             DeferDecision::Defer { at_s: best_t, intensity: best_i }
         } else {
             DeferDecision::RunNow { intensity: now_i }
         }
+    }
+
+    /// Decide for a task arriving at `now_s` with slack until
+    /// `deadline_s` (absolute, experiment clock).
+    pub fn decide(&self, trace: &IntensityTrace, now_s: f64, deadline_s: f64) -> DeferDecision {
+        assert!(deadline_s >= now_s);
+        self.decide_samples(&self.forecast(|t| trace.at(t), now_s, deadline_s))
     }
 
     /// Expected carbon saving (grams) of the decision for a task of
@@ -147,6 +173,34 @@ mod tests {
         // Zero slack degenerates to a single sample at now.
         let d = p.decide(&trace, 0.0, 0.0);
         assert_eq!(d, DeferDecision::RunNow { intensity: 500.0 });
+    }
+
+    #[test]
+    fn forecast_walk_clamps_to_horizon() {
+        let p = DeferralPolicy { resolution_s: 300.0, min_gain: 0.05 };
+        let fc = p.forecast(|t| t, 0.0, 999.0);
+        let times: Vec<f64> = fc.iter().map(|&(t, _)| t).collect();
+        assert_eq!(times, vec![0.0, 300.0, 600.0, 900.0, 999.0]);
+        // Zero-width window: a single "now" sample.
+        assert_eq!(p.forecast(|_| 5.0, 10.0, 10.0), vec![(10.0, 5.0)]);
+    }
+
+    #[test]
+    fn decide_samples_matches_trace_decide_and_handles_empty() {
+        // The trace-walking decide and the pre-sampled decide are the same
+        // decision — the simulator's FleetView forecasts rely on it.
+        let p = DeferralPolicy { resolution_s: 300.0, min_gain: 0.05 };
+        let trace = IntensityTrace::Trace(vec![(0.0, 500.0), (999.0, 100.0)]);
+        let fc = p.forecast(|t| trace.at(t), 0.0, 999.0);
+        assert_eq!(p.decide_samples(&fc), p.decide(&trace, 0.0, 999.0));
+        let diurnal = diurnal();
+        let fc = p.forecast(|t| diurnal.at(t), 21_600.0, 21_600.0 + 86_400.0);
+        assert_eq!(
+            p.decide_samples(&fc),
+            p.decide(&diurnal, 21_600.0, 21_600.0 + 86_400.0)
+        );
+        // No forecast context -> run now, never a defer.
+        assert_eq!(p.decide_samples(&[]), DeferDecision::RunNow { intensity: 0.0 });
     }
 
     #[test]

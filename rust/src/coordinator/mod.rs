@@ -170,8 +170,11 @@ impl Coordinator {
         let mut records = Vec::with_capacity(inputs.len());
         let mut sched_ns: Vec<u64> = Vec::with_capacity(inputs.len());
         for x in inputs {
+            // Snapshot + decide together are the per-task scheduling cost
+            // (the snapshot does the state reads select used to do).
             let t0 = Instant::now();
-            let pick = scheduler.select(&task, registry.nodes());
+            let fleet = crate::scheduler::FleetView::observe(registry.nodes());
+            let pick = scheduler.decide(&task, &fleet).assigned();
             sched_ns.push(t0.elapsed().as_nanos() as u64);
             let i = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
             records.push(containers[i].infer(x.clone())?);

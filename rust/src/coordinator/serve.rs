@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use crate::metrics::RunReport;
 use crate::node::{Container, ExecutionRecord, NodeRegistry};
-use crate::scheduler::{Scheduler, TaskDemand};
+use crate::scheduler::{FleetView, Scheduler, TaskDemand};
 use crate::util::stats::mean_or_zero;
 use crate::workload::{Arrivals, RequestStream};
 
@@ -56,7 +56,8 @@ impl<'a> ServingLoop<'a> {
             Arrivals::ClosedLoop { .. } => {
                 for x in &inputs {
                     let t0 = Instant::now();
-                    let pick = scheduler.select(&self.demand, self.registry.nodes());
+                    let fleet = FleetView::observe(self.registry.nodes());
+                    let pick = scheduler.decide(&self.demand, &fleet).assigned();
                     sched_ms.push(t0.elapsed().as_secs_f64() * 1e3);
                     let idx = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
                     records.push(self.containers[idx].infer(x.clone())?);
@@ -81,7 +82,8 @@ impl<'a> ServingLoop<'a> {
                     if let Some((i, enq)) = queue.pop_front() {
                         queue_ms.push(enq.elapsed().as_secs_f64() * 1e3);
                         let t0 = Instant::now();
-                        let pick = scheduler.select(&self.demand, self.registry.nodes());
+                        let fleet = FleetView::observe(self.registry.nodes());
+                        let pick = scheduler.decide(&self.demand, &fleet).assigned();
                         sched_ms.push(t0.elapsed().as_secs_f64() * 1e3);
                         let idx = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
                         records.push(self.containers[idx].infer(inputs[i].clone())?);

@@ -114,8 +114,12 @@ impl Runner {
             }
             RunnerKind::Sched { sched, registry, containers } => {
                 let task = crate::scheduler::TaskDemand::default();
+                // The snapshot is part of the decision cost (it does the
+                // state reads the old select did internally), so it stays
+                // inside the timed region.
                 let t0 = std::time::Instant::now();
-                let pick = sched.select(&task, registry.nodes());
+                let fleet = crate::scheduler::FleetView::observe(registry.nodes());
+                let pick = sched.decide(&task, &fleet).assigned();
                 self.sched_ns.push(t0.elapsed().as_nanos() as u64);
                 let i = pick.ok_or_else(|| anyhow::anyhow!("no feasible node"))?;
                 self.records.push(containers[i].infer(input.clone())?);
@@ -473,7 +477,7 @@ pub fn scheduling_overhead(coord: &Coordinator, model: &str, iters: usize) -> Re
 // Virtual-time experiments (the L3.5 simulator — no artifacts required)
 // ---------------------------------------------------------------------------
 
-use crate::scheduler::RoundRobinScheduler;
+use crate::scheduler::{DeferAwareGreenScheduler, RoundRobinScheduler};
 use crate::sim::{scenarios, Scenario, SimReport, Simulation};
 
 /// Relative reduction of `new` vs `base` rendered as a percentage — `-`
@@ -581,6 +585,41 @@ pub fn sim_deferral_render(deferred: &SimReport, baseline: &SimReport) -> String
     out.push_str(&format!(
         "deferral cuts gCO2/req by {}\n",
         reduction_pct(deferred.carbon_per_req_g, baseline.carbon_per_req_g)
+    ));
+    out
+}
+
+/// Joint defer+route vs the legacy route-*then*-defer shape, on the same
+/// deferral-carrying scenario: a fresh [`DeferAwareGreenScheduler`] (its
+/// verdicts weigh every node's blended forecast and spread releases
+/// across the trough plateau) against plain Green mode, which the engine
+/// wraps in the [`crate::scheduler::RouteThenDefer`] gate. Same arrivals,
+/// same seed, same fleet. Returns `(joint_run, route_then_defer_run)`.
+pub fn sim_deferral_routing_comparison(sc: &Scenario) -> (SimReport, SimReport) {
+    let d = sc.config.deferral.as_ref().expect("scenario carries no deferral");
+    let mut joint = DeferAwareGreenScheduler::new(d.policy.min_gain);
+    (Simulation::run(sc, &mut joint), sim_run_mode(sc, Mode::Green))
+}
+
+pub fn sim_deferral_routing_render(joint: &SimReport, rtd: &SimReport) -> String {
+    let mut t = Table::new(
+        "Joint defer+route vs route-then-defer — same workload",
+        &["Scheduler", "gCO2/req", "Deferred", "Rejected", "Missed", "Wait p95 (ms)"],
+    );
+    for r in [rtd, joint] {
+        t.row(vec![
+            r.scheduler.clone(),
+            format!("{:.6}", r.carbon_per_req_g),
+            r.deferred.to_string(),
+            r.rejected.to_string(),
+            r.deadline_missed.to_string(),
+            f2(r.wait_ms.p95),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "deciding where+when jointly cuts gCO2/req by {} vs route-then-defer\n",
+        reduction_pct(joint.carbon_per_req_g, rtd.carbon_per_req_g),
     ));
     out
 }

@@ -7,7 +7,14 @@
 //! * **L3 (this crate)** — the coordinator: carbon monitor, carbon-aware
 //!   scheduler (Eq. 3–4, Algorithm 1), model partitioner (Eq. 5), deployer,
 //!   simulated heterogeneous edge nodes, workload drivers and the experiment
-//!   harness that regenerates every table/figure of the paper.
+//!   harness that regenerates every table/figure of the paper. Scheduling is
+//!   a single joint verdict: [`scheduler::Scheduler::decide`] answers
+//!   *where-or-when* ([`scheduler::SchedulingDecision`]: assign / defer /
+//!   reject) over a [`scheduler::FleetView`] snapshot carrying per-node
+//!   score inputs, queue-delay estimates, blended effective intensities and
+//!   short forecasts — [`scheduler::DeferAwareGreenScheduler`] trades node
+//!   against time in one decision, while
+//!   [`scheduler::RouteThenDefer`] preserves the legacy two-pass shape.
 //! * **L3.5** — the [`sim`] discrete-event fleet simulator: the same
 //!   schedulers, node models and carbon accounting driven on a *virtual*
 //!   clock instead of the real executor. Real execution for fidelity
@@ -16,8 +23,9 @@
 //!   model is two-part — per-node idle floors integrated against the grid
 //!   trace plus task-attributed dynamic power — so consolidation effects
 //!   are first-class, and arrivals carrying deadline slack can be
-//!   *deferred in-engine* to cleaner forecast slots
-//!   ([`carbon::DeferralPolicy`]), including against real
+//!   *deferred by the scheduler's own verdict* to cleaner forecast slots
+//!   (the engine builds per-node forecasts into each [`scheduler::FleetView`]
+//!   with [`carbon::DeferralPolicy`]), including against real
 //!   ElectricityMaps-style CSV intensity traces
 //!   ([`carbon::zone_traces_from_csv`]). Nodes may sit behind a local
 //!   [`microgrid`] (PV + battery): draw is covered PV-first, then battery,

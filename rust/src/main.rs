@@ -8,10 +8,12 @@
 //! carbonedge sweep [--step 0.05] [--iters 20]       # Fig. 3 weight sweep
 //! carbonedge overhead                               # scheduling overhead micro-report
 //! carbonedge sim --scenario <name|list> [--nodes N] [--requests M]
-//!               [--seed S] [--mode green [--json]] [--sweep [--step 0.1]]
+//!               [--seed S] [--mode green [--json]] [--scheduler defer-green]
+//!               [--sweep [--step 0.1]]
 //!               [--idle-w W] [--slack S [--headroom S] [--defer-resolution S]
 //!               [--defer-min-gain F]] [--no-defer] [--compare-defer]
-//!               [--trace-csv PATH] [--consolidate LARGE] [--list-scenarios]
+//!               [--compare-defer-routing] [--trace-csv PATH]
+//!               [--consolidate LARGE] [--list-scenarios]
 //!               [--pv-peak-w W | --pv-csv PATH] [--battery-wh WH]
 //!               [--battery-rt-eff F] [--compare-microgrid] [--help]
 //!                                                   # virtual-time fleet simulator
@@ -56,6 +58,7 @@ fn run() -> Result<()> {
         "help",
         "no-defer",
         "compare-defer",
+        "compare-defer-routing",
         "list-scenarios",
         "compare-microgrid",
     ])?;
@@ -253,6 +256,7 @@ fn run() -> Result<()> {
                     "defer-resolution",
                     "defer-min-gain",
                     "mode",
+                    "scheduler",
                     "step",
                     "pv-peak-w",
                     "pv-csv",
@@ -263,7 +267,14 @@ fn run() -> Result<()> {
                         anyhow::bail!("--consolidate does not combine with --{flag}");
                     }
                 }
-                for switch in ["sweep", "json", "no-defer", "compare-defer", "compare-microgrid"] {
+                for switch in [
+                    "sweep",
+                    "json",
+                    "no-defer",
+                    "compare-defer",
+                    "compare-defer-routing",
+                    "compare-microgrid",
+                ] {
                     if args.bool_flag(switch) {
                         anyhow::bail!("--consolidate does not combine with --{switch}");
                     }
@@ -362,14 +373,23 @@ fn run() -> Result<()> {
                 // This arm runs its own fixed green-mode A/B and returns:
                 // any other run-shaping knob would be silently ignored —
                 // reject loudly instead (the --consolidate precedent).
-                let conflicts =
-                    ["mode", "step", "slack", "headroom", "defer-resolution", "defer-min-gain"];
+                let conflicts = [
+                    "mode",
+                    "scheduler",
+                    "step",
+                    "slack",
+                    "headroom",
+                    "defer-resolution",
+                    "defer-min-gain",
+                ];
                 for flag in conflicts {
                     if args.has(flag) {
                         anyhow::bail!("--compare-microgrid does not combine with --{flag}");
                     }
                 }
-                for switch in ["sweep", "json", "no-defer", "compare-defer"] {
+                let switches =
+                    ["sweep", "json", "no-defer", "compare-defer", "compare-defer-routing"];
+                for switch in switches {
                     if args.bool_flag(switch) {
                         anyhow::bail!("--compare-microgrid does not combine with --{switch}");
                     }
@@ -421,8 +441,30 @@ fn run() -> Result<()> {
                          scenario like real-trace"
                     );
                 }
+                if args.has("scheduler") {
+                    anyhow::bail!(
+                        "--compare-defer always runs green mode; it does not combine \
+                         with --scheduler (try --compare-defer-routing)"
+                    );
+                }
                 let (deferred, baseline) = exp::sim_deferral_comparison(&sc);
                 println!("{}", exp::sim_deferral_render(&deferred, &baseline));
+                return Ok(());
+            }
+            if args.bool_flag("compare-defer-routing") {
+                if sc.config.deferral.is_none() {
+                    anyhow::bail!(
+                        "--compare-defer-routing needs deferral on: use --slack or a \
+                         deferral scenario like deferral-routing"
+                    );
+                }
+                if args.has("mode") || args.has("scheduler") || args.bool_flag("sweep") {
+                    anyhow::bail!(
+                        "--compare-defer-routing does not combine with --mode/--scheduler/--sweep"
+                    );
+                }
+                let (joint, rtd) = exp::sim_deferral_routing_comparison(&sc);
+                println!("{}", exp::sim_deferral_routing_render(&joint, &rtd));
                 return Ok(());
             }
             if args.bool_flag("sweep") {
@@ -432,6 +474,41 @@ fn run() -> Result<()> {
                 }
                 let points = exp::sim_weight_sweep(&sc, step);
                 println!("{}", exp::sim_sweep_render(&points));
+            } else if let Some(sched_name) = args.get("scheduler") {
+                if args.has("mode") {
+                    anyhow::bail!("--scheduler and --mode are mutually exclusive");
+                }
+                let mut sched: Box<dyn Scheduler> = match sched_name {
+                    "defer-green" => {
+                        // Joint defer+route: reuse the scenario's min-gain
+                        // knob so `--defer-min-gain` shapes both verdicts.
+                        let min_gain = sc
+                            .config
+                            .deferral
+                            .as_ref()
+                            .map(|d| d.policy.min_gain)
+                            .unwrap_or(carbonedge::carbon::DeferralPolicy::default().min_gain);
+                        Box::new(carbonedge::scheduler::DeferAwareGreenScheduler::new(min_gain))
+                    }
+                    "green" | "balanced" | "performance" | "perf" => {
+                        let mode = Mode::parse(sched_name).unwrap();
+                        Box::new(CarbonAwareScheduler::new(mode.name(), mode.weights()))
+                    }
+                    "round-robin" => Box::new(carbonedge::scheduler::RoundRobinScheduler::new()),
+                    "random" => Box::new(carbonedge::scheduler::RandomScheduler::new(seed)),
+                    "least-loaded" => Box::new(carbonedge::scheduler::LeastLoadedScheduler),
+                    "amp4ec" => Box::new(Amp4ecScheduler::new()),
+                    other => anyhow::bail!(
+                        "unknown --scheduler {other:?}; try defer-green|green|balanced|\
+                         performance|round-robin|random|least-loaded|amp4ec"
+                    ),
+                };
+                let report = carbonedge::sim::Simulation::run(&sc, sched.as_mut());
+                if args.bool_flag("json") {
+                    println!("{}", carbonedge::metrics::sim_report_to_json(&report));
+                } else {
+                    println!("{}", report.render());
+                }
             } else if let Some(mode_s) = args.get("mode") {
                 let mode = Mode::parse(mode_s).ok_or_else(|| anyhow::anyhow!("bad --mode"))?;
                 let report = exp::sim_run_mode(&sc, mode);
@@ -482,7 +559,11 @@ carbonedge sim — virtual-time fleet simulator (no artifacts needed)
   --seed S               master seed (default 42)
   --mode MODE            run one CE mode (green|balanced|performance); default
                          runs the monolithic baseline plus all three modes
-  --json                 with --mode: emit the report as JSON
+  --scheduler NAME       run one scheduler instead: defer-green (joint
+                         defer+route over the fleet forecast), green,
+                         balanced, performance, round-robin, random,
+                         least-loaded, amp4ec
+  --json                 with --mode/--scheduler: emit the report as JSON
   --sweep [--step F]     w_C weight sweep instead of a mode run
 
 energy model:
@@ -514,6 +595,10 @@ defers by default, like real-trace):
   --no-defer             strip deferral from scenarios that default to it
   --compare-defer        run the scenario with and without deferral, report
                          the gCO2/req delta and deadline misses
+  --compare-defer-routing
+                         A/B the joint defer-green scheduler against the
+                         legacy route-then-defer gate on the same workload
+                         (the deferral-routing scenario is built for it)
 
 real traces:
   --trace-csv PATH       with --scenario real-trace: load an

@@ -93,6 +93,8 @@ pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
                         ("tasks", num(n.tasks as f64)),
                         ("busy_ms", fnum(n.busy_ms)),
                         ("uptime_s", fnum(n.uptime_s)),
+                        ("queue_delay_ms_p50", fnum(n.queue_delay_ms_p50)),
+                        ("queue_delay_ms_max", fnum(n.queue_delay_ms_max)),
                         ("energy_kwh", fnum(n.energy_kwh())),
                         ("energy_dynamic_kwh", fnum(n.energy_dynamic_kwh)),
                         ("energy_idle_kwh", fnum(n.energy_idle_kwh)),
@@ -189,6 +191,12 @@ mod tests {
         let node0 = &back.req_arr("nodes").unwrap()[0];
         assert!(node0.req_f64("uptime_s").unwrap() > 0.0);
         assert!(node0.req_f64("carbon_idle_g").unwrap() == 0.0);
+        // Queue-delay estimates ride along per node.
+        assert!(node0.req_f64("queue_delay_ms_p50").unwrap() >= 0.0);
+        assert!(
+            node0.req_f64("queue_delay_ms_max").unwrap()
+                >= node0.req_f64("queue_delay_ms_p50").unwrap()
+        );
     }
 
     #[test]

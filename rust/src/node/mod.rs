@@ -158,6 +158,17 @@ pub struct NodeState {
     pub intensity_override: Option<f64>,
 }
 
+impl NodeState {
+    /// Queue-delay estimate (ms) from this snapshot: backlog (queued +
+    /// executing — the scheduler-visible `inflight`) × the measured mean
+    /// service time, falling back to `prior_ms` before any history exists.
+    /// The single source of the formula: [`EdgeNode::queue_delay_ms`] and
+    /// the scheduler's `NodeView` snapshot both price through it.
+    pub fn queue_delay_ms(&self, prior_ms: f64) -> f64 {
+        self.inflight as f64 * self.avg_ms.unwrap_or(prior_ms)
+    }
+}
+
 /// A live node: spec + shared state.
 #[derive(Debug)]
 pub struct EdgeNode {
@@ -187,6 +198,14 @@ impl EdgeNode {
         } else {
             self.spec.prior_ms
         }
+    }
+
+    /// Queue-delay estimate (ms) of the node's current state
+    /// ([`NodeState::queue_delay_ms`] at this node's prior). Callers
+    /// spreading work across `k` concurrent service slots divide by `k`
+    /// (the simulator's fleet views do, per its capacity table).
+    pub fn queue_delay_ms(&self) -> f64 {
+        self.state.lock().unwrap().queue_delay_ms(self.spec.prior_ms)
     }
 
     /// Grid intensity the scheduler should score against right now:
@@ -360,6 +379,20 @@ mod tests {
         assert_eq!(s.avg_ms, None);
         n.cancel_task(); // saturates, never underflows
         assert_eq!(n.state().inflight, 0);
+    }
+
+    #[test]
+    fn queue_delay_tracks_backlog_and_history() {
+        let n = EdgeNode::new(NodeSpec::paper_nodes().remove(0)); // prior 250 ms
+        assert_eq!(n.queue_delay_ms(), 0.0);
+        n.begin_task();
+        n.begin_task();
+        assert!((n.queue_delay_ms() - 500.0).abs() < 1e-12); // 2 × prior
+        // Measured history replaces the prior in the estimate.
+        n.finish_task(100.0, 0.0, 0.0);
+        assert!((n.queue_delay_ms() - 100.0).abs() < 1e-12); // 1 × measured
+        n.finish_task(300.0, 0.0, 0.0);
+        assert_eq!(n.queue_delay_ms(), 0.0); // backlog drained
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! Baseline schedulers the paper compares against (Sec. IV-A4) plus the
-//! standard strawmen used in the ablation benches.
+//! standard strawmen used in the ablation benches. All answer `decide`
+//! with `Assign`/`Reject` only — none of them defers, so under a deferral
+//! scenario the simulator wraps them in the legacy
+//! [`super::RouteThenDefer`] gate.
 
-use std::sync::Arc;
-
-use crate::node::EdgeNode;
 use crate::util::rng::Rng;
 
-use super::{CarbonAwareScheduler, Scheduler, TaskDemand, Weights};
+use super::{
+    CarbonAwareScheduler, FleetView, Scheduler, SchedulingDecision, TaskDemand, Weights,
+};
 
 /// AMP4EC (the authors' prior framework): the same NSA **without** carbon
 /// awareness — Eq. 3 with `w_C = 0` and the remaining weights in
@@ -30,8 +32,8 @@ impl Default for Amp4ecScheduler {
 }
 
 impl Scheduler for Amp4ecScheduler {
-    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
-        self.inner.select(task, nodes)
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        self.inner.decide(task, fleet)
     }
     fn name(&self) -> &str {
         "amp4ec"
@@ -56,15 +58,15 @@ impl Default for RoundRobinScheduler {
 }
 
 impl Scheduler for RoundRobinScheduler {
-    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
-        for k in 0..nodes.len() {
-            let i = (self.next + k) % nodes.len();
-            if nodes[i].fits(task.mem_mb, task.cpu) {
-                self.next = (i + 1) % nodes.len();
-                return Some(i);
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        for k in 0..fleet.nodes.len() {
+            let i = (self.next + k) % fleet.nodes.len();
+            if fleet.nodes[i].fits(task) {
+                self.next = (i + 1) % fleet.nodes.len();
+                return SchedulingDecision::Assign(i);
             }
         }
-        None
+        SchedulingDecision::reject()
     }
     fn name(&self) -> &str {
         "round-robin"
@@ -83,13 +85,13 @@ impl RandomScheduler {
 }
 
 impl Scheduler for RandomScheduler {
-    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
         let feasible: Vec<usize> =
-            (0..nodes.len()).filter(|&i| nodes[i].fits(task.mem_mb, task.cpu)).collect();
+            (0..fleet.nodes.len()).filter(|&i| fleet.nodes[i].fits(task)).collect();
         if feasible.is_empty() {
-            None
+            SchedulingDecision::reject()
         } else {
-            Some(feasible[self.rng.below(feasible.len())])
+            SchedulingDecision::Assign(feasible[self.rng.below(feasible.len())])
         }
     }
     fn name(&self) -> &str {
@@ -101,13 +103,16 @@ impl Scheduler for RandomScheduler {
 pub struct LeastLoadedScheduler;
 
 impl Scheduler for LeastLoadedScheduler {
-    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
-        nodes
-            .iter()
-            .enumerate()
-            .filter(|(_, n)| n.fits(task.mem_mb, task.cpu))
-            .min_by_key(|(_, n)| n.state().inflight)
-            .map(|(i, _)| i)
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        SchedulingDecision::from_choice(
+            fleet
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| v.fits(task))
+                .min_by_key(|(_, v)| v.state.inflight)
+                .map(|(i, _)| i),
+        )
     }
     fn name(&self) -> &str {
         "least-loaded"
@@ -119,15 +124,20 @@ mod tests {
     use super::*;
     use crate::node::NodeRegistry;
 
+    fn pick(s: &mut dyn Scheduler, task: &TaskDemand, r: &NodeRegistry) -> Option<usize> {
+        s.decide(task, &FleetView::observe(r.nodes())).assigned()
+    }
+
     #[test]
     fn amp4ec_ignores_carbon() {
         // AMP4EC must pick the fast node regardless of its intensity —
         // exactly why Table II shows it *increasing* carbon vs monolithic.
         let r = NodeRegistry::paper_setup();
         let mut s = Amp4ecScheduler::new();
-        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        let i = pick(&mut s, &TaskDemand::default(), &r).unwrap();
         assert_eq!(r.get(i).spec.name, "node-high");
         assert_eq!(s.name(), "amp4ec");
+        assert!(!s.defers());
     }
 
     #[test]
@@ -135,7 +145,7 @@ mod tests {
         let r = NodeRegistry::paper_setup();
         let mut s = RoundRobinScheduler::new();
         let picks: Vec<usize> =
-            (0..6).map(|_| s.select(&TaskDemand::default(), r.nodes()).unwrap()).collect();
+            (0..6).map(|_| pick(&mut s, &TaskDemand::default(), &r).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -146,7 +156,7 @@ mod tests {
         let task = TaskDemand { mem_mb: 800, ..TaskDemand::default() };
         let mut s = RoundRobinScheduler::new();
         for _ in 0..4 {
-            assert_eq!(s.select(&task, r.nodes()), Some(0));
+            assert_eq!(pick(&mut s, &task, &r), Some(0));
         }
     }
 
@@ -156,8 +166,8 @@ mod tests {
         let mut a = RandomScheduler::new(9);
         let mut b = RandomScheduler::new(9);
         for _ in 0..20 {
-            let x = a.select(&TaskDemand::default(), r.nodes());
-            let y = b.select(&TaskDemand::default(), r.nodes());
+            let x = pick(&mut a, &TaskDemand::default(), &r);
+            let y = pick(&mut b, &TaskDemand::default(), &r);
             assert_eq!(x, y);
             assert!(x.unwrap() < 3);
         }
@@ -168,17 +178,21 @@ mod tests {
         let r = NodeRegistry::paper_setup();
         r.get(0).begin_task();
         let mut s = LeastLoadedScheduler;
-        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        let i = pick(&mut s, &TaskDemand::default(), &r).unwrap();
         assert_ne!(i, 0);
     }
 
     #[test]
-    fn all_return_none_when_infeasible() {
+    fn all_reject_when_infeasible() {
         let r = NodeRegistry::paper_setup();
         let task = TaskDemand { mem_mb: 1 << 20, ..TaskDemand::default() };
-        assert!(Amp4ecScheduler::new().select(&task, r.nodes()).is_none());
-        assert!(RoundRobinScheduler::new().select(&task, r.nodes()).is_none());
-        assert!(RandomScheduler::new(1).select(&task, r.nodes()).is_none());
-        assert!(LeastLoadedScheduler.select(&task, r.nodes()).is_none());
+        let fleet = FleetView::observe(r.nodes());
+        assert_eq!(Amp4ecScheduler::new().decide(&task, &fleet), SchedulingDecision::reject());
+        assert_eq!(
+            RoundRobinScheduler::new().decide(&task, &fleet),
+            SchedulingDecision::reject()
+        );
+        assert_eq!(RandomScheduler::new(1).decide(&task, &fleet), SchedulingDecision::reject());
+        assert_eq!(LeastLoadedScheduler.decide(&task, &fleet), SchedulingDecision::reject());
     }
 }

@@ -1,0 +1,288 @@
+//! Deferral-aware scheduling over the [`FleetView`] forecast context.
+//!
+//! Two policies live here:
+//!
+//! * [`RouteThenDefer`] — the legacy two-pass shape as an adapter: route
+//!   first (any inner scheduler), then ask the [`DeferralPolicy`] whether
+//!   the *chosen node's* forecast holds a slot worth parking for. The
+//!   simulator wraps non-deferring schedulers in this gate when a scenario
+//!   configures deferral, which reproduces the old engine behaviour
+//!   bit-for-bit — except that the forecast it reads is the blended
+//!   microgrid-aware one, fixing the ROADMAP-flagged raw-grid bug.
+//! * [`DeferAwareGreenScheduler`] — the joint *where-or-when* policy the
+//!   `Decision` API unlocks: green-mode routing, but the defer question is
+//!   asked against the best `(node, slot)` pair across the whole feasible
+//!   fleet, not just the chosen node's own curve. A spill onto a dirty
+//!   node whose curve is flat no longer runs immediately when another
+//!   node's trough is within the deadline. Release slots are additionally
+//!   *spread* across the near-optimal plateau of the forecast (round-robin
+//!   over slots within [`DeferAwareGreenScheduler::plateau_tol`] of the
+//!   minimum), so parked work does not release as one thundering herd that
+//!   saturates the cleanest node and spills back onto dirty ones — the
+//!   queue-delay failure mode of route-then-defer under load.
+
+use crate::carbon::{DeferDecision, DeferralPolicy};
+
+use super::{CarbonAwareScheduler, FleetView, Mode, Scheduler, SchedulingDecision, TaskDemand};
+
+/// Legacy route-*then*-defer as a [`Scheduler`] adapter: the inner
+/// scheduler picks a node, then the policy may park the task for a cleaner
+/// slot on that node's forecast. Reports under the inner scheduler's name
+/// so wrapped runs stay comparable with historical reports.
+pub struct RouteThenDefer<S> {
+    inner: S,
+    policy: DeferralPolicy,
+}
+
+impl<S: Scheduler> RouteThenDefer<S> {
+    pub fn new(inner: S, policy: DeferralPolicy) -> RouteThenDefer<S> {
+        RouteThenDefer { inner, policy }
+    }
+}
+
+impl<S: Scheduler> Scheduler for RouteThenDefer<S> {
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        match self.inner.decide(task, fleet) {
+            SchedulingDecision::Assign(i) => {
+                match self.policy.decide_samples(&fleet.nodes[i].forecast) {
+                    DeferDecision::Defer { at_s, .. } if at_s > fleet.now_s => {
+                        SchedulingDecision::Defer { until_s: at_s }
+                    }
+                    _ => SchedulingDecision::Assign(i),
+                }
+            }
+            other => other,
+        }
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn defers(&self) -> bool {
+        true
+    }
+}
+
+/// Joint defer+route green scheduling: route with Green-mode weights, then
+/// defer only when the best forecast slot across the *whole feasible
+/// fleet* beats the chosen node's current effective intensity by at least
+/// `defer_min_gain`. Deferred releases are spread round-robin across the
+/// near-optimal forecast plateau (slots within `plateau_tol` of the
+/// minimum) instead of all targeting the single argmin slot.
+pub struct DeferAwareGreenScheduler {
+    inner: CarbonAwareScheduler,
+    /// Minimum relative gain of the best fleet-wide forecast slot over the
+    /// chosen node's current intensity required to defer (e.g. 0.05 = 5%).
+    pub defer_min_gain: f64,
+    /// Relative tolerance defining the release plateau: every slot with
+    /// intensity ≤ `min × (1 + plateau_tol)` is an acceptable release
+    /// target, and successive deferrals rotate across them.
+    pub plateau_tol: f64,
+    /// Forecast-bearing decisions seen so far — the plateau rotation
+    /// counter. It advances on every decision that *could* defer (not
+    /// only on those that do), matching the validated reference
+    /// implementation; candidate slot grids shift with each arrival's
+    /// walk anyway, so either convention spreads releases.
+    decisions: u64,
+}
+
+/// Default release-plateau tolerance: slots within 2% of the forecast
+/// minimum are treated as equally clean and shared round-robin.
+pub const DEFAULT_PLATEAU_TOL: f64 = 0.02;
+
+impl DeferAwareGreenScheduler {
+    pub fn new(defer_min_gain: f64) -> DeferAwareGreenScheduler {
+        assert!(
+            defer_min_gain.is_finite() && (0.0..=1.0).contains(&defer_min_gain),
+            "defer_min_gain must be in [0, 1], got {defer_min_gain}"
+        );
+        DeferAwareGreenScheduler {
+            inner: CarbonAwareScheduler::new("defer-green", Mode::Green.weights()),
+            defer_min_gain,
+            plateau_tol: DEFAULT_PLATEAU_TOL,
+            decisions: 0,
+        }
+    }
+}
+
+impl Scheduler for DeferAwareGreenScheduler {
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        let routed = self.inner.decide(task, fleet);
+        let SchedulingDecision::Assign(chosen) = routed else { return routed };
+        let now_fc = &fleet.nodes[chosen].forecast;
+        // No forecast context (no slack, or a released task): run now.
+        let Some(&(_, now_i)) = now_fc.first() else {
+            return SchedulingDecision::Assign(chosen);
+        };
+        self.decisions += 1;
+        // Per-slot minimum across the feasible fleet. Engine-built
+        // forecasts share one sampling walk, so slot j lines up across
+        // nodes; the min length guards hand-built views.
+        let feasible: Vec<&super::NodeView> = fleet
+            .nodes
+            .iter()
+            .filter(|v| v.feasible(task) && !v.forecast.is_empty())
+            .collect();
+        let slots = feasible.iter().map(|v| v.forecast.len()).min().unwrap_or(0);
+        let mut mins: Vec<(f64, f64)> = Vec::with_capacity(slots);
+        let mut best = f64::INFINITY;
+        for j in 0..slots {
+            let t = feasible[0].forecast[j].0;
+            let v = feasible.iter().map(|nv| nv.forecast[j].1).fold(f64::INFINITY, f64::min);
+            if t > fleet.now_s && v < best {
+                best = v;
+            }
+            mins.push((t, v));
+        }
+        // Joint verdict: defer only when somewhere in the fleet, sometime
+        // inside the deadline, beats running on the routed node right now.
+        if best >= now_i * (1.0 - self.defer_min_gain) {
+            return SchedulingDecision::Assign(chosen);
+        }
+        let plateau = best * (1.0 + self.plateau_tol);
+        let candidates: Vec<f64> = mins
+            .iter()
+            .filter(|&&(t, v)| t > fleet.now_s && v <= plateau)
+            .map(|&(t, _)| t)
+            .collect();
+        // With non-negative intensities and plateau_tol ≥ 0 the argmin slot
+        // always qualifies; guard anyway (plateau_tol is a pub knob) rather
+        // than panic on an empty plateau.
+        let Some(&until_s) =
+            candidates.get((self.decisions % candidates.len().max(1) as u64) as usize)
+        else {
+            return SchedulingDecision::Assign(chosen);
+        };
+        SchedulingDecision::Defer { until_s }
+    }
+
+    fn name(&self) -> &str {
+        "defer-green"
+    }
+
+    fn defers(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeRegistry;
+    use crate::scheduler::RoundRobinScheduler;
+
+    /// Paper fleet snapshot with per-node forecasts installed.
+    fn fleet_with_forecasts(forecasts: Vec<Vec<(f64, f64)>>) -> FleetView {
+        let r = NodeRegistry::paper_setup();
+        let mut f = FleetView::observe(r.nodes());
+        for (v, fc) in f.nodes.iter_mut().zip(forecasts) {
+            v.forecast = fc;
+        }
+        f
+    }
+
+    #[test]
+    fn gate_defers_on_the_chosen_nodes_forecast() {
+        // Fresh round-robin always picks node 0 first; its forecast has a
+        // 50% cleaner slot.
+        let gate = || {
+            RouteThenDefer::new(
+                RoundRobinScheduler::new(),
+                DeferralPolicy { resolution_s: 300.0, min_gain: 0.05 },
+            )
+        };
+        assert!(gate().defers());
+        assert_eq!(gate().name(), "round-robin");
+        let f = fleet_with_forecasts(vec![
+            vec![(0.0, 600.0), (300.0, 300.0)],
+            vec![(0.0, 100.0), (300.0, 100.0)],
+            vec![(0.0, 100.0), (300.0, 100.0)],
+        ]);
+        let task = TaskDemand::default();
+        assert_eq!(gate().decide(&task, &f), SchedulingDecision::Defer { until_s: 300.0 });
+        // Without forecast context the gate passes the assignment through.
+        let bare = fleet_with_forecasts(vec![Vec::new(), Vec::new(), Vec::new()]);
+        assert_eq!(gate().decide(&task, &bare), SchedulingDecision::Assign(0));
+        // A flat forecast (gain below the threshold) runs now too.
+        let flat = fleet_with_forecasts(vec![
+            vec![(0.0, 600.0), (300.0, 590.0)],
+            Vec::new(),
+            Vec::new(),
+        ]);
+        assert_eq!(gate().decide(&task, &flat), SchedulingDecision::Assign(0));
+        // Rejections pass through untouched.
+        let task_big = TaskDemand { mem_mb: 1 << 20, ..task };
+        assert_eq!(gate().decide(&task_big, &f), SchedulingDecision::reject());
+    }
+
+    #[test]
+    fn joint_defers_toward_another_nodes_trough() {
+        // Green routes to node-green (index 2, 380 g). Its own curve is
+        // flat — route-then-defer would run now — but node 0's forecast
+        // holds a deep trough: the joint verdict parks for it.
+        let mut s = DeferAwareGreenScheduler::new(0.05);
+        assert!(s.defers());
+        assert_eq!(s.name(), "defer-green");
+        let f = fleet_with_forecasts(vec![
+            vec![(0.0, 620.0), (300.0, 620.0), (600.0, 40.0)],
+            vec![(0.0, 530.0), (300.0, 530.0), (600.0, 530.0)],
+            vec![(0.0, 380.0), (300.0, 380.0), (600.0, 380.0)],
+        ]);
+        let task = TaskDemand::default();
+        assert_eq!(s.decide(&task, &f), SchedulingDecision::Defer { until_s: 600.0 });
+        // The legacy gate on the same view runs now (chosen curve is flat).
+        let mut gate = RouteThenDefer::new(
+            CarbonAwareScheduler::new("green", Mode::Green.weights()),
+            DeferralPolicy::default(),
+        );
+        assert_eq!(gate.decide(&task, &f), SchedulingDecision::Assign(2));
+    }
+
+    #[test]
+    fn joint_runs_now_without_sufficient_gain_or_forecast() {
+        let mut s = DeferAwareGreenScheduler::new(0.05);
+        let task = TaskDemand::default();
+        // Empty forecasts (a released task): assign, never defer.
+        let bare = fleet_with_forecasts(vec![Vec::new(), Vec::new(), Vec::new()]);
+        assert_eq!(s.decide(&task, &bare), SchedulingDecision::Assign(2));
+        // Future slots all within 5% of now: run now.
+        let flat = fleet_with_forecasts(vec![
+            vec![(0.0, 620.0), (300.0, 615.0)],
+            vec![(0.0, 530.0), (300.0, 528.0)],
+            vec![(0.0, 380.0), (300.0, 370.0)],
+        ]);
+        assert_eq!(s.decide(&task, &flat), SchedulingDecision::Assign(2));
+        // Nothing feasible: reject.
+        let task_big = TaskDemand { mem_mb: 1 << 20, ..task };
+        assert_eq!(s.decide(&task_big, &flat), SchedulingDecision::reject());
+    }
+
+    #[test]
+    fn plateau_spreads_release_slots_round_robin() {
+        // Three equally-clean future slots on the routed node: successive
+        // deferrals must rotate across all of them, not pile onto one.
+        let mut s = DeferAwareGreenScheduler::new(0.05);
+        let task = TaskDemand::default();
+        let fc = vec![(0.0, 380.0), (300.0, 100.0), (600.0, 100.0), (900.0, 101.0)];
+        let walk = |v: f64| vec![(0.0, v), (300.0, v), (600.0, v), (900.0, v)];
+        let mk = || fleet_with_forecasts(vec![walk(620.0), walk(530.0), fc.clone()]);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..6 {
+            match s.decide(&task, &mk()) {
+                SchedulingDecision::Defer { until_s } => {
+                    seen.insert(until_s as i64);
+                }
+                other => panic!("expected defer, got {other:?}"),
+            }
+        }
+        // 101 is within 2% of 100: all three slots share the plateau.
+        assert_eq!(seen.into_iter().collect::<Vec<_>>(), vec![300, 600, 900]);
+    }
+
+    #[test]
+    #[should_panic(expected = "defer_min_gain")]
+    fn bad_min_gain_rejected() {
+        DeferAwareGreenScheduler::new(1.5);
+    }
+}

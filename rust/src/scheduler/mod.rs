@@ -3,29 +3,86 @@
 //! score S_C (Eq. 4), the three operational modes (Table I), the node
 //! selection algorithm (Algorithm 1), and the non-carbon-aware baselines
 //! (AMP4EC NSA, round-robin, random, least-loaded).
+//!
+//! # The `decide` API
+//!
+//! Scheduling is a single joint verdict: [`Scheduler::decide`] takes a
+//! [`FleetView`] — a per-arrival immutable snapshot carrying, for every
+//! candidate node, the Algorithm-1 score inputs, a queue-delay estimate,
+//! the *blended* (microgrid-aware) effective carbon intensity, and an
+//! optional short intensity forecast out to the task's latest viable
+//! release slot — and answers [`SchedulingDecision`]: `Assign(i)` (where),
+//! `Defer { until_s }` (when), or `Reject` (neither). The paper's
+//! Algorithm 1 only ever answered "which node"; deferral ran as a separate
+//! route-then-defer pass in the simulator. Folding both into one verdict
+//! lets policies trade *where* against *when* jointly:
+//! [`RouteThenDefer`] reproduces the legacy two-pass shape as an adapter,
+//! and [`DeferAwareGreenScheduler`] answers jointly (and spreads releases
+//! across the forecast plateau so parked work doesn't stampede the
+//! cleanest node).
+//!
+//! Real-time callers with no forecast context snapshot the fleet with
+//! [`FleetView::observe`] and read the verdict via
+//! [`SchedulingDecision::assigned`].
 
 mod baselines;
+mod defer;
 mod modes;
 mod normalized;
 mod nsa;
 mod score;
+mod view;
 
 pub use baselines::{Amp4ecScheduler, LeastLoadedScheduler, RandomScheduler, RoundRobinScheduler};
+pub use defer::{DeferAwareGreenScheduler, RouteThenDefer, DEFAULT_PLATEAU_TOL};
 pub use modes::{Mode, Weights};
-pub use normalized::{ConstrainedGreenScheduler, NormalizedScheduler};
 pub use nsa::{CarbonAwareScheduler, SelectionTrace, LOAD_CUTOFF};
-pub use score::{carbon_score, score_breakdown, ScoreBreakdown, TaskDemand};
+pub use normalized::{ConstrainedGreenScheduler, NormalizedScheduler};
+pub use score::{carbon_score, score_breakdown, score_breakdown_view, ScoreBreakdown, TaskDemand};
+pub use view::{FleetView, NodeView, RejectReason, SchedulingDecision};
 
-use std::sync::Arc;
-
-use crate::node::EdgeNode;
-
-/// Node-selection interface shared by the carbon-aware scheduler and all
-/// baselines. Returns the index of the chosen node (None if no feasible
-/// node exists, Algorithm 1 line 18 with `n* = null`).
+/// Scheduling interface shared by the carbon-aware scheduler and all
+/// baselines: one [`SchedulingDecision`] per task over a [`FleetView`]
+/// snapshot. `Assign` indexes into `fleet.nodes`; `Reject` is Algorithm 1
+/// line 18 (`n* = null`); `Defer` parks the task for a cleaner forecast
+/// slot — only meaningful when the view carries forecast context, and only
+/// returned by schedulers whose [`Scheduler::defers`] is true.
 pub trait Scheduler: Send {
-    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize>;
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision;
 
     /// Human-readable name for reports.
     fn name(&self) -> &str;
+
+    /// Whether `decide` already weighs deferral jointly (may return
+    /// `Defer` verdicts itself). The simulator wraps schedulers that
+    /// don't in the legacy [`RouteThenDefer`] gate when a scenario
+    /// configures deferral, so baselines keep their historical
+    /// route-then-defer behaviour without knowing forecasts exist.
+    fn defers(&self) -> bool {
+        false
+    }
+}
+
+impl<T: Scheduler + ?Sized> Scheduler for &mut T {
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        (**self).decide(task, fleet)
+    }
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn defers(&self) -> bool {
+        (**self).defers()
+    }
+}
+
+impl<T: Scheduler + ?Sized> Scheduler for Box<T> {
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        (**self).decide(task, fleet)
+    }
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn defers(&self) -> bool {
+        (**self).defers()
+    }
 }

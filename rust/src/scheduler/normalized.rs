@@ -3,11 +3,10 @@
 //! "future work should explore per-decision min-max normalization or
 //! constraint-based optimization". Both are implemented here.
 
-use std::sync::Arc;
-
-use crate::node::EdgeNode;
-
-use super::{score_breakdown, Scheduler, ScoreBreakdown, TaskDemand, Weights, LOAD_CUTOFF};
+use super::{
+    score_breakdown_view, FleetView, Scheduler, SchedulingDecision, ScoreBreakdown, TaskDemand,
+    Weights,
+};
 
 /// NSA variant that min-max normalizes every score component across the
 /// feasible set before weighting, so a component's *spread* no longer
@@ -33,23 +32,19 @@ fn minmax(vals: &[f64]) -> Vec<f64> {
 }
 
 impl Scheduler for NormalizedScheduler {
-    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
         let mut feasible: Vec<(usize, ScoreBreakdown)> = Vec::new();
-        for (i, n) in nodes.iter().enumerate() {
-            let st = n.state();
-            if st.load > LOAD_CUTOFF || n.score_ms() > task.latency_threshold_ms {
+        for (i, view) in fleet.nodes.iter().enumerate() {
+            if !view.feasible(task) {
                 continue;
             }
-            if !n.fits(task.mem_mb, task.cpu) {
-                continue;
-            }
-            feasible.push((i, score_breakdown(n, task, &self.weights)));
+            feasible.push((i, score_breakdown_view(view, task, &self.weights)));
         }
         if feasible.is_empty() {
-            return None;
+            return SchedulingDecision::reject();
         }
         if feasible.len() == 1 {
-            return Some(feasible[0].0);
+            return SchedulingDecision::Assign(feasible[0].0);
         }
         let col = |f: fn(&ScoreBreakdown) -> f64| -> Vec<f64> {
             feasible.iter().map(|(_, b)| f(b)).collect()
@@ -62,14 +57,16 @@ impl Scheduler for NormalizedScheduler {
             minmax(&col(|b| b.s_c)),
         );
         let w = &self.weights;
-        feasible
-            .iter()
-            .enumerate()
-            .map(|(k, (i, _))| {
-                (*i, w.r * r[k] + w.l * l[k] + w.p * p[k] + w.b * bb[k] + w.c * c[k])
-            })
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .map(|(i, _)| i)
+        SchedulingDecision::from_choice(
+            feasible
+                .iter()
+                .enumerate()
+                .map(|(k, (i, _))| {
+                    (*i, w.r * r[k] + w.l * l[k] + w.p * p[k] + w.b * bb[k] + w.c * c[k])
+                })
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(i, _)| i),
+        )
     }
 
     fn name(&self) -> &str {
@@ -94,32 +91,29 @@ impl ConstrainedGreenScheduler {
 }
 
 impl Scheduler for ConstrainedGreenScheduler {
-    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
-        // One state snapshot per node: (index, T_avg, current intensity) —
-        // re-reading through the node accessors inside the comparators
-        // below would re-lock the state mutex per comparison.
-        let feasible: Vec<(usize, f64, f64)> = nodes
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        // The view already snapshots each node once: (index, T_avg,
+        // current effective intensity) per feasible node.
+        let feasible: Vec<(usize, f64, f64)> = fleet
+            .nodes
             .iter()
             .enumerate()
-            .filter_map(|(i, n)| {
-                let st = n.state();
-                let ms = n.score_ms();
-                if st.load <= LOAD_CUTOFF
-                    && ms <= task.latency_threshold_ms
-                    && n.fits(task.mem_mb, task.cpu)
-                {
-                    Some((i, ms, st.intensity_override.unwrap_or(n.spec.intensity)))
+            .filter_map(|(i, view)| {
+                if view.feasible(task) {
+                    Some((i, view.score_ms(), view.intensity))
                 } else {
                     None
                 }
             })
             .collect();
         let fastest = feasible.iter().map(|&(_, ms, _)| ms).fold(f64::MAX, f64::min);
-        feasible
-            .into_iter()
-            .filter(|&(_, ms, _)| ms <= fastest * self.latency_slack)
-            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
-            .map(|(i, _, _)| i)
+        SchedulingDecision::from_choice(
+            feasible
+                .into_iter()
+                .filter(|&(_, ms, _)| ms <= fastest * self.latency_slack)
+                .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+                .map(|(i, _, _)| i),
+        )
     }
 
     fn name(&self) -> &str {
@@ -132,6 +126,10 @@ mod tests {
     use super::*;
     use crate::node::NodeRegistry;
     use crate::scheduler::Mode;
+
+    fn pick(s: &mut dyn Scheduler, task: &TaskDemand, r: &NodeRegistry) -> Option<usize> {
+        s.decide(task, &FleetView::observe(r.nodes())).assigned()
+    }
 
     #[test]
     fn minmax_normalizes_and_handles_ties() {
@@ -146,7 +144,7 @@ mod tests {
         // green node — unlike the raw-score NSA (Table V).
         let r = NodeRegistry::paper_setup();
         let mut s = NormalizedScheduler::new("balanced-norm", Mode::Balanced.weights());
-        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        let i = pick(&mut s, &TaskDemand::default(), &r).unwrap();
         assert_eq!(r.get(i).spec.name, "node-green");
     }
 
@@ -154,7 +152,7 @@ mod tests {
     fn normalized_performance_still_routes_fast() {
         let r = NodeRegistry::paper_setup();
         let mut s = NormalizedScheduler::new("perf-norm", Mode::Performance.weights());
-        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        let i = pick(&mut s, &TaskDemand::default(), &r).unwrap();
         assert_eq!(r.get(i).spec.name, "node-high");
     }
 
@@ -163,9 +161,9 @@ mod tests {
         let r = NodeRegistry::paper_setup();
         let task = TaskDemand { mem_mb: 800, ..TaskDemand::default() }; // only node-high
         let mut s = NormalizedScheduler::new("x", Mode::Green.weights());
-        assert_eq!(s.select(&task, r.nodes()), Some(0));
+        assert_eq!(pick(&mut s, &task, &r), Some(0));
         let task = TaskDemand { mem_mb: 4096, ..TaskDemand::default() };
-        assert_eq!(s.select(&task, r.nodes()), None);
+        assert_eq!(pick(&mut s, &task, &r), None);
     }
 
     #[test]
@@ -173,12 +171,12 @@ mod tests {
         let r = NodeRegistry::paper_setup();
         // priors: high 250ms, green 625ms. Tight slack -> fastest node.
         let mut tight = ConstrainedGreenScheduler::new(1.05);
-        let pick = tight.select(&TaskDemand::default(), r.nodes()).unwrap();
-        assert_eq!(r.get(pick).spec.name, "node-high");
+        let i = pick(&mut tight, &TaskDemand::default(), &r).unwrap();
+        assert_eq!(r.get(i).spec.name, "node-high");
         // Loose slack admits the green node.
         let mut loose = ConstrainedGreenScheduler::new(3.0);
-        let pick = loose.select(&TaskDemand::default(), r.nodes()).unwrap();
-        assert_eq!(r.get(pick).spec.name, "node-green");
+        let i = pick(&mut loose, &TaskDemand::default(), &r).unwrap();
+        assert_eq!(r.get(i).spec.name, "node-green");
     }
 
     #[test]

@@ -1,10 +1,9 @@
-//! Algorithm 1: Carbon-Aware Node Selection.
+//! Algorithm 1: Carbon-Aware Node Selection, behind the `decide` verdict.
 
-use std::sync::Arc;
-
-use crate::node::EdgeNode;
-
-use super::{score_breakdown, Scheduler, ScoreBreakdown, TaskDemand, Weights};
+use super::{
+    score_breakdown_view, FleetView, Scheduler, SchedulingDecision, ScoreBreakdown, TaskDemand,
+    Weights,
+};
 
 /// Algorithm 1 line 3: skip nodes with load above this cutoff.
 pub const LOAD_CUTOFF: f64 = 0.8;
@@ -38,27 +37,18 @@ impl CarbonAwareScheduler {
         self
     }
 
-    /// Algorithm 1, lines 1–18.
-    pub fn select_traced(
-        &self,
-        task: &TaskDemand,
-        nodes: &[Arc<EdgeNode>],
-    ) -> SelectionTrace {
+    /// Algorithm 1, lines 1–18, over the fleet snapshot.
+    pub fn decide_traced(&self, task: &TaskDemand, fleet: &FleetView) -> SelectionTrace {
         let mut best_score = 0.0;
         let mut best: Option<usize> = None;
-        let mut breakdowns = vec![None; nodes.len()];
-        for (i, n) in nodes.iter().enumerate() {
-            let st = n.state();
-            // line 3: overload / latency filter
-            if st.load > LOAD_CUTOFF || n.score_ms() > task.latency_threshold_ms {
-                continue;
-            }
-            // line 6: has_sufficient_resources
-            if !n.fits(task.mem_mb, task.cpu) {
+        let mut breakdowns = vec![None; fleet.nodes.len()];
+        for (i, view) in fleet.nodes.iter().enumerate() {
+            // lines 3 + 6: overload / latency / resource filters
+            if !view.feasible(task) {
                 continue;
             }
             // lines 7–12: component scores + weighted total
-            let b = score_breakdown(n, task, &self.weights);
+            let b = score_breakdown_view(view, task, &self.weights);
             breakdowns[i] = Some(b);
             // lines 13–15: argmax
             if b.total > best_score {
@@ -71,13 +61,13 @@ impl CarbonAwareScheduler {
 }
 
 impl Scheduler for CarbonAwareScheduler {
-    fn select(&mut self, task: &TaskDemand, nodes: &[Arc<EdgeNode>]) -> Option<usize> {
-        let t = self.select_traced(task, nodes);
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        let t = self.decide_traced(task, fleet);
         let chosen = t.chosen;
         if self.trace {
             self.traces.push(t);
         }
-        chosen
+        SchedulingDecision::from_choice(chosen)
     }
 
     fn name(&self) -> &str {
@@ -88,10 +78,11 @@ impl Scheduler for CarbonAwareScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::node::{NodeRegistry, NodeSpec};
-    use crate::scheduler::Mode;
+    use crate::node::{EdgeNode, NodeRegistry, NodeSpec};
+    use crate::scheduler::{score_breakdown, Mode};
     use crate::util::proptest::check;
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
     fn reg() -> NodeRegistry {
         NodeRegistry::paper_setup()
@@ -101,11 +92,20 @@ mod tests {
         CarbonAwareScheduler::new(mode.name(), mode.weights())
     }
 
+    /// Decide over a live fleet the way real-time callers do.
+    fn pick(
+        s: &mut CarbonAwareScheduler,
+        task: &TaskDemand,
+        nodes: &[Arc<EdgeNode>],
+    ) -> Option<usize> {
+        s.decide(task, &FleetView::observe(nodes)).assigned()
+    }
+
     #[test]
     fn performance_mode_picks_node_high() {
         let r = reg();
         let mut s = sched(Mode::Performance);
-        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        let i = pick(&mut s, &TaskDemand::default(), r.nodes()).unwrap();
         assert_eq!(r.get(i).spec.name, "node-high");
     }
 
@@ -115,7 +115,7 @@ mod tests {
         // limited differentiation vs S_P (Sec. IV-F).
         let r = reg();
         let mut s = sched(Mode::Balanced);
-        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        let i = pick(&mut s, &TaskDemand::default(), r.nodes()).unwrap();
         assert_eq!(r.get(i).spec.name, "node-high");
     }
 
@@ -123,7 +123,7 @@ mod tests {
     fn green_mode_picks_node_green() {
         let r = reg();
         let mut s = sched(Mode::Green);
-        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        let i = pick(&mut s, &TaskDemand::default(), r.nodes()).unwrap();
         assert_eq!(r.get(i).spec.name, "node-green");
     }
 
@@ -138,7 +138,7 @@ mod tests {
             let r = reg();
             let mut s = sched(mode);
             for step in 0..50 {
-                let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+                let i = pick(&mut s, &TaskDemand::default(), r.nodes()).unwrap();
                 let n = r.get(i);
                 assert_eq!(n.spec.name, expect, "{mode:?} step {step}");
                 // simulate sequential execution: measured latency from the
@@ -167,7 +167,7 @@ mod tests {
         }
         assert!(r.get(0).state().load > LOAD_CUTOFF);
         let mut s = sched(Mode::Performance);
-        let i = s.select(&TaskDemand::default(), r.nodes()).unwrap();
+        let i = pick(&mut s, &TaskDemand::default(), r.nodes()).unwrap();
         assert_ne!(r.get(i).spec.name, "node-high");
     }
 
@@ -177,28 +177,32 @@ mod tests {
         let task = TaskDemand { latency_threshold_ms: 300.0, ..TaskDemand::default() };
         // priors: high 250 (ok), medium 417, green 625 (filtered)
         let mut s = sched(Mode::Green);
-        let i = s.select(&task, r.nodes()).unwrap();
+        let i = pick(&mut s, &task, r.nodes()).unwrap();
         assert_eq!(r.get(i).spec.name, "node-high");
     }
 
     #[test]
-    fn insufficient_resources_filtered() {
+    fn insufficient_resources_rejected() {
         let r = reg();
         // 800 MB fits only node-high (1024 MB).
         let task = TaskDemand { mem_mb: 800, ..TaskDemand::default() };
         let mut s = sched(Mode::Green);
-        let i = s.select(&task, r.nodes()).unwrap();
+        let i = pick(&mut s, &task, r.nodes()).unwrap();
         assert_eq!(r.get(i).spec.name, "node-high");
-        // 2 GB fits nothing.
+        // 2 GB fits nothing: an explicit Reject verdict, not a panic.
         let task = TaskDemand { mem_mb: 2048, ..TaskDemand::default() };
-        assert!(s.select(&task, r.nodes()).is_none());
+        assert_eq!(
+            s.decide(&task, &FleetView::observe(r.nodes())),
+            SchedulingDecision::reject()
+        );
+        assert!(!s.defers(), "plain NSA never defers");
     }
 
     #[test]
     fn trace_records_breakdowns() {
         let r = reg();
         let mut s = sched(Mode::Green).with_trace();
-        s.select(&TaskDemand::default(), r.nodes());
+        s.decide(&TaskDemand::default(), &FleetView::observe(r.nodes()));
         assert_eq!(s.traces.len(), 1);
         let t = &s.traces[0];
         assert!(t.breakdowns.iter().all(Option::is_some));
@@ -244,7 +248,7 @@ mod tests {
             },
             |(nodes, task)| {
                 let mut s = CarbonAwareScheduler::new("t", Mode::Green.weights());
-                if let Some(i) = s.select(task, nodes) {
+                if let Some(i) = pick(&mut s, task, nodes) {
                     let n = &nodes[i];
                     if !n.fits(task.mem_mb, task.cpu) {
                         return Err("chose node without resources".into());
@@ -286,13 +290,13 @@ mod tests {
                         alpha: 0.0,
                         overhead_ms: 0.0,
                         time_scale: 1.0,
-                    adaptive: false,
+                        adaptive: false,
                     })
                 };
                 let nodes = vec![mk("a", i1), mk("b", i2)];
                 let w = Weights { r: 0.0, l: 0.0, p: 0.0, b: 0.0, c: 1.0 };
                 let mut s = CarbonAwareScheduler::new("t", w);
-                let chosen = s.select(&TaskDemand::default(), &nodes).unwrap();
+                let chosen = pick(&mut s, &TaskDemand::default(), &nodes).unwrap();
                 let want = if i1 < i2 { 0 } else { 1 };
                 if chosen == want {
                     Ok(())
@@ -318,10 +322,10 @@ mod tests {
             |(nodes, seed)| {
                 let task = TaskDemand::default();
                 let mut s = CarbonAwareScheduler::new("t", Mode::Balanced.weights());
-                let a = s.select(&task, nodes).map(|i| nodes[i].spec.name.clone());
+                let a = pick(&mut s, &task, nodes).map(|i| nodes[i].spec.name.clone());
                 let mut shuffled: Vec<_> = nodes.clone();
                 Rng::new(*seed).shuffle(&mut shuffled);
-                let b = s.select(&task, &shuffled).map(|i| shuffled[i].spec.name.clone());
+                let b = pick(&mut s, &task, &shuffled).map(|i| shuffled[i].spec.name.clone());
                 // Ties may break differently; accept equal-score swaps by
                 // comparing scores instead of names when names differ.
                 if a == b {

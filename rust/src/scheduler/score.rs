@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::node::EdgeNode;
 
-use super::Weights;
+use super::{NodeView, Weights};
 
 /// Resource demand of an inference task (Algorithm 1's `t`).
 #[derive(Debug, Clone, Copy)]
@@ -74,34 +74,31 @@ pub fn carbon_score(intensity: f64, power_w: f64, avg_time_ms: f64) -> f64 {
     1.0 / (1.0 + intensity * e_est)
 }
 
-/// Full Eq. 3 breakdown for one node.
+/// Full Eq. 3 breakdown from a [`NodeView`] snapshot.
 ///
-/// Takes a single state snapshot and derives every component from it —
-/// this sits on the simulator's scheduling hot path (one call per node per
-/// arrival), so re-reading through the locking accessors (`state()`,
-/// `score_ms()`, `intensity()`) per component would triple the mutex
-/// traffic.
-pub fn score_breakdown(node: &Arc<EdgeNode>, task: &TaskDemand, w: &Weights) -> ScoreBreakdown {
-    let st = node.state();
-    let s_r = resource_score_from(&st, node, task);
+/// Every component derives from the view's single [`crate::node::NodeState`]
+/// snapshot — this sits on the simulator's scheduling hot path (one call
+/// per node per arrival), so re-reading through the locking node accessors
+/// per component would triple the mutex traffic. The carbon component
+/// prices the view's *effective* intensity, which carries the simulator's
+/// virtual-time (and microgrid-blended) override when one is installed.
+pub fn score_breakdown_view(view: &NodeView, task: &TaskDemand, w: &Weights) -> ScoreBreakdown {
+    let node = &view.node;
+    let st = &view.state;
+    let s_r = resource_score_from(st, node, task);
     let s_l = (1.0 - st.load).clamp(0.0, 1.0);
-    // The T_avg rule of EdgeNode::score_ms, from the snapshot in hand.
-    let avg_ms = if node.spec.adaptive {
-        st.avg_ms.unwrap_or(node.spec.prior_ms)
-    } else {
-        node.spec.prior_ms
-    };
+    // The T_avg rule of NodeView::score_ms, from the snapshot in hand.
+    let avg_ms = view.score_ms();
     let s_p = 1.0 / (1.0 + avg_ms / 1e3); // seconds
     let s_b = 1.0 / (1.0 + 2.0 * st.inflight as f64);
-    // Dynamic (virtual-time) intensity when the simulator installed one,
-    // static scenario otherwise.
-    let s_c = carbon_score(
-        st.intensity_override.unwrap_or(node.spec.intensity),
-        node.spec.rated_power_w,
-        avg_ms,
-    );
+    let s_c = carbon_score(view.intensity, node.spec.rated_power_w, avg_ms);
     let total = w.r * s_r + w.l * s_l + w.p * s_p + w.b * s_b + w.c * s_c;
     ScoreBreakdown { s_r, s_l, s_p, s_b, s_c, total }
+}
+
+/// Full Eq. 3 breakdown for one live node (snapshots it first).
+pub fn score_breakdown(node: &Arc<EdgeNode>, task: &TaskDemand, w: &Weights) -> ScoreBreakdown {
+    score_breakdown_view(&NodeView::observe(node, 1), task, w)
 }
 
 #[cfg(test)]

@@ -1,0 +1,270 @@
+//! The scheduling verdict and the fleet snapshot it is decided over.
+//!
+//! [`SchedulingDecision`] widens the old "which node" answer into a joint
+//! *where-or-when* verdict: assign to a node, defer to a cleaner forecast
+//! slot, or reject. [`FleetView`] is the per-arrival immutable snapshot a
+//! [`super::Scheduler`] decides against: one [`NodeView`] per candidate
+//! node carrying the Algorithm-1 score inputs (a [`NodeState`] snapshot),
+//! a queue-delay estimate, the *blended* effective carbon intensity
+//! (microgrid-aware, via `EdgeNode::intensity_override`), and — when the
+//! task carries deadline slack — a short forecast of that effective
+//! intensity out to the latest viable release slot. Decisions therefore
+//! see load, time and supply in one place instead of re-reading live node
+//! state mid-decision.
+
+use std::sync::Arc;
+
+use crate::node::{EdgeNode, NodeState};
+
+use super::{TaskDemand, LOAD_CUTOFF};
+
+/// Why a task could not be placed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// No node passes the Algorithm-1 feasibility filters (load cutoff,
+    /// latency threshold, resource fit) — line 18's `n* = null`.
+    NoFeasibleNode,
+}
+
+/// One scheduling verdict: *where* to run, *when* to run, or neither.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SchedulingDecision {
+    /// Run now on `FleetView::nodes[i]`.
+    Assign(usize),
+    /// Park the task and re-decide at `until_s` (virtual/experiment clock;
+    /// must be strictly after the view's `now_s` and inside the task's
+    /// deadline). Only meaningful when the view carried forecast context —
+    /// the engine treats an unhonourable defer as a rejection.
+    Defer { until_s: f64 },
+    /// No placement exists.
+    Reject { reason: RejectReason },
+}
+
+impl SchedulingDecision {
+    /// The standard rejection.
+    pub fn reject() -> SchedulingDecision {
+        SchedulingDecision::Reject { reason: RejectReason::NoFeasibleNode }
+    }
+
+    /// Lift the legacy `Option<usize>` selection into a verdict.
+    pub fn from_choice(choice: Option<usize>) -> SchedulingDecision {
+        match choice {
+            Some(i) => SchedulingDecision::Assign(i),
+            None => SchedulingDecision::reject(),
+        }
+    }
+
+    /// The assigned node index, if this verdict places the task now.
+    pub fn assigned(&self) -> Option<usize> {
+        match self {
+            SchedulingDecision::Assign(i) => Some(*i),
+            _ => None,
+        }
+    }
+}
+
+/// Immutable snapshot of one candidate node at decision time.
+#[derive(Debug, Clone)]
+pub struct NodeView {
+    /// The live node (spec + accessors) this view snapshots.
+    pub node: Arc<EdgeNode>,
+    /// Scheduler-visible state, captured once — deciding from the snapshot
+    /// instead of the live accessors keeps every score component coherent
+    /// (and saves the per-component mutex traffic).
+    pub state: NodeState,
+    /// Estimated wait before a task handed to this node starts executing
+    /// (seconds): backlog × mean service time ÷ concurrent service slots.
+    pub queue_delay_s: f64,
+    /// Effective carbon intensity the node would serve at right now
+    /// (gCO₂/kWh): the dynamic override when installed — the simulator
+    /// pushes the microgrid-*blended* value through it — else the static
+    /// spec scenario.
+    pub intensity: f64,
+    /// Short forecast of that effective intensity: `(t_s, gCO₂/kWh)`
+    /// samples from `now` (first entry) to the latest viable release slot,
+    /// at the deferral policy's resolution. Empty when the task carries no
+    /// usable slack (no deferral configured, a released/migrated task, or
+    /// an infinite deadline) — schedulers must not defer then.
+    pub forecast: Vec<(f64, f64)>,
+}
+
+impl NodeView {
+    /// Snapshot `node`. `service_slots` is the node's concurrent service
+    /// capacity (1 for plain serving paths); it divides the queue-delay
+    /// estimate.
+    pub fn observe(node: &Arc<EdgeNode>, service_slots: usize) -> NodeView {
+        let state = node.state();
+        let queue_delay_s =
+            state.queue_delay_ms(node.spec.prior_ms) / service_slots.max(1) as f64 / 1e3;
+        let intensity = state.intensity_override.unwrap_or(node.spec.intensity);
+        NodeView {
+            node: Arc::clone(node),
+            state,
+            queue_delay_s,
+            intensity,
+            forecast: Vec::new(),
+        }
+    }
+
+    /// The scheduler's T_avg (Eq. 4), from the snapshot: measured history
+    /// when the node is `adaptive`, else the static capability prior.
+    pub fn score_ms(&self) -> f64 {
+        if self.node.spec.adaptive {
+            self.state.avg_ms.unwrap_or(self.node.spec.prior_ms)
+        } else {
+            self.node.spec.prior_ms
+        }
+    }
+
+    /// Resource check (Algorithm 1 `has_sufficient_resources`).
+    pub fn fits(&self, task: &TaskDemand) -> bool {
+        self.node.fits(task.mem_mb, task.cpu)
+    }
+
+    /// The full Algorithm-1 line-3/6 feasibility filter: under the load
+    /// cutoff, inside the latency threshold, and resource-fitting.
+    pub fn feasible(&self, task: &TaskDemand) -> bool {
+        self.state.load <= LOAD_CUTOFF
+            && self.score_ms() <= task.latency_threshold_ms
+            && self.fits(task)
+    }
+}
+
+/// Per-arrival snapshot of the schedulable fleet.
+#[derive(Debug, Clone)]
+pub struct FleetView {
+    /// One view per candidate node; [`SchedulingDecision::Assign`] indexes
+    /// into this list.
+    pub nodes: Vec<NodeView>,
+    /// Decision time on the virtual/experiment clock (0 for real-time
+    /// serving paths, which decide "now" by definition).
+    pub now_s: f64,
+    /// Absolute deadline when the task carries slack (`None` = run
+    /// whenever): `now_s`..`deadline_s` is the defer window, and each
+    /// node's forecast already stops at the policy's headroom before it.
+    pub deadline_s: Option<f64>,
+}
+
+impl FleetView {
+    /// Snapshot a live fleet for an immediate (real-time) decision: no
+    /// virtual clock, no deadline slack, no forecasts, one service slot
+    /// per node. The serving and experiment paths decide through this; the
+    /// simulator builds richer views itself.
+    pub fn observe(nodes: &[Arc<EdgeNode>]) -> FleetView {
+        FleetView {
+            nodes: nodes.iter().map(|n| NodeView::observe(n, 1)).collect(),
+            now_s: 0.0,
+            deadline_s: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::{NodeRegistry, NodeSpec};
+
+    #[test]
+    fn decision_helpers() {
+        assert_eq!(SchedulingDecision::from_choice(Some(2)), SchedulingDecision::Assign(2));
+        assert_eq!(SchedulingDecision::from_choice(None), SchedulingDecision::reject());
+        assert_eq!(SchedulingDecision::Assign(1).assigned(), Some(1));
+        assert_eq!(SchedulingDecision::Defer { until_s: 9.0 }.assigned(), None);
+        assert_eq!(SchedulingDecision::reject().assigned(), None);
+        assert_eq!(
+            SchedulingDecision::reject(),
+            SchedulingDecision::Reject { reason: RejectReason::NoFeasibleNode }
+        );
+    }
+
+    #[test]
+    fn observe_snapshots_state_and_intensity() {
+        let r = NodeRegistry::paper_setup();
+        let v = NodeView::observe(r.get(0), 1);
+        assert_eq!(v.state.inflight, 0);
+        assert_eq!(v.queue_delay_s, 0.0);
+        assert_eq!(v.intensity, 620.0); // static spec scenario
+        assert!(v.forecast.is_empty());
+        // The override flows into the snapshot.
+        r.get(0).set_intensity(42.0);
+        assert_eq!(NodeView::observe(r.get(0), 1).intensity, 42.0);
+        // The view is a snapshot: later node mutations don't reach it.
+        r.get(0).begin_task();
+        assert_eq!(v.state.inflight, 0);
+    }
+
+    #[test]
+    fn queue_delay_scales_with_backlog_and_slots() {
+        let r = NodeRegistry::paper_setup();
+        let n = r.get(0); // prior 250 ms
+        n.begin_task();
+        n.begin_task();
+        // No history yet: estimate = backlog × prior.
+        let v = NodeView::observe(n, 1);
+        assert!((v.queue_delay_s - 2.0 * 0.250).abs() < 1e-12);
+        // Two service slots halve it.
+        let v2 = NodeView::observe(n, 2);
+        assert!((v2.queue_delay_s - 0.250).abs() < 1e-12);
+        // Measured history replaces the prior.
+        n.finish_task(100.0, 0.0, 0.0);
+        let v3 = NodeView::observe(n, 1);
+        assert!((v3.queue_delay_s - 0.100).abs() < 1e-12, "{}", v3.queue_delay_s);
+    }
+
+    #[test]
+    fn feasibility_mirrors_algorithm_1_filters() {
+        let r = NodeRegistry::paper_setup();
+        let task = TaskDemand::default();
+        let v = NodeView::observe(r.get(0), 1);
+        assert!(v.feasible(&task));
+        // Resource filter: 2 GB fits nothing.
+        let big = TaskDemand { mem_mb: 2048, ..task };
+        assert!(!v.feasible(&big));
+        // Latency filter: node-green's 625 ms prior exceeds 300 ms.
+        let tight = TaskDemand { latency_threshold_ms: 300.0, ..task };
+        assert!(!NodeView::observe(r.get(2), 1).feasible(&tight));
+        // Load filter: saturate past the cutoff.
+        let n = r.get(1);
+        for _ in 0..200 {
+            n.begin_task();
+            n.finish_task(10.0, 0.0, 0.0);
+            n.begin_task();
+        }
+        assert!(n.state().load > LOAD_CUTOFF);
+        assert!(!NodeView::observe(n, 1).feasible(&task));
+    }
+
+    #[test]
+    fn fleet_observe_covers_every_node() {
+        let r = NodeRegistry::paper_setup();
+        let f = FleetView::observe(r.nodes());
+        assert_eq!(f.len(), 3);
+        assert!(!f.is_empty());
+        assert_eq!(f.now_s, 0.0);
+        assert_eq!(f.deadline_s, None);
+        assert_eq!(f.nodes[2].node.spec.name, "node-green");
+    }
+
+    #[test]
+    fn score_ms_follows_adaptive_flag() {
+        let mut spec = NodeSpec::paper_nodes().remove(0);
+        spec.adaptive = true;
+        let n = EdgeNode::new(spec);
+        assert_eq!(NodeView::observe(&n, 1).score_ms(), 250.0); // prior cold-start
+        n.begin_task();
+        n.finish_task(90.0, 0.0, 0.0);
+        assert_eq!(NodeView::observe(&n, 1).score_ms(), 90.0); // measured
+        let fixed = EdgeNode::new(NodeSpec::paper_nodes().remove(0));
+        fixed.begin_task();
+        fixed.finish_task(90.0, 0.0, 0.0);
+        assert_eq!(NodeView::observe(&fixed, 1).score_ms(), 250.0); // prior
+    }
+}

@@ -11,10 +11,21 @@
 //! [`crate::node::NodeSpec::idle_w`] floor over virtual uptime (priced by
 //! piecewise integration of its [`IntensityTrace`], not at a single
 //! instant), and each task adds `dynamic_power_w × service` on top, priced
-//! at completion-time intensity (Eq. 2). Arrivals carrying slack may be
-//! **deferred** in-engine: a [`crate::carbon::DeferralPolicy`] parks them
-//! as [`EventKind::DeferredRelease`] events targeting the cleanest
-//! forecast slot inside their deadline.
+//! at completion-time intensity (Eq. 2).
+//!
+//! Scheduling is **verdict-driven**: every admission builds a
+//! [`FleetView`] snapshot — per-node state, queue-delay estimate, blended
+//! effective intensity, and (for slack-carrying arrivals) a forecast of
+//! that effective intensity out to the latest viable release slot — and
+//! the engine obeys the scheduler's [`SchedulingDecision`]: `Assign`
+//! dispatches, `Defer { until_s }` parks the task as an
+//! [`EventKind::DeferredRelease`], `Reject` counts it rejected. Schedulers
+//! that don't defer on their own ([`crate::scheduler::Scheduler::defers`]
+//! = false) are wrapped in the legacy [`RouteThenDefer`] gate when the
+//! scenario configures a [`DeferralSpec`], reproducing the historical
+//! route-then-defer behaviour — now against the *blended* forecast, so a
+//! charged battery or midday PV rightly suppresses a defer the raw grid
+//! curve would have taken.
 //!
 //! Nodes with an attached [`crate::microgrid::MicrogridSpec`] route both
 //! parts of their draw (idle floor + per-task dynamic power) through the
@@ -23,19 +34,20 @@
 //! only the grid-supplied joules bear carbon (priced at the slice-mean
 //! grid intensity, split between the idle and dynamic ledgers by draw
 //! share), and the scheduler-visible intensity override carries the
-//! *blended effective* intensity of the marginal task's supply mix. The
-//! deferral policy still reads the raw grid forecast — joint
-//! microgrid-aware deferral is future work (ROADMAP).
+//! *blended effective* intensity of the marginal task's supply mix. A
+//! microgrid node's forecast blends the same way, holding its state of
+//! charge at the decision-time value (the engine cannot know future
+//! draw, so the forecast is charge-frozen by construction).
 
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 
-use crate::carbon::{
-    emissions_g, joules_to_kwh, DeferDecision, DeferralPolicy, IntensityTrace, LedgerEntry,
-};
+use crate::carbon::{emissions_g, joules_to_kwh, DeferralPolicy, IntensityTrace, LedgerEntry};
 use crate::microgrid::Microgrid;
 use crate::node::EdgeNode;
-use crate::scheduler::{Scheduler, TaskDemand};
+use crate::scheduler::{
+    FleetView, NodeView, RouteThenDefer, Scheduler, SchedulingDecision, TaskDemand,
+};
 use crate::util::rng::Rng;
 
 use super::report::SimReport;
@@ -190,13 +202,13 @@ pub struct ChurnEvent {
 
 enum EventKind {
     Arrival,
-    /// A deferred request released at its chosen slot: re-scheduled against
-    /// fresh intensities and dispatched unconditionally (no re-deferral, so
-    /// a parked task can never livelock). Note the release re-runs node
-    /// selection, so a task parked for one node's trough may land elsewhere
-    /// if the fleet shifted meanwhile — the min-gain threshold is enforced
-    /// at decision time, not at execution. Deciding placement and timing
-    /// jointly is future work (ROADMAP).
+    /// A deferred request released at the slot the scheduler's verdict
+    /// chose: re-decided against fresh intensities with *no forecast
+    /// context*, so no scheduler can re-defer it (a parked task can never
+    /// livelock). The release re-runs routing, so a task parked for one
+    /// node's trough may land elsewhere if the fleet shifted meanwhile —
+    /// the min-gain threshold is enforced at decision time, not at
+    /// execution.
     DeferredRelease { arrival_s: f64, deadline_s: f64 },
     Completion { node: usize, arrival_s: f64, deadline_s: f64, service_ms: f64, energy_j: f64 },
     Churn { node: usize, up: bool },
@@ -233,10 +245,10 @@ pub struct Simulation<'a> {
     sc: &'a Scenario,
     nodes: Vec<Arc<EdgeNode>>,
     active: Vec<bool>,
-    /// Scheduler-visible view: the active nodes (rebuilt only on churn, so
-    /// the per-request hot path allocates nothing).
-    cache: Vec<Arc<EdgeNode>>,
-    /// Cache position → global node index.
+    /// Active-node cache: fleet-view position → global node index
+    /// (rebuilt only on churn, so the per-request hot path never rescans
+    /// the `active` table). `SchedulingDecision::Assign` indexes map back
+    /// through it.
     cache_idx: Vec<usize>,
     /// Per-node FIFO of waiting requests: `(arrival_s, deadline_s)`.
     queues: Vec<VecDeque<(f64, f64)>>,
@@ -265,6 +277,10 @@ pub struct Simulation<'a> {
     /// `(t, state-of-charge fraction)` samples per microgrid node, taken
     /// at every intensity refresh plus the horizon.
     soc_timeline: Vec<Vec<(f64, f64)>>,
+    /// Queue-delay estimates (ms) sampled per node at every dispatch — the
+    /// value the fleet view advertised for the chosen node at decision
+    /// time (backlog × mean service ÷ service slots).
+    queue_delay_ms: Vec<Vec<f64>>,
     latency_ms: Vec<f64>,
     wait_ms: Vec<f64>,
     energy_total_j: f64,
@@ -286,7 +302,28 @@ impl<'a> Simulation<'a> {
     /// Run `scenario` under `scheduler` and return the aggregated report.
     /// Node state is built fresh from the scenario specs, so identical
     /// (scenario, seed, fresh scheduler) triples produce identical reports.
+    ///
+    /// When the scenario configures a [`DeferralSpec`] and the scheduler
+    /// does not defer on its own, it is wrapped in the legacy
+    /// [`RouteThenDefer`] gate (route first, then park for the chosen
+    /// node's cleanest forecast slot) — the report keeps the inner
+    /// scheduler's name, so historical runs stay comparable.
     pub fn run(scenario: &'a Scenario, scheduler: &mut dyn Scheduler) -> SimReport {
+        let name = scheduler.name().to_string();
+        match &scenario.config.deferral {
+            Some(d) if !scheduler.defers() => {
+                let mut gate = RouteThenDefer::new(scheduler, d.policy.clone());
+                Simulation::run_inner(scenario, &mut gate, &name)
+            }
+            _ => Simulation::run_inner(scenario, scheduler, &name),
+        }
+    }
+
+    fn run_inner(
+        scenario: &'a Scenario,
+        scheduler: &mut dyn Scheduler,
+        scheduler_name: &str,
+    ) -> SimReport {
         let n = scenario.specs.len();
         assert!(n > 0, "scenario needs at least one node");
         assert_eq!(scenario.traces.len(), n, "one trace per node");
@@ -316,7 +353,6 @@ impl<'a> Simulation<'a> {
             sc: scenario,
             nodes: scenario.specs.iter().cloned().map(EdgeNode::new).collect(),
             active: vec![true; n],
-            cache: Vec::new(),
             cache_idx: Vec::new(),
             queues: (0..n).map(|_| VecDeque::new()).collect(),
             in_service: vec![0; n],
@@ -334,6 +370,7 @@ impl<'a> Simulation<'a> {
             battery_energy_j: vec![0.0; n],
             grid_energy_j: vec![0.0; n],
             soc_timeline,
+            queue_delay_ms: (0..n).map(|_| Vec::new()).collect(),
             latency_ms: Vec::with_capacity(scenario.requests),
             wait_ms: Vec::with_capacity(scenario.requests),
             energy_total_j: 0.0,
@@ -391,7 +428,7 @@ impl<'a> Simulation<'a> {
             }
         }
 
-        sim.into_report(scheduler.name())
+        sim.into_report(scheduler_name)
     }
 
     fn push(&mut self, t_s: f64, kind: EventKind) {
@@ -401,11 +438,9 @@ impl<'a> Simulation<'a> {
     }
 
     fn rebuild_cache(&mut self) {
-        self.cache.clear();
         self.cache_idx.clear();
-        for (i, n) in self.nodes.iter().enumerate() {
+        for i in 0..self.nodes.len() {
             if self.active[i] {
-                self.cache.push(Arc::clone(n));
                 self.cache_idx.push(i);
             }
         }
@@ -506,9 +541,56 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    /// Route one request through the scheduler; with `allow_defer`, first
-    /// ask the deferral policy (against the chosen node's forecast) whether
-    /// a cleaner slot inside the deadline is worth parking for.
+    /// Snapshot the schedulable fleet for one decision at `now_s`. With
+    /// `allow_defer` (and a finite deadline under a configured
+    /// [`DeferralSpec`]), each node view additionally carries a forecast
+    /// of its *effective* intensity — the raw trace for grid-only nodes,
+    /// the microgrid blend (at the decision-time state of charge and
+    /// marginal draw) for microgrid nodes — sampled by the policy's walk
+    /// out to `deadline − headroom`. Released and migrated tasks get no
+    /// forecast, so no scheduler can defer them (no re-deferral livelock).
+    fn fleet_view(&self, now_s: f64, deadline_s: f64, allow_defer: bool) -> FleetView {
+        let deferral = if allow_defer && deadline_s.is_finite() {
+            self.sc.config.deferral.as_ref()
+        } else {
+            None
+        };
+        // Advertising window for the battery term of a blended forecast
+        // sample — the same window the refresh path blends with.
+        let sustain_s = self.sc.config.intensity_refresh_s.max(1.0);
+        let nodes = self
+            .cache_idx
+            .iter()
+            .map(|&g| {
+                let mut view = NodeView::observe(&self.nodes[g], self.sc.capacity[g]);
+                if let Some(d) = deferral {
+                    let horizon = (deadline_s - d.headroom_s).max(now_s);
+                    let trace = &self.sc.traces[g];
+                    view.forecast = match &self.microgrids[g] {
+                        Some(mg) => {
+                            let draw_w = self.marginal_draw_w(g);
+                            d.policy.forecast(
+                                |t| mg.effective_intensity(t, draw_w, trace.at(t), sustain_s),
+                                now_s,
+                                horizon,
+                            )
+                        }
+                        None => d.policy.forecast(|t| trace.at(t), now_s, horizon),
+                    };
+                }
+                view
+            })
+            .collect();
+        FleetView { nodes, now_s, deadline_s: deadline_s.is_finite().then_some(deadline_s) }
+    }
+
+    /// Route one request through the scheduler's verdict: `Assign`
+    /// dispatches onto the chosen node, `Defer` parks the request as a
+    /// [`EventKind::DeferredRelease`] at the scheduler's slot, `Reject`
+    /// counts it rejected. A defer verdict the engine cannot honour (no
+    /// slack context, a non-future slot, or one past the deadline) is a
+    /// rejection — in-tree schedulers never produce one, because they only
+    /// defer toward slots of the view's own forecast.
     fn admit(
         &mut self,
         arrival_s: f64,
@@ -517,24 +599,21 @@ impl<'a> Simulation<'a> {
         allow_defer: bool,
         scheduler: &mut dyn Scheduler,
     ) {
-        let sc = self.sc;
-        match scheduler.select(&sc.config.demand, &self.cache) {
-            None => self.rejected += 1,
-            Some(ci) => {
+        let view = self.fleet_view(now_s, deadline_s, allow_defer);
+        match scheduler.decide(&self.sc.config.demand, &view) {
+            SchedulingDecision::Assign(ci) => {
                 let g = self.cache_idx[ci];
-                if allow_defer && deadline_s.is_finite() {
-                    if let Some(d) = &sc.config.deferral {
-                        let horizon = (deadline_s - d.headroom_s).max(now_s);
-                        if let DeferDecision::Defer { at_s, .. } =
-                            d.policy.decide(&sc.traces[g], now_s, horizon)
-                        {
-                            self.deferred += 1;
-                            self.push(at_s, EventKind::DeferredRelease { arrival_s, deadline_s });
-                            return;
-                        }
-                    }
-                }
-                self.dispatch(g, arrival_s, now_s, deadline_s);
+                let qd_ms = view.nodes[ci].queue_delay_s * 1e3;
+                self.dispatch(g, qd_ms, arrival_s, now_s, deadline_s);
+            }
+            SchedulingDecision::Defer { until_s }
+                if allow_defer && until_s > now_s && until_s <= deadline_s =>
+            {
+                self.deferred += 1;
+                self.push(until_s, EventKind::DeferredRelease { arrival_s, deadline_s });
+            }
+            SchedulingDecision::Defer { .. } | SchedulingDecision::Reject { .. } => {
+                self.rejected += 1
             }
         }
     }
@@ -542,8 +621,19 @@ impl<'a> Simulation<'a> {
     /// Assign a request (original arrival time `arrival_s`) to node `g` at
     /// virtual time `now`. `begin_task` here — before service starts — so
     /// schedulers observe backlog (queued + executing) as `inflight`.
-    fn dispatch(&mut self, g: usize, arrival_s: f64, now_s: f64, deadline_s: f64) {
+    /// `queue_delay_est_ms` is the estimate the decision's [`FleetView`]
+    /// advertised for this node; it is recorded verbatim so the report's
+    /// per-node p50/max are exactly what the scheduler saw.
+    fn dispatch(
+        &mut self,
+        g: usize,
+        queue_delay_est_ms: f64,
+        arrival_s: f64,
+        now_s: f64,
+        deadline_s: f64,
+    ) {
         debug_assert!(self.active[g], "dispatch onto inactive node {g}");
+        self.queue_delay_ms[g].push(queue_delay_est_ms);
         self.nodes[g].begin_task();
         self.queues[g].push_back((arrival_s, deadline_s));
         self.try_start(g, now_s);
@@ -688,13 +778,18 @@ impl<'a> Simulation<'a> {
         let pending: Vec<(f64, f64)> = self.queues[g].drain(..).collect();
         for (arrival_s, deadline_s) in pending {
             self.nodes[g].cancel_task();
-            match scheduler.select(&self.sc.config.demand, &self.cache) {
-                None => self.rejected += 1,
-                Some(ci) => {
+            // One fresh view per migrated task: each dispatch changes the
+            // backlog the next decision must see. Migration never defers
+            // (no forecast in the view), matching the release path.
+            let view = self.fleet_view(t_s, deadline_s, false);
+            match scheduler.decide(&self.sc.config.demand, &view) {
+                SchedulingDecision::Assign(ci) => {
                     let ng = self.cache_idx[ci];
+                    let qd_ms = view.nodes[ci].queue_delay_s * 1e3;
                     self.migrated += 1;
-                    self.dispatch(ng, arrival_s, t_s, deadline_s);
+                    self.dispatch(ng, qd_ms, arrival_s, t_s, deadline_s);
                 }
+                _ => self.rejected += 1,
             }
         }
     }
@@ -735,11 +830,14 @@ impl<'a> Simulation<'a> {
                 } else {
                     (0.0, 0.0, e.energy_kwh + idle_kwh)
                 };
+                let qd = super::report::summary_or_zero(&self.queue_delay_ms[i]);
                 super::report::NodeUsage {
                     name: spec.name.clone(),
                     tasks: e.tasks,
                     busy_ms: self.nodes[i].state().busy_ms,
                     uptime_s: self.uptime_s[i],
+                    queue_delay_ms_p50: qd.p50,
+                    queue_delay_ms_max: qd.max,
                     energy_dynamic_kwh: e.energy_kwh,
                     energy_idle_kwh: idle_kwh,
                     carbon_dynamic_g: e.carbon_g,
@@ -1035,6 +1133,64 @@ mod tests {
         safe.config.base_exec_ms = SimConfig::default().base_exec_ms;
         let rs = Simulation::run(&safe, &mut s);
         assert_eq!(rs.deadline_missed, 0, "short service leaves the deadline intact");
+    }
+
+    #[test]
+    fn full_battery_suppresses_raw_grid_deferral() {
+        use crate::microgrid::{BatterySpec, MicrogridSpec, PvProfile};
+        // ROADMAP-flagged bugfix pin: a stepped dirty→clean grid that the
+        // raw curve would park everything for, behind a full battery. The
+        // node's *blended* effective intensity is ~0 right now (the battery
+        // covers the marginal draw carbon-free), so no future slot can
+        // clear the min-gain bar — deferring would only delay work the
+        // battery serves cleanly today. The old engine consulted the raw
+        // grid trace and parked all of it.
+        let mut sc = one_node_scenario(10, 1.0, 1);
+        sc.traces =
+            vec![IntensityTrace::from_samples(vec![(0.0, 800.0), (100.0, 100.0)]).unwrap()];
+        sc.config.deferral = Some(DeferralSpec {
+            slack_s: 200.0,
+            headroom_s: 10.0,
+            policy: DeferralPolicy { resolution_s: 5.0, min_gain: 0.05 },
+        });
+        sc.microgrids = vec![Some(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec::simple(5_000.0, 1.0, 1.0),
+        })];
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        assert_eq!(r.completed, 10);
+        assert_eq!(r.deferred, 0, "charged battery must suppress the grid-curve defer");
+        assert_eq!(r.deadline_missed, 0);
+        assert_eq!(r.carbon_g_total, 0.0, "the battery supplies every joule");
+        assert!(r.energy_battery_kwh_total > 0.0);
+        // The identical grid-only twin still parks everything — exactly
+        // the defer the blended forecast suppressed.
+        let mut twin = sc.clone();
+        twin.microgrids = Vec::new();
+        let rt = Simulation::run(&twin, &mut s);
+        assert_eq!(rt.deferred, 10);
+        assert!(rt.carbon_g_total > 0.0);
+    }
+
+    #[test]
+    fn queue_delay_estimates_surface_in_the_report() {
+        // Saturated single node: backlog builds, so dispatch-time
+        // queue-delay estimates grow past zero; the report carries their
+        // p50/max per node.
+        let sc = one_node_scenario(200, 50.0, 1);
+        let mut s = RoundRobinScheduler::new();
+        let r = Simulation::run(&sc, &mut s);
+        let n = &r.nodes[0];
+        assert!(n.queue_delay_ms_p50 > 0.0, "saturation must show up: {n:?}");
+        assert!(n.queue_delay_ms_max >= n.queue_delay_ms_p50);
+        // The estimate is backlog × service: with ~200 queued tasks at
+        // ~206 ms service the max sits in the tens of seconds.
+        assert!(n.queue_delay_ms_max > 10_000.0, "max {}", n.queue_delay_ms_max);
+        // An unsaturated run never queues: every estimate is zero.
+        let r0 = Simulation::run(&one_node_scenario(10, 1.0, 1), &mut s);
+        assert_eq!(r0.nodes[0].queue_delay_ms_p50, 0.0);
+        assert_eq!(r0.nodes[0].queue_delay_ms_max, 0.0);
     }
 
     #[test]

@@ -21,11 +21,17 @@
 //!   time-varying [`crate::carbon::IntensityTrace`] — so both consolidation
 //!   effects (fewer busy nodes beat many idle ones) and `Diurnal`/`Trace`
 //!   grids sit on the accounting path;
-//! * **in-engine carbon deferral** ([`DeferralSpec`]): arrivals carrying
-//!   slack may be parked by a [`crate::carbon::DeferralPolicy`] until a
-//!   cleaner forecast slot, with `deferred`/`deadline_missed` counters in
-//!   the report; the `real-trace` scenario exercises it against an
-//!   ElectricityMaps-style CSV day curve;
+//! * **verdict-driven carbon deferral** ([`DeferralSpec`]): arrivals
+//!   carrying slack get per-node *effective-intensity forecasts* built
+//!   into their [`crate::scheduler::FleetView`], and the scheduler's own
+//!   [`crate::scheduler::SchedulingDecision`] says run-here or
+//!   park-until-then (`deferred`/`deadline_missed` counters in the
+//!   report). Non-deferring schedulers are wrapped in the legacy
+//!   [`crate::scheduler::RouteThenDefer`] gate;
+//!   [`crate::scheduler::DeferAwareGreenScheduler`] decides *where and
+//!   when* jointly. `real-trace` exercises the gate against an
+//!   ElectricityMaps-style CSV day curve, `deferral-routing` the joint
+//!   policy under contention;
 //! * **per-node microgrids** ([`crate::microgrid`]): a node may sit behind
 //!   a PV array + battery; both parts of its draw are then covered
 //!   PV-first, then battery, then grid (settled slice-by-slice along the
@@ -35,10 +41,13 @@
 //!   charge — feeds `EdgeNode::intensity_override`, so carbon-aware modes
 //!   follow the sun and the charge (`solar-battery`, `microgrid-fleet`
 //!   scenarios; [`crate::experiments::sim_microgrid`]);
-//! * scheduling through the existing [`crate::scheduler::Scheduler`] trait:
-//!   schedulers see queue depth + in-flight as `inflight`, and the current
-//!   virtual-time grid (or blended microgrid) intensity via
-//!   `EdgeNode::intensity()`.
+//! * scheduling through the [`crate::scheduler::Scheduler`] `decide` API:
+//!   every admission snapshots a [`crate::scheduler::FleetView`] — per-node
+//!   state (queue depth + in-flight as `inflight`), a queue-delay estimate
+//!   (backlog × mean service ÷ service slots, reported per node as
+//!   p50/max), the current virtual-time grid (or blended microgrid)
+//!   intensity, and forecast context for slack-carrying arrivals — and the
+//!   engine obeys the returned verdict.
 //!
 //! Identical seeds produce identical [`SimReport`]s; millions of simulated
 //! requests run in seconds (`benches/sim.rs`). The scenario library lives

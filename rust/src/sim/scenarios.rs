@@ -25,6 +25,12 @@
 //!   CSV) day of hourly grid intensities for three zones, arrivals over the
 //!   first half-day, and **in-engine deferral on by default** (6 h slack):
 //!   morning-peak work parks until the midday solar trough.
+//! * **`deferral-routing`** — the `real-trace` zone fleet with one
+//!   service slot per node and ~1 s tasks: enough contention that routing
+//!   spills across zones and parked work can stampede the clean zone's
+//!   trough. Built for the joint defer+route A/B
+//!   ([`crate::experiments::sim_deferral_routing_comparison`],
+//!   `--compare-defer-routing`, `--scheduler defer-green`).
 //! * **`consolidation`** — an N-node (default 12) fleet of identical
 //!   idle-capable hosts ([`crate::energy::HostPowerModel`] split: ≈142 W
 //!   rated / ≈54 W idle floor) under a load only ~3 nodes' worth: run it at
@@ -58,6 +64,7 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "bursty",
     "churn",
     "real-trace",
+    "deferral-routing",
     "consolidation",
     "solar-battery",
     "microgrid-fleet",
@@ -100,6 +107,7 @@ pub fn build(name: &str, nodes: usize, requests: usize, seed: u64) -> Option<Sce
             real_trace_from_csv(BUNDLED_GRID_DAY_CSV, nodes, requests, seed)
                 .expect("bundled grid-day CSV is valid"),
         ),
+        "deferral-routing" => Some(deferral_routing(nodes, requests, seed)),
         "consolidation" => {
             Some(consolidation(if nodes == 0 { 12 } else { nodes }, requests, seed))
         }
@@ -332,6 +340,31 @@ pub fn real_trace_from_csv(
     })
 }
 
+/// Mean real-executor time per request in the `deferral-routing` scenario
+/// (ms): ≈ 1 s of service per task on the paper chassis, so the clean
+/// zone genuinely contends and routing spills are common — the regime
+/// where deciding *where* and *when* jointly beats route-then-defer.
+pub const DEFERRAL_ROUTING_BASE_EXEC_MS: f64 = 48.0;
+
+/// The joint defer+route showcase: the `real-trace` zone fleet with one
+/// service slot per node and ~1 s tasks. Under route-then-defer, parked
+/// work stampedes the cleanest zone at its trough (the whole backlog
+/// targets the single argmin slot), saturates it past the load cutoff and
+/// spills onto dirty grids — at high request counts it even rejects a
+/// large share outright. [`crate::scheduler::DeferAwareGreenScheduler`]
+/// decides jointly over every node's blended forecast and spreads
+/// releases across the trough plateau, absorbing the same workload
+/// cleanly ([`crate::experiments::sim_deferral_routing_comparison`] is
+/// the A/B).
+fn deferral_routing(nodes: usize, requests: usize, seed: u64) -> Scenario {
+    let mut sc = real_trace_from_csv(BUNDLED_GRID_DAY_CSV, nodes, requests, seed)
+        .expect("bundled grid-day CSV is valid");
+    sc.name = "deferral-routing".into();
+    sc.capacity = vec![1; sc.specs.len()];
+    sc.config.base_exec_ms = DEFERRAL_ROUTING_BASE_EXEC_MS;
+    sc
+}
+
 /// Fixed reference fleet size whose service capacity the `consolidation`
 /// arrival rate is derived from — so the *same* workload can be replayed
 /// against any fleet size and only the number of idle floors changes.
@@ -533,6 +566,7 @@ mod tests {
         assert_eq!(build("bursty", 0, 0, 1).unwrap().specs.len(), 3);
         assert_eq!(build("churn", 0, 0, 1).unwrap().specs.len(), 10);
         assert_eq!(build("real-trace", 0, 0, 1).unwrap().specs.len(), 3); // one per zone
+        assert_eq!(build("deferral-routing", 0, 0, 1).unwrap().specs.len(), 3);
         assert_eq!(build("consolidation", 0, 0, 1).unwrap().specs.len(), 12);
         assert_eq!(build("solar-battery", 0, 0, 1).unwrap().specs.len(), 4);
         assert_eq!(build("microgrid-fleet", 0, 0, 1).unwrap().specs.len(), 12);
@@ -570,6 +604,27 @@ mod tests {
         assert!(big.specs[3].name.contains("DE"));
         // A broken CSV is a clean error, not a panic.
         assert!(real_trace_from_csv("datetime,zone\n", 0, 0, 1).is_err());
+    }
+
+    #[test]
+    fn deferral_routing_scenario_shape() {
+        let sc = build("deferral-routing", 0, 0, 3).unwrap();
+        let rt = build("real-trace", 0, 0, 3).unwrap();
+        assert_eq!(sc.name, "deferral-routing");
+        // Same zone fleet and deferral contract as real-trace…
+        assert_eq!(sc.specs.len(), rt.specs.len());
+        for (a, b) in sc.specs.iter().zip(&rt.specs) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.intensity, b.intensity);
+        }
+        let d = sc.config.deferral.as_ref().expect("deferral on by default");
+        assert_eq!(d.slack_s, REAL_TRACE_SLACK_S);
+        assert_eq!(sc.arrivals.mean_rate_hz(), rt.arrivals.mean_rate_hz());
+        // …but single service slots and ~1 s tasks: the contention regime.
+        assert!(sc.capacity.iter().all(|&c| c == 1));
+        assert_eq!(sc.config.base_exec_ms, DEFERRAL_ROUTING_BASE_EXEC_MS);
+        let service = sc.specs[0].simulate_latency_ms(sc.config.base_exec_ms);
+        assert!((900.0..1_200.0).contains(&service), "service {service} ms");
     }
 
     #[test]
