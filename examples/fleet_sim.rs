@@ -3,9 +3,11 @@
 //! a churning fleet migrate its queues, see idle-floor accounting make
 //! consolidation visible, park morning-peak work for the midday solar
 //! trough with in-engine deferral, put PV + battery microgrids behind
-//! the fleet, and let the joint defer+route scheduler answer *where and
-//! when* in one verdict — all in a few wall-clock seconds, no artifacts
-//! required.
+//! the fleet, let the joint defer+route scheduler answer *where and
+//! when* in one verdict, and watch grid-charge arbitrage buy clean night
+//! energy against a duck curve with SoC-trajectory forecasts pricing the
+//! release slots truthfully — all in a few wall-clock seconds, no
+//! artifacts required.
 //!
 //! ```sh
 //! cargo run --release --example fleet_sim -- [--requests 20000] [--seed 42]
@@ -71,5 +73,16 @@ fn main() -> anyhow::Result<()> {
     let dr = scenarios::build("deferral-routing", 0, requests, seed).unwrap();
     let (joint, rtd) = exp::sim_deferral_routing_comparison(&dr);
     println!("{}", exp::sim_deferral_routing_render(&joint, &rtd));
+
+    // 8. Grid-charge arbitrage + SoC-trajectory forecasts: duck-curve
+    //    grid, batteries that buy cheap clean night energy (carried at
+    //    its embodied intensity by the stored-carbon ledger — never
+    //    laundered to zero) and an A/B/C against the charge-off twin and
+    //    the legacy charge-frozen forecasts, which defer evening work
+    //    onto batteries that are empty by the release slot. The
+    //    trajectory forecasts (Microgrid::project) price release slots
+    //    against the battery each node will actually have.
+    let (arb, off, frozen) = exp::sim_arbitrage(0, requests.min(8_000), seed);
+    println!("{}", exp::sim_arbitrage_render(&arb, &off, &frozen));
     Ok(())
 }

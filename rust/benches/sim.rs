@@ -57,6 +57,14 @@ fn main() {
     let rps = throughput("microgrid-fleet", 0, 200_000, 3);
     println!("  microgrid-flt  200k requests   {:>8.2}M sim-req/s  (mixed supply)", rps / 1e6);
 
+    // Grid-charge arbitrage + SoC-trajectory forecasts: every settlement
+    // slice consults the charge threshold, every slack-carrying arrival
+    // rolls a per-node SoC projection over its defer window. Smaller
+    // request count: the scenario's pinned arrival rate means requests
+    // buy virtual days, not density.
+    let rps = throughput("arbitrage", 0, 50_000, 3);
+    println!("  arbitrage       50k requests   {:>8.2}M sim-req/s  (SoC projection)", rps / 1e6);
+
     // Joint defer+route: per-arrival fleet-wide forecasts plus the plateau
     // spread in DeferAwareGreenScheduler (the route-then-defer gate path is
     // covered by real-trace above).

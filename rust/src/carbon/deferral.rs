@@ -31,22 +31,48 @@ impl Default for DeferralPolicy {
 }
 
 impl DeferralPolicy {
+    /// Invariant check, run once at `SimConfig`/scenario build time (and
+    /// by the CLI) so the per-arrival hot path can keep plain
+    /// `debug_assert!`s instead of panicking mid-simulation.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.resolution_s.is_finite() || self.resolution_s <= 0.0 {
+            return Err(format!(
+                "deferral resolution must be finite and > 0, got {}",
+                self.resolution_s
+            ));
+        }
+        if !self.min_gain.is_finite() || !(0.0..=1.0).contains(&self.min_gain) {
+            return Err(format!("deferral min_gain must be in [0, 1], got {}", self.min_gain));
+        }
+        Ok(())
+    }
+
     /// Sample an intensity function from `now_s` to `horizon_s` at the
     /// policy resolution, clamping the final sample to the horizon itself:
     /// when the window is not a multiple of the resolution, a naive
     /// `t += resolution` walk overshoots and never prices a trough sitting
     /// on the horizon boundary. This is the single source of the sampling
     /// walk — [`DeferralPolicy::decide`] and the simulator's `FleetView`
-    /// forecasts (grid-only *and* microgrid-blended) both build on it, so
-    /// their slot grids always agree.
+    /// forecasts (grid-only *and* microgrid-projected) both build on it,
+    /// so their slot grids always agree.
+    ///
+    /// Invariants (`resolution_s > 0`, window not reversed) are validated
+    /// once at build time ([`DeferralPolicy::validate`]); here they are
+    /// only debug-asserted, and a degenerate input degrades to a single
+    /// "now" sample instead of panicking (or hanging) mid-simulation.
     pub fn forecast(
         &self,
         intensity_at: impl Fn(f64) -> f64,
         now_s: f64,
         horizon_s: f64,
     ) -> Vec<(f64, f64)> {
-        assert!(horizon_s >= now_s, "forecast window reversed");
-        assert!(self.resolution_s > 0.0, "forecast resolution must be positive");
+        debug_assert!(horizon_s >= now_s, "forecast window reversed");
+        debug_assert!(self.resolution_s > 0.0, "forecast resolution must be positive");
+        let span = horizon_s - now_s;
+        if self.resolution_s <= 0.0 || !self.resolution_s.is_finite() || span <= 0.0 || !span.is_finite()
+        {
+            return vec![(now_s, intensity_at(now_s))];
+        }
         let mut out =
             Vec::with_capacity(((horizon_s - now_s) / self.resolution_s) as usize + 2);
         let mut t = now_s;
@@ -173,6 +199,16 @@ mod tests {
         // Zero slack degenerates to a single sample at now.
         let d = p.decide(&trace, 0.0, 0.0);
         assert_eq!(d, DeferDecision::RunNow { intensity: 500.0 });
+    }
+
+    #[test]
+    fn validate_catches_bad_knobs() {
+        assert!(DeferralPolicy::default().validate().is_ok());
+        assert!(DeferralPolicy { resolution_s: 0.0, min_gain: 0.05 }.validate().is_err());
+        assert!(DeferralPolicy { resolution_s: -1.0, min_gain: 0.05 }.validate().is_err());
+        assert!(DeferralPolicy { resolution_s: f64::NAN, min_gain: 0.05 }.validate().is_err());
+        assert!(DeferralPolicy { resolution_s: 300.0, min_gain: 1.5 }.validate().is_err());
+        assert!(DeferralPolicy { resolution_s: 300.0, min_gain: -0.1 }.validate().is_err());
     }
 
     #[test]

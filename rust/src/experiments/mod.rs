@@ -725,6 +725,83 @@ pub fn sim_microgrid_render(
     out
 }
 
+// ---------------------------------------------------------------------------
+// Grid-charge arbitrage + SoC-trajectory forecasts (the supply-side A/B/C)
+// ---------------------------------------------------------------------------
+
+/// The experiment grid-charge arbitrage and SoC-trajectory forecasting
+/// unlock, on an arbitrage-carrying scenario under the joint
+/// [`DeferAwareGreenScheduler`]: the scenario as built (charge policy on,
+/// trajectory forecasts), the same fleet with grid charging off, and the
+/// same fleet with the legacy charge-frozen forecasts. Same arrivals,
+/// same seed. Returns `(arbitrage, charge_off, charge_frozen)` — the
+/// first margin prices what buying clean night energy is worth, the
+/// second what truthful SoC forecasts add on top.
+pub fn sim_arbitrage_comparison(sc: &Scenario) -> (SimReport, SimReport, SimReport) {
+    assert!(!sc.microgrids.is_empty(), "scenario carries no microgrids");
+    let d = sc.config.deferral.as_ref().expect("scenario carries no deferral");
+    let min_gain = d.policy.min_gain;
+    let off = scenarios::charge_disabled_twin(sc);
+    let frozen = scenarios::charge_frozen_twin(sc);
+    let run = |s: &Scenario| {
+        let mut sched = DeferAwareGreenScheduler::new(min_gain);
+        Simulation::run(s, &mut sched)
+    };
+    (run(sc), run(&off), run(&frozen))
+}
+
+/// [`sim_arbitrage_comparison`] over the `arbitrage` scenario —
+/// `carbonedge sim --scenario arbitrage --compare-arbitrage` and
+/// `examples/fleet_sim.rs` both land here.
+pub fn sim_arbitrage(
+    nodes: usize,
+    requests: usize,
+    seed: u64,
+) -> (SimReport, SimReport, SimReport) {
+    let sc = scenarios::build("arbitrage", nodes, requests, seed).unwrap();
+    sim_arbitrage_comparison(&sc)
+}
+
+pub fn sim_arbitrage_render(
+    arb: &SimReport,
+    off: &SimReport,
+    frozen: &SimReport,
+) -> String {
+    let mut t = Table::new(
+        "Grid-charge arbitrage + SoC-trajectory forecasts — same workload",
+        &[
+            "Run",
+            "gCO2/req",
+            "Grid-charge kWh",
+            "Embodied g",
+            "Discharged g",
+            "Stored g",
+            "Deferred",
+            "Missed",
+        ],
+    );
+    for r in [off, frozen, arb] {
+        t.row(vec![
+            r.scenario.clone(),
+            format!("{:.6}", r.carbon_per_req_g),
+            format!("{:.6}", r.energy_grid_charge_kwh_total),
+            f2(r.carbon_charged_g_total),
+            f2(r.carbon_battery_g_total),
+            f2(r.carbon_stored_g_total),
+            r.deferred.to_string(),
+            r.deadline_missed.to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "grid-charge arbitrage cuts gCO2/req by {} vs charge-off; \
+         SoC-trajectory forecasts cut {} vs charge-frozen\n",
+        reduction_pct(arb.carbon_per_req_g, off.carbon_per_req_g),
+        reduction_pct(arb.carbon_per_req_g, frozen.carbon_per_req_g),
+    ));
+    out
+}
+
 pub fn sim_sweep_render(points: &[SimSweepPoint]) -> String {
     let mut t = Table::new(
         "Virtual weight sweep — carbon/latency trade-off at fleet scale",

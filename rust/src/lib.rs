@@ -29,10 +29,17 @@
 //!   ElectricityMaps-style CSV intensity traces
 //!   ([`carbon::zone_traces_from_csv`]). Nodes may sit behind a local
 //!   [`microgrid`] (PV + battery): draw is covered PV-first, then battery,
-//!   then grid, and the blended *effective* intensity — a function of
-//!   sunlight and state of charge — feeds the schedulers through
+//!   then grid, and the *marginal* effective intensity — what the next
+//!   task's watts would pay, a function of sunlight, state of charge and
+//!   the store's embodied carbon — feeds the schedulers through
 //!   `EdgeNode::intensity_override`, so carbon-aware modes follow the sun
-//!   and the charge.
+//!   and the charge. Batteries may also *arbitrage* the grid
+//!   ([`microgrid::ChargePolicy`]): charge during the cleanest fraction
+//!   of the day-ahead window, with a stored-carbon ledger pricing every
+//!   discharged joule at its embodied intensity; microgrid deferral
+//!   forecasts are simulated SoC trajectories
+//!   ([`microgrid::Microgrid::project`]), so release slots are priced
+//!   against the battery the node will actually have.
 //! * **L2** — the JAX model zoo (`python/compile/models.py`), AOT-lowered to
 //!   HLO text artifacts consumed by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) backing every conv

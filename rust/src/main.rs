@@ -15,7 +15,9 @@
 //!               [--compare-defer-routing] [--trace-csv PATH]
 //!               [--consolidate LARGE] [--list-scenarios]
 //!               [--pv-peak-w W | --pv-csv PATH] [--battery-wh WH]
-//!               [--battery-rt-eff F] [--compare-microgrid] [--help]
+//!               [--battery-rt-eff F] [--compare-microgrid]
+//!               [--charge-policy off|threshold] [--charge-threshold-pct P]
+//!               [--compare-arbitrage] [--help]
 //!                                                   # virtual-time fleet simulator
 //! ```
 
@@ -61,6 +63,7 @@ fn run() -> Result<()> {
         "compare-defer-routing",
         "list-scenarios",
         "compare-microgrid",
+        "compare-arbitrage",
     ])?;
     let cmd = args.command.clone().unwrap_or_else(|| "info".to_string());
     // Handle --help before any command arm so no command ever runs its
@@ -262,6 +265,8 @@ fn run() -> Result<()> {
                     "pv-csv",
                     "battery-wh",
                     "battery-rt-eff",
+                    "charge-policy",
+                    "charge-threshold-pct",
                 ] {
                     if args.has(flag) {
                         anyhow::bail!("--consolidate does not combine with --{flag}");
@@ -274,6 +279,7 @@ fn run() -> Result<()> {
                     "compare-defer",
                     "compare-defer-routing",
                     "compare-microgrid",
+                    "compare-arbitrage",
                 ] {
                     if args.bool_flag(switch) {
                         anyhow::bail!("--consolidate does not combine with --{switch}");
@@ -363,11 +369,58 @@ fn run() -> Result<()> {
                 }
                 let battery =
                     carbonedge::microgrid::BatterySpec::simple(battery_wh, rt_eff, 0.5);
-                let spec = carbonedge::microgrid::MicrogridSpec { pv, battery };
+                let spec = carbonedge::microgrid::MicrogridSpec {
+                    pv,
+                    battery,
+                    charge: carbonedge::microgrid::ChargePolicy::Off,
+                };
                 if let Err(e) = spec.validate() {
                     anyhow::bail!("bad microgrid flags: {e}");
                 }
                 sc.microgrids = vec![Some(spec); sc.specs.len()];
+            }
+            // Grid-charge arbitrage knobs: retune (or disable) the charge
+            // policy on every microgrid node. `--charge-threshold-pct`
+            // alone implies the threshold policy.
+            if args.has("charge-policy") || args.has("charge-threshold-pct") {
+                if sc.microgrids.is_empty() {
+                    anyhow::bail!(
+                        "--charge-policy needs microgrids: use a microgrid scenario \
+                         (arbitrage, solar-battery, microgrid-fleet) or \
+                         --pv-peak-w/--battery-wh"
+                    );
+                }
+                let policy_name = args.str_or("charge-policy", "threshold");
+                let policy = match policy_name.as_str() {
+                    "off" => {
+                        if args.has("charge-threshold-pct") {
+                            anyhow::bail!(
+                                "--charge-policy off does not combine with \
+                                 --charge-threshold-pct"
+                            );
+                        }
+                        carbonedge::microgrid::ChargePolicy::Off
+                    }
+                    "threshold" => {
+                        let pct: f64 = args.parse_or(
+                            "charge-threshold-pct",
+                            carbonedge::microgrid::DEFAULT_CHARGE_PERCENTILE * 100.0,
+                        )?;
+                        if !pct.is_finite() || !(0.0 < pct && pct < 100.0) {
+                            anyhow::bail!(
+                                "--charge-threshold-pct expects a percentile in (0, 100), \
+                                 got {pct}"
+                            );
+                        }
+                        carbonedge::microgrid::ChargePolicy::threshold(pct / 100.0)
+                    }
+                    other => {
+                        anyhow::bail!("unknown --charge-policy {other:?}; try off|threshold")
+                    }
+                };
+                for mg in sc.microgrids.iter_mut().flatten() {
+                    mg.charge = policy.clone();
+                }
             }
             if args.bool_flag("compare-microgrid") {
                 // This arm runs its own fixed green-mode A/B and returns:
@@ -387,8 +440,14 @@ fn run() -> Result<()> {
                         anyhow::bail!("--compare-microgrid does not combine with --{flag}");
                     }
                 }
-                let switches =
-                    ["sweep", "json", "no-defer", "compare-defer", "compare-defer-routing"];
+                let switches = [
+                    "sweep",
+                    "json",
+                    "no-defer",
+                    "compare-defer",
+                    "compare-defer-routing",
+                    "compare-arbitrage",
+                ];
                 for switch in switches {
                     if args.bool_flag(switch) {
                         anyhow::bail!("--compare-microgrid does not combine with --{switch}");
@@ -433,6 +492,40 @@ fn run() -> Result<()> {
                     headroom_s,
                     policy: carbonedge::carbon::DeferralPolicy { resolution_s, min_gain },
                 });
+            }
+            // Everything above mutated the scenario from CLI knobs: validate
+            // once here so any bad combination is a clean error, never a
+            // mid-simulation panic.
+            sc.validate().map_err(|e| anyhow::anyhow!("invalid scenario configuration: {e}"))?;
+            if args.bool_flag("compare-arbitrage") {
+                if sc.microgrids.is_empty()
+                    || sc.microgrids.iter().flatten().all(|m| m.charge.is_off())
+                {
+                    anyhow::bail!(
+                        "--compare-arbitrage needs a grid-charge policy: use \
+                         --scenario arbitrage or --charge-policy threshold"
+                    );
+                }
+                if sc.config.deferral.is_none() {
+                    anyhow::bail!(
+                        "--compare-arbitrage needs deferral on: use --slack or the \
+                         arbitrage scenario"
+                    );
+                }
+                if args.has("mode") || args.has("scheduler") {
+                    anyhow::bail!(
+                        "--compare-arbitrage always runs the defer-green scheduler; it \
+                         does not combine with --mode/--scheduler"
+                    );
+                }
+                for switch in ["sweep", "json", "no-defer", "compare-defer", "compare-defer-routing"] {
+                    if args.bool_flag(switch) {
+                        anyhow::bail!("--compare-arbitrage does not combine with --{switch}");
+                    }
+                }
+                let (arb, off, frozen) = exp::sim_arbitrage_comparison(&sc);
+                println!("{}", exp::sim_arbitrage_render(&arb, &off, &frozen));
+                return Ok(());
             }
             if args.bool_flag("compare-defer") {
                 if sc.config.deferral.is_none() {
@@ -503,7 +596,8 @@ fn run() -> Result<()> {
                          performance|round-robin|random|least-loaded|amp4ec"
                     ),
                 };
-                let report = carbonedge::sim::Simulation::run(&sc, sched.as_mut());
+                let report = carbonedge::sim::Simulation::try_run(&sc, sched.as_mut())
+                    .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?;
                 if args.bool_flag("json") {
                     println!("{}", carbonedge::metrics::sim_report_to_json(&report));
                 } else {
@@ -576,7 +670,8 @@ energy model:
 
 microgrids (any knob puts a PV + battery microgrid behind every node;
 draw is covered PV-first, then battery, then grid, and schedulers score
-the blended effective intensity):
+the marginal effective intensity — what the next task's watts would pay
+after the standing draw claims local supply):
   --pv-peak-w W          diurnal half-sine PV array peaking at W watts
                          (sunrise 06:00, solar noon 12:00)
   --pv-csv PATH          PV generation trace instead (timestamp,watts CSV)
@@ -584,6 +679,19 @@ the blended effective intensity):
   --battery-rt-eff F     round-trip efficiency in (0, 1] (default 0.9)
   --compare-microgrid    A/B: green mode with microgrids, the grid-only
                          twin, and carbon-agnostic round-robin
+
+grid-charge arbitrage (batteries may buy cheap clean grid energy; stored
+joules carry their embodied carbon and release it on discharge — never
+laundered to zero):
+  --charge-policy P      off, or threshold: charge from the grid whenever
+                         the trace sits in the cleanest fraction of its
+                         day-ahead window (the arbitrage scenario defaults
+                         to threshold)
+  --charge-threshold-pct P
+                         the threshold percentile, in percent (default 25)
+  --compare-arbitrage    A/B/C under defer-green: arbitrage + SoC-trajectory
+                         forecasts vs the charge-off twin vs the
+                         charge-frozen-forecast twin
 
 carbon deferral (any knob enables deferral, or tunes a scenario that
 defers by default, like real-trace):

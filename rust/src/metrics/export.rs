@@ -79,6 +79,10 @@ pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
         ("energy_pv_kwh", fnum(r.energy_pv_kwh_total)),
         ("energy_battery_kwh", fnum(r.energy_battery_kwh_total)),
         ("energy_grid_kwh", fnum(r.energy_grid_kwh_total)),
+        ("energy_grid_charge_kwh", fnum(r.energy_grid_charge_kwh_total)),
+        ("carbon_charged_g", fnum(r.carbon_charged_g_total)),
+        ("carbon_battery_g", fnum(r.carbon_battery_g_total)),
+        ("carbon_stored_g", fnum(r.carbon_stored_g_total)),
         ("carbon_total_g", fnum(r.carbon_g_total)),
         ("carbon_dynamic_g", fnum(r.carbon_dynamic_g_total)),
         ("carbon_idle_g", fnum(r.carbon_idle_g_total)),
@@ -105,9 +109,20 @@ pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
                         ("energy_pv_kwh", fnum(n.energy_pv_kwh)),
                         ("energy_battery_kwh", fnum(n.energy_battery_kwh)),
                         ("energy_grid_kwh", fnum(n.energy_grid_kwh)),
+                        ("energy_grid_charge_kwh", fnum(n.energy_grid_charge_kwh)),
+                        ("carbon_charged_g", fnum(n.carbon_charged_g)),
+                        ("carbon_battery_g", fnum(n.carbon_battery_g)),
+                        ("carbon_stored_g", fnum(n.carbon_stored_g)),
                         (
                             "soc_timeline",
                             arr(n.soc_timeline
+                                .iter()
+                                .map(|&(t, soc)| arr(vec![fnum(t), fnum(soc)]))
+                                .collect()),
+                        ),
+                        (
+                            "soc_projection",
+                            arr(n.soc_projection
                                 .iter()
                                 .map(|&(t, soc)| arr(vec![fnum(t), fnum(soc)]))
                                 .collect()),
@@ -241,6 +256,30 @@ mod tests {
             let frac = pair[1].as_f64().unwrap();
             assert!((0.0..=1.0 + 1e-9).contains(&frac), "SoC {frac} out of range");
         }
+    }
+
+    #[test]
+    fn sim_report_json_carries_stored_carbon_ledger() {
+        // The arbitrage scenario grid-charges overnight: the export must
+        // carry the charge-source split and a balanced stored ledger.
+        let sc = crate::sim::scenarios::build("arbitrage", 2, 600, 3).unwrap();
+        let mut sched = crate::scheduler::DeferAwareGreenScheduler::new(0.05);
+        let r = crate::sim::Simulation::run(&sc, &mut sched);
+        let back = Json::parse(&sim_report_to_json(&r).to_string()).unwrap();
+        let charged = back.req_f64("carbon_charged_g").unwrap();
+        let spent = back.req_f64("carbon_battery_g").unwrap();
+        let stored = back.req_f64("carbon_stored_g").unwrap();
+        assert!(back.req_f64("energy_grid_charge_kwh").unwrap() > 0.0);
+        assert!(charged > 0.0, "overnight window must import");
+        assert!(
+            (charged - spent - stored).abs() <= 1e-6 * charged,
+            "ledger unbalanced: {charged} vs {spent} + {stored}"
+        );
+        let node0 = &back.req_arr("nodes").unwrap()[0];
+        assert!(node0.req_f64("carbon_charged_g").unwrap() >= 0.0);
+        // Projected-vs-actual SoC rides along (trajectory forecasts on).
+        assert!(!node0.req_arr("soc_projection").unwrap().is_empty());
+        assert!(!node0.req_arr("soc_timeline").unwrap().is_empty());
     }
 
     #[test]

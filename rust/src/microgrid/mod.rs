@@ -12,24 +12,74 @@
 //!   `at`/`integral` semantics are shared with the carbon accounting path;
 //! * [`BatterySpec`] — capacity, charge/discharge rate limits, round-trip
 //!   efficiency (applied on the charge side) and initial state of charge;
+//! * [`ChargePolicy`] — grid-charge **arbitrage**: `Off` (the default)
+//!   charges only from excess PV, `Threshold` additionally imports grid
+//!   power into the battery whenever the grid trace sits at or below a
+//!   percentile of its own forward window (rate- and headroom-capped);
+//! * a **stored-carbon ledger** — grid-charged joules carry their
+//!   *embodied* intensity (import priced at charge time, averaged over
+//!   the store, released pro rata on discharge), so arbitrage never
+//!   launders carbon to zero: a battery filled at 150 g/kWh discharges at
+//!   ≈ 150/η g/kWh, and a store dirtier than the current grid simply
+//!   holds (discharge is gated on `stored intensity < grid intensity`;
+//!   PV-charged joules stay free). The ledger balances exactly:
+//!   `charged == discharged + still stored`;
 //! * [`Microgrid`] — the runtime state: over any virtual-time slice, node
 //!   draw is covered **PV-first, then battery, then grid**
-//!   ([`Microgrid::cover`]), and excess PV charges the battery (anything
-//!   beyond the charger rate or the headroom is curtailed). Only charging
-//!   from local PV is modelled — the battery never charges from the grid,
-//!   so stored energy is always zero-carbon.
+//!   ([`Microgrid::cover`] / [`Microgrid::settle`]), and excess PV charges
+//!   the battery (anything beyond the charger rate or the headroom is
+//!   curtailed);
+//! * [`Microgrid::project`] — a pure, non-mutating **SoC-trajectory
+//!   forecast**: it rolls the same settlement arithmetic forward over a
+//!   forecast window (same rate limits, round-trip losses, charge policy
+//!   and stored-carbon pricing as the live ledger) and yields
+//!   `(t, effective intensity, SoC fraction)` samples on exactly the
+//!   [`crate::carbon::DeferralPolicy::forecast`] slot grid — the fix for
+//!   the charge-frozen forecasts that deferred work onto batteries that
+//!   would be empty by the release slot.
+//!
+//! Effective-intensity pricing is **marginal**: local supply serves the
+//! node's *standing* draw first, and the advertised price is what the
+//! *next task's* watts would actually pay ([`NodeDraw`]). The old
+//! average-mix blend over the whole draw advertised battery help a
+//! rate-capped battery could not deliver to the marginal task;
+//! [`Microgrid::frozen_intensity`] preserves that legacy forecast for the
+//! A/B twin (`charge_frozen_forecasts`).
 //!
 //! The fleet simulator ([`crate::sim`]) attaches an optional
 //! [`MicrogridSpec`] per node, settles every change of node draw through
-//! [`Microgrid::cover`], and pushes [`Microgrid::effective_intensity`]
+//! [`Microgrid::settle`], and pushes [`Microgrid::advertised_intensity`]
 //! into `EdgeNode::intensity_override` — so every existing
 //! [`crate::scheduler::Scheduler`] transparently follows the sun and the
 //! charge without knowing microgrids exist.
 
-use crate::carbon::{GramsPerKwh, IntensityTrace};
+use crate::carbon::{joules_to_kwh, GramsPerKwh, IntensityTrace};
 
 /// Seconds per hour — the Wh ↔ J conversion used throughout.
 const WH_TO_J: f64 = 3_600.0;
+
+/// Samples taken over a [`ChargePolicy::Threshold`] window when computing
+/// the charge-price percentile.
+const THRESHOLD_SAMPLES: usize = 32;
+
+/// Fraction of the threshold window after which a cached threshold is
+/// recomputed (the percentile of a day-scale window drifts slowly, so the
+/// settlement hot path must not re-sample the trace every slice).
+const THRESHOLD_REFRESH_FRAC: f64 = 1.0 / 16.0;
+
+/// Marginal draw assumed when a caller prices a node with no task draw at
+/// all (`task_w <= 0`): a meaningful fraction of the node's rated power.
+/// One joule of residual charge must not advertise a fully clean node —
+/// the battery has to carry this much of the rated draw to move the
+/// marginal price (the zero-draw-cliff fix).
+pub const MIN_MARGINAL_DRAW_FRAC: f64 = 0.05;
+
+/// Default [`ChargePolicy::Threshold`] percentile: charge from the grid
+/// during the cleanest quarter of the forward window.
+pub const DEFAULT_CHARGE_PERCENTILE: f64 = 0.25;
+
+/// Default [`ChargePolicy::Threshold`] window: one day of forward trace.
+pub const DEFAULT_CHARGE_WINDOW_S: f64 = 86_400.0;
 
 /// Photovoltaic generation profile: watts as a function of virtual time,
 /// reusing [`IntensityTrace`] (value = watts, not gCO₂/kWh).
@@ -91,10 +141,10 @@ impl PvProfile {
     }
 }
 
-/// Battery parameters. Rates are symmetric power limits; the round-trip
+/// Battery parameters. Rates are independent power limits; the round-trip
 /// efficiency is applied entirely on the charge side (storing `x` joules
-/// of PV yields `rt_efficiency · x` joules of usable charge), which keeps
-/// discharge accounting exact.
+/// of input yields `rt_efficiency · x` joules of usable charge), which
+/// keeps discharge accounting exact.
 #[derive(Debug, Clone)]
 pub struct BatterySpec {
     pub capacity_wh: f64,
@@ -103,6 +153,8 @@ pub struct BatterySpec {
     /// Round-trip efficiency in `(0, 1]`.
     pub rt_efficiency: f64,
     /// Initial state of charge as a fraction of capacity, in `[0, 1]`.
+    /// The initial charge carries no embodied carbon (it predates the
+    /// run's stored-carbon ledger).
     pub initial_soc: f64,
 }
 
@@ -151,6 +203,56 @@ impl BatterySpec {
     }
 }
 
+/// When (if ever) the battery may charge **from the grid**.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum ChargePolicy {
+    /// Never import grid power into the battery — PV excess only (the
+    /// pre-arbitrage behaviour, and the default).
+    #[default]
+    Off,
+    /// Charge from the grid whenever the trace intensity sits at or below
+    /// the `percentile` quantile of the trace over `[t, t + window_s]`
+    /// (its own forward window), capped by the charger rate and the
+    /// efficiency-adjusted headroom. While actively charging, the battery
+    /// does not discharge (a single inverter direction).
+    Threshold {
+        /// Quantile in `(0, 1)`: 0.25 charges during the cleanest quarter
+        /// of the window.
+        percentile: f64,
+        /// Forward window the quantile is computed over (seconds).
+        window_s: f64,
+    },
+}
+
+impl ChargePolicy {
+    /// The standard arbitrage policy: charge during the cleanest
+    /// `percentile` of the day-ahead window.
+    pub fn threshold(percentile: f64) -> ChargePolicy {
+        ChargePolicy::Threshold { percentile, window_s: DEFAULT_CHARGE_WINDOW_S }
+    }
+
+    pub fn is_off(&self) -> bool {
+        matches!(self, ChargePolicy::Off)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            ChargePolicy::Off => Ok(()),
+            ChargePolicy::Threshold { percentile, window_s } => {
+                if !percentile.is_finite() || !(*percentile > 0.0 && *percentile < 1.0) {
+                    return Err(format!(
+                        "charge-policy percentile must be in (0, 1), got {percentile}"
+                    ));
+                }
+                if !window_s.is_finite() || *window_s <= 0.0 {
+                    return Err(format!("charge-policy window must be > 0, got {window_s}"));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
 /// Immutable per-node microgrid configuration a scenario carries; the
 /// simulator builds a fresh [`Microgrid`] runtime state from it per run,
 /// keeping runs deterministic.
@@ -158,11 +260,13 @@ impl BatterySpec {
 pub struct MicrogridSpec {
     pub pv: PvProfile,
     pub battery: BatterySpec,
+    /// Grid-charge arbitrage policy ([`ChargePolicy::Off`] by default).
+    pub charge: ChargePolicy,
 }
 
 impl MicrogridSpec {
     /// Convenience: a diurnal PV array peaking at `pv_peak_w` plus a 1C
-    /// battery of `battery_wh` starting at `initial_soc`.
+    /// battery of `battery_wh` starting at `initial_soc` (no grid charge).
     pub fn solar(
         pv_peak_w: f64,
         battery_wh: f64,
@@ -172,37 +276,256 @@ impl MicrogridSpec {
         MicrogridSpec {
             pv: PvProfile::diurnal(pv_peak_w),
             battery: BatterySpec::simple(battery_wh, rt_efficiency, initial_soc),
+            charge: ChargePolicy::Off,
         }
     }
 
+    /// Builder: replace the charge policy.
+    pub fn with_charge(mut self, charge: ChargePolicy) -> MicrogridSpec {
+        self.charge = charge;
+        self
+    }
+
     pub fn validate(&self) -> Result<(), String> {
-        self.battery.validate()
+        self.battery.validate()?;
+        self.charge.validate()
     }
 }
 
 /// How one virtual-time slice of node demand was supplied (all in joules).
 /// Invariant: `pv_j + battery_j + grid_j == draw_w · Δt` — the simulator's
-/// energy-conservation tests lean on it.
+/// energy-conservation tests lean on it (`grid_charge_j` is battery input,
+/// not node supply, and is tracked separately).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SliceFlow {
     /// PV generation consumed directly by the node.
     pub pv_j: f64,
     /// Battery discharge consumed by the node.
     pub battery_j: f64,
-    /// Grid import consumed by the node (the only carbon-bearing term).
+    /// Grid import consumed by the node directly.
     pub grid_j: f64,
     /// Excess PV routed into the battery (input side, before losses).
     pub charged_j: f64,
     /// Excess PV neither consumed nor storable (rate/headroom limits).
     pub curtailed_j: f64,
+    /// Grid import routed into the battery (input side, before losses) —
+    /// the arbitrage flow ([`ChargePolicy::Threshold`] only).
+    pub grid_charge_j: f64,
+    /// Embodied carbon bought into the store by this slice's grid charge
+    /// (grams at the slice-mean intensity, no PUE — the engine applies
+    /// PUE when it moves carbon into its ledgers).
+    pub charge_carbon_g: f64,
+    /// Embodied carbon released by this slice's battery discharge (grams,
+    /// no PUE): the store's average intensity times the discharged energy.
+    pub battery_carbon_g: f64,
 }
 
-/// Runtime microgrid state: spec + current stored energy.
+/// The draw profile the marginal effective-intensity price is quoted for:
+/// local supply serves `standing_w` (idle floor + tasks already running)
+/// first, and the price is what the *next* `task_w` watts would pay.
+/// `rated_w` only matters when `task_w <= 0` (the marginal task is then
+/// assumed to be [`MIN_MARGINAL_DRAW_FRAC`] of the rated draw).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeDraw {
+    pub standing_w: f64,
+    pub task_w: f64,
+    pub rated_w: f64,
+}
+
+/// Stored-energy ledger: joules in the battery plus their embodied carbon.
+#[derive(Debug, Clone, Copy)]
+struct Store {
+    soc_j: f64,
+    carbon_g: f64,
+}
+
+/// Average intensity of the stored energy (g/kWh; 0 for an empty or
+/// carbon-free store). `carbon_g · 3.6e6 / soc_j` is grams per kWh — the
+/// inverse of [`joules_to_kwh`], written as one rounding step so the
+/// gating comparisons stay bit-stable.
+fn store_intensity(store: &Store) -> f64 {
+    if store.soc_j > 0.0 {
+        store.carbon_g * 3.6e6 / store.soc_j
+    } else {
+        0.0
+    }
+}
+
+/// Charge-price threshold at `t` for a [`ChargePolicy::Threshold`]:
+/// the configured quantile of `trace` sampled over `[t, t + window]`.
+/// When the quantile reaches the window's maximum (a flat window) there
+/// is nothing dirtier ahead to arbitrage into, so the threshold collapses
+/// to `-inf` (never charge). `cache` holds `(expires_at, threshold)` so
+/// the settlement hot path recomputes only every
+/// [`THRESHOLD_REFRESH_FRAC`] of the window.
+fn charge_threshold(
+    policy: &ChargePolicy,
+    trace: &IntensityTrace,
+    cache: &mut Option<(f64, f64)>,
+    t: f64,
+) -> Option<f64> {
+    let ChargePolicy::Threshold { percentile, window_s } = policy else { return None };
+    if let Some((expires, thr)) = cache {
+        if t < *expires {
+            return Some(*thr);
+        }
+    }
+    let n = THRESHOLD_SAMPLES;
+    let mut vals: Vec<f64> =
+        (0..n).map(|i| trace.at(t + i as f64 * window_s / (n - 1) as f64)).collect();
+    vals.sort_by(f64::total_cmp);
+    let thr = vals[(percentile * (n - 1) as f64) as usize];
+    let thr = if thr < vals[n - 1] { thr } else { f64::NEG_INFINITY };
+    *cache = Some((t + window_s * THRESHOLD_REFRESH_FRAC, thr));
+    Some(thr)
+}
+
+/// Is the grid-charge policy actively charging at instant `t`?
+fn charging_at(
+    policy: &ChargePolicy,
+    trace: &IntensityTrace,
+    cache: &mut Option<(f64, f64)>,
+    t: f64,
+) -> bool {
+    match charge_threshold(policy, trace, cache, t) {
+        Some(thr) => trace.at(t) <= thr,
+        None => false,
+    }
+}
+
+/// Settle one slice of constant `draw_w` against `spec`, mutating the
+/// store (and the threshold cache). The single source of the settlement
+/// arithmetic: [`Microgrid::cover`], [`Microgrid::settle`] and
+/// [`Microgrid::project`] all flow through here, so the live ledger and
+/// the SoC-trajectory forecast can never disagree.
+///
+/// `grid_mean` is the slice-mean grid intensity used for the discharge
+/// gate and to price grid-charged joules; `charging` says whether the
+/// policy is importing this slice (which also suppresses discharge).
+fn settle_slice(
+    spec: &MicrogridSpec,
+    store: &mut Store,
+    t0: f64,
+    t1: f64,
+    draw_w: f64,
+    grid_mean: f64,
+    charging: bool,
+) -> SliceFlow {
+    let dt = t1 - t0;
+    debug_assert!(dt >= 0.0, "settle slice reversed: [{t0}, {t1}]");
+    if dt <= 0.0 || dt.is_nan() {
+        return SliceFlow::default();
+    }
+    let b = &spec.battery;
+    let cap_j = b.capacity_wh * WH_TO_J;
+    let demand_j = (draw_w * dt).max(0.0);
+    let pv_avail_j = spec.pv.energy_j(t0, t1);
+    let pv_j = demand_j.min(pv_avail_j);
+    let mut residual_j = demand_j - pv_j;
+    // Discharge gate: a carbon-free store always discharges (the legacy
+    // PV-only behaviour); a carbon-bearing store discharges only when
+    // strictly profitable, and never while the policy is importing.
+    let allowed =
+        !charging && (store.carbon_g <= 0.0 || store_intensity(store) < grid_mean);
+    let mut battery_carbon_g = 0.0;
+    let battery_j = if allowed {
+        residual_j.min(b.max_discharge_w * dt).min(store.soc_j).max(0.0)
+    } else {
+        0.0
+    };
+    if battery_j > 0.0 {
+        if battery_j >= store.soc_j {
+            battery_carbon_g = store.carbon_g;
+            store.carbon_g = 0.0;
+        } else {
+            battery_carbon_g = store.carbon_g * battery_j / store.soc_j;
+            store.carbon_g -= battery_carbon_g;
+        }
+        store.soc_j = (store.soc_j - battery_j).max(0.0);
+    }
+    residual_j -= battery_j;
+    let grid_j = residual_j.max(0.0);
+    // Excess PV charges the battery (free of embodied carbon).
+    let excess_j = (pv_avail_j - pv_j).max(0.0);
+    let headroom_in_j = (cap_j - store.soc_j).max(0.0) / b.rt_efficiency;
+    let charged_j = excess_j.min(b.max_charge_w * dt).min(headroom_in_j);
+    store.soc_j = (store.soc_j + charged_j * b.rt_efficiency).min(cap_j);
+    // Grid-charge arbitrage: whatever charger rate and headroom are left.
+    let mut grid_charge_j = 0.0;
+    let mut charge_carbon_g = 0.0;
+    if charging {
+        let rate_left_j = (b.max_charge_w * dt - charged_j).max(0.0);
+        let headroom_in_j = (cap_j - store.soc_j).max(0.0) / b.rt_efficiency;
+        grid_charge_j = rate_left_j.min(headroom_in_j);
+        if grid_charge_j > 0.0 {
+            store.soc_j = (store.soc_j + grid_charge_j * b.rt_efficiency).min(cap_j);
+            charge_carbon_g = joules_to_kwh(grid_charge_j) * grid_mean;
+            store.carbon_g += charge_carbon_g;
+        }
+    }
+    SliceFlow {
+        pv_j,
+        battery_j,
+        grid_j,
+        charged_j,
+        curtailed_j: excess_j - charged_j,
+        grid_charge_j,
+        charge_carbon_g,
+        battery_carbon_g,
+    }
+}
+
+/// Marginal effective intensity at instant `t` for a given store state:
+/// PV and the (gated, sustainable) battery power serve the standing draw
+/// first, and the marginal task pays for whatever is left — battery
+/// joules at the store's average intensity, grid joules at
+/// `grid_intensity`.
+#[allow(clippy::too_many_arguments)]
+fn effective_at(
+    spec: &MicrogridSpec,
+    store: &Store,
+    t: f64,
+    draw: NodeDraw,
+    grid_intensity: GramsPerKwh,
+    sustain_s: f64,
+    charging: bool,
+) -> GramsPerKwh {
+    debug_assert!(sustain_s > 0.0, "sustain window must be positive");
+    let pv_w = spec.pv.power_w(t);
+    let s_int = store_intensity(store);
+    let available =
+        !charging && (store.carbon_g <= 0.0 || s_int < grid_intensity);
+    // The battery may only advertise power its charge can sustain for the
+    // advertising window — a near-empty battery must not advertise its
+    // full rate and invite a pile-on.
+    let batt_w = if available {
+        spec.battery.max_discharge_w.min(store.soc_j / sustain_s)
+    } else {
+        0.0
+    };
+    let task_w =
+        if draw.task_w > 0.0 { draw.task_w } else { MIN_MARGINAL_DRAW_FRAC * draw.rated_w };
+    if task_w <= 0.0 || (pv_w <= 0.0 && batt_w <= 0.0) {
+        // No marginal demand to price, or no local supply at all: the
+        // marginal watt is a grid watt (bit-exactly the raw trace — the
+        // shim-equivalence tests rely on it).
+        return grid_intensity;
+    }
+    let standing = draw.standing_w.max(0.0);
+    let pv_for_task = (pv_w - standing).max(0.0).min(task_w);
+    let standing_residual = (standing - pv_w).max(0.0);
+    let batt_for_task = (batt_w - standing_residual).max(0.0).min(task_w - pv_for_task);
+    let grid_for_task = (task_w - pv_for_task - batt_for_task).max(0.0);
+    (batt_for_task * s_int + grid_for_task * grid_intensity) / task_w
+}
+
+/// Runtime microgrid state: spec + stored-energy ledger.
 #[derive(Debug, Clone)]
 pub struct Microgrid {
     pub spec: MicrogridSpec,
-    /// Stored energy (J), always in `[0, capacity]`.
-    soc_j: f64,
+    store: Store,
+    /// `(expires_at, threshold)` cache for the charge-price percentile.
+    threshold_cache: Option<(f64, f64)>,
 }
 
 impl Microgrid {
@@ -211,7 +534,7 @@ impl Microgrid {
             panic!("invalid microgrid spec: {e}");
         }
         let soc_j = spec.battery.initial_soc * spec.battery.capacity_wh * WH_TO_J;
-        Microgrid { spec, soc_j }
+        Microgrid { spec, store: Store { soc_j, carbon_g: 0.0 }, threshold_cache: None }
     }
 
     /// State of charge as a fraction of capacity (0 for a zero-capacity
@@ -219,7 +542,7 @@ impl Microgrid {
     pub fn soc_frac(&self) -> f64 {
         let cap_j = self.spec.battery.capacity_wh * WH_TO_J;
         if cap_j > 0.0 {
-            self.soc_j / cap_j
+            self.store.soc_j / cap_j
         } else {
             0.0
         }
@@ -227,73 +550,178 @@ impl Microgrid {
 
     /// Stored energy in Wh.
     pub fn soc_wh(&self) -> f64 {
-        self.soc_j / WH_TO_J
+        self.store.soc_j / WH_TO_J
     }
 
-    /// Cover a constant draw of `draw_w` watts over `[t0, t1]`: PV first,
-    /// then battery (rate- and charge-limited), then grid; excess PV
-    /// charges the battery up to the charger rate and the headroom
-    /// (efficiency-adjusted), the rest is curtailed. Returns the supply
-    /// split; mutates the state of charge.
+    /// Embodied carbon of the current store (grams, no PUE): what the
+    /// grid-charged share of the charge cost at import time and has not
+    /// yet been released by discharge.
+    pub fn stored_carbon_g(&self) -> f64 {
+        self.store.carbon_g
+    }
+
+    /// Average intensity of the stored energy (g/kWh).
+    pub fn stored_intensity(&self) -> GramsPerKwh {
+        store_intensity(&self.store)
+    }
+
+    /// Cover a constant draw of `draw_w` watts over `[t0, t1]` with no
+    /// charge policy in play: PV first, then battery (rate-, charge- and
+    /// stored-carbon-gated), then grid; excess PV charges the battery up
+    /// to the charger rate and the headroom (efficiency-adjusted), the
+    /// rest is curtailed. Returns the supply split; mutates the state of
+    /// charge. The policy-free path — the simulator settles through
+    /// [`Microgrid::settle`], which adds grid-charge arbitrage on top.
     pub fn cover(&mut self, t0: f64, t1: f64, draw_w: f64) -> SliceFlow {
+        // With no grid price in hand the discharge gate is vacuous
+        // (infinity), reproducing the legacy always-discharge behaviour.
+        settle_slice(&self.spec, &mut self.store, t0, t1, draw_w, f64::INFINITY, false)
+    }
+
+    /// Cover `[t0, t1]` at `draw_w` against the node's grid `trace`,
+    /// applying the charge policy: grid-charge when the policy says the
+    /// window is cheap (suppressing discharge for that slice), gate
+    /// discharge on the store being cleaner than the slice-mean grid, and
+    /// price grid-charged joules at the slice-mean intensity into the
+    /// stored-carbon ledger.
+    pub fn settle(
+        &mut self,
+        t0: f64,
+        t1: f64,
+        draw_w: f64,
+        trace: &IntensityTrace,
+    ) -> SliceFlow {
         let dt = t1 - t0;
-        assert!(dt >= 0.0, "cover slice reversed: [{t0}, {t1}]");
-        if dt == 0.0 {
+        debug_assert!(dt >= 0.0, "settle slice reversed: [{t0}, {t1}]");
+        if dt <= 0.0 || dt.is_nan() {
             return SliceFlow::default();
         }
-        let b = &self.spec.battery;
-        let cap_j = b.capacity_wh * WH_TO_J;
-        let demand_j = (draw_w * dt).max(0.0);
-        let pv_avail_j = self.spec.pv.energy_j(t0, t1);
-        let pv_j = demand_j.min(pv_avail_j);
-        let mut residual_j = demand_j - pv_j;
-        let battery_j = residual_j.min(b.max_discharge_w * dt).min(self.soc_j).max(0.0);
-        self.soc_j = (self.soc_j - battery_j).max(0.0);
-        residual_j -= battery_j;
-        let grid_j = residual_j.max(0.0);
-        let excess_j = (pv_avail_j - pv_j).max(0.0);
-        let headroom_in_j = (cap_j - self.soc_j).max(0.0) / b.rt_efficiency;
-        let charged_j = excess_j.min(b.max_charge_w * dt).min(headroom_in_j);
-        self.soc_j = (self.soc_j + charged_j * b.rt_efficiency).min(cap_j);
-        SliceFlow { pv_j, battery_j, grid_j, charged_j, curtailed_j: excess_j - charged_j }
+        let charging = charging_at(&self.spec.charge, trace, &mut self.threshold_cache, t0);
+        let grid_mean = trace.integral(t0, t1) / dt;
+        settle_slice(&self.spec, &mut self.store, t0, t1, draw_w, grid_mean, charging)
     }
 
-    /// Blended effective carbon intensity (gCO₂/kWh) of serving `draw_w`
-    /// at instant `t` against a grid currently at `grid_intensity`: the
-    /// grid-supplied fraction of the draw (after instantaneous PV and the
-    /// battery) scales the grid intensity. PV and battery joules are
-    /// zero-carbon, so a sunlit or charged node reads as clean to every
-    /// scheduler scoring `EdgeNode::intensity()`.
-    ///
-    /// The battery term is capped at the power the *current charge* can
-    /// sustain for `sustain_s` seconds (the advertising window — the
-    /// simulator passes its intensity-refresh interval), not just the
-    /// discharge rate limit: a near-empty battery must not advertise its
-    /// full rate and have the scheduler pile a whole refresh window of
-    /// load onto joules that drain in the first instant.
+    /// Marginal effective carbon intensity (gCO₂/kWh) of handing this
+    /// node one more task at instant `t` against a grid currently at
+    /// `grid_intensity`: local supply (instantaneous PV, plus the battery
+    /// power the charge can sustain for `sustain_s`) serves the standing
+    /// draw first, and the marginal `task_w` pays for what is left —
+    /// battery joules at the store's embodied intensity, grid joules at
+    /// the grid price. Trace-free, so it cannot see the charge policy;
+    /// the simulator adverts through [`Microgrid::advertised_intensity`].
     pub fn effective_intensity(
         &self,
         t: f64,
-        draw_w: f64,
+        draw: NodeDraw,
         grid_intensity: GramsPerKwh,
         sustain_s: f64,
     ) -> GramsPerKwh {
-        assert!(sustain_s > 0.0, "sustain window must be positive");
+        effective_at(&self.spec, &self.store, t, draw, grid_intensity, sustain_s, false)
+    }
+
+    /// [`Microgrid::effective_intensity`] with the charge policy applied:
+    /// while the policy is importing, the battery is not advertised (it
+    /// will not discharge), so the marginal price is honest during cheap
+    /// windows. Mutates only the threshold cache.
+    pub fn advertised_intensity(
+        &mut self,
+        trace: &IntensityTrace,
+        t: f64,
+        draw: NodeDraw,
+        sustain_s: f64,
+    ) -> GramsPerKwh {
+        let charging = charging_at(&self.spec.charge, trace, &mut self.threshold_cache, t);
+        effective_at(&self.spec, &self.store, t, draw, trace.at(t), sustain_s, charging)
+    }
+
+    /// The legacy (PR-4) charge-frozen forecast sample, kept for the A/B
+    /// twin (`SimConfig::charge_frozen_forecasts`): the *average* blend
+    /// over the whole draw (standing + task) at the *decision-time* state
+    /// of charge, with no charge-policy awareness — exactly the forecast
+    /// that defers work onto batteries that will be empty by the release
+    /// slot, and advertises battery help a rate-capped battery cannot
+    /// give the marginal task.
+    pub fn frozen_intensity(
+        &self,
+        t: f64,
+        draw: NodeDraw,
+        grid_intensity: GramsPerKwh,
+        sustain_s: f64,
+    ) -> GramsPerKwh {
+        debug_assert!(sustain_s > 0.0, "sustain window must be positive");
         let pv_w = self.spec.pv.power_w(t);
-        let batt_w = self.spec.battery.max_discharge_w.min(self.soc_j / sustain_s);
+        let batt_w = self.spec.battery.max_discharge_w.min(self.store.soc_j / sustain_s);
+        let s_int = store_intensity(&self.store);
+        let draw_w = draw.standing_w.max(0.0) + draw.task_w.max(0.0);
         if draw_w <= 0.0 {
-            // Marginal view for a zero-draw node: the first watt would be
-            // local whenever any local supply exists.
+            // The legacy marginal view: the first watt is local whenever
+            // any local supply exists (the zero-draw cliff).
             return if pv_w > 0.0 || batt_w > 0.0 { 0.0 } else { grid_intensity };
         }
-        let residual_w = (draw_w - pv_w - batt_w).max(0.0);
-        grid_intensity * residual_w / draw_w
+        let pv_used = pv_w.min(draw_w);
+        let batt_used = (draw_w - pv_used).min(batt_w).max(0.0);
+        let grid_used = (draw_w - pv_used - batt_used).max(0.0);
+        (batt_used * s_int + grid_used * grid_intensity) / draw_w
+    }
+
+    /// Pure, non-mutating **SoC-trajectory projection**: roll the
+    /// settlement forward from `t0` at a constant `draw.standing_w`
+    /// (rate limits, round-trip losses, charge policy and stored-carbon
+    /// pricing — the same arithmetic as the live ledger) and sample
+    /// `(t, marginal effective intensity, SoC fraction)` on exactly the
+    /// [`crate::carbon::DeferralPolicy::forecast`] slot grid from `t0` to
+    /// `horizon_s`. The first sample equals
+    /// [`Microgrid::advertised_intensity`] at `t0`; with no PV and no
+    /// battery every sample is bit-equal to the raw grid trace.
+    ///
+    /// The standing draw is held constant because the engine cannot know
+    /// future dispatch — the forecast is *draw*-frozen, no longer
+    /// *charge*-frozen.
+    pub fn project(
+        &self,
+        t0: f64,
+        horizon_s: f64,
+        draw: NodeDraw,
+        trace: &IntensityTrace,
+        resolution_s: f64,
+        sustain_s: f64,
+    ) -> Vec<(f64, GramsPerKwh, f64)> {
+        debug_assert!(horizon_s >= t0, "projection window reversed");
+        debug_assert!(resolution_s > 0.0, "projection resolution must be positive");
+        let horizon_s = horizon_s.max(t0);
+        let cap_j = self.spec.battery.capacity_wh * WH_TO_J;
+        let mut store = self.store;
+        let mut cache = self.threshold_cache;
+        let mut out =
+            Vec::with_capacity(((horizon_s - t0) / resolution_s.max(1e-9)) as usize + 2);
+        let mut t = t0;
+        loop {
+            let charging = charging_at(&self.spec.charge, trace, &mut cache, t);
+            let eff =
+                effective_at(&self.spec, &store, t, draw, trace.at(t), sustain_s, charging);
+            let soc = if cap_j > 0.0 { store.soc_j / cap_j } else { 0.0 };
+            out.push((t, eff, soc));
+            if t >= horizon_s || resolution_s <= 0.0 {
+                break;
+            }
+            // The slice settles under the same charging verdict the sample
+            // above was priced at (same t, same cache).
+            let t_next = (t + resolution_s).min(horizon_s);
+            let grid_mean = trace.integral(t, t_next) / (t_next - t);
+            settle_slice(&self.spec, &mut store, t, t_next, draw.standing_w, grid_mean, charging);
+            t = t_next;
+        }
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn draw(standing_w: f64, task_w: f64) -> NodeDraw {
+        NodeDraw { standing_w, task_w, rated_w: 142.0 }
+    }
 
     #[test]
     fn pv_diurnal_shape() {
@@ -327,7 +755,7 @@ mod tests {
     }
 
     #[test]
-    fn battery_validation() {
+    fn battery_and_policy_validation() {
         assert!(BatterySpec::none().validate().is_ok());
         assert!(BatterySpec::simple(600.0, 0.9, 0.5).validate().is_ok());
         assert!(BatterySpec::simple(-1.0, 0.9, 0.5).validate().is_err());
@@ -339,6 +767,15 @@ mod tests {
         let b = BatterySpec::simple(600.0, 0.9, 0.5);
         assert_eq!(b.max_charge_w, 600.0);
         assert_eq!(b.max_discharge_w, 600.0);
+        // Charge policies.
+        assert!(ChargePolicy::Off.validate().is_ok());
+        assert!(ChargePolicy::threshold(0.25).validate().is_ok());
+        assert!(ChargePolicy::threshold(0.0).validate().is_err());
+        assert!(ChargePolicy::threshold(1.0).validate().is_err());
+        assert!(ChargePolicy::Threshold { percentile: 0.25, window_s: 0.0 }
+            .validate()
+            .is_err());
+        assert!(ChargePolicy::default().is_off());
     }
 
     #[test]
@@ -353,6 +790,7 @@ mod tests {
         let mut mg = Microgrid::new(MicrogridSpec {
             pv: PvProfile::from_samples(vec![(0.0, 500.0)]).unwrap(),
             battery: BatterySpec::simple(1_000.0, 1.0, 0.5),
+            charge: ChargePolicy::Off,
         });
         // Draw under PV: all PV, battery untouched (and charging from excess).
         let f = mg.cover(0.0, 10.0, 300.0);
@@ -372,6 +810,9 @@ mod tests {
         assert!((f.battery_j - 10_000.0).abs() < 1e-9); // rate-capped
         assert!((f.grid_j - 5_000.0).abs() < 1e-9);
         assert!((f.pv_j + f.battery_j + f.grid_j - 20_000.0).abs() < 1e-9);
+        // PV-charged joules stay free of embodied carbon.
+        assert_eq!(mg.stored_carbon_g(), 0.0);
+        assert_eq!(mg.stored_intensity(), 0.0);
     }
 
     #[test]
@@ -379,6 +820,7 @@ mod tests {
         let mut mg = Microgrid::new(MicrogridSpec {
             pv: PvProfile::from_samples(vec![(0.0, 1_000.0)]).unwrap(),
             battery: BatterySpec::simple(10.0, 1.0, 0.9), // 10 Wh = 36 kJ
+            charge: ChargePolicy::Off,
         });
         // Massive excess: SoC caps at capacity.
         mg.cover(0.0, 3_600.0, 0.0);
@@ -389,6 +831,7 @@ mod tests {
         let mut dark = Microgrid::new(MicrogridSpec {
             pv: PvProfile::none(),
             battery: BatterySpec::simple(10.0, 1.0, 1.0),
+            charge: ChargePolicy::Off,
         });
         let f = dark.cover(0.0, 3_600.0, 100.0); // 360 kJ demand vs 36 kJ stored
         assert!(dark.soc_frac().abs() < 1e-12);
@@ -408,6 +851,7 @@ mod tests {
                 rt_efficiency: 0.8,
                 initial_soc: 0.0,
             },
+            charge: ChargePolicy::Off,
         });
         let f = mg.cover(0.0, 10.0, 0.0);
         assert!((f.charged_j - 1_000.0).abs() < 1e-9); // 100 W × 10 s input
@@ -424,6 +868,7 @@ mod tests {
                 rt_efficiency: 0.5,
                 initial_soc: 0.5,
             },
+            charge: ChargePolicy::Off,
         });
         let f = full.cover(0.0, 100.0, 0.0); // 100 kJ excess vs 1800 J headroom
         assert!((f.charged_j - 1_800.0 / 0.5).abs() < 1e-9); // input = headroom/η
@@ -434,9 +879,9 @@ mod tests {
     fn cover_conserves_demand_exactly() {
         let mut mg = Microgrid::new(MicrogridSpec::solar(400.0, 600.0, 0.9, 0.3));
         let mut t = 0.0;
-        for (dt, draw) in [(500.0, 54.0), (10_000.0, 142.0), (40_000.0, 0.0), (20_000.0, 300.0)] {
-            let f = mg.cover(t, t + dt, draw);
-            let demand = draw * dt;
+        for (dt, dw) in [(500.0, 54.0), (10_000.0, 142.0), (40_000.0, 0.0), (20_000.0, 300.0)] {
+            let f = mg.cover(t, t + dt, dw);
+            let demand = dw * dt;
             assert!(
                 (f.pv_j + f.battery_j + f.grid_j - demand).abs() <= 1e-9 * demand.max(1.0),
                 "slice at t={t}: {f:?} vs demand {demand}"
@@ -451,35 +896,152 @@ mod tests {
     }
 
     #[test]
-    fn effective_intensity_blends_supply() {
+    fn grid_charge_buys_embodied_carbon_and_discharge_releases_it() {
+        // Clean first hour (100 g), dirty afterwards (800 g): the
+        // threshold policy charges during the clean hour and the store
+        // carries the import's carbon at ~100/η g/kWh.
+        let trace =
+            IntensityTrace::from_samples(vec![(0.0, 100.0), (3_600.0, 800.0)]).unwrap();
+        let mut mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec {
+                capacity_wh: 100.0,
+                max_charge_w: 100.0,
+                max_discharge_w: 100.0,
+                rt_efficiency: 0.8,
+                initial_soc: 0.0,
+            },
+            charge: ChargePolicy::Threshold { percentile: 0.25, window_s: 7_200.0 },
+        });
+        // Hour 1: cheap -> import at the charger rate, no discharge.
+        let f = mg.settle(0.0, 3_600.0, 50.0, &trace);
+        assert!((f.grid_charge_j - 100.0 * 3_600.0).abs() < 1e-6);
+        assert_eq!(f.battery_j, 0.0, "no discharge while importing");
+        assert!((f.grid_j - 50.0 * 3_600.0).abs() < 1e-6, "draw served from the grid");
+        let want_g = joules_to_kwh(360_000.0) * 100.0; // 0.1 kWh at 100 g
+        assert!((f.charge_carbon_g - want_g).abs() < 1e-9);
+        assert!((mg.stored_carbon_g() - want_g).abs() < 1e-9);
+        // 80 Wh stored carrying 10 g -> 125 g/kWh embodied (= 100/0.8).
+        assert!((mg.soc_wh() - 80.0).abs() < 1e-9);
+        assert!((mg.stored_intensity() - 125.0).abs() < 1e-6);
+        // Hour 2: dirty (800 > 125) -> the store discharges, releasing its
+        // embodied carbon pro rata; the ledger balances exactly.
+        let f2 = mg.settle(3_600.0, 5_400.0, 100.0, &trace);
+        assert!((f2.battery_j - 100.0 * 1_800.0).abs() < 1e-6);
+        let released = f2.battery_carbon_g;
+        assert!(released > 0.0);
+        assert!(
+            (released + mg.stored_carbon_g() - want_g).abs() < 1e-9,
+            "ledger must balance: {released} + {} vs {want_g}",
+            mg.stored_carbon_g()
+        );
+        // Arbitrage never launders to zero: the released intensity is the
+        // stored one (125), not 0 — and far below the dirty grid (800).
+        let released_intensity = released * 3.6e6 / f2.battery_j;
+        assert!((released_intensity - 125.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dirty_store_holds_until_the_grid_is_dirtier() {
+        // Store bought at 500-intensity must not discharge into a 300
+        // grid, but must into a 700 one.
+        let trace = IntensityTrace::from_samples(vec![
+            (0.0, 500.0),
+            (3_600.0, 300.0),
+            (7_200.0, 700.0),
+        ])
+        .unwrap();
+        let mut mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec {
+                capacity_wh: 100.0,
+                max_charge_w: 100.0,
+                max_discharge_w: 100.0,
+                rt_efficiency: 1.0,
+                initial_soc: 0.0,
+            },
+            // The median of hour 1's forward window lands on 500, so the
+            // first hour imports; later windows flatten to 700 and the
+            // flat-window guard stops the policy there.
+            charge: ChargePolicy::Threshold { percentile: 0.5, window_s: 10_800.0 },
+        });
+        let f = mg.settle(0.0, 3_600.0, 50.0, &trace);
+        assert!(f.grid_charge_j > 0.0, "first hour should import: {f:?}");
+        assert!((mg.stored_intensity() - 500.0).abs() < 1e-6);
+        // Hour 2 at 300 < stored 500: the store holds, grid serves.
+        let f2 = mg.settle(3_600.0, 7_200.0, 50.0, &trace);
+        assert_eq!(f2.battery_j, 0.0, "dirty store must hold: {f2:?}");
+        assert_eq!(f2.grid_charge_j, 0.0);
+        assert!((f2.grid_j - 50.0 * 3_600.0).abs() < 1e-6);
+        // Hour 3 at 700 > stored 500: discharge resumes.
+        let f3 = mg.settle(7_200.0, 9_000.0, 50.0, &trace);
+        assert!(f3.battery_j > 0.0, "profitable discharge blocked: {f3:?}");
+    }
+
+    #[test]
+    fn effective_intensity_prices_the_marginal_task() {
         const WINDOW: f64 = 60.0;
         // PV 300 W at noon, charged 1C-600 battery, grid at 500 g/kWh.
         let mg = Microgrid::new(MicrogridSpec::solar(300.0, 600.0, 0.9, 1.0));
         let noon = 43_200.0;
-        // 200 W draw fully PV-covered: effectively zero-carbon.
-        assert_eq!(mg.effective_intensity(noon, 200.0, 500.0, WINDOW), 0.0);
-        // 1500 W draw at noon: 300 PV + 600 battery + 600 grid -> 40% grid.
-        let eff = mg.effective_intensity(noon, 1_500.0, 500.0, WINDOW);
-        assert!((eff - 500.0 * 600.0 / 1_500.0).abs() < 1e-9);
-        // Midnight, battery charged: discharge rate still covers 600 W.
-        assert_eq!(mg.effective_intensity(0.0, 600.0, 500.0, WINDOW), 0.0);
-        let eff = mg.effective_intensity(0.0, 1_200.0, 500.0, WINDOW);
-        assert!((eff - 250.0).abs() < 1e-9);
-        // Depleted battery at midnight: pure grid.
+        // Standing 100 W, task 88 W: PV covers both -> zero-carbon task.
+        assert_eq!(mg.effective_intensity(noon, draw(100.0, 88.0), 500.0, WINDOW), 0.0);
+        // Standing 800 W at noon: 300 PV + 600 battery cover standing and
+        // leave 100 W for the 200 W task -> half grid.
+        let eff = mg.effective_intensity(noon, draw(800.0, 200.0), 500.0, WINDOW);
+        assert!((eff - 500.0 * 100.0 / 200.0).abs() < 1e-9, "eff {eff}");
+        // Midnight, battery charged: the rate covers standing + task.
+        assert_eq!(mg.effective_intensity(0.0, draw(400.0, 142.0), 500.0, WINDOW), 0.0);
+        // Depleted battery at midnight: pure grid, bit-exactly.
         let empty = Microgrid::new(MicrogridSpec::solar(300.0, 600.0, 0.9, 0.0));
-        assert_eq!(empty.effective_intensity(0.0, 100.0, 500.0, WINDOW), 500.0);
-        // Zero draw: marginal watt is local iff any local supply exists.
-        assert_eq!(mg.effective_intensity(0.0, 0.0, 500.0, WINDOW), 0.0);
-        assert_eq!(empty.effective_intensity(0.0, 0.0, 500.0, WINDOW), 500.0);
-        assert_eq!(empty.effective_intensity(noon, 0.0, 500.0, WINDOW), 0.0); // sun is up
+        assert_eq!(empty.effective_intensity(0.0, draw(54.0, 88.0), 500.0, WINDOW), 500.0);
+        // Rate-capped battery: standing eats the rate first — the old
+        // average blend advertised (600·0 + 900·500)/1500 to *every* watt;
+        // the marginal task at standing 1412 gets none of the battery.
+        let eff = mg.effective_intensity(0.0, draw(1_412.0, 88.0), 500.0, WINDOW);
+        assert_eq!(eff, 500.0, "rate-capped battery must not discount the marginal task");
+    }
+
+    #[test]
+    fn one_joule_battery_no_longer_advertises_a_clean_node() {
+        // Regression (ISSUE 5 satellite): 1 J of residual charge used to
+        // advertise a fully clean node at zero draw and invite a pile-on.
+        const WINDOW: f64 = 60.0;
+        let tiny = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec {
+                capacity_wh: 10.0,
+                max_charge_w: 500.0,
+                max_discharge_w: 500.0,
+                rt_efficiency: 1.0,
+                initial_soc: 1.0 / 36_000.0, // exactly 1 J
+            },
+            charge: ChargePolicy::Off,
+        });
+        // Zero task draw: the marginal watt is priced at 5% of rated
+        // (7.1 W), which 1 J sustains for a fraction of a second.
+        let eff = tiny.effective_intensity(0.0, draw(0.0, 0.0), 500.0, WINDOW);
+        assert!(eff > 0.99 * 500.0, "1 J battery advertised clean: {eff}");
+        // The legacy frozen blend shows exactly the old cliff: 0.0.
+        assert_eq!(tiny.frozen_intensity(0.0, draw(0.0, 0.0), 500.0, WINDOW), 0.0);
+        // A genuinely charged battery still advertises clean.
+        let full = Microgrid::new(MicrogridSpec::solar(0.0, 600.0, 1.0, 1.0));
+        assert_eq!(full.effective_intensity(0.0, draw(0.0, 0.0), 500.0, WINDOW), 0.0);
+        // Sub-threshold PV gets the same treatment: 0.2 W of sun is not a
+        // clean node.
+        let dim = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::from_samples(vec![(0.0, 0.2)]).unwrap(),
+            battery: BatterySpec::none(),
+            charge: ChargePolicy::Off,
+        });
+        let eff = dim.effective_intensity(0.0, draw(0.0, 0.0), 500.0, WINDOW);
+        assert!(eff > 0.95 * 500.0, "0.2 W of PV advertised clean: {eff}");
     }
 
     #[test]
     fn effective_intensity_caps_battery_at_sustainable_power() {
         // 1800 J of charge over a 60 s advertising window sustains 30 W —
-        // a near-empty battery must not advertise its full 500 W rate (the
-        // SoC→0 cliff would misroute a whole refresh window of load onto
-        // joules that drain in the first instant).
+        // a near-empty battery must not advertise its full 500 W rate.
         let low = Microgrid::new(MicrogridSpec {
             pv: PvProfile::none(),
             battery: BatterySpec {
@@ -489,18 +1051,93 @@ mod tests {
                 rt_efficiency: 1.0,
                 initial_soc: 0.05, // 1800 J
             },
+            charge: ChargePolicy::Off,
         });
-        let eff = low.effective_intensity(0.0, 100.0, 500.0, 60.0);
+        // Standing 0: the whole 30 W sustainable power serves the task.
+        let eff = low.effective_intensity(0.0, draw(0.0, 100.0), 500.0, 60.0);
         assert!((eff - 500.0 * (100.0 - 30.0) / 100.0).abs() < 1e-9, "eff {eff}");
         // A longer window sustains even less; a shorter one more.
-        let eff_long = low.effective_intensity(0.0, 100.0, 500.0, 600.0);
+        let eff_long = low.effective_intensity(0.0, draw(0.0, 100.0), 500.0, 600.0);
         assert!(eff_long > eff);
-        let eff_short = low.effective_intensity(0.0, 100.0, 500.0, 3.0);
+        let eff_short = low.effective_intensity(0.0, draw(0.0, 100.0), 500.0, 3.0);
         assert!(eff_short < eff);
         // Fully charged, the rate limit (not the charge) is what binds.
         let full = Microgrid::new(MicrogridSpec::solar(0.0, 10.0, 1.0, 1.0));
-        let eff = full.effective_intensity(0.0, 100.0, 500.0, 60.0);
+        let eff = full.effective_intensity(0.0, draw(0.0, 100.0), 500.0, 60.0);
         // 1C on 10 Wh = 10 W rate, though 36 kJ / 60 s could push 600 W.
         assert!((eff - 500.0 * (100.0 - 10.0) / 100.0).abs() < 1e-9, "eff {eff}");
+    }
+
+    #[test]
+    fn project_first_sample_matches_advert_and_degenerates_to_trace() {
+        let trace =
+            IntensityTrace::from_samples(vec![(0.0, 400.0), (600.0, 100.0), (1_200.0, 700.0)])
+                .unwrap();
+        let d = draw(54.0, 88.0);
+        // No PV, no battery: the projection IS the raw trace, bit-equal.
+        let bare = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec::none(),
+            charge: ChargePolicy::Off,
+        });
+        let proj = bare.project(0.0, 1_500.0, d, &trace, 300.0, 60.0);
+        let times: Vec<f64> = proj.iter().map(|&(t, ..)| t).collect();
+        assert_eq!(times, vec![0.0, 300.0, 600.0, 900.0, 1_200.0, 1_500.0]);
+        for &(t, eff, soc) in &proj {
+            assert_eq!(eff, trace.at(t), "bare projection must be the raw trace");
+            assert_eq!(soc, 0.0);
+        }
+        // Charged battery: the first sample equals the advertised price,
+        // and the trajectory drains the store (standing 54 W, 72 J).
+        let mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec {
+                capacity_wh: 0.02, // 72 J
+                max_charge_w: 500.0,
+                max_discharge_w: 500.0,
+                rt_efficiency: 1.0,
+                initial_soc: 1.0,
+            },
+            charge: ChargePolicy::Off,
+        });
+        let proj = mg.project(0.0, 1_500.0, d, &trace, 300.0, 60.0);
+        let mut advert = mg.clone();
+        assert_eq!(proj[0].1, advert.advertised_intensity(&trace, 0.0, d, 60.0));
+        assert_eq!(proj[0].2, 1.0);
+        // 72 J at 54 W standing drain dies within the first 300 s slot:
+        // later samples see an empty battery — the charge-frozen forecast
+        // would have advertised it forever.
+        assert_eq!(proj.last().unwrap().2, 0.0, "projection must drain the store");
+        assert_eq!(proj.last().unwrap().1, trace.at(1_500.0));
+        // Zero-width window: a single sample.
+        assert_eq!(mg.project(10.0, 10.0, d, &trace, 300.0, 60.0).len(), 1);
+        // project is pure: the live store is untouched.
+        assert_eq!(mg.soc_frac(), 1.0);
+    }
+
+    #[test]
+    fn project_sees_future_grid_charging() {
+        // Battery empty now; the trace turns cheap at t = 600 (with dirt
+        // ahead at t = 3000, so the flat-window guard stays out of play)
+        // and the policy will charge there. The projection's SoC rises —
+        // the charge-frozen view would keep the node dirty forever.
+        let trace =
+            IntensityTrace::from_samples(vec![(0.0, 800.0), (600.0, 100.0), (3_000.0, 800.0)])
+                .unwrap();
+        let mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec {
+                capacity_wh: 100.0,
+                max_charge_w: 200.0,
+                max_discharge_w: 200.0,
+                rt_efficiency: 1.0,
+                initial_soc: 0.0,
+            },
+            charge: ChargePolicy::Threshold { percentile: 0.3, window_s: 3_600.0 },
+        });
+        let proj = mg.project(0.0, 3_000.0, draw(54.0, 88.0), &trace, 300.0, 60.0);
+        assert_eq!(proj[0].2, 0.0);
+        let final_soc = proj.last().unwrap().2;
+        assert!(final_soc > 0.0, "projection must see the future charge: {proj:?}");
     }
 }

@@ -79,12 +79,13 @@ pub struct DeferAwareGreenScheduler {
     /// intensity ≤ `min × (1 + plateau_tol)` is an acceptable release
     /// target, and successive deferrals rotate across them.
     pub plateau_tol: f64,
-    /// Forecast-bearing decisions seen so far — the plateau rotation
-    /// counter. It advances on every decision that *could* defer (not
-    /// only on those that do), matching the validated reference
-    /// implementation; candidate slot grids shift with each arrival's
-    /// walk anyway, so either convention spreads releases.
-    decisions: u64,
+    /// `Defer` verdicts issued so far — the plateau rotation counter.
+    /// It advances **only** when a task is actually parked: the old
+    /// any-forecast-bearing-decision convention made two fleets that
+    /// differed only in assign-traffic release their deferred work on
+    /// different slots (an unrelated `Assign` between two `Defer`s
+    /// shifted the rotation), which broke twin comparisons.
+    defers_issued: u64,
 }
 
 /// Default release-plateau tolerance: slots within 2% of the forecast
@@ -101,7 +102,7 @@ impl DeferAwareGreenScheduler {
             inner: CarbonAwareScheduler::new("defer-green", Mode::Green.weights()),
             defer_min_gain,
             plateau_tol: DEFAULT_PLATEAU_TOL,
-            decisions: 0,
+            defers_issued: 0,
         }
     }
 }
@@ -115,7 +116,6 @@ impl Scheduler for DeferAwareGreenScheduler {
         let Some(&(_, now_i)) = now_fc.first() else {
             return SchedulingDecision::Assign(chosen);
         };
-        self.decisions += 1;
         // Per-slot minimum across the feasible fleet. Engine-built
         // forecasts share one sampling walk, so slot j lines up across
         // nodes; the min length guards hand-built views.
@@ -150,10 +150,11 @@ impl Scheduler for DeferAwareGreenScheduler {
         // always qualifies; guard anyway (plateau_tol is a pub knob) rather
         // than panic on an empty plateau.
         let Some(&until_s) =
-            candidates.get((self.decisions % candidates.len().max(1) as u64) as usize)
+            candidates.get((self.defers_issued % candidates.len().max(1) as u64) as usize)
         else {
             return SchedulingDecision::Assign(chosen);
         };
+        self.defers_issued += 1;
         SchedulingDecision::Defer { until_s }
     }
 
@@ -278,6 +279,49 @@ mod tests {
         }
         // 101 is within 2% of 100: all three slots share the plateau.
         assert_eq!(seen.into_iter().collect::<Vec<_>>(), vec![300, 600, 900]);
+    }
+
+    #[test]
+    fn rotation_advances_only_on_defer_verdicts() {
+        // Twin pin (ISSUE 5 satellite): interleaving forecast-bearing
+        // *assign* decisions between two defers must not shift which
+        // plateau slot the second defer targets — otherwise two fleets
+        // differing only in assign-traffic release deferred work on
+        // different slots.
+        let task = TaskDemand::default();
+        let deep = || {
+            fleet_with_forecasts(vec![
+                vec![(0.0, 620.0), (300.0, 620.0), (600.0, 620.0)],
+                vec![(0.0, 530.0), (300.0, 530.0), (600.0, 530.0)],
+                // Routed node: two equally-clean future slots (plateau).
+                vec![(0.0, 380.0), (300.0, 100.0), (600.0, 100.0)],
+            ])
+        };
+        // Flat forecasts: a forecast-bearing decision that assigns.
+        let flat = || {
+            fleet_with_forecasts(vec![
+                vec![(0.0, 620.0), (300.0, 620.0)],
+                vec![(0.0, 530.0), (300.0, 530.0)],
+                vec![(0.0, 380.0), (300.0, 380.0)],
+            ])
+        };
+        let defers_of = |decisions: &[&dyn Fn() -> FleetView]| {
+            let mut s = DeferAwareGreenScheduler::new(0.05);
+            decisions
+                .iter()
+                .filter_map(|mk| match s.decide(&task, &mk()) {
+                    SchedulingDecision::Defer { until_s } => Some(until_s),
+                    _ => None,
+                })
+                .collect::<Vec<f64>>()
+        };
+        let plain = defers_of(&[&deep, &deep]);
+        // The same two defers with assign-traffic interleaved: identical
+        // release slots. Under the old any-decision counter the middle
+        // assigns advanced the rotation and shifted the second slot.
+        let interleaved = defers_of(&[&deep, &flat, &flat, &deep]);
+        assert_eq!(plain, interleaved, "assign traffic shifted the release rotation");
+        assert_eq!(plain, vec![300.0, 600.0], "successive defers still rotate the plateau");
     }
 
     #[test]

@@ -84,8 +84,18 @@ pub struct NodeView {
     /// samples from `now` (first entry) to the latest viable release slot,
     /// at the deferral policy's resolution. Empty when the task carries no
     /// usable slack (no deferral configured, a released/migrated task, or
-    /// an infinite deadline) — schedulers must not defer then.
+    /// an infinite deadline) — schedulers must not defer then. For
+    /// microgrid nodes the samples come from a simulated SoC trajectory
+    /// ([`crate::microgrid::Microgrid::project`]), not a charge-frozen
+    /// blend: release slots are priced against the battery the node will
+    /// actually have.
     pub forecast: Vec<(f64, f64)>,
+    /// Projected state-of-charge fraction at each forecast slot
+    /// (`(t_s, soc)`, same slot grid as `forecast`). Empty for grid-only
+    /// nodes, for tasks without forecast context, and under the
+    /// charge-frozen twin (`SimConfig::charge_frozen_forecasts`).
+    /// Report/JSON diagnostics ride on it; schedulers may ignore it.
+    pub soc_forecast: Vec<(f64, f64)>,
 }
 
 impl NodeView {
@@ -103,6 +113,7 @@ impl NodeView {
             queue_delay_s,
             intensity,
             forecast: Vec::new(),
+            soc_forecast: Vec::new(),
         }
     }
 
@@ -193,6 +204,7 @@ mod tests {
         assert_eq!(v.queue_delay_s, 0.0);
         assert_eq!(v.intensity, 620.0); // static spec scenario
         assert!(v.forecast.is_empty());
+        assert!(v.soc_forecast.is_empty());
         // The override flows into the snapshot.
         r.get(0).set_intensity(42.0);
         assert_eq!(NodeView::observe(r.get(0), 1).intensity, 42.0);

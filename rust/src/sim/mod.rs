@@ -35,12 +35,24 @@
 //! * **per-node microgrids** ([`crate::microgrid`]): a node may sit behind
 //!   a PV array + battery; both parts of its draw are then covered
 //!   PV-first, then battery, then grid (settled slice-by-slice along the
-//!   virtual clock), only the grid share bears carbon, and the report
-//!   splits supply into pv/battery/grid per node with SoC timelines. The
-//!   blended *effective* intensity — a function of sunlight and state of
-//!   charge — feeds `EdgeNode::intensity_override`, so carbon-aware modes
+//!   virtual clock), grid joules bear carbon at the slice-mean intensity,
+//!   battery joules bear their *embodied* (stored-carbon) intensity, and
+//!   the report splits supply into pv/battery/grid per node with SoC
+//!   timelines. The *marginal* effective intensity — what the next task's
+//!   watts would actually pay after the standing draw claims local
+//!   supply — feeds `EdgeNode::intensity_override`, so carbon-aware modes
 //!   follow the sun and the charge (`solar-battery`, `microgrid-fleet`
 //!   scenarios; [`crate::experiments::sim_microgrid`]);
+//! * **grid-charge arbitrage + SoC-trajectory forecasts**: a
+//!   [`crate::microgrid::ChargePolicy`] lets batteries import grid power
+//!   during the cleanest fraction of the day-ahead window, carried at its
+//!   embodied intensity by a stored-carbon ledger (`charged == discharged
+//!   + stored`, never laundered to zero), and microgrid forecasts are
+//!   simulated SoC trajectories ([`crate::microgrid::Microgrid::project`])
+//!   instead of charge-frozen blends — deferral verdicts price release
+//!   slots against the battery the node will actually have (`arbitrage`
+//!   scenario, [`crate::experiments::sim_arbitrage_comparison`],
+//!   `--compare-arbitrage`);
 //! * scheduling through the [`crate::scheduler::Scheduler`] `decide` API:
 //!   every admission snapshots a [`crate::scheduler::FleetView`] — per-node
 //!   state (queue depth + in-flight as `inflight`), a queue-delay estimate

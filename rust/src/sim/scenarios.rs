@@ -48,9 +48,21 @@
 //!   (PV staggered across "longitudes", a well-charged battery); under a
 //!   carbon-aware mode the blended effective intensities steer load toward
 //!   the charged/sunlit half of the fleet.
+//! * **`arbitrage`** — an N-node (default 4) idle-free fleet on a
+//!   duck-curve grid (cheap clean night, dirty evening peak), each node
+//!   behind a grid-chargeable battery
+//!   ([`crate::microgrid::ChargePolicy::Threshold`]) with an
+//!   inverter-limited discharge rate, deferral on (4 h slack), and the
+//!   arrival *rate* pinned so battery dispatch timing is request-count
+//!   invariant. Batteries fill overnight at ~150 g/kWh (carried at their
+//!   embodied intensity by the stored-carbon ledger) and die mid-evening:
+//!   the regime where charge-frozen forecasts defer work onto
+//!   soon-to-be-empty batteries and SoC-trajectory forecasts do not
+//!   ([`crate::experiments::sim_arbitrage_comparison`],
+//!   `--compare-arbitrage`).
 
 use crate::carbon::{zone_traces_from_csv, IntensityTrace};
-use crate::microgrid::{BatterySpec, MicrogridSpec, PvProfile};
+use crate::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
 use crate::node::NodeSpec;
 
 use super::engine::{ArrivalProcess, ChurnEvent, DeferralSpec, SimConfig};
@@ -68,6 +80,7 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "consolidation",
     "solar-battery",
     "microgrid-fleet",
+    "arbitrage",
 ];
 
 /// One synthetic ElectricityMaps-style day (hourly, 3 zones) bundled for
@@ -91,6 +104,71 @@ pub struct Scenario {
     /// Empty means "no microgrids anywhere"; otherwise one slot per node.
     pub microgrids: Vec<Option<MicrogridSpec>>,
     pub config: SimConfig,
+}
+
+impl Scenario {
+    /// Validate every invariant the engine's hot paths rely on (shape,
+    /// capacities, churn targets, microgrid specs, deferral knobs,
+    /// config). Run once by [`super::Simulation::try_run`] before any
+    /// event is processed — the hot paths themselves keep only
+    /// `debug_assert!`s, so a bad scenario is a clean startup `Err`, not
+    /// a mid-simulation panic.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.specs.len();
+        if n == 0 {
+            return Err("scenario needs at least one node".into());
+        }
+        if self.traces.len() != n {
+            return Err(format!("{} traces for {n} nodes (need one per node)", self.traces.len()));
+        }
+        if self.capacity.len() != n {
+            return Err(format!(
+                "{} capacities for {n} nodes (need one per node)",
+                self.capacity.len()
+            ));
+        }
+        if let Some(i) = self.capacity.iter().position(|&c| c == 0) {
+            return Err(format!("node {i} has zero service capacity"));
+        }
+        if !self.microgrids.is_empty() && self.microgrids.len() != n {
+            return Err(format!(
+                "{} microgrid slots for {n} nodes (need none, or one per node)",
+                self.microgrids.len()
+            ));
+        }
+        for (i, mg) in self.microgrids.iter().enumerate() {
+            if let Some(mg) = mg {
+                mg.validate().map_err(|e| format!("node {i} microgrid: {e}"))?;
+            }
+        }
+        for ev in &self.churn {
+            if ev.node >= n {
+                return Err(format!("churn event names node {} of {n}", ev.node));
+            }
+            if !ev.at_s.is_finite() || ev.at_s < 0.0 {
+                return Err(format!("churn event at invalid time {}", ev.at_s));
+            }
+        }
+        match &self.arrivals {
+            ArrivalProcess::Uniform { rate_hz } | ArrivalProcess::Poisson { rate_hz } => {
+                if !rate_hz.is_finite() || *rate_hz <= 0.0 {
+                    return Err(format!("arrival rate must be > 0, got {rate_hz}"));
+                }
+            }
+            ArrivalProcess::Mmpp { rate_low_hz, rate_high_hz, mean_dwell_s } => {
+                for (name, v) in [
+                    ("rate_low_hz", rate_low_hz),
+                    ("rate_high_hz", rate_high_hz),
+                    ("mean_dwell_s", mean_dwell_s),
+                ] {
+                    if !v.is_finite() || *v <= 0.0 {
+                        return Err(format!("MMPP {name} must be > 0, got {v}"));
+                    }
+                }
+            }
+        }
+        self.config.validate()
+    }
 }
 
 /// Build a named scenario. `nodes == 0` and `requests == 0` select
@@ -117,6 +195,7 @@ pub fn build(name: &str, nodes: usize, requests: usize, seed: u64) -> Option<Sce
         "microgrid-fleet" => {
             Some(microgrid_fleet(if nodes == 0 { 12 } else { nodes }, requests, seed))
         }
+        "arbitrage" => Some(arbitrage(if nodes == 0 { 4 } else { nodes }, requests, seed)),
         _ => None,
     }
 }
@@ -481,6 +560,7 @@ fn microgrid_fleet(n: usize, requests: usize, seed: u64) -> Scenario {
             (i % 2 == 0).then(|| MicrogridSpec {
                 pv: PvProfile::diurnal_with_sunrise(3.0 * s.rated_power_w, i as f64 * 1_800.0),
                 battery: BatterySpec::simple(3.0 * s.rated_power_w, 0.9, 0.9),
+                charge: ChargePolicy::Off,
             })
         })
         .collect();
@@ -495,6 +575,147 @@ fn microgrid_fleet(n: usize, requests: usize, seed: u64) -> Scenario {
         microgrids,
         config,
     }
+}
+
+/// Request rate the `arbitrage` scenario is pinned to (Hz): 4000 requests
+/// per virtual day, **independent of the request count** (which only sets
+/// the run length) — like `consolidation`'s pinned rate, this keeps the
+/// battery dispatch timing the A/B probes invariant under `--requests`.
+pub const ARBITRAGE_RATE_HZ: f64 = 4_000.0 / 86_400.0;
+
+/// `arbitrage` storage sizing: a 300 Wh battery charging at 1C but
+/// discharging through a 120 W inverter — enough to carry one node's task
+/// draw, not the whole fleet's, so the marginal price genuinely blends.
+pub const ARBITRAGE_BATTERY_WH: f64 = 300.0;
+pub const ARBITRAGE_DISCHARGE_W: f64 = 120.0;
+
+/// Deferral slack the `arbitrage` scenario grants every arrival (4 h).
+pub const ARBITRAGE_SLACK_S: f64 = 14_400.0;
+
+/// Mean real-executor time per request in the `arbitrage` scenario (ms):
+/// ≈ 10 s of service per task, so task carbon is large enough for defer
+/// verdicts to show up in the totals.
+pub const ARBITRAGE_BASE_EXEC_MS: f64 = 480.0;
+
+/// One day of the `arbitrage` duck curve, hourly (gCO₂/kWh): a cheap
+/// clean night (wind), a morning ramp, a solar belly, a dirty evening
+/// peak, a post-peak shoulder and a late decline.
+const ARBITRAGE_DUCK_DAY_G: [f64; 24] = [
+    150.0, 145.0, 140.0, 140.0, 145.0, 160.0, // clean night
+    380.0, 480.0, 520.0, // morning ramp
+    430.0, 330.0, 260.0, 230.0, 225.0, 240.0, 300.0, // solar belly
+    520.0, 640.0, 680.0, 660.0, // evening peak
+    560.0, 540.0, // shoulder
+    300.0, 200.0, // decline into the next night
+];
+
+/// The duck curve tiled over `days` days (hourly step-held samples).
+fn arbitrage_duck_trace(days: usize) -> IntensityTrace {
+    let mut pts = Vec::with_capacity(days * 24);
+    for d in 0..days {
+        for (h, &v) in ARBITRAGE_DUCK_DAY_G.iter().enumerate() {
+            pts.push((d as f64 * 86_400.0 + h as f64 * 3_600.0, v));
+        }
+    }
+    IntensityTrace::from_samples(pts).expect("duck curve samples are valid")
+}
+
+/// The grid-charge arbitrage showcase: an idle-free fleet (every gram is
+/// task-attributed, isolating the deferral economics) on a duck-curve
+/// grid, each node behind a grid-chargeable battery
+/// ([`ChargePolicy::threshold`]: import during the cleanest quarter of
+/// the day-ahead window) with an inverter-limited discharge rate, and
+/// 4 h of deferral slack on every arrival. The battery fills overnight at
+/// ~150 g/kWh (carried at its embodied ~150/η intensity by the
+/// stored-carbon ledger) and dies partway through the dirty evening —
+/// exactly the regime where charge-frozen forecasts defer work onto
+/// batteries that will be empty by the release slot, and where the
+/// SoC-trajectory forecasts ([`crate::microgrid::Microgrid::project`])
+/// price release slots truthfully
+/// ([`crate::experiments::sim_arbitrage_comparison`] is the A/B).
+fn arbitrage(n: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig {
+        seed,
+        base_exec_ms: ARBITRAGE_BASE_EXEC_MS,
+        deferral: Some(DeferralSpec {
+            slack_s: ARBITRAGE_SLACK_S,
+            headroom_s: 900.0,
+            policy: crate::carbon::DeferralPolicy::default(),
+        }),
+        ..SimConfig::default()
+    };
+    // Tile enough duck days to cover the pinned-rate run plus slack; the
+    // charge policy additionally peeks one window past the horizon.
+    let horizon_s = requests as f64 / ARBITRAGE_RATE_HZ + ARBITRAGE_SLACK_S;
+    let days = (horizon_s / 86_400.0).ceil() as usize + 2;
+    let trace = arbitrage_duck_trace(days);
+    let day_mean = trace.mean(86_400.0, 288);
+    // Idle-free host chassis (the Table II calibration convention): rated
+    // draw from the calibrated host model, every watt task-attributed.
+    let (rated_power_w, _) = crate::config::default_host_power().node_power_split();
+    let specs: Vec<NodeSpec> = (0..n)
+        .map(|i| NodeSpec {
+            name: format!("arb-{i:02}"),
+            cpu_quota: 1.0,
+            mem_mb: 1024,
+            intensity: day_mean,
+            rated_power_w,
+            idle_w: 0.0,
+            prior_ms: 250.0,
+            alpha: 0.005,
+            overhead_ms: 8.0,
+            time_scale: 20.6,
+            adaptive: false,
+        })
+        .collect();
+    let microgrids = (0..n)
+        .map(|_| {
+            Some(MicrogridSpec {
+                pv: PvProfile::none(),
+                battery: BatterySpec {
+                    capacity_wh: ARBITRAGE_BATTERY_WH,
+                    max_charge_w: ARBITRAGE_BATTERY_WH, // 1C charger
+                    max_discharge_w: ARBITRAGE_DISCHARGE_W,
+                    rt_efficiency: 0.9,
+                    initial_soc: 0.3,
+                },
+                charge: ChargePolicy::threshold(crate::microgrid::DEFAULT_CHARGE_PERCENTILE),
+            })
+        })
+        .collect();
+    Scenario {
+        name: "arbitrage".into(),
+        traces: vec![trace; n],
+        capacity: vec![1; n],
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz: ARBITRAGE_RATE_HZ },
+        requests,
+        churn: Vec::new(),
+        microgrids,
+        config,
+    }
+}
+
+/// Twin of `sc` with grid charging switched off on every microgrid
+/// (PV-excess charging stays) — the baseline the arbitrage margin is
+/// measured against.
+pub fn charge_disabled_twin(sc: &Scenario) -> Scenario {
+    let mut twin = sc.clone();
+    twin.name = format!("{}-no-charge", sc.name);
+    for mg in twin.microgrids.iter_mut().flatten() {
+        mg.charge = ChargePolicy::Off;
+    }
+    twin
+}
+
+/// Twin of `sc` with the legacy charge-frozen forecasts restored
+/// (`SimConfig::charge_frozen_forecasts`) — the baseline the
+/// SoC-trajectory forecasting margin is measured against.
+pub fn charge_frozen_twin(sc: &Scenario) -> Scenario {
+    let mut twin = sc.clone();
+    twin.name = format!("{}-frozen", sc.name);
+    twin.config.charge_frozen_forecasts = true;
+    twin
 }
 
 /// Grid-only twin of `sc`: same fleet, arrivals and seed with every
@@ -570,10 +791,87 @@ mod tests {
         assert_eq!(build("consolidation", 0, 0, 1).unwrap().specs.len(), 12);
         assert_eq!(build("solar-battery", 0, 0, 1).unwrap().specs.len(), 4);
         assert_eq!(build("microgrid-fleet", 0, 0, 1).unwrap().specs.len(), 12);
+        assert_eq!(build("arbitrage", 0, 0, 1).unwrap().specs.len(), 4);
         // node/request overrides respected
         let sc = build("fleet-100", 25, 500, 1).unwrap();
         assert_eq!(sc.specs.len(), 25);
         assert_eq!(sc.requests, 500);
+    }
+
+    #[test]
+    fn every_scenario_validates() {
+        for name in SCENARIO_NAMES {
+            let sc = build(name, 0, 0, 7).unwrap();
+            assert!(sc.validate().is_ok(), "{name}: {:?}", sc.validate());
+        }
+        // Shape violations surface as errors with context.
+        let mut sc = build("paper-3-node", 0, 0, 7).unwrap();
+        sc.capacity[1] = 0;
+        assert!(sc.validate().unwrap_err().contains("capacity"));
+        let mut sc = build("paper-3-node", 0, 0, 7).unwrap();
+        sc.traces.pop();
+        assert!(sc.validate().is_err());
+        let mut sc = build("churn", 0, 0, 7).unwrap();
+        sc.churn[0].node = 999;
+        assert!(sc.validate().unwrap_err().contains("churn"));
+        let mut sc = build("real-trace", 0, 0, 7).unwrap();
+        sc.config.deferral.as_mut().unwrap().policy.resolution_s = -5.0;
+        assert!(sc.validate().unwrap_err().contains("resolution"));
+        let mut sc = build("solar-battery", 0, 0, 7).unwrap();
+        sc.microgrids[0].as_mut().unwrap().battery.rt_efficiency = 2.0;
+        assert!(sc.validate().unwrap_err().contains("microgrid"));
+        let mut sc = build("arbitrage", 0, 0, 7).unwrap();
+        sc.microgrids[0].as_mut().unwrap().charge =
+            ChargePolicy::Threshold { percentile: 5.0, window_s: 86_400.0 };
+        assert!(sc.validate().unwrap_err().contains("percentile"));
+    }
+
+    #[test]
+    fn arbitrage_scenario_shape() {
+        let sc = build("arbitrage", 0, 4_000, 7).unwrap();
+        assert_eq!(sc.name, "arbitrage");
+        assert_eq!(sc.specs.len(), 4);
+        assert_eq!(sc.microgrids.len(), 4);
+        // Idle-free chassis: every gram is task-attributed.
+        for s in &sc.specs {
+            assert_eq!(s.idle_w, 0.0);
+            assert!((s.rated_power_w - 142.0).abs() < 1e-9);
+            // Static intensity mirrors the duck-curve day mean.
+            assert!((s.intensity - sc.traces[0].mean(86_400.0, 288)).abs() < 1e-9);
+        }
+        for mg in sc.microgrids.iter().flatten() {
+            assert!(mg.validate().is_ok());
+            assert_eq!(mg.battery.capacity_wh, ARBITRAGE_BATTERY_WH);
+            assert_eq!(mg.battery.max_discharge_w, ARBITRAGE_DISCHARGE_W);
+            assert!(!mg.charge.is_off(), "arbitrage batteries must grid-charge");
+            assert_eq!(mg.pv.power_w(43_200.0), 0.0, "no PV: arbitrage isolated");
+        }
+        // Duck shape: clean night, dirty evening, decline after.
+        let tr = &sc.traces[0];
+        assert_eq!(tr.at(2.0 * 3_600.0), 140.0);
+        assert_eq!(tr.at(18.0 * 3_600.0), 680.0);
+        assert_eq!(tr.at(23.0 * 3_600.0), 200.0);
+        // ...and it tiles: day 2 repeats day 1.
+        assert_eq!(tr.at(86_400.0 + 2.0 * 3_600.0), 140.0);
+        // Deferral on with the documented slack; rate pinned regardless of
+        // the request count (only the run length changes).
+        let d = sc.config.deferral.as_ref().expect("arbitrage defers by default");
+        assert_eq!(d.slack_s, ARBITRAGE_SLACK_S);
+        assert_eq!(sc.arrivals.mean_rate_hz(), ARBITRAGE_RATE_HZ);
+        assert_eq!(build("arbitrage", 0, 20_000, 7).unwrap().arrivals.mean_rate_hz(),
+            ARBITRAGE_RATE_HZ);
+        assert_eq!(sc.config.base_exec_ms, ARBITRAGE_BASE_EXEC_MS);
+        assert!(!sc.config.charge_frozen_forecasts);
+        // Twins: charge-off strips only the policy; frozen flips only the
+        // forecast mode.
+        let off = charge_disabled_twin(&sc);
+        assert_eq!(off.name, "arbitrage-no-charge");
+        assert!(off.microgrids.iter().flatten().all(|m| m.charge.is_off()));
+        assert_eq!(off.requests, sc.requests);
+        let frozen = charge_frozen_twin(&sc);
+        assert_eq!(frozen.name, "arbitrage-frozen");
+        assert!(frozen.config.charge_frozen_forecasts);
+        assert!(frozen.microgrids.iter().flatten().all(|m| !m.charge.is_off()));
     }
 
     #[test]

@@ -108,6 +108,48 @@ fn conservation_per_node_ledger_sums_to_fleet_totals() {
                 );
             }
         }
+        // Stored-carbon ledger: per node, everything grid-charged into the
+        // battery is either released by discharge or still stored; the
+        // labelled discharge subset never exceeds the node's total carbon.
+        for n in &r.nodes {
+            assert!(
+                n.energy_grid_charge_kwh >= 0.0
+                    && n.carbon_charged_g >= 0.0
+                    && n.carbon_battery_g >= 0.0
+                    && n.carbon_stored_g >= 0.0,
+                "{name}/{}: negative storage-ledger term",
+                n.name
+            );
+            assert!(
+                (n.carbon_charged_g - n.carbon_battery_g - n.carbon_stored_g).abs()
+                    <= 1e-6 * n.carbon_charged_g.max(1e-30),
+                "{name}/{}: stored-carbon ledger unbalanced ({} != {} + {})",
+                n.name,
+                n.carbon_charged_g,
+                n.carbon_battery_g,
+                n.carbon_stored_g
+            );
+            assert!(
+                n.carbon_battery_g <= n.carbon_g() + 1e-9 * n.carbon_g().max(1e-30),
+                "{name}/{}: released embodied carbon exceeds the node ledger",
+                n.name
+            );
+        }
+        let (gc, charged, spent, stored) = r.node_sums_storage();
+        assert!(
+            (gc - r.energy_grid_charge_kwh_total).abs()
+                <= 1e-9 * r.energy_grid_charge_kwh_total.max(1e-30),
+            "{name}: grid-charge ledger"
+        );
+        assert!(
+            (charged - spent - stored).abs() <= 1e-6 * charged.max(1e-30),
+            "{name}: fleet stored-carbon ledger unbalanced"
+        );
+        assert!(
+            (charged - r.carbon_charged_g_total).abs()
+                <= 1e-9 * r.carbon_charged_g_total.max(1e-30),
+            "{name}: charged-carbon ledger"
+        );
         let (pv, batt, grid) = r.node_sums_supply();
         assert!(
             (pv - r.energy_pv_kwh_total).abs() <= 1e-9 * r.energy_pv_kwh_total.max(1e-30),
@@ -666,6 +708,229 @@ fn solar_battery_microgrids_beat_grid_only_twin() {
     let rendered = exp::sim_microgrid_render(&mg, &plain, &rr);
     assert!(!rendered.contains("NaN"), "{rendered}");
     assert!(rendered.contains("microgrids cut gCO2/req"));
+}
+
+#[test]
+fn project_matches_instantaneous_pricing_and_degenerates_to_the_trace() {
+    // ISSUE 5 satellite proptest: across random PV/battery/draw/trace
+    // configurations, Microgrid::project's first sample equals the
+    // instantaneous advertised intensity, SoC stays in [0, 1], the slot
+    // grid is exactly DeferralPolicy::forecast's walk, and a zero-PV
+    // zero-battery projection is bit-equal to the raw grid trace.
+    use carbonedge::carbon::{DeferralPolicy, IntensityTrace};
+    use carbonedge::microgrid::{
+        BatterySpec, ChargePolicy, Microgrid, MicrogridSpec, NodeDraw, PvProfile,
+    };
+    use carbonedge::util::proptest::check;
+    check(
+        "project first sample == advert, SoC in [0,1], grid-equal when bare",
+        120,
+        |rng| {
+            let trace = IntensityTrace::from_samples(
+                (0..6).map(|i| (i as f64 * 500.0, rng.range(50.0, 900.0))).collect(),
+            )
+            .unwrap();
+            let pv_peak = if rng.f64() < 0.5 { 0.0 } else { rng.range(10.0, 400.0) };
+            let batt_wh = if rng.f64() < 0.5 { 0.0 } else { rng.range(1.0, 600.0) };
+            let spec = MicrogridSpec {
+                pv: PvProfile::diurnal(pv_peak),
+                battery: BatterySpec {
+                    capacity_wh: batt_wh,
+                    max_charge_w: rng.range(10.0, 600.0),
+                    max_discharge_w: rng.range(10.0, 600.0),
+                    rt_efficiency: rng.range(0.5, 1.0),
+                    initial_soc: rng.f64(),
+                },
+                charge: if rng.f64() < 0.5 {
+                    ChargePolicy::Off
+                } else {
+                    ChargePolicy::Threshold {
+                        percentile: rng.range(0.1, 0.9),
+                        window_s: rng.range(600.0, 5_000.0),
+                    }
+                },
+            };
+            let draw = NodeDraw {
+                standing_w: rng.range(0.0, 300.0),
+                task_w: rng.range(1.0, 200.0),
+                rated_w: 142.0,
+            };
+            let t0 = rng.range(0.0, 2_000.0);
+            let horizon = t0 + rng.range(0.0, 3_000.0);
+            let resolution = rng.range(30.0, 600.0);
+            (trace, spec, draw, t0, horizon, resolution)
+        },
+        |(trace, spec, draw, t0, horizon, resolution)| {
+            let mg = Microgrid::new(spec.clone());
+            let proj = mg.project(*t0, *horizon, *draw, trace, *resolution, 60.0);
+            // Slot grid identical to the policy walk.
+            let policy = DeferralPolicy { resolution_s: *resolution, min_gain: 0.05 };
+            let walk = policy.forecast(|t| trace.at(t), *t0, *horizon);
+            if proj.len() != walk.len() {
+                return Err(format!("slot grids differ: {} vs {}", proj.len(), walk.len()));
+            }
+            for (&(tp, eff, soc), &(tw, _)) in proj.iter().zip(&walk) {
+                if tp != tw {
+                    return Err(format!("slot {tp} vs walk {tw}"));
+                }
+                if !(0.0..=1.0 + 1e-9).contains(&soc) {
+                    return Err(format!("SoC {soc} out of [0, 1] at t={tp}"));
+                }
+                if !eff.is_finite() || eff < 0.0 {
+                    return Err(format!("bad intensity {eff} at t={tp}"));
+                }
+            }
+            // First sample is the instantaneous advertised price.
+            let mut advert = mg.clone();
+            let want = advert.advertised_intensity(trace, *t0, *draw, 60.0);
+            if proj[0].1 != want {
+                return Err(format!("first sample {} != advert {want}", proj[0].1));
+            }
+            // project is pure.
+            if mg.soc_frac() != Microgrid::new(spec.clone()).soc_frac() {
+                return Err("project mutated the live store".into());
+            }
+            // Bare microgrid: bit-equal to the raw trace.
+            let bare = Microgrid::new(MicrogridSpec {
+                pv: PvProfile::none(),
+                battery: BatterySpec::none(),
+                charge: ChargePolicy::Off,
+            });
+            for (t, eff, soc) in bare.project(*t0, *horizon, *draw, trace, *resolution, 60.0) {
+                if eff != trace.at(t) || soc != 0.0 {
+                    return Err(format!("bare projection diverged at t={t}: {eff}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn frozen_forecasts_change_nothing_without_microgrid_deferral_overlap() {
+    // Shim-equivalence extended across the scenario library: the
+    // charge-frozen twin replays bit-for-bit unless a scenario has BOTH
+    // microgrids and deferral (only `arbitrage` today) — the trajectory
+    // rewrite is surgical.
+    for name in scenarios::SCENARIO_NAMES {
+        let sc = scenarios::build(name, 0, 1_500, 7).unwrap();
+        let overlap = !sc.microgrids.is_empty() && sc.config.deferral.is_some();
+        let frozen = scenarios::charge_frozen_twin(&sc);
+        let mut a = green_run(&sc);
+        let mut b = green_run(&frozen);
+        // The twin renames itself, and only the trajectory run records the
+        // soc_projection diagnostic: strip both so the comparison (either
+        // direction) is about genuine scheduling behaviour.
+        b.scenario = a.scenario.clone();
+        for n in a.nodes.iter_mut().chain(b.nodes.iter_mut()) {
+            n.soc_projection.clear();
+        }
+        if overlap {
+            assert_ne!(a, b, "{name}: frozen twin should genuinely differ");
+            assert_ne!(
+                a.deferred, b.deferred,
+                "{name}: forecast modes should produce different defer verdicts"
+            );
+        } else {
+            a.scenario = String::new();
+            b.scenario = String::new();
+            assert_eq!(a, b, "{name}: frozen flag leaked into a non-overlap scenario");
+        }
+    }
+}
+
+#[test]
+fn arbitrage_beats_charge_off_and_charge_frozen_twins() {
+    // The ISSUE 5 acceptance gate, margins validated against the exact
+    // xoshiro/splitmix64 engine replica: on the arbitrage scenario under
+    // defer-green (4000 requests, seed 7), grid-charge arbitrage plus
+    // SoC-trajectory forecasting must complete everything with no missed
+    // deadlines, cut gCO₂/req well below the charge-off twin (replica:
+    // ≈0.74×) and strictly below the charge-frozen twin (replica:
+    // ≈0.98×), with the stored-carbon ledger balancing.
+    let sc = scenarios::build("arbitrage", 0, 4_000, 7).unwrap();
+    let (arb, off, frozen) = exp::sim_arbitrage_comparison(&sc);
+    for r in [&arb, &off, &frozen] {
+        assert_eq!(r.scheduler, "defer-green");
+        assert_eq!(r.requests, 4_000);
+        assert_eq!(r.completed, 4_000, "{}: must complete everything", r.scenario);
+        assert_eq!(r.rejected, 0, "{}", r.scenario);
+        assert_eq!(r.deadline_missed, 0, "{}: no missed deadlines", r.scenario);
+        assert!(r.deferred > 500, "{}: duck curve should park work", r.scenario);
+    }
+    // Arbitrage buys clean night energy and spends it against the duck
+    // evening: a decisive cut vs the charge-off twin.
+    assert!(
+        arb.carbon_per_req_g < 0.9 * off.carbon_per_req_g,
+        "arbitrage {} g/req vs charge-off {} g/req",
+        arb.carbon_per_req_g,
+        off.carbon_per_req_g
+    );
+    // SoC-trajectory forecasts stop the frozen view from deferring onto
+    // batteries that are empty by the release slot: strictly lower.
+    assert!(
+        arb.carbon_per_req_g < frozen.carbon_per_req_g,
+        "trajectory {} g/req vs charge-frozen {} g/req",
+        arb.carbon_per_req_g,
+        frozen.carbon_per_req_g
+    );
+    assert_ne!(arb.deferred, frozen.deferred, "forecast modes must verdict differently");
+    // The charge flows are real and honestly accounted.
+    assert!(arb.energy_grid_charge_kwh_total > 0.0);
+    assert!(arb.carbon_charged_g_total > 0.0);
+    assert!(arb.carbon_battery_g_total > 0.0, "evening discharge must bill embodied carbon");
+    assert!(
+        (arb.carbon_charged_g_total
+            - arb.carbon_battery_g_total
+            - arb.carbon_stored_g_total)
+            .abs()
+            <= 1e-6 * arb.carbon_charged_g_total,
+        "stored-carbon ledger unbalanced"
+    );
+    assert_eq!(off.energy_grid_charge_kwh_total, 0.0);
+    assert_eq!(off.carbon_charged_g_total, 0.0);
+    // Projected-vs-actual SoC diagnostics ride on the trajectory runs.
+    assert!(arb.nodes.iter().all(|n| !n.soc_projection.is_empty()));
+    assert!(frozen.nodes.iter().all(|n| n.soc_projection.is_empty()));
+    // Deterministic A/B/C: the comparison replays bit-for-bit.
+    let (arb2, off2, frozen2) = exp::sim_arbitrage_comparison(&sc);
+    assert_eq!(arb, arb2);
+    assert_eq!(off, off2);
+    assert_eq!(frozen, frozen2);
+    // The render never prints NaN and names both margins.
+    let rendered = exp::sim_arbitrage_render(&arb, &off, &frozen);
+    assert!(!rendered.contains("NaN"), "{rendered}");
+    assert!(rendered.contains("arbitrage cuts gCO2/req"));
+    assert!(rendered.contains("SoC-trajectory forecasts cut"));
+}
+
+#[test]
+fn trajectory_forecasts_do_not_regress_solar_battery_deferral() {
+    // The ISSUE 5 acceptance gate on solar-battery: with deferral enabled
+    // (4 h slack) and the green gate, SoC-trajectory forecasting must
+    // yield gCO₂/req ≤ the charge-frozen twin (replica: ≈0.99996× — an
+    // equality-class outcome; the strict win is pinned on arbitrage) with
+    // zero missed deadlines on both sides.
+    let mut sc = scenarios::build("solar-battery", 0, 4_000, 19).unwrap();
+    sc.config.deferral = Some(carbonedge::sim::DeferralSpec {
+        slack_s: 14_400.0,
+        headroom_s: 900.0,
+        policy: carbonedge::carbon::DeferralPolicy::default(),
+    });
+    let frozen = scenarios::charge_frozen_twin(&sc);
+    let traj = green_run(&sc);
+    let froz = green_run(&frozen);
+    assert_eq!(traj.completed, 4_000);
+    assert_eq!(froz.completed, 4_000);
+    assert_eq!(traj.deadline_missed, 0);
+    assert_eq!(froz.deadline_missed, 0);
+    assert!(traj.deferred > 0, "slack over a PV day should park some work");
+    assert!(
+        traj.carbon_per_req_g <= froz.carbon_per_req_g * (1.0 + 5e-3),
+        "trajectory {} g/req regressed vs frozen {} g/req",
+        traj.carbon_per_req_g,
+        froz.carbon_per_req_g
+    );
 }
 
 #[test]
