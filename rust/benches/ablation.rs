@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     ];
     for s in scheds.iter_mut() {
         let run = coord.run_scheduled(&model, s.as_mut(), &inputs)?;
-        let r = RunReport::from_records(s.name(), &run.records);
+        let r = RunReport::from_records(s.name(), &run.records)?;
         let mix: Vec<String> = r.node_usage.iter().map(|(n, c)| format!("{n}:{c}")).collect();
         t.row(vec![
             r.label.clone(),
@@ -112,7 +112,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut green = CarbonAwareScheduler::new("green", Mode::Green.weights());
     let run = coord.run_scheduled(&model, &mut green, &inputs)?;
-    let r = RunReport::from_records("task-level (CE-Green)", &run.records);
+    let r = RunReport::from_records("task-level (CE-Green)", &run.records)?;
     t.row(vec![
         r.label.clone(),
         f2(r.latency_ms.mean),
@@ -120,7 +120,7 @@ fn main() -> anyhow::Result<()> {
         "single node".into(),
     ]);
     let recs = coord.run_pipeline(&model, 0.5, &inputs, 4.0)?;
-    let rp = RunReport::from_records("green pipeline (w=0.5)", &recs);
+    let rp = RunReport::from_records("green pipeline (w=0.5)", &recs)?;
     t.row(vec![
         rp.label.clone(),
         f2(rp.latency_ms.mean),

@@ -95,7 +95,7 @@ impl<'a> ServingLoop<'a> {
             }
         }
 
-        let report = RunReport::from_records(label, &records);
+        let report = RunReport::from_records(label, &records)?;
         Ok(ServeOutcome {
             report,
             queue_ms_mean: mean_or_zero(&queue_ms),

@@ -159,10 +159,10 @@ pub fn run_interleaved(
             }
         }
         for (i, r) in runners.into_iter().enumerate() {
-            all_reports[i].push(RunReport::from_records(&r.label, &r.records));
+            all_reports[i].push(RunReport::from_records(&r.label, &r.records)?);
         }
     }
-    Ok(all_reports.iter().map(|reps| average_reports(reps)).collect())
+    all_reports.iter().map(|reps| average_reports(reps)).collect()
 }
 
 /// Run one configuration (`repetitions` × `iterations`, averaged) —

@@ -47,6 +47,19 @@
 //!
 //! Python never runs on the request path: after `make artifacts` the binary
 //! is self-contained — and the [`sim`] layer needs no artifacts at all.
+//!
+//! # Observability
+//!
+//! The [`obs`] module is the audit trail behind the aggregates: attach an
+//! [`obs::EventSink`] via [`sim::Simulation::try_run_observed`] and the
+//! engine streams every arrival, scheduling verdict (with per-candidate
+//! scores from [`scheduler::Scheduler::decide_explained`]), dispatch,
+//! deferred release, completion, churn transition and microgrid settlement
+//! slice as it happens — NDJSON to disk through [`obs::FirehoseSink`] in
+//! constant memory, plus an in-process [`obs::Telemetry`] registry whose
+//! per-decision overhead histogram is guarded against the paper's 0.03 ms
+//! envelope. With no sink attached nothing is constructed: the default
+//! `run`/`try_run` paths are untouched and reports stay bit-identical.
 
 pub mod carbon;
 pub mod config;
@@ -58,6 +71,7 @@ pub mod metrics;
 pub mod microgrid;
 pub mod model;
 pub mod node;
+pub mod obs;
 pub mod partitioner;
 pub mod runtime;
 pub mod scheduler;

@@ -13,6 +13,7 @@
 //!               [--idle-w W] [--slack S [--headroom S] [--defer-resolution S]
 //!               [--defer-min-gain F]] [--no-defer] [--compare-defer]
 //!               [--compare-defer-routing] [--trace-csv PATH]
+//!               [--trace-out PATH [--trace-filter KINDS]] [--timeline-stride N]
 //!               [--consolidate LARGE] [--list-scenarios]
 //!               [--pv-peak-w W | --pv-csv PATH] [--battery-wh WH]
 //!               [--battery-rt-eff F] [--compare-microgrid]
@@ -224,7 +225,7 @@ fn run() -> Result<()> {
             ];
             for s in scheds.iter_mut() {
                 let run = coord.run_scheduled(&model, s.as_mut(), &stream.inputs())?;
-                let r = RunReport::from_records(s.name(), &run.records);
+                let r = RunReport::from_records(s.name(), &run.records)?;
                 print_report(&r);
             }
         }
@@ -241,6 +242,22 @@ fn run() -> Result<()> {
             let nodes = args.parse_or("nodes", 0usize)?;
             let requests = args.parse_or("requests", 0usize)?;
             let seed = args.parse_or("seed", 42u64)?;
+            // Observability knobs: an NDJSON event firehose plus report-
+            // export downsampling. Parsed up front so every later arm can
+            // reject combinations loudly.
+            let trace_out = args.get("trace-out").map(str::to_string);
+            if args.has("trace-filter") && trace_out.is_none() {
+                anyhow::bail!("--trace-filter needs --trace-out");
+            }
+            let trace_filter = match args.get("trace-filter") {
+                Some(spec) => carbonedge::obs::TraceFilter::parse(spec)
+                    .map_err(|e| anyhow::anyhow!("--trace-filter: {e}"))?,
+                None => carbonedge::obs::TraceFilter::all(),
+            };
+            let timeline_stride = args.parse_or("timeline-stride", 1usize)?;
+            if args.has("timeline-stride") && !args.bool_flag("json") {
+                anyhow::bail!("--timeline-stride only applies to --json report output");
+            }
             // Validate here so bad CLI input gets a clean error, not a
             // library assert panic.
             if name == "churn" && nodes > 0 && nodes < 3 {
@@ -253,6 +270,9 @@ fn run() -> Result<()> {
                 // instead.
                 for flag in [
                     "trace-csv",
+                    "trace-out",
+                    "trace-filter",
+                    "timeline-stride",
                     "idle-w",
                     "slack",
                     "headroom",
@@ -434,6 +454,9 @@ fn run() -> Result<()> {
                     "headroom",
                     "defer-resolution",
                     "defer-min-gain",
+                    "trace-out",
+                    "trace-filter",
+                    "timeline-stride",
                 ];
                 for flag in conflicts {
                     if args.has(flag) {
@@ -497,6 +520,20 @@ fn run() -> Result<()> {
             // once here so any bad combination is a clean error, never a
             // mid-simulation panic.
             sc.validate().map_err(|e| anyhow::anyhow!("invalid scenario configuration: {e}"))?;
+            if trace_out.is_some() {
+                // The firehose documents exactly one simulation run; the
+                // comparison arms run several and would interleave their
+                // events into one stream.
+                for switch in
+                    ["sweep", "compare-defer", "compare-defer-routing", "compare-arbitrage"]
+                {
+                    if args.bool_flag(switch) {
+                        anyhow::bail!(
+                            "--trace-out streams one run; it does not combine with --{switch}"
+                        );
+                    }
+                }
+            }
             if args.bool_flag("compare-arbitrage") {
                 if sc.microgrids.is_empty()
                     || sc.microgrids.iter().flatten().all(|m| m.charge.is_off())
@@ -596,21 +633,38 @@ fn run() -> Result<()> {
                          performance|round-robin|random|least-loaded|amp4ec"
                     ),
                 };
-                let report = carbonedge::sim::Simulation::try_run(&sc, sched.as_mut())
-                    .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?;
-                if args.bool_flag("json") {
-                    println!("{}", carbonedge::metrics::sim_report_to_json(&report));
-                } else {
-                    println!("{}", report.render());
-                }
+                run_sim_single(
+                    &sc,
+                    sched.as_mut(),
+                    args.bool_flag("json"),
+                    timeline_stride,
+                    trace_out.as_deref(),
+                    trace_filter,
+                )?;
             } else if let Some(mode_s) = args.get("mode") {
                 let mode = Mode::parse(mode_s).ok_or_else(|| anyhow::anyhow!("bad --mode"))?;
-                let report = exp::sim_run_mode(&sc, mode);
-                if args.bool_flag("json") {
-                    println!("{}", carbonedge::metrics::sim_report_to_json(&report));
-                } else {
-                    println!("{}", report.render());
-                }
+                let mut sched = CarbonAwareScheduler::new(mode.name(), mode.weights());
+                run_sim_single(
+                    &sc,
+                    &mut sched,
+                    args.bool_flag("json"),
+                    timeline_stride,
+                    trace_out.as_deref(),
+                    trace_filter,
+                )?;
+            } else if trace_out.is_some() {
+                // Tracing needs one concrete run to document: default to
+                // green mode (the headline CE configuration) instead of the
+                // four-way mode comparison.
+                let mut sched = CarbonAwareScheduler::new("green", Mode::Green.weights());
+                run_sim_single(
+                    &sc,
+                    &mut sched,
+                    args.bool_flag("json"),
+                    timeline_stride,
+                    trace_out.as_deref(),
+                    trace_filter,
+                )?;
             } else {
                 let reports = exp::sim_mode_comparison(&sc);
                 println!("{}", exp::sim_comparison_render(&reports));
@@ -621,6 +675,49 @@ fn run() -> Result<()> {
                 "unknown command {other:?}; try info|golden|serve|reproduce|sweep|overhead|baselines|sim"
             );
         }
+    }
+    Ok(())
+}
+
+/// Run one scheduler over the scenario — optionally streaming the NDJSON
+/// event firehose to `trace_out` — and print the report. Telemetry and the
+/// trace summary go to stderr so `--json` stdout stays machine-parseable.
+fn run_sim_single(
+    sc: &carbonedge::sim::Scenario,
+    sched: &mut dyn Scheduler,
+    json: bool,
+    timeline_stride: usize,
+    trace_out: Option<&str>,
+    trace_filter: carbonedge::obs::TraceFilter,
+) -> Result<()> {
+    use carbonedge::sim::Simulation;
+    let report = match trace_out {
+        Some(path) => {
+            let file = std::fs::File::create(path)
+                .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
+            let mut sink = carbonedge::obs::FirehoseSink::with_filter(
+                std::io::BufWriter::new(file),
+                trace_filter,
+            );
+            let (report, telem) = Simulation::try_run_observed(sc, sched, &mut sink)
+                .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?;
+            let events = sink.events_written();
+            let buf = sink.finish().map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            buf.into_inner().map_err(|e| anyhow::anyhow!("flushing {path}: {e}"))?;
+            eprint!("{}", telem.render());
+            eprintln!("trace: {events} events -> {path}");
+            report
+        }
+        None => Simulation::try_run(sc, sched)
+            .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?,
+    };
+    if json {
+        println!(
+            "{}",
+            carbonedge::metrics::sim_report_json_string_strided(&report, timeline_stride)
+        );
+    } else {
+        println!("{}", report.render());
     }
     Ok(())
 }
@@ -711,7 +808,23 @@ defers by default, like real-trace):
 real traces:
   --trace-csv PATH       with --scenario real-trace: load an
                          ElectricityMaps-style CSV (timestamp[,zone],gCO2/kWh)
-                         instead of the bundled synthetic day"
+                         instead of the bundled synthetic day
+
+observability (single runs only — with neither --mode nor --scheduler,
+--trace-out defaults to one green-mode run):
+  --trace-out PATH       stream the event firehose to PATH as NDJSON, one
+                         event per line: arrival, decision (with
+                         per-candidate scores and reject reasons), dispatch,
+                         defer_release, completion, churn, mg_slice;
+                         telemetry (event counts, queue-delay/latency
+                         histograms, per-decision overhead vs the paper's
+                         0.03 ms envelope) prints to stderr
+  --trace-filter KINDS   keep only these event kinds: 'all' or a comma list
+                         of arrival,decision,dispatch,defer_release,
+                         completion,churn,mg_slice
+  --timeline-stride N    with --json: downsample the per-node intensity and
+                         SoC timelines to every Nth sample (first and last
+                         kept)"
     );
 }
 

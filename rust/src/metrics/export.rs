@@ -1,8 +1,17 @@
 //! Sustainability-report export (paper Sec. V-B: "organizations can use
 //! the framework to report carbon emissions for sustainability
 //! compliance"): serialize run reports to JSON.
+//!
+//! Simulation reports stream through [`crate::util::json::JsonWriter`]
+//! ([`write_sim_report`]): bytes go straight to the output `io::Write`
+//! with no intermediate [`Json`] tree, so a 10M-request report (with its
+//! per-node SoC timelines) exports to disk in constant memory. The
+//! tree-building [`sim_report_to_json`] survives as a thin parse of the
+//! streamed text for callers that want to inspect the document.
 
-use crate::util::json::{arr, num, obj, s, Json};
+use std::io;
+
+use crate::util::json::{arr, num, obj, s, Json, JsonWriter};
 
 use super::RunReport;
 
@@ -35,103 +44,131 @@ pub fn report_to_json(r: &RunReport) -> Json {
     ])
 }
 
-/// Finite number → `Json::Num`, anything else (NaN/±inf from a degenerate
-/// run — zero completions, zero-carbon denominators) → `Json::Null`, so
-/// the export is always valid RFC 8259 JSON.
-fn fnum(x: f64) -> Json {
-    if x.is_finite() {
-        Json::Num(x)
-    } else {
-        Json::Null
+/// One `(t, value)` timeline as a JSON array of pairs, keeping every
+/// `stride`-th sample plus the last (so the horizon state always
+/// survives downsampling). `stride == 1` keeps everything.
+fn write_timeline<W: io::Write>(
+    j: &mut JsonWriter<W>,
+    key: &str,
+    samples: &[(f64, f64)],
+    stride: usize,
+) -> io::Result<()> {
+    let stride = stride.max(1);
+    let last = samples.len().saturating_sub(1);
+    j.key(key)?;
+    j.begin_arr()?;
+    for (i, &(t, v)) in samples.iter().enumerate() {
+        if i % stride != 0 && i != last {
+            continue;
+        }
+        j.begin_arr()?;
+        j.fnum(t)?;
+        j.fnum(v)?;
+        j.end_arr()?;
     }
+    j.end_arr()
 }
 
-/// JSON document for one virtual-time simulation report (the L3.5
-/// counterpart of [`report_to_json`]) — same compliance pipeline, fed by
-/// the fleet simulator instead of real execution. Derived rates/ratios go
-/// through [`fnum`]: a run where nothing completed serializes them as
+/// Stream one virtual-time simulation report (the L3.5 counterpart of
+/// [`report_to_json`]) as JSON straight onto `out` — same compliance
+/// pipeline, fed by the fleet simulator instead of real execution, with
+/// no intermediate tree. Derived rates/ratios go through
+/// [`JsonWriter::fnum`]: a run where nothing completed serializes them as
 /// `0`/`null`, never as bare `NaN` (which is not JSON).
+/// `timeline_stride` downsamples the per-node SoC timelines/projections
+/// (keep every Nth sample plus the last); pass `1` for the full series.
+pub fn write_sim_report<W: io::Write>(
+    out: &mut W,
+    r: &crate::sim::SimReport,
+    timeline_stride: usize,
+) -> io::Result<()> {
+    let j = &mut JsonWriter::new(&mut *out);
+    j.begin_obj()?;
+    j.field_str("scenario", &r.scenario)?;
+    j.field_str("scheduler", &r.scheduler)?;
+    j.field_num("seed", r.seed as f64)?;
+    j.field_num("requests", r.requests as f64)?;
+    j.field_num("completed", r.completed as f64)?;
+    j.field_num("rejected", r.rejected as f64)?;
+    j.field_num("migrated", r.migrated as f64)?;
+    j.field_num("deferred", r.deferred as f64)?;
+    j.field_num("deadline_missed", r.deadline_missed as f64)?;
+    j.field_fnum("makespan_s", r.makespan_s)?;
+    j.field_fnum("throughput_rps", r.throughput_rps)?;
+    j.key("latency_ms")?;
+    j.begin_obj()?;
+    j.field_fnum("mean", r.latency_ms.mean)?;
+    j.field_fnum("p50", r.latency_ms.p50)?;
+    j.field_fnum("p95", r.latency_ms.p95)?;
+    j.field_fnum("p99", r.latency_ms.p99)?;
+    j.field_fnum("max", r.latency_ms.max)?;
+    j.end_obj()?;
+    j.field_fnum("wait_ms_mean", r.wait_ms.mean)?;
+    j.field_fnum("wait_ms_p99", r.wait_ms.p99)?;
+    j.field_fnum("energy_kwh", r.energy_kwh_total)?;
+    j.field_fnum("energy_dynamic_kwh", r.energy_dynamic_kwh_total)?;
+    j.field_fnum("energy_idle_kwh", r.energy_idle_kwh_total)?;
+    j.field_fnum("energy_pv_kwh", r.energy_pv_kwh_total)?;
+    j.field_fnum("energy_battery_kwh", r.energy_battery_kwh_total)?;
+    j.field_fnum("energy_grid_kwh", r.energy_grid_kwh_total)?;
+    j.field_fnum("energy_grid_charge_kwh", r.energy_grid_charge_kwh_total)?;
+    j.field_fnum("carbon_charged_g", r.carbon_charged_g_total)?;
+    j.field_fnum("carbon_battery_g", r.carbon_battery_g_total)?;
+    j.field_fnum("carbon_stored_g", r.carbon_stored_g_total)?;
+    j.field_fnum("carbon_total_g", r.carbon_g_total)?;
+    j.field_fnum("carbon_dynamic_g", r.carbon_dynamic_g_total)?;
+    j.field_fnum("carbon_idle_g", r.carbon_idle_g_total)?;
+    j.field_fnum("carbon_per_req_g", r.carbon_per_req_g)?;
+    j.key("nodes")?;
+    j.begin_arr()?;
+    for n in &r.nodes {
+        j.begin_obj()?;
+        j.field_str("node", &n.name)?;
+        j.field_num("tasks", n.tasks as f64)?;
+        j.field_fnum("busy_ms", n.busy_ms)?;
+        j.field_fnum("uptime_s", n.uptime_s)?;
+        j.field_fnum("queue_delay_ms_p50", n.queue_delay_ms_p50)?;
+        j.field_fnum("queue_delay_ms_p99", n.queue_delay_ms_p99)?;
+        j.field_fnum("queue_delay_ms_max", n.queue_delay_ms_max)?;
+        j.field_fnum("energy_kwh", n.energy_kwh())?;
+        j.field_fnum("energy_dynamic_kwh", n.energy_dynamic_kwh)?;
+        j.field_fnum("energy_idle_kwh", n.energy_idle_kwh)?;
+        j.field_fnum("carbon_g", n.carbon_g())?;
+        j.field_fnum("carbon_dynamic_g", n.carbon_dynamic_g)?;
+        j.field_fnum("carbon_idle_g", n.carbon_idle_g)?;
+        j.field_bool("microgrid", n.microgrid)?;
+        j.field_fnum("energy_pv_kwh", n.energy_pv_kwh)?;
+        j.field_fnum("energy_battery_kwh", n.energy_battery_kwh)?;
+        j.field_fnum("energy_grid_kwh", n.energy_grid_kwh)?;
+        j.field_fnum("energy_grid_charge_kwh", n.energy_grid_charge_kwh)?;
+        j.field_fnum("carbon_charged_g", n.carbon_charged_g)?;
+        j.field_fnum("carbon_battery_g", n.carbon_battery_g)?;
+        j.field_fnum("carbon_stored_g", n.carbon_stored_g)?;
+        write_timeline(j, "soc_timeline", &n.soc_timeline, timeline_stride)?;
+        write_timeline(j, "soc_projection", &n.soc_projection, timeline_stride)?;
+        j.end_obj()?;
+    }
+    j.end_arr()?;
+    j.end_obj()
+}
+
+/// [`write_sim_report`] into a `String` (full timelines, stride 1).
+pub fn sim_report_json_string(r: &crate::sim::SimReport) -> String {
+    sim_report_json_string_strided(r, 1)
+}
+
+/// [`write_sim_report`] into a `String` with a timeline stride.
+pub fn sim_report_json_string_strided(r: &crate::sim::SimReport, stride: usize) -> String {
+    let mut buf = Vec::new();
+    write_sim_report(&mut buf, r, stride).expect("write to Vec<u8> cannot fail");
+    String::from_utf8(buf).expect("JsonWriter emits UTF-8")
+}
+
+/// The simulation report as a parsed [`Json`] tree — a thin parse of the
+/// streamed [`write_sim_report`] text, for callers that want to inspect
+/// or embed the document rather than write it out.
 pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
-    obj(vec![
-        ("scenario", s(&r.scenario)),
-        ("scheduler", s(&r.scheduler)),
-        ("seed", num(r.seed as f64)),
-        ("requests", num(r.requests as f64)),
-        ("completed", num(r.completed as f64)),
-        ("rejected", num(r.rejected as f64)),
-        ("migrated", num(r.migrated as f64)),
-        ("deferred", num(r.deferred as f64)),
-        ("deadline_missed", num(r.deadline_missed as f64)),
-        ("makespan_s", fnum(r.makespan_s)),
-        ("throughput_rps", fnum(r.throughput_rps)),
-        (
-            "latency_ms",
-            obj(vec![
-                ("mean", fnum(r.latency_ms.mean)),
-                ("p50", fnum(r.latency_ms.p50)),
-                ("p95", fnum(r.latency_ms.p95)),
-            ]),
-        ),
-        ("wait_ms_mean", fnum(r.wait_ms.mean)),
-        ("energy_kwh", fnum(r.energy_kwh_total)),
-        ("energy_dynamic_kwh", fnum(r.energy_dynamic_kwh_total)),
-        ("energy_idle_kwh", fnum(r.energy_idle_kwh_total)),
-        ("energy_pv_kwh", fnum(r.energy_pv_kwh_total)),
-        ("energy_battery_kwh", fnum(r.energy_battery_kwh_total)),
-        ("energy_grid_kwh", fnum(r.energy_grid_kwh_total)),
-        ("energy_grid_charge_kwh", fnum(r.energy_grid_charge_kwh_total)),
-        ("carbon_charged_g", fnum(r.carbon_charged_g_total)),
-        ("carbon_battery_g", fnum(r.carbon_battery_g_total)),
-        ("carbon_stored_g", fnum(r.carbon_stored_g_total)),
-        ("carbon_total_g", fnum(r.carbon_g_total)),
-        ("carbon_dynamic_g", fnum(r.carbon_dynamic_g_total)),
-        ("carbon_idle_g", fnum(r.carbon_idle_g_total)),
-        ("carbon_per_req_g", fnum(r.carbon_per_req_g)),
-        (
-            "nodes",
-            arr(r.nodes
-                .iter()
-                .map(|n| {
-                    obj(vec![
-                        ("node", s(&n.name)),
-                        ("tasks", num(n.tasks as f64)),
-                        ("busy_ms", fnum(n.busy_ms)),
-                        ("uptime_s", fnum(n.uptime_s)),
-                        ("queue_delay_ms_p50", fnum(n.queue_delay_ms_p50)),
-                        ("queue_delay_ms_max", fnum(n.queue_delay_ms_max)),
-                        ("energy_kwh", fnum(n.energy_kwh())),
-                        ("energy_dynamic_kwh", fnum(n.energy_dynamic_kwh)),
-                        ("energy_idle_kwh", fnum(n.energy_idle_kwh)),
-                        ("carbon_g", fnum(n.carbon_g())),
-                        ("carbon_dynamic_g", fnum(n.carbon_dynamic_g)),
-                        ("carbon_idle_g", fnum(n.carbon_idle_g)),
-                        ("microgrid", Json::Bool(n.microgrid)),
-                        ("energy_pv_kwh", fnum(n.energy_pv_kwh)),
-                        ("energy_battery_kwh", fnum(n.energy_battery_kwh)),
-                        ("energy_grid_kwh", fnum(n.energy_grid_kwh)),
-                        ("energy_grid_charge_kwh", fnum(n.energy_grid_charge_kwh)),
-                        ("carbon_charged_g", fnum(n.carbon_charged_g)),
-                        ("carbon_battery_g", fnum(n.carbon_battery_g)),
-                        ("carbon_stored_g", fnum(n.carbon_stored_g)),
-                        (
-                            "soc_timeline",
-                            arr(n.soc_timeline
-                                .iter()
-                                .map(|&(t, soc)| arr(vec![fnum(t), fnum(soc)]))
-                                .collect()),
-                        ),
-                        (
-                            "soc_projection",
-                            arr(n.soc_projection
-                                .iter()
-                                .map(|&(t, soc)| arr(vec![fnum(t), fnum(soc)]))
-                                .collect()),
-                        ),
-                    ])
-                })
-                .collect()),
-        ),
-    ])
+    Json::parse(&sim_report_json_string(r)).expect("streamed report is valid JSON")
 }
 
 /// A compliance document over several runs (e.g. one per mode).
@@ -168,7 +205,7 @@ mod tests {
                 output: Tensor::zeros(vec![1]),
             })
             .collect();
-        RunReport::from_records("test", &recs)
+        RunReport::from_records("test", &recs).unwrap()
     }
 
     #[test]
@@ -307,6 +344,63 @@ mod tests {
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.req_usize("completed").unwrap(), 0);
         assert_eq!(back.req_f64("carbon_per_req_g").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn timeline_stride_keeps_first_and_last() {
+        let samples: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, i as f64 / 10.0)).collect();
+        let mut buf = Vec::new();
+        {
+            let j = &mut JsonWriter::new(&mut buf);
+            j.begin_obj().unwrap();
+            write_timeline(j, "tl", &samples, 4).unwrap();
+            j.end_obj().unwrap();
+        }
+        let v = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        let tl = v.req_arr("tl").unwrap();
+        // Indices 0, 4, 8 plus the final sample (9).
+        assert_eq!(tl.len(), 4);
+        assert_eq!(tl[0].as_arr().unwrap()[0].as_f64(), Some(0.0));
+        assert_eq!(tl[3].as_arr().unwrap()[0].as_f64(), Some(9.0));
+        // Stride 1 (and 0, clamped) keeps everything.
+        for stride in [0, 1] {
+            let mut buf = Vec::new();
+            let j = &mut JsonWriter::new(&mut buf);
+            j.begin_obj().unwrap();
+            write_timeline(j, "tl", &samples, stride).unwrap();
+            j.end_obj().unwrap();
+            let v = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+            assert_eq!(v.req_arr("tl").unwrap().len(), samples.len());
+        }
+    }
+
+    #[test]
+    fn streamed_sim_report_carries_tail_percentiles_and_strides() {
+        let sc = crate::sim::scenarios::build("solar-battery", 2, 60, 3).unwrap();
+        let mut sched = crate::scheduler::CarbonAwareScheduler::new(
+            "green",
+            crate::scheduler::Mode::Green.weights(),
+        );
+        let r = crate::sim::Simulation::run(&sc, &mut sched);
+        let back = Json::parse(&sim_report_json_string(&r)).unwrap();
+        // Tail percentiles ride along in the streamed document.
+        let p50 = back.path(&["latency_ms", "p50"]).unwrap().as_f64().unwrap();
+        let p99 = back.path(&["latency_ms", "p99"]).unwrap().as_f64().unwrap();
+        let max = back.path(&["latency_ms", "max"]).unwrap().as_f64().unwrap();
+        assert!(p50 <= p99 && p99 <= max, "{p50} / {p99} / {max}");
+        assert!(back.req_f64("wait_ms_p99").unwrap() >= 0.0);
+        let node0 = &back.req_arr("nodes").unwrap()[0];
+        assert!(
+            node0.req_f64("queue_delay_ms_p99").unwrap()
+                <= node0.req_f64("queue_delay_ms_max").unwrap() + 1e-12
+        );
+        // Downsampled timelines keep both endpoints.
+        let orig = node0.req_arr("soc_timeline").unwrap();
+        let strided = Json::parse(&sim_report_json_string_strided(&r, 10)).unwrap();
+        let tl = strided.req_arr("nodes").unwrap()[0].req_arr("soc_timeline").unwrap();
+        assert!(tl.len() <= orig.len());
+        assert_eq!(tl.first(), orig.first());
+        assert_eq!(tl.last(), orig.last());
     }
 
     #[test]

@@ -3,7 +3,12 @@
 
 mod export;
 
-pub use export::{compliance_document, report_to_json, sim_report_to_json};
+pub use export::{
+    compliance_document, report_to_json, sim_report_json_string,
+    sim_report_json_string_strided, sim_report_to_json, write_sim_report,
+};
+
+use anyhow::{ensure, Result};
 
 use crate::carbon;
 use crate::node::ExecutionRecord;
@@ -35,9 +40,12 @@ pub struct RunReport {
 
 impl RunReport {
     /// Build from per-task execution records (closed-loop run: wall time =
-    /// Σ simulated latencies).
-    pub fn from_records(label: &str, records: &[ExecutionRecord]) -> RunReport {
-        assert!(!records.is_empty(), "empty run");
+    /// Σ simulated latencies). An empty record set is an `Err` — a run
+    /// where every task failed or was filtered out has no aggregates to
+    /// report, and callers (the CLI, the coordinator) surface that as a
+    /// clean error instead of a panic.
+    pub fn from_records(label: &str, records: &[ExecutionRecord]) -> Result<RunReport> {
+        ensure!(!records.is_empty(), "run {label:?} produced no execution records to aggregate");
         let lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
         let energy_j: f64 = records.iter().map(|r| r.energy_j).sum();
         let carbon_g: f64 = records.iter().map(|r| r.carbon_g).sum();
@@ -47,7 +55,7 @@ impl RunReport {
         for r in records {
             *usage.entry(r.node.clone()).or_default() += 1;
         }
-        RunReport {
+        Ok(RunReport {
             label: label.to_string(),
             inferences: n,
             latency_ms: Summary::of(&lat),
@@ -58,7 +66,7 @@ impl RunReport {
             carbon_efficiency: carbon::carbon_efficiency(n, carbon_g),
             node_usage: usage.into_iter().collect(),
             exec_ms_mean: records.iter().map(|r| r.exec_ms).sum::<f64>() / n as f64,
-        }
+        })
     }
 
     /// Carbon reduction vs a baseline (positive = this run is greener),
@@ -89,9 +97,10 @@ impl RunReport {
     }
 }
 
-/// Average several repetition reports (the paper repeats 3×).
-pub fn average_reports(reports: &[RunReport]) -> RunReport {
-    assert!(!reports.is_empty());
+/// Average several repetition reports (the paper repeats 3×). An empty
+/// slice is an `Err` — there is nothing to average.
+pub fn average_reports(reports: &[RunReport]) -> Result<RunReport> {
+    ensure!(!reports.is_empty(), "no repetition reports to average");
     let k = reports.len() as f64;
     let mut out = reports[0].clone();
     out.throughput_rps = reports.iter().map(|r| r.throughput_rps).sum::<f64>() / k;
@@ -112,7 +121,7 @@ pub fn average_reports(reports: &[RunReport]) -> RunReport {
     }
     out.node_usage = usage.into_iter().collect();
     out.inferences = reports.iter().map(|r| r.inferences).sum();
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -136,7 +145,7 @@ mod tests {
         // 50 inferences at 254.85 ms, 36 J each at 530 g/kWh.
         let records: Vec<ExecutionRecord> =
             (0..50).map(|_| rec("host", 254.85, 36.11, 0.005316)).collect();
-        let r = RunReport::from_records("mono", &records);
+        let r = RunReport::from_records("mono", &records).unwrap();
         assert_eq!(r.inferences, 50);
         assert!((r.latency_ms.mean - 254.85).abs() < 1e-9);
         // throughput = 1/latency for a closed loop: 3.92 req/s
@@ -148,13 +157,13 @@ mod tests {
 
     #[test]
     fn reduction_sign_convention() {
-        let base = RunReport::from_records("m", &[rec("h", 100.0, 10.0, 0.0053)]);
-        let green = RunReport::from_records("g", &[rec("g", 107.0, 10.7, 0.0041)]);
+        let base = RunReport::from_records("m", &[rec("h", 100.0, 10.0, 0.0053)]).unwrap();
+        let green = RunReport::from_records("g", &[rec("g", 107.0, 10.7, 0.0041)]).unwrap();
         let red = green.reduction_vs(&base);
         // (1 - 0.0041/0.0053) = +22.6% — the paper's headline shape.
         assert!(red > 0.2 && red < 0.25, "{red}");
         // a dirtier run has negative reduction
-        let perf = RunReport::from_records("p", &[rec("hi", 100.0, 10.0, 0.0067)]);
+        let perf = RunReport::from_records("p", &[rec("hi", 100.0, 10.0, 0.0067)]).unwrap();
         assert!(perf.reduction_vs(&base) < 0.0);
     }
 
@@ -162,7 +171,7 @@ mod tests {
     fn usage_percentages() {
         let records =
             vec![rec("a", 1.0, 1.0, 0.1), rec("a", 1.0, 1.0, 0.1), rec("b", 1.0, 1.0, 0.1)];
-        let r = RunReport::from_records("x", &records);
+        let r = RunReport::from_records("x", &records).unwrap();
         let pct = r.usage_pct(&["a", "b", "c"]);
         assert!((pct[0] - 66.666).abs() < 0.01);
         assert!((pct[1] - 33.333).abs() < 0.01);
@@ -171,12 +180,19 @@ mod tests {
 
     #[test]
     fn averaging_reports() {
-        let r1 = RunReport::from_records("x", &[rec("a", 100.0, 10.0, 0.004)]);
-        let r2 = RunReport::from_records("x", &[rec("a", 120.0, 12.0, 0.006)]);
-        let avg = average_reports(&[r1, r2]);
+        let r1 = RunReport::from_records("x", &[rec("a", 100.0, 10.0, 0.004)]).unwrap();
+        let r2 = RunReport::from_records("x", &[rec("a", 120.0, 12.0, 0.006)]).unwrap();
+        let avg = average_reports(&[r1, r2]).unwrap();
         assert!((avg.latency_ms.mean - 110.0).abs() < 1e-9);
         assert!((avg.carbon_per_inf_g - 0.005).abs() < 1e-12);
         assert_eq!(avg.inferences, 2);
         assert_eq!(avg.node_usage, vec![("a".to_string(), 2)]);
+    }
+
+    #[test]
+    fn empty_inputs_are_errors_not_panics() {
+        let err = RunReport::from_records("empty", &[]).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        assert!(average_reports(&[]).is_err());
     }
 }

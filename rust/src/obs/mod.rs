@@ -1,0 +1,573 @@
+//! Observability: a zero-overhead-when-off event firehose plus in-process
+//! telemetry for the discrete-event simulator.
+//!
+//! The paper evaluates CarbonEdge end-to-end — carbon per decision, 0.03 ms
+//! scheduling overhead, deferral behaviour — but the numbers it reports are
+//! aggregates. This module exposes the *per-event* stream behind those
+//! aggregates so individual verdicts can be audited: why a task was routed
+//! to node X, which forecast slot a defer parked it for, and what each
+//! microgrid settlement slice cost.
+//!
+//! Three pieces:
+//!
+//! - [`TraceEvent`] / [`EventSink`] — the simulator's hot paths
+//!   ([`crate::sim::Simulation::try_run_observed`]) emit borrowed,
+//!   enum-dispatched events at every arrival, scheduling decision,
+//!   dispatch, deferred release, completion, churn transition, and
+//!   microgrid settlement slice. With no sink attached (the default
+//!   `run`/`try_run` entry points) no event is ever constructed — the off
+//!   path is a dead branch, not a null write.
+//! - [`FirehoseSink`] — streams one NDJSON object per event through
+//!   [`crate::util::json::JsonWriter`]; no intermediate tree, no in-memory
+//!   event buffer, so a 10M-request run streams to disk in constant
+//!   memory. [`TraceFilter`] drops kinds before serialisation.
+//! - [`Telemetry`] — monotonic per-kind counters plus log2 histograms for
+//!   queue delay, end-to-end latency, and per-decision wall-clock
+//!   overhead, guarded against the paper's 0.03 ms envelope
+//!   ([`OVERHEAD_ENVELOPE_NS`]).
+//!
+//! Tracing must never perturb the simulation: the engine asserts (in tests)
+//! that a fully-traced run produces a bit-identical
+//! [`crate::sim::SimReport`] to an untraced one.
+
+mod telemetry;
+
+pub use telemetry::{Log2Histogram, Telemetry, OVERHEAD_ENVELOPE_NS};
+
+use std::io;
+
+use crate::scheduler::{DecisionExplain, RejectReason, SchedulingDecision};
+use crate::util::json::JsonWriter;
+
+/// The seven trace event kinds, used for filtering and counting.
+/// Discriminants index [`Telemetry::events`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Arrival = 0,
+    Decision = 1,
+    Dispatch = 2,
+    DeferRelease = 3,
+    Completion = 4,
+    Churn = 5,
+    MicrogridSlice = 6,
+}
+
+impl EventKind {
+    pub const COUNT: usize = 7;
+    pub const ALL: [EventKind; EventKind::COUNT] = [
+        EventKind::Arrival,
+        EventKind::Decision,
+        EventKind::Dispatch,
+        EventKind::DeferRelease,
+        EventKind::Completion,
+        EventKind::Churn,
+        EventKind::MicrogridSlice,
+    ];
+
+    /// Stable label: the `kind` field of every NDJSON line and the token
+    /// accepted by `--trace-filter`.
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::Arrival => "arrival",
+            EventKind::Decision => "decision",
+            EventKind::Dispatch => "dispatch",
+            EventKind::DeferRelease => "defer_release",
+            EventKind::Completion => "completion",
+            EventKind::Churn => "churn",
+            EventKind::MicrogridSlice => "mg_slice",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EventKind> {
+        match s {
+            "arrival" => Some(EventKind::Arrival),
+            "decision" => Some(EventKind::Decision),
+            "dispatch" => Some(EventKind::Dispatch),
+            "defer_release" | "defer" => Some(EventKind::DeferRelease),
+            "completion" => Some(EventKind::Completion),
+            "churn" => Some(EventKind::Churn),
+            "mg_slice" | "microgrid" => Some(EventKind::MicrogridSlice),
+            _ => None,
+        }
+    }
+
+    fn bit(self) -> u8 {
+        1 << (self as u8)
+    }
+}
+
+/// Bitmask over [`EventKind`]s a sink cares about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceFilter(u8);
+
+impl TraceFilter {
+    pub fn all() -> TraceFilter {
+        TraceFilter(0x7f)
+    }
+
+    pub fn none() -> TraceFilter {
+        TraceFilter(0)
+    }
+
+    pub fn contains(&self, kind: EventKind) -> bool {
+        self.0 & kind.bit() != 0
+    }
+
+    pub fn with(mut self, kind: EventKind) -> TraceFilter {
+        self.0 |= kind.bit();
+        self
+    }
+
+    /// Parse a comma-separated kind list (`"decision,completion"`), or
+    /// `"all"`. Unknown tokens are an error listing the valid labels.
+    pub fn parse(spec: &str) -> Result<TraceFilter, String> {
+        if spec.trim() == "all" {
+            return Ok(TraceFilter::all());
+        }
+        let mut f = TraceFilter::none();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            match EventKind::parse(tok) {
+                Some(k) => f = f.with(k),
+                None => {
+                    let valid: Vec<&str> = EventKind::ALL.iter().map(|k| k.label()).collect();
+                    return Err(format!(
+                        "unknown trace kind {tok:?}; expected \"all\" or a comma list of {}",
+                        valid.join(", ")
+                    ));
+                }
+            }
+        }
+        if f == TraceFilter::none() {
+            return Err("empty trace filter; expected \"all\" or a comma list of kinds".into());
+        }
+        Ok(f)
+    }
+}
+
+/// One simulator event, borrowed from engine state — sinks serialise or
+/// aggregate in place, the engine never allocates to emit. Times are
+/// virtual (experiment-clock seconds) except `decide_ns`, which is
+/// wall-clock.
+#[derive(Debug)]
+pub enum TraceEvent<'a> {
+    /// A request entered the system. `deadline_s` is `f64::INFINITY` when
+    /// the scenario has no deferral window (serialised as `null`).
+    Arrival { t_s: f64, deadline_s: f64 },
+    /// A scheduling verdict, with the per-candidate rationale gathered by
+    /// [`crate::scheduler::Scheduler::decide_explained`]. `ctx` says what
+    /// triggered the decision: `"arrival"`, `"release"` (a deferred task
+    /// re-deciding), or `"migration"` (churn-down drain).
+    Decision {
+        t_s: f64,
+        arrival_s: f64,
+        ctx: &'static str,
+        verdict: SchedulingDecision,
+        /// Assigned node's name, when the verdict is `Assign`.
+        node: Option<&'a str>,
+        explain: &'a DecisionExplain,
+        /// Wall-clock cost of this `decide` call.
+        decide_ns: u64,
+    },
+    /// A task was handed to a node's queue.
+    Dispatch { t_s: f64, arrival_s: f64, node: &'a str, queue_delay_est_ms: f64 },
+    /// A deferred task woke up for its re-decision.
+    DeferRelease { t_s: f64, arrival_s: f64, deadline_s: f64 },
+    /// A task finished. `carbon_g` is the grid-attributed operational
+    /// carbon; microgrid-backed nodes settle carbon in `MicrogridSlice`
+    /// events instead and report `0.0` here.
+    Completion {
+        t_s: f64,
+        arrival_s: f64,
+        node: &'a str,
+        service_ms: f64,
+        latency_ms: f64,
+        energy_j: f64,
+        carbon_g: f64,
+        missed: bool,
+    },
+    /// A node went up or down.
+    Churn { t_s: f64, node: &'a str, up: bool },
+    /// One microgrid settlement slice: the energy flows and carbon accrued
+    /// on `node` over `[t0_s, t1_s]`, and the battery state of charge
+    /// after the slice. Summing `carbon_g` over these plus `Completion`
+    /// carbon replays the run's carbon total (for zero-idle fleets).
+    MicrogridSlice {
+        t0_s: f64,
+        t1_s: f64,
+        node: &'a str,
+        pv_j: f64,
+        battery_j: f64,
+        grid_j: f64,
+        grid_charge_j: f64,
+        carbon_g: f64,
+        soc: f64,
+    },
+}
+
+impl TraceEvent<'_> {
+    pub fn kind(&self) -> EventKind {
+        match self {
+            TraceEvent::Arrival { .. } => EventKind::Arrival,
+            TraceEvent::Decision { .. } => EventKind::Decision,
+            TraceEvent::Dispatch { .. } => EventKind::Dispatch,
+            TraceEvent::DeferRelease { .. } => EventKind::DeferRelease,
+            TraceEvent::Completion { .. } => EventKind::Completion,
+            TraceEvent::Churn { .. } => EventKind::Churn,
+            TraceEvent::MicrogridSlice { .. } => EventKind::MicrogridSlice,
+        }
+    }
+}
+
+/// Where trace events go. The engine calls [`EventSink::wants`] before
+/// building expensive payloads (decision explains), and [`EventSink::record`]
+/// with every event it constructs.
+pub trait EventSink {
+    fn record(&mut self, ev: &TraceEvent<'_>);
+
+    /// Whether this sink will keep events of `kind`. Used by the engine to
+    /// skip building the [`DecisionExplain`] payload when nobody reads it.
+    fn wants(&self, kind: EventKind) -> bool {
+        let _ = kind;
+        true
+    }
+}
+
+/// Discards everything; `wants` is always false so the engine skips all
+/// payload construction. Telemetry is still collected — this is the
+/// "counters-only" observation mode.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    #[inline]
+    fn record(&mut self, _ev: &TraceEvent<'_>) {}
+
+    #[inline]
+    fn wants(&self, _kind: EventKind) -> bool {
+        false
+    }
+}
+
+/// Streams events as NDJSON — one compact JSON object per line — straight
+/// through [`JsonWriter`] onto any `io::Write` (typically a
+/// `BufWriter<File>`). No event is ever buffered in memory. I/O errors are
+/// latched and surfaced by [`FirehoseSink::finish`], so `record` stays
+/// infallible on the hot path.
+pub struct FirehoseSink<W: io::Write> {
+    out: W,
+    filter: TraceFilter,
+    events_written: u64,
+    io_error: Option<io::Error>,
+}
+
+impl<W: io::Write> FirehoseSink<W> {
+    pub fn new(out: W) -> FirehoseSink<W> {
+        FirehoseSink::with_filter(out, TraceFilter::all())
+    }
+
+    pub fn with_filter(out: W, filter: TraceFilter) -> FirehoseSink<W> {
+        FirehoseSink { out, filter, events_written: 0, io_error: None }
+    }
+
+    /// Lines written so far (post-filter).
+    pub fn events_written(&self) -> u64 {
+        self.events_written
+    }
+
+    /// Surface any latched I/O error and hand back the writer (unflushed).
+    pub fn finish(self) -> io::Result<W> {
+        match self.io_error {
+            Some(e) => Err(e),
+            None => Ok(self.out),
+        }
+    }
+
+    fn write_event(&mut self, ev: &TraceEvent<'_>) -> io::Result<()> {
+        let j = &mut JsonWriter::new(&mut self.out);
+        j.begin_obj()?;
+        j.field_str("kind", ev.kind().label())?;
+        match *ev {
+            TraceEvent::Arrival { t_s, deadline_s } => {
+                j.field_num("t_s", t_s)?;
+                j.field_fnum("deadline_s", deadline_s)?;
+            }
+            TraceEvent::Decision { t_s, arrival_s, ctx, verdict, node, explain, decide_ns } => {
+                j.field_num("t_s", t_s)?;
+                j.field_num("arrival_s", arrival_s)?;
+                j.field_str("ctx", ctx)?;
+                match verdict {
+                    SchedulingDecision::Assign(_) => {
+                        j.field_str("verdict", "assign")?;
+                        match node {
+                            Some(n) => j.field_str("node", n)?,
+                            None => j.field_null("node")?,
+                        }
+                    }
+                    SchedulingDecision::Defer { until_s } => {
+                        j.field_str("verdict", "defer")?;
+                        j.field_num("until_s", until_s)?;
+                    }
+                    SchedulingDecision::Reject { reason } => {
+                        j.field_str("verdict", "reject")?;
+                        let r = match reason {
+                            RejectReason::NoFeasibleNode => "no-feasible-node",
+                        };
+                        j.field_str("reason", r)?;
+                    }
+                }
+                j.field_num("decide_ns", decide_ns as f64)?;
+                j.key("candidates")?;
+                j.begin_arr()?;
+                for c in &explain.candidates {
+                    j.begin_obj()?;
+                    j.field_str("node", &c.node)?;
+                    j.field_bool("feasible", c.feasible)?;
+                    match c.score {
+                        Some(s) => j.field_fnum("score", s)?,
+                        None => j.field_null("score")?,
+                    }
+                    j.field_fnum("intensity", c.intensity)?;
+                    j.field_fnum("queue_delay_ms", c.queue_delay_ms)?;
+                    match c.best_slot {
+                        Some((slot_s, slot_i)) => {
+                            j.field_num("slot_s", slot_s)?;
+                            j.field_fnum("slot_intensity", slot_i)?;
+                        }
+                        None => {
+                            j.field_null("slot_s")?;
+                            j.field_null("slot_intensity")?;
+                        }
+                    }
+                    j.end_obj()?;
+                }
+                j.end_arr()?;
+                match &explain.note {
+                    Some(n) => j.field_str("note", n)?,
+                    None => j.field_null("note")?,
+                }
+            }
+            TraceEvent::Dispatch { t_s, arrival_s, node, queue_delay_est_ms } => {
+                j.field_num("t_s", t_s)?;
+                j.field_num("arrival_s", arrival_s)?;
+                j.field_str("node", node)?;
+                j.field_fnum("queue_delay_est_ms", queue_delay_est_ms)?;
+            }
+            TraceEvent::DeferRelease { t_s, arrival_s, deadline_s } => {
+                j.field_num("t_s", t_s)?;
+                j.field_num("arrival_s", arrival_s)?;
+                j.field_fnum("deadline_s", deadline_s)?;
+            }
+            TraceEvent::Completion {
+                t_s,
+                arrival_s,
+                node,
+                service_ms,
+                latency_ms,
+                energy_j,
+                carbon_g,
+                missed,
+            } => {
+                j.field_num("t_s", t_s)?;
+                j.field_num("arrival_s", arrival_s)?;
+                j.field_str("node", node)?;
+                j.field_fnum("service_ms", service_ms)?;
+                j.field_fnum("latency_ms", latency_ms)?;
+                j.field_fnum("energy_j", energy_j)?;
+                j.field_fnum("carbon_g", carbon_g)?;
+                j.field_bool("missed", missed)?;
+            }
+            TraceEvent::Churn { t_s, node, up } => {
+                j.field_num("t_s", t_s)?;
+                j.field_str("node", node)?;
+                j.field_bool("up", up)?;
+            }
+            TraceEvent::MicrogridSlice {
+                t0_s,
+                t1_s,
+                node,
+                pv_j,
+                battery_j,
+                grid_j,
+                grid_charge_j,
+                carbon_g,
+                soc,
+            } => {
+                j.field_num("t0_s", t0_s)?;
+                j.field_num("t1_s", t1_s)?;
+                j.field_str("node", node)?;
+                j.field_fnum("pv_j", pv_j)?;
+                j.field_fnum("battery_j", battery_j)?;
+                j.field_fnum("grid_j", grid_j)?;
+                j.field_fnum("grid_charge_j", grid_charge_j)?;
+                j.field_fnum("carbon_g", carbon_g)?;
+                j.field_fnum("soc", soc)?;
+            }
+        }
+        j.end_obj()?;
+        self.out.write_all(b"\n")
+    }
+}
+
+impl<W: io::Write> EventSink for FirehoseSink<W> {
+    fn record(&mut self, ev: &TraceEvent<'_>) {
+        if self.io_error.is_some() || !self.filter.contains(ev.kind()) {
+            return;
+        }
+        match self.write_event(ev) {
+            Ok(()) => self.events_written += 1,
+            Err(e) => self.io_error = Some(e),
+        }
+    }
+
+    fn wants(&self, kind: EventKind) -> bool {
+        self.io_error.is_none() && self.filter.contains(kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::CandidateExplain;
+    use crate::util::json::Json;
+
+    #[test]
+    fn filter_parses_lists_and_all() {
+        let f = TraceFilter::parse("all").unwrap();
+        for k in EventKind::ALL {
+            assert!(f.contains(k));
+        }
+        let f = TraceFilter::parse("decision, completion").unwrap();
+        assert!(f.contains(EventKind::Decision));
+        assert!(f.contains(EventKind::Completion));
+        assert!(!f.contains(EventKind::Arrival));
+        // Aliases.
+        let f = TraceFilter::parse("defer,microgrid").unwrap();
+        assert!(f.contains(EventKind::DeferRelease));
+        assert!(f.contains(EventKind::MicrogridSlice));
+        assert!(TraceFilter::parse("bogus").is_err());
+        assert!(TraceFilter::parse("").is_err());
+    }
+
+    #[test]
+    fn kind_labels_round_trip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::parse(k.label()), Some(k));
+        }
+    }
+
+    #[test]
+    fn firehose_streams_one_parseable_line_per_event() {
+        let mut sink = FirehoseSink::new(Vec::new());
+        sink.record(&TraceEvent::Arrival { t_s: 0.5, deadline_s: 3600.5 });
+        sink.record(&TraceEvent::Dispatch {
+            t_s: 0.5,
+            arrival_s: 0.5,
+            node: "edge-a",
+            queue_delay_est_ms: 12.25,
+        });
+        sink.record(&TraceEvent::Churn { t_s: 9.0, node: "edge-b", up: false });
+        assert_eq!(sink.events_written(), 3);
+        let buf = sink.finish().unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("arrival"));
+        assert_eq!(v.get("deadline_s").unwrap().as_f64(), Some(3600.5));
+        let v = Json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("node").unwrap().as_str(), Some("edge-a"));
+        assert_eq!(v.get("queue_delay_est_ms").unwrap().as_f64(), Some(12.25));
+        let v = Json::parse(lines[2]).unwrap();
+        assert_eq!(v.get("up").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn firehose_serialises_decisions_with_candidates() {
+        let explain = DecisionExplain {
+            candidates: vec![
+                CandidateExplain {
+                    node: "edge-a".into(),
+                    feasible: true,
+                    score: Some(0.82),
+                    intensity: 120.0,
+                    queue_delay_ms: 4.0,
+                    best_slot: Some((7200.0, 80.0)),
+                },
+                CandidateExplain {
+                    node: "edge-b".into(),
+                    feasible: false,
+                    score: None,
+                    intensity: 300.0,
+                    queue_delay_ms: 55.0,
+                    best_slot: None,
+                },
+            ],
+            note: Some("joint defer: fleet min 80.0".into()),
+        };
+        let mut sink = FirehoseSink::new(Vec::new());
+        sink.record(&TraceEvent::Decision {
+            t_s: 10.0,
+            arrival_s: 10.0,
+            ctx: "arrival",
+            verdict: SchedulingDecision::Defer { until_s: 7200.0 },
+            node: None,
+            explain: &explain,
+            decide_ns: 1850,
+        });
+        let text = String::from_utf8(sink.finish().unwrap()).unwrap();
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("verdict").unwrap().as_str(), Some("defer"));
+        assert_eq!(v.get("until_s").unwrap().as_f64(), Some(7200.0));
+        assert_eq!(v.get("decide_ns").unwrap().as_i64(), Some(1850));
+        let cands = v.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0].get("score").unwrap().as_f64(), Some(0.82));
+        assert_eq!(cands[0].get("slot_s").unwrap().as_f64(), Some(7200.0));
+        assert_eq!(cands[1].get("score"), Some(&Json::Null));
+        assert!(v.get("note").unwrap().as_str().unwrap().starts_with("joint defer"));
+    }
+
+    #[test]
+    fn firehose_filter_drops_unwanted_kinds() {
+        let filter = TraceFilter::parse("completion").unwrap();
+        let mut sink = FirehoseSink::with_filter(Vec::new(), filter);
+        assert!(sink.wants(EventKind::Completion));
+        assert!(!sink.wants(EventKind::Arrival));
+        sink.record(&TraceEvent::Arrival { t_s: 1.0, deadline_s: f64::INFINITY });
+        sink.record(&TraceEvent::Completion {
+            t_s: 2.0,
+            arrival_s: 1.0,
+            node: "edge-a",
+            service_ms: 100.0,
+            latency_ms: 1000.0,
+            energy_j: 5.0,
+            carbon_g: 0.4,
+            missed: false,
+        });
+        assert_eq!(sink.events_written(), 1);
+        let text = String::from_utf8(sink.finish().unwrap()).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("completion"));
+    }
+
+    #[test]
+    fn infinite_deadline_serialises_as_null() {
+        let mut sink = FirehoseSink::new(Vec::new());
+        sink.record(&TraceEvent::Arrival { t_s: 0.0, deadline_s: f64::INFINITY });
+        let text = String::from_utf8(sink.finish().unwrap()).unwrap();
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("deadline_s"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn null_sink_wants_nothing() {
+        let mut s = NullSink;
+        assert!(!s.wants(EventKind::Decision));
+        s.record(&TraceEvent::Arrival { t_s: 0.0, deadline_s: 1.0 });
+    }
+}

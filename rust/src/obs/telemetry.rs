@@ -1,0 +1,313 @@
+//! In-process telemetry: monotonic event counters and fixed-bucket log2
+//! histograms, cheap enough to keep hot during million-request runs.
+//!
+//! The histograms are power-of-two bucketed ([`Log2Histogram`]): recording
+//! is a branch, an `exponent` extraction and one array increment — no
+//! allocation, no sorting, O(64) memory per series. Quantiles come back as
+//! bucket upper bounds (a ≤2× overestimate worst-case), which is the right
+//! trade for an always-on tail monitor; the report's exact `Summary`
+//! percentiles remain the precision path.
+//!
+//! [`Telemetry`] is collected *beside* the [`crate::sim::SimReport`], never
+//! inside it: the per-decision overhead series is wall-clock and would
+//! break the determinism-by-equality invariant (identical seeds ⇒ identical
+//! reports) if it lived in the report struct.
+
+use std::io;
+
+use crate::util::json::JsonWriter;
+
+use super::EventKind;
+
+/// The paper's scheduling-overhead envelope: 0.03 ms per decision, in ns.
+/// [`Telemetry::render`] and the bench/test guards compare against it.
+pub const OVERHEAD_ENVELOPE_NS: f64 = 30_000.0;
+
+/// Bucket offset: bucket `i` holds values in `[2^(i-32), 2^(i-31))`, so the
+/// 64 buckets cover ~4.7e-10 .. 4.3e9 — nanoseconds up to seconds, and
+/// milliseconds from sub-microsecond to weeks.
+const LOG2_OFFSET: i32 = 32;
+
+/// Fixed 64-bucket power-of-two histogram.
+#[derive(Debug, Clone)]
+pub struct Log2Histogram {
+    buckets: [u64; 64],
+    pub count: u64,
+    pub sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Log2Histogram {
+        Log2Histogram::new()
+    }
+}
+
+impl Log2Histogram {
+    pub fn new() -> Log2Histogram {
+        Log2Histogram {
+            buckets: [0; 64],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= 0.0 || !v.is_finite() {
+            return 0;
+        }
+        (v.log2().floor() as i32 + LOG2_OFFSET).clamp(0, 63) as usize
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[Self::bucket_of(v)] += 1;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact sample minimum / maximum (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate quantile: the upper bound of the bucket holding the
+    /// q-th sample (clamped to the exact max, so `quantile(1.0) == max`).
+    pub fn quantile(&self, q: f64) -> f64 {
+        debug_assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let upper = 2f64.powi(i as i32 - LOG2_OFFSET + 1);
+                return upper.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Log2Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// `{count, mean, p50, p99, max}` as a JSON object on the stream.
+    pub fn write_json<W: io::Write>(&self, j: &mut JsonWriter<W>) -> io::Result<()> {
+        j.begin_obj()?;
+        j.field_num("count", self.count as f64)?;
+        j.field_fnum("mean", self.mean())?;
+        j.field_fnum("p50", self.quantile(0.50))?;
+        j.field_fnum("p99", self.quantile(0.99))?;
+        j.field_fnum("max", self.max())?;
+        j.end_obj()
+    }
+}
+
+/// Per-run telemetry registry: event counters (deterministic — they mirror
+/// the virtual-event stream) plus queue-delay / end-to-end latency / per-
+/// decision scheduling-overhead histograms. Returned beside the report by
+/// [`crate::sim::Simulation::try_run_observed`].
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    /// Events observed per [`EventKind`] (indexed by discriminant),
+    /// counted *before* any sink filter — the conservation checks read
+    /// these even when the firehose drops kinds.
+    pub events: [u64; EventKind::COUNT],
+    /// Queue-delay estimate at every dispatch (ms).
+    pub queue_delay_ms: Log2Histogram,
+    /// End-to-end latency at every completion (ms).
+    pub latency_ms: Log2Histogram,
+    /// Wall-clock cost of every `Scheduler::decide` call (ns) — the
+    /// paper's 0.03 ms overhead envelope, measured in-process.
+    pub decide_ns: Log2Histogram,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    pub fn count(&mut self, kind: EventKind) {
+        self.events[kind as usize] += 1;
+    }
+
+    pub fn events_of(&self, kind: EventKind) -> u64 {
+        self.events[kind as usize]
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.events.iter().sum()
+    }
+
+    /// Human-readable block appended under the report render.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = write!(out, "telemetry: {} events (", self.total_events());
+        for (i, kind) in EventKind::ALL.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{} {}", kind.label(), self.events_of(*kind));
+        }
+        out.push_str(")\n");
+        for (name, h) in
+            [("queue delay (ms)", &self.queue_delay_ms), ("latency (ms)", &self.latency_ms)]
+        {
+            let _ = writeln!(
+                out,
+                "  {name:<18} mean {:.3}  p50 <= {:.3}  p99 <= {:.3}  max {:.3}  (n={})",
+                h.mean(),
+                h.quantile(0.50),
+                h.quantile(0.99),
+                h.max(),
+                h.count
+            );
+        }
+        let d = &self.decide_ns;
+        let _ = writeln!(
+            out,
+            "  decide overhead    mean {:.0} ns  p99 <= {:.0} ns  max {:.0} ns  \
+             (envelope {OVERHEAD_ENVELOPE_NS:.0} ns = 0.03 ms, n={})",
+            d.mean(),
+            d.quantile(0.99),
+            d.max(),
+            d.count
+        );
+        out
+    }
+
+    /// The whole registry as one JSON object on the stream.
+    pub fn write_json<W: io::Write>(&self, j: &mut JsonWriter<W>) -> io::Result<()> {
+        j.begin_obj()?;
+        j.key("events")?;
+        j.begin_obj()?;
+        for kind in EventKind::ALL {
+            j.field_num(kind.label(), self.events_of(kind) as f64)?;
+        }
+        j.end_obj()?;
+        j.key("queue_delay_ms")?;
+        self.queue_delay_ms.write_json(j)?;
+        j.key("latency_ms")?;
+        self.latency_ms.write_json(j)?;
+        j.key("decide_ns")?;
+        self.decide_ns.write_json(j)?;
+        j.field_num("overhead_envelope_ns", OVERHEAD_ENVELOPE_NS)?;
+        j.end_obj()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_buckets_cover_orders_of_magnitude() {
+        let mut h = Log2Histogram::new();
+        for v in [0.001, 1.0, 5.0, 1000.0, 2.5e6] {
+            h.record(v);
+        }
+        assert_eq!(h.count, 5);
+        assert!((h.mean() - (0.001 + 1.0 + 5.0 + 1000.0 + 2.5e6) / 5.0).abs() < 1e-9);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 2.5e6);
+        // Quantiles are bucket upper bounds: within 2× of the true value.
+        let p50 = h.quantile(0.5);
+        assert!((5.0..=10.0).contains(&p50), "p50 {p50}");
+        assert_eq!(h.quantile(1.0), 2.5e6); // clamped to the exact max
+    }
+
+    #[test]
+    fn log2_empty_and_degenerate_values() {
+        let h = Log2Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        // Zero / negative / non-finite values land in bucket 0, no panic.
+        let mut h = Log2Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        assert_eq!(h.count, 2);
+        assert!(h.quantile(0.5) <= 0.0 + 2f64.powi(1 - LOG2_OFFSET));
+    }
+
+    #[test]
+    fn log2_merge_accumulates() {
+        let mut a = Log2Histogram::new();
+        let mut b = Log2Histogram::new();
+        a.record(2.0);
+        b.record(64.0);
+        a.merge(&b);
+        assert_eq!(a.count, 2);
+        assert_eq!(a.max(), 64.0);
+        assert!((a.mean() - 33.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn telemetry_counts_and_renders() {
+        let mut t = Telemetry::new();
+        t.count(EventKind::Arrival);
+        t.count(EventKind::Arrival);
+        t.count(EventKind::Completion);
+        t.decide_ns.record(1500.0);
+        assert_eq!(t.events_of(EventKind::Arrival), 2);
+        assert_eq!(t.events_of(EventKind::Completion), 1);
+        assert_eq!(t.total_events(), 3);
+        let r = t.render();
+        assert!(r.contains("arrival 2"), "{r}");
+        assert!(r.contains("decide overhead"), "{r}");
+        assert!(r.contains("0.03 ms"), "{r}");
+    }
+
+    #[test]
+    fn telemetry_json_parses_back() {
+        let mut t = Telemetry::new();
+        t.count(EventKind::Dispatch);
+        t.latency_ms.record(250.0);
+        let mut buf = Vec::new();
+        let mut j = JsonWriter::new(&mut buf);
+        t.write_json(&mut j).unwrap();
+        let v = crate::util::json::Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        assert_eq!(v.path(&["events", "dispatch"]).unwrap().as_i64(), Some(1));
+        assert_eq!(v.path(&["latency_ms", "count"]).unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("overhead_envelope_ns").unwrap().as_f64(), Some(30_000.0));
+    }
+}

@@ -23,7 +23,10 @@
 
 use crate::carbon::{DeferDecision, DeferralPolicy};
 
-use super::{CarbonAwareScheduler, FleetView, Mode, Scheduler, SchedulingDecision, TaskDemand};
+use super::{
+    CarbonAwareScheduler, DecisionExplain, FleetView, Mode, Scheduler, SchedulingDecision,
+    TaskDemand,
+};
 
 /// Legacy route-*then*-defer as a [`Scheduler`] adapter: the inner
 /// scheduler picks a node, then the policy may park the task for a cleaner
@@ -40,12 +43,38 @@ impl<S: Scheduler> RouteThenDefer<S> {
     }
 }
 
-impl<S: Scheduler> Scheduler for RouteThenDefer<S> {
-    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
-        match self.inner.decide(task, fleet) {
+impl<S: Scheduler> RouteThenDefer<S> {
+    /// One body for the plain and explained paths: the verdict (and the
+    /// inner scheduler's state transitions) is identical either way;
+    /// `explain` only adds detail on the side.
+    fn decide_impl(
+        &mut self,
+        task: &TaskDemand,
+        fleet: &FleetView,
+        mut explain: Option<&mut DecisionExplain>,
+    ) -> SchedulingDecision {
+        let routed = match explain.as_deref_mut() {
+            Some(e) => self.inner.decide_explained(task, fleet, e),
+            None => self.inner.decide(task, fleet),
+        };
+        match routed {
             SchedulingDecision::Assign(i) => {
                 match self.policy.decide_samples(&fleet.nodes[i].forecast) {
                     DeferDecision::Defer { at_s, .. } if at_s > fleet.now_s => {
+                        if let Some(e) = explain {
+                            let slot_v = fleet.nodes[i]
+                                .forecast
+                                .iter()
+                                .find(|s| s.0 == at_s)
+                                .map(|s| s.1);
+                            if let Some(c) = e.candidates.get_mut(i) {
+                                c.best_slot = slot_v.map(|v| (at_s, v));
+                            }
+                            e.note = Some(format!(
+                                "route-then-defer: routed to {}, parked for its slot at {at_s:.0}s",
+                                fleet.nodes[i].node.spec.name
+                            ));
+                        }
                         SchedulingDecision::Defer { until_s: at_s }
                     }
                     _ => SchedulingDecision::Assign(i),
@@ -53,6 +82,21 @@ impl<S: Scheduler> Scheduler for RouteThenDefer<S> {
             }
             other => other,
         }
+    }
+}
+
+impl<S: Scheduler> Scheduler for RouteThenDefer<S> {
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        self.decide_impl(task, fleet, None)
+    }
+
+    fn decide_explained(
+        &mut self,
+        task: &TaskDemand,
+        fleet: &FleetView,
+        explain: &mut DecisionExplain,
+    ) -> SchedulingDecision {
+        self.decide_impl(task, fleet, Some(explain))
     }
 
     fn name(&self) -> &str {
@@ -107,9 +151,20 @@ impl DeferAwareGreenScheduler {
     }
 }
 
-impl Scheduler for DeferAwareGreenScheduler {
-    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
-        let routed = self.inner.decide(task, fleet);
+impl DeferAwareGreenScheduler {
+    /// Shared body for the plain and explained paths — the verdict and the
+    /// `defers_issued` rotation advance identically whether or not a trace
+    /// sink is listening.
+    fn decide_impl(
+        &mut self,
+        task: &TaskDemand,
+        fleet: &FleetView,
+        mut explain: Option<&mut DecisionExplain>,
+    ) -> SchedulingDecision {
+        let routed = match explain.as_deref_mut() {
+            Some(e) => self.inner.decide_explained(task, fleet, e),
+            None => self.inner.decide(task, fleet),
+        };
         let SchedulingDecision::Assign(chosen) = routed else { return routed };
         let now_fc = &fleet.nodes[chosen].forecast;
         // No forecast context (no slack, or a released task): run now.
@@ -135,9 +190,35 @@ impl Scheduler for DeferAwareGreenScheduler {
             }
             mins.push((t, v));
         }
+        // Decision trace: each candidate's own best future slot, so the
+        // firehose shows which curves competed for the release.
+        if let Some(e) = explain.as_deref_mut() {
+            for (k, v) in fleet.nodes.iter().enumerate() {
+                let own_best = v
+                    .forecast
+                    .iter()
+                    .filter(|s| s.0 > fleet.now_s)
+                    .fold(None::<(f64, f64)>, |acc, &(t, i)| match acc {
+                        Some((_, bi)) if bi <= i => acc,
+                        _ => Some((t, i)),
+                    });
+                if let Some(c) = e.candidates.get_mut(k) {
+                    c.best_slot = own_best;
+                }
+            }
+        }
         // Joint verdict: defer only when somewhere in the fleet, sometime
         // inside the deadline, beats running on the routed node right now.
         if best >= now_i * (1.0 - self.defer_min_gain) {
+            if let Some(e) = explain {
+                e.note = Some(format!(
+                    "ran now on {}: best fleet slot {best:.1} g/kWh does not clear \
+                     {:.1} (now {now_i:.1} g/kWh, min gain {})",
+                    fleet.nodes[chosen].node.spec.name,
+                    now_i * (1.0 - self.defer_min_gain),
+                    self.defer_min_gain
+                ));
+            }
             return SchedulingDecision::Assign(chosen);
         }
         let plateau = best * (1.0 + self.plateau_tol);
@@ -155,7 +236,31 @@ impl Scheduler for DeferAwareGreenScheduler {
             return SchedulingDecision::Assign(chosen);
         };
         self.defers_issued += 1;
+        if let Some(e) = explain {
+            e.note = Some(format!(
+                "joint defer: fleet min {best:.1} g/kWh beats {now_i:.1} now on {}; \
+                 released at {until_s:.0}s ({} plateau slots, defer #{})",
+                fleet.nodes[chosen].node.spec.name,
+                candidates.len(),
+                self.defers_issued
+            ));
+        }
         SchedulingDecision::Defer { until_s }
+    }
+}
+
+impl Scheduler for DeferAwareGreenScheduler {
+    fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
+        self.decide_impl(task, fleet, None)
+    }
+
+    fn decide_explained(
+        &mut self,
+        task: &TaskDemand,
+        fleet: &FleetView,
+        explain: &mut DecisionExplain,
+    ) -> SchedulingDecision {
+        self.decide_impl(task, fleet, Some(explain))
     }
 
     fn name(&self) -> &str {

@@ -39,7 +39,9 @@ pub use modes::{Mode, Weights};
 pub use nsa::{CarbonAwareScheduler, SelectionTrace, LOAD_CUTOFF};
 pub use normalized::{ConstrainedGreenScheduler, NormalizedScheduler};
 pub use score::{carbon_score, score_breakdown, score_breakdown_view, ScoreBreakdown, TaskDemand};
-pub use view::{FleetView, NodeView, RejectReason, SchedulingDecision};
+pub use view::{
+    CandidateExplain, DecisionExplain, FleetView, NodeView, RejectReason, SchedulingDecision,
+};
 
 /// Scheduling interface shared by the carbon-aware scheduler and all
 /// baselines: one [`SchedulingDecision`] per task over a [`FleetView`]
@@ -52,6 +54,23 @@ pub trait Scheduler: Send {
 
     /// Human-readable name for reports.
     fn name(&self) -> &str;
+
+    /// `decide` with an explanation: fill `explain` with the per-candidate
+    /// scores and rationale behind the verdict, for the observability
+    /// firehose ([`crate::obs`]). Must return the *identical* verdict (and
+    /// perform the identical internal state transitions) as `decide` on the
+    /// same inputs — tracing never perturbs the simulation. The default
+    /// records the baseline view of every candidate; policies with richer
+    /// internals (scores, defer slots) override it.
+    fn decide_explained(
+        &mut self,
+        task: &TaskDemand,
+        fleet: &FleetView,
+        explain: &mut DecisionExplain,
+    ) -> SchedulingDecision {
+        explain.all_from_fleet(fleet, task);
+        self.decide(task, fleet)
+    }
 
     /// Whether `decide` already weighs deferral jointly (may return
     /// `Defer` verdicts itself). The simulator wraps schedulers that
@@ -67,6 +86,14 @@ impl<T: Scheduler + ?Sized> Scheduler for &mut T {
     fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
         (**self).decide(task, fleet)
     }
+    fn decide_explained(
+        &mut self,
+        task: &TaskDemand,
+        fleet: &FleetView,
+        explain: &mut DecisionExplain,
+    ) -> SchedulingDecision {
+        (**self).decide_explained(task, fleet, explain)
+    }
     fn name(&self) -> &str {
         (**self).name()
     }
@@ -78,6 +105,14 @@ impl<T: Scheduler + ?Sized> Scheduler for &mut T {
 impl<T: Scheduler + ?Sized> Scheduler for Box<T> {
     fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
         (**self).decide(task, fleet)
+    }
+    fn decide_explained(
+        &mut self,
+        task: &TaskDemand,
+        fleet: &FleetView,
+        explain: &mut DecisionExplain,
+    ) -> SchedulingDecision {
+        (**self).decide_explained(task, fleet, explain)
     }
     fn name(&self) -> &str {
         (**self).name()

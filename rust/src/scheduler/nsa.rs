@@ -1,8 +1,8 @@
 //! Algorithm 1: Carbon-Aware Node Selection, behind the `decide` verdict.
 
 use super::{
-    score_breakdown_view, FleetView, Scheduler, SchedulingDecision, ScoreBreakdown, TaskDemand,
-    Weights,
+    score_breakdown_view, CandidateExplain, DecisionExplain, FleetView, Scheduler,
+    SchedulingDecision, ScoreBreakdown, TaskDemand, Weights,
 };
 
 /// Algorithm 1 line 3: skip nodes with load above this cutoff.
@@ -63,6 +63,30 @@ impl CarbonAwareScheduler {
 impl Scheduler for CarbonAwareScheduler {
     fn decide(&mut self, task: &TaskDemand, fleet: &FleetView) -> SchedulingDecision {
         let t = self.decide_traced(task, fleet);
+        let chosen = t.chosen;
+        if self.trace {
+            self.traces.push(t);
+        }
+        SchedulingDecision::from_choice(chosen)
+    }
+
+    fn decide_explained(
+        &mut self,
+        task: &TaskDemand,
+        fleet: &FleetView,
+        explain: &mut DecisionExplain,
+    ) -> SchedulingDecision {
+        let t = self.decide_traced(task, fleet);
+        explain.candidates = fleet
+            .nodes
+            .iter()
+            .zip(&t.breakdowns)
+            .map(|(v, b)| {
+                let mut c = CandidateExplain::from_view(v, task);
+                c.score = b.as_ref().map(|b| b.total);
+                c
+            })
+            .collect();
         let chosen = t.chosen;
         if self.trace {
             self.traces.push(t);

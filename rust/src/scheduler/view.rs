@@ -63,6 +63,64 @@ impl SchedulingDecision {
     }
 }
 
+/// Per-candidate detail recorded by [`super::Scheduler::decide_explained`]:
+/// the score inputs one node contributed to a verdict. Feeds the decision
+/// lines of the observability firehose ([`crate::obs`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidateExplain {
+    /// Node name (`EdgeNode::spec.name`).
+    pub node: String,
+    /// Passed the Algorithm-1 feasibility filters (load cutoff, latency
+    /// threshold, resource fit).
+    pub feasible: bool,
+    /// Routing score when the scheduler scored this node (the Eq. 3
+    /// weighted total for Algorithm-1 policies — higher wins); `None` for
+    /// filtered-out candidates and unscored policies.
+    pub score: Option<f64>,
+    /// Effective carbon intensity at decision time (gCO₂/kWh).
+    pub intensity: f64,
+    /// Queue-delay estimate at decision time (ms).
+    pub queue_delay_ms: f64,
+    /// Best forecast release slot a defer-aware policy considered for this
+    /// node, with the intensity it would pay there.
+    pub best_slot: Option<(f64, f64)>,
+}
+
+impl CandidateExplain {
+    /// Baseline detail straight off a [`NodeView`] (no score, no slot).
+    pub fn from_view(v: &NodeView, task: &TaskDemand) -> CandidateExplain {
+        CandidateExplain {
+            node: v.node.spec.name.clone(),
+            feasible: v.feasible(task),
+            score: None,
+            intensity: v.intensity,
+            queue_delay_ms: v.queue_delay_s * 1e3,
+            best_slot: None,
+        }
+    }
+}
+
+/// Why a verdict came out the way it did: per-candidate scores plus a free
+/// note from the deciding policy. Filled by `decide_explained` only when a
+/// trace sink asked for decision events — the plain `decide` path never
+/// allocates any of this.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DecisionExplain {
+    /// One entry per scheduler-considered candidate (fleet-view order for
+    /// policies that scan all nodes; may be sparse for early-exit policies).
+    pub candidates: Vec<CandidateExplain>,
+    /// Policy-specific rationale, e.g. the winning slot of a defer verdict
+    /// or the gate that suppressed one.
+    pub note: Option<String>,
+}
+
+impl DecisionExplain {
+    /// Fill `candidates` with the baseline view of every fleet node.
+    pub fn all_from_fleet(&mut self, fleet: &FleetView, task: &TaskDemand) {
+        self.candidates = fleet.nodes.iter().map(|v| CandidateExplain::from_view(v, task)).collect();
+    }
+}
+
 /// Immutable snapshot of one candidate node at decision time.
 #[derive(Debug, Clone)]
 pub struct NodeView {

@@ -49,15 +49,28 @@
 //! *draw*-frozen (the engine cannot know future dispatch), no longer
 //! *charge*-frozen; `SimConfig::charge_frozen_forecasts` restores the
 //! legacy PR-4 frozen average-blend forecast for A/B twins.
+//!
+//! Observability is **opt-in and zero-overhead when off**:
+//! [`Simulation::try_run_observed`] attaches a [`crate::obs::EventSink`]
+//! and a [`crate::obs::Telemetry`] registry, and the hot paths
+//! then emit a [`crate::obs::TraceEvent`] at every arrival, scheduling
+//! verdict (timed, with the [`crate::scheduler::DecisionExplain`]
+//! rationale when the sink keeps decision events), dispatch, deferred
+//! release, completion, churn transition and microgrid settlement slice.
+//! On the default `run`/`try_run` paths the sink is `None` and every
+//! emission site is a dead branch — no event is constructed, no clock
+//! read, and the [`SimReport`] stays bit-identical either way.
 
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::carbon::{emissions_g, joules_to_kwh, DeferralPolicy, IntensityTrace, LedgerEntry};
 use crate::microgrid::Microgrid;
 use crate::node::EdgeNode;
+use crate::obs::{EventKind as TraceKind, EventSink, Telemetry, TraceEvent};
 use crate::scheduler::{
-    FleetView, NodeView, RouteThenDefer, Scheduler, SchedulingDecision, TaskDemand,
+    DecisionExplain, FleetView, NodeView, RouteThenDefer, Scheduler, SchedulingDecision, TaskDemand,
 };
 use crate::util::rng::Rng;
 
@@ -373,6 +386,12 @@ pub struct Simulation<'a> {
     /// accrual runs to (events pop in time order, so this is monotone).
     t_last: f64,
     last_refresh_s: f64,
+    /// Observability ([`crate::obs`]): trace sink and telemetry registry,
+    /// both present only on the [`Simulation::try_run_observed`] path.
+    /// Every emission site branches on `observing()` first, so the
+    /// unobserved hot paths construct nothing and read no clock.
+    sink: Option<&'a mut dyn EventSink>,
+    telem: Option<Telemetry>,
 }
 
 impl<'a> Simulation<'a> {
@@ -403,21 +422,49 @@ impl<'a> Simulation<'a> {
     ) -> Result<SimReport, String> {
         scenario.validate()?;
         let name = scheduler.name().to_string();
-        let report = match &scenario.config.deferral {
+        let (report, _) = match &scenario.config.deferral {
             Some(d) if !scheduler.defers() => {
                 let mut gate = RouteThenDefer::new(scheduler, d.policy.clone());
-                Simulation::run_inner(scenario, &mut gate, &name)
+                Simulation::run_inner(scenario, &mut gate, &name, None)
             }
-            _ => Simulation::run_inner(scenario, scheduler, &name),
+            _ => Simulation::run_inner(scenario, scheduler, &name, None),
         };
         Ok(report)
+    }
+
+    /// Like [`Simulation::try_run`], but with observability attached: every
+    /// arrival, scheduling verdict, dispatch, deferred release, completion,
+    /// churn transition and microgrid settlement slice is emitted to `sink`
+    /// as a [`TraceEvent`], and an in-process [`Telemetry`] registry
+    /// (event counters, queue-delay / latency / per-decision-overhead
+    /// histograms) is returned beside the report. Scheduler calls route
+    /// through [`Scheduler::decide_explained`] when the sink keeps
+    /// decision events, so firehose lines carry the per-candidate
+    /// rationale. Tracing never perturbs the run: the report is
+    /// bit-identical to what [`Simulation::try_run`] produces.
+    pub fn try_run_observed(
+        scenario: &'a Scenario,
+        scheduler: &mut dyn Scheduler,
+        sink: &'a mut dyn EventSink,
+    ) -> Result<(SimReport, Telemetry), String> {
+        scenario.validate()?;
+        let name = scheduler.name().to_string();
+        let (report, telem) = match &scenario.config.deferral {
+            Some(d) if !scheduler.defers() => {
+                let mut gate = RouteThenDefer::new(scheduler, d.policy.clone());
+                Simulation::run_inner(scenario, &mut gate, &name, Some(sink))
+            }
+            _ => Simulation::run_inner(scenario, scheduler, &name, Some(sink)),
+        };
+        Ok((report, telem.expect("observed run always collects telemetry")))
     }
 
     fn run_inner(
         scenario: &'a Scenario,
         scheduler: &mut dyn Scheduler,
         scheduler_name: &str,
-    ) -> SimReport {
+        sink: Option<&'a mut dyn EventSink>,
+    ) -> (SimReport, Option<Telemetry>) {
         let n = scenario.specs.len();
         debug_assert!(scenario.validate().is_ok());
         let microgrids: Vec<Option<Microgrid>> = if scenario.microgrids.is_empty() {
@@ -472,6 +519,8 @@ impl<'a> Simulation<'a> {
             makespan_s: 0.0,
             t_last: 0.0,
             last_refresh_s: f64::NEG_INFINITY,
+            telem: sink.as_ref().map(|_| Telemetry::new()),
+            sink,
         };
         sim.rebuild_cache();
 
@@ -497,6 +546,9 @@ impl<'a> Simulation<'a> {
                         Some(d) => t + d.slack_s,
                         None => f64::INFINITY,
                     };
+                    if sim.observing() {
+                        sim.emit(&TraceEvent::Arrival { t_s: t, deadline_s: deadline });
+                    }
                     sim.admit(t, t, deadline, true, scheduler);
                     if sim.arrived < scenario.requests as u64 {
                         let gap = arrivals.next_gap_s();
@@ -505,6 +557,9 @@ impl<'a> Simulation<'a> {
                 }
                 EventKind::DeferredRelease { arrival_s, deadline_s } => {
                     sim.refresh_intensities(t);
+                    if sim.observing() {
+                        sim.emit(&TraceEvent::DeferRelease { t_s: t, arrival_s, deadline_s });
+                    }
                     sim.admit(arrival_s, t, deadline_s, false, scheduler);
                 }
                 EventKind::Completion { node, arrival_s, deadline_s, service_ms, energy_j } => {
@@ -516,7 +571,28 @@ impl<'a> Simulation<'a> {
             }
         }
 
-        sim.into_report(scheduler_name)
+        sim.close_horizon();
+        let telem = sim.telem.take();
+        (sim.into_report(scheduler_name), telem)
+    }
+
+    /// Whether this run has an observer attached — the single branch every
+    /// emission site pays on the unobserved path.
+    #[inline]
+    fn observing(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Count `ev` in the telemetry registry (pre-filter, so conservation
+    /// checks see every event) and hand it to the sink. Call only behind
+    /// an `observing()` check so the unobserved path constructs nothing.
+    fn emit(&mut self, ev: &TraceEvent<'_>) {
+        if let Some(t) = self.telem.as_mut() {
+            t.count(ev.kind());
+        }
+        if let Some(sink) = self.sink.as_deref_mut() {
+            sink.record(ev);
+        }
     }
 
     fn push(&mut self, t_s: f64, kind: EventKind) {
@@ -666,6 +742,20 @@ impl<'a> Simulation<'a> {
                 self.node_ledger[g].carbon_g += dyn_carbon;
                 self.carbon_total_g += dyn_carbon;
             }
+            if self.observing() {
+                let soc = self.microgrids[g].as_ref().unwrap().soc_frac();
+                self.emit(&TraceEvent::MicrogridSlice {
+                    t0_s: t0,
+                    t1_s: t1,
+                    node: &sc.specs[g].name,
+                    pv_j: flow.pv_j,
+                    battery_j: flow.battery_j,
+                    grid_j: flow.grid_j,
+                    grid_charge_j: flow.grid_charge_j,
+                    carbon_g: carbon,
+                    soc,
+                });
+            }
         }
     }
 
@@ -747,7 +837,13 @@ impl<'a> Simulation<'a> {
         scheduler: &mut dyn Scheduler,
     ) {
         let view = self.fleet_view(now_s, deadline_s, allow_defer);
-        match scheduler.decide(&self.sc.config.demand, &view) {
+        let decision = if self.observing() {
+            let ctx = if allow_defer { "arrival" } else { "release" };
+            self.decide_observed(scheduler, &view, arrival_s, now_s, ctx)
+        } else {
+            scheduler.decide(&self.sc.config.demand, &view)
+        };
+        match decision {
             SchedulingDecision::Assign(ci) => {
                 let g = self.cache_idx[ci];
                 let qd_ms = view.nodes[ci].queue_delay_s * 1e3;
@@ -763,6 +859,54 @@ impl<'a> Simulation<'a> {
                 self.rejected += 1
             }
         }
+    }
+
+    /// One scheduler call under observation: wall-clock the decision into
+    /// the telemetry overhead histogram, and — when the sink keeps
+    /// decision events — route through [`Scheduler::decide_explained`] so
+    /// the emitted event carries the per-candidate rationale. The explain
+    /// payload is skipped entirely when nobody reads it; the verdict is
+    /// identical either way (the `decide_explained` contract).
+    fn decide_observed(
+        &mut self,
+        scheduler: &mut dyn Scheduler,
+        view: &FleetView,
+        arrival_s: f64,
+        now_s: f64,
+        ctx: &'static str,
+    ) -> SchedulingDecision {
+        let want_explain = match self.sink.as_ref() {
+            Some(s) => s.wants(TraceKind::Decision),
+            None => false,
+        };
+        let t0 = Instant::now();
+        let (decision, explain) = if want_explain {
+            let mut e = DecisionExplain::default();
+            let d = scheduler.decide_explained(&self.sc.config.demand, view, &mut e);
+            (d, Some(e))
+        } else {
+            (scheduler.decide(&self.sc.config.demand, view), None)
+        };
+        let decide_ns = t0.elapsed().as_nanos() as u64;
+        if let Some(t) = self.telem.as_mut() {
+            t.decide_ns.record(decide_ns as f64);
+        }
+        if let Some(explain) = &explain {
+            let node = decision.assigned().map(|ci| view.nodes[ci].node.spec.name.as_str());
+            self.emit(&TraceEvent::Decision {
+                t_s: now_s,
+                arrival_s,
+                ctx,
+                verdict: decision,
+                node,
+                explain,
+                decide_ns,
+            });
+        } else if let Some(t) = self.telem.as_mut() {
+            // The sink filtered decision events out; still count it.
+            t.count(TraceKind::Decision);
+        }
+        decision
     }
 
     /// Assign a request (original arrival time `arrival_s`) to node `g` at
@@ -781,6 +925,18 @@ impl<'a> Simulation<'a> {
     ) {
         debug_assert!(self.active[g], "dispatch onto inactive node {g}");
         self.queue_delay_ms[g].push(queue_delay_est_ms);
+        if self.observing() {
+            if let Some(t) = self.telem.as_mut() {
+                t.queue_delay_ms.record(queue_delay_est_ms);
+            }
+            let sc = self.sc;
+            self.emit(&TraceEvent::Dispatch {
+                t_s: now_s,
+                arrival_s,
+                node: &sc.specs[g].name,
+                queue_delay_est_ms,
+            });
+        }
         self.nodes[g].begin_task();
         self.queues[g].push_back((arrival_s, deadline_s));
         self.try_start(g, now_s);
@@ -847,6 +1003,23 @@ impl<'a> Simulation<'a> {
         if t_s > deadline_s {
             self.deadline_missed += 1;
         }
+        if self.observing() {
+            let latency_ms = (t_s - arrival_s) * 1e3;
+            if let Some(t) = self.telem.as_mut() {
+                t.latency_ms.record(latency_ms);
+            }
+            let sc = self.sc;
+            self.emit(&TraceEvent::Completion {
+                t_s,
+                arrival_s,
+                node: &sc.specs[g].name,
+                service_ms,
+                latency_ms,
+                energy_j,
+                carbon_g,
+                missed: t_s > deadline_s,
+            });
+        }
         self.makespan_s = self.makespan_s.max(t_s);
         // A churned-down node keeps its power floor while in-service work
         // drains; the last drain completion finally powers it off.
@@ -883,6 +1056,10 @@ impl<'a> Simulation<'a> {
     }
 
     fn churn(&mut self, g: usize, up: bool, t_s: f64, scheduler: &mut dyn Scheduler) {
+        if self.observing() {
+            let sc = self.sc;
+            self.emit(&TraceEvent::Churn { t_s, node: &sc.specs[g].name, up });
+        }
         if up {
             if !self.active[g] {
                 self.active[g] = true;
@@ -929,7 +1106,12 @@ impl<'a> Simulation<'a> {
             // backlog the next decision must see. Migration never defers
             // (no forecast in the view), matching the release path.
             let view = self.fleet_view(t_s, deadline_s, false);
-            match scheduler.decide(&self.sc.config.demand, &view) {
+            let decision = if self.observing() {
+                self.decide_observed(scheduler, &view, arrival_s, t_s, "migration")
+            } else {
+                scheduler.decide(&self.sc.config.demand, &view)
+            };
+            match decision {
                 SchedulingDecision::Assign(ci) => {
                     let ng = self.cache_idx[ci];
                     let qd_ms = view.nodes[ci].queue_delay_s * 1e3;
@@ -941,10 +1123,12 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    fn into_report(mut self, scheduler_name: &str) -> SimReport {
-        // Close every node still powered on at the simulation horizon, and
-        // settle every microgrid to it (a powered-off node's PV keeps
-        // charging its battery right up to the horizon).
+    /// Close every node still powered on at the simulation horizon, and
+    /// settle every microgrid to it (a powered-off node's PV keeps
+    /// charging its battery right up to the horizon). Runs before the
+    /// telemetry registry is detached, so the horizon settlement slices
+    /// still reach the sink *and* the counters.
+    fn close_horizon(&mut self) {
         let horizon = self.t_last;
         for g in 0..self.sc.specs.len() {
             self.settle_microgrid(g, horizon);
@@ -953,6 +1137,9 @@ impl<'a> Simulation<'a> {
                 self.soc_timeline[g].push((horizon, mg.soc_frac()));
             }
         }
+    }
+
+    fn into_report(mut self, scheduler_name: &str) -> SimReport {
         let energy_idle_kwh_total = joules_to_kwh(self.idle_energy_j.iter().sum::<f64>());
         let carbon_idle_g_total: f64 = self.idle_carbon_g.iter().sum();
         let energy_dynamic_kwh_total = joules_to_kwh(self.energy_total_j);
@@ -985,6 +1172,7 @@ impl<'a> Simulation<'a> {
                     busy_ms: self.nodes[i].state().busy_ms,
                     uptime_s: self.uptime_s[i],
                     queue_delay_ms_p50: qd.p50,
+                    queue_delay_ms_p99: qd.p99,
                     queue_delay_ms_max: qd.max,
                     energy_dynamic_kwh: e.energy_kwh,
                     energy_idle_kwh: idle_kwh,

@@ -59,7 +59,20 @@
 //!   (backlog × mean service ÷ service slots, reported per node as
 //!   p50/max), the current virtual-time grid (or blended microgrid)
 //!   intensity, and forecast context for slack-carrying arrivals — and the
-//!   engine obeys the returned verdict.
+//!   engine obeys the returned verdict;
+//! * **opt-in observability** ([`crate::obs`]): the
+//!   [`Simulation::try_run_observed`] entry point threads an
+//!   [`crate::obs::EventSink`] through every hot path — arrivals,
+//!   scheduling verdicts (with the per-candidate rationale from
+//!   [`crate::scheduler::Scheduler::decide_explained`]), dispatches,
+//!   deferred releases, completions, churn transitions and microgrid
+//!   settlement slices — and returns an in-process
+//!   [`crate::obs::Telemetry`] registry (event counters, queue-delay /
+//!   latency / per-decision-overhead histograms) beside the report. The
+//!   NDJSON [`crate::obs::FirehoseSink`] streams one event per line to
+//!   disk (`carbonedge sim --trace-out`); with no sink attached nothing
+//!   is ever constructed, and a traced run's [`SimReport`] is
+//!   bit-identical to an untraced one (`tests/obs.rs`).
 //!
 //! Identical seeds produce identical [`SimReport`]s; millions of simulated
 //! requests run in seconds (`benches/sim.rs`). The scenario library lives

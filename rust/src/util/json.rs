@@ -7,6 +7,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -354,6 +355,184 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")
 }
 
+// ---------------------------------------------------------------------------
+// Streaming writer
+// ---------------------------------------------------------------------------
+
+/// Streaming JSON writer: serialize-as-you-go over any [`io::Write`], no
+/// intermediate [`Json`] tree. At 10M-request report sizes (per-node SoC
+/// timelines, per-event firehose lines) materializing the tree is the memory
+/// ceiling; this writer emits bytes as the caller walks the document.
+///
+/// Output is byte-identical to [`Json`]'s `Display` for the same value
+/// sequence — same integral-number formatting (`n.fract() == 0` and
+/// `|n| < 1e15` prints as an integer) and the same string-escape set — so
+/// everything it produces parses back through [`Json::parse`].
+///
+/// The caller is responsible for well-formedness ordering (a `key` before
+/// every value inside an object); nesting commas are handled internally.
+/// Misuse (a value where a key is required) is caught by `debug_assert!`.
+pub struct JsonWriter<W: io::Write> {
+    w: W,
+    /// (is_object, wrote_first_element) per open container.
+    stack: Vec<(bool, bool)>,
+    /// In an object and a key has been written, value pending.
+    key_pending: bool,
+}
+
+impl<W: io::Write> JsonWriter<W> {
+    pub fn new(w: W) -> JsonWriter<W> {
+        JsonWriter { w, stack: Vec::new(), key_pending: false }
+    }
+
+    /// Comma bookkeeping before a value (or container open) in the current
+    /// context. Inside an object the separator was emitted by `key`.
+    fn sep(&mut self) -> io::Result<()> {
+        if self.key_pending {
+            self.key_pending = false;
+            return Ok(());
+        }
+        if let Some((is_obj, first)) = self.stack.last_mut() {
+            debug_assert!(!*is_obj, "value without a key inside an object");
+            if *first {
+                *first = false;
+            } else {
+                self.w.write_all(b",")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Object member key (with `:`); must be followed by exactly one value.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        debug_assert!(!self.key_pending, "two keys in a row");
+        match self.stack.last_mut() {
+            Some((true, first)) => {
+                if *first {
+                    *first = false;
+                } else {
+                    self.w.write_all(b",")?;
+                }
+            }
+            _ => debug_assert!(false, "key outside an object"),
+        }
+        write_escaped_io(&mut self.w, k)?;
+        self.w.write_all(b":")?;
+        self.key_pending = true;
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.stack.push((true, true));
+        self.w.write_all(b"{")
+    }
+
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        debug_assert!(matches!(self.stack.last(), Some((true, _))), "end_obj outside object");
+        self.stack.pop();
+        self.w.write_all(b"}")
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.stack.push((false, true));
+        self.w.write_all(b"[")
+    }
+
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        debug_assert!(matches!(self.stack.last(), Some((false, _))), "end_arr outside array");
+        self.stack.pop();
+        self.w.write_all(b"]")
+    }
+
+    pub fn null(&mut self) -> io::Result<()> {
+        self.sep()?;
+        self.w.write_all(b"null")
+    }
+
+    pub fn boolean(&mut self, b: bool) -> io::Result<()> {
+        self.sep()?;
+        self.w.write_all(if b { b"true" } else { b"false" })
+    }
+
+    pub fn num(&mut self, n: f64) -> io::Result<()> {
+        self.sep()?;
+        if n.fract() == 0.0 && n.abs() < 1e15 {
+            write!(self.w, "{}", n as i64)
+        } else {
+            write!(self.w, "{n}")
+        }
+    }
+
+    /// Finite-guarded number: NaN/±inf become `null` (the export convention;
+    /// bare `NaN` is not valid JSON).
+    pub fn fnum(&mut self, n: f64) -> io::Result<()> {
+        if n.is_finite() {
+            self.num(n)
+        } else {
+            self.null()
+        }
+    }
+
+    pub fn string(&mut self, s: &str) -> io::Result<()> {
+        self.sep()?;
+        write_escaped_io(&mut self.w, s)
+    }
+
+    // Compact `key + value` helpers for flat report/event objects.
+    pub fn field_num(&mut self, k: &str, n: f64) -> io::Result<()> {
+        self.key(k)?;
+        self.num(n)
+    }
+    pub fn field_fnum(&mut self, k: &str, n: f64) -> io::Result<()> {
+        self.key(k)?;
+        self.fnum(n)
+    }
+    pub fn field_str(&mut self, k: &str, s: &str) -> io::Result<()> {
+        self.key(k)?;
+        self.string(s)
+    }
+    pub fn field_bool(&mut self, k: &str, b: bool) -> io::Result<()> {
+        self.key(k)?;
+        self.boolean(b)
+    }
+    pub fn field_null(&mut self, k: &str) -> io::Result<()> {
+        self.key(k)?;
+        self.null()
+    }
+
+    /// Hand back the underlying writer (all containers must be closed).
+    pub fn into_inner(self) -> W {
+        debug_assert!(self.stack.is_empty(), "unclosed container");
+        self.w
+    }
+}
+
+/// `write_escaped` for byte sinks: bulk-writes unescaped runs, escapes the
+/// same set as the `Display` path (multi-byte UTF-8 passes through raw).
+fn write_escaped_io<W: io::Write>(w: &mut W, s: &str) -> io::Result<()> {
+    w.write_all(b"\"")?;
+    let bytes = s.as_bytes();
+    let mut start = 0;
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'"' || b == b'\\' || b < 0x20 {
+            w.write_all(&bytes[start..i])?;
+            match b {
+                b'"' => w.write_all(b"\\\"")?,
+                b'\\' => w.write_all(b"\\\\")?,
+                b'\n' => w.write_all(b"\\n")?,
+                b'\r' => w.write_all(b"\\r")?,
+                b'\t' => w.write_all(b"\\t")?,
+                _ => write!(w, "\\u{b:04x}")?,
+            }
+            start = i + 1;
+        }
+    }
+    w.write_all(&bytes[start..])?;
+    w.write_all(b"\"")
+}
+
 /// Convenience constructors for building JSON output (reports).
 pub fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -436,6 +615,62 @@ mod tests {
     fn builders_display() {
         let v = obj(vec![("x", num(1.0)), ("y", arr(vec![s("a")]))]);
         assert_eq!(v.to_string(), r#"{"x":1,"y":["a"]}"#);
+    }
+
+    #[test]
+    fn writer_streams_nested_document() {
+        let mut j = JsonWriter::new(Vec::new());
+        j.begin_obj().unwrap();
+        j.field_str("name", "a\"b\nc").unwrap();
+        j.key("vals").unwrap();
+        j.begin_arr().unwrap();
+        j.num(1.0).unwrap();
+        j.num(2.5).unwrap();
+        j.fnum(f64::NAN).unwrap();
+        j.end_arr().unwrap();
+        j.key("inner").unwrap();
+        j.begin_obj().unwrap();
+        j.field_bool("up", true).unwrap();
+        j.field_null("gone").unwrap();
+        j.field_fnum("big", 3e18).unwrap();
+        j.end_obj().unwrap();
+        j.end_obj().unwrap();
+        let text = String::from_utf8(j.into_inner()).unwrap();
+        assert_eq!(
+            text,
+            r#"{"name":"a\"b\nc","vals":[1,2.5,null],"inner":{"up":true,"gone":null,"big":3000000000000000000}}"#
+        );
+        // And it parses back to the tree the builders would have produced.
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.path(&["inner", "up"]), Some(&Json::Bool(true)));
+        assert_eq!(v.path(&["inner", "gone"]), Some(&Json::Null));
+        assert_eq!(v.get("vals").unwrap().as_arr().unwrap()[2], Json::Null);
+    }
+
+    #[test]
+    fn writer_matches_tree_display() {
+        // The streaming writer and the `Json` Display path must agree on
+        // number formatting and escaping, since parse-back tests rely on it.
+        let tree = obj(vec![
+            ("f", num(0.25)),
+            ("i", num(12.0)),
+            ("s", s("tab\there")),
+            ("xs", arr(vec![num(-7.0), Json::Bool(false), Json::Null])),
+        ]);
+        let mut j = JsonWriter::new(Vec::new());
+        j.begin_obj().unwrap();
+        j.field_num("f", 0.25).unwrap();
+        j.field_num("i", 12.0).unwrap();
+        j.field_str("s", "tab\there").unwrap();
+        j.key("xs").unwrap();
+        j.begin_arr().unwrap();
+        j.num(-7.0).unwrap();
+        j.boolean(false).unwrap();
+        j.null().unwrap();
+        j.end_arr().unwrap();
+        j.end_obj().unwrap();
+        let streamed = String::from_utf8(j.into_inner()).unwrap();
+        assert_eq!(streamed, tree.to_string());
     }
 
     #[test]

@@ -115,7 +115,7 @@ fn sweep_transition_behaviour() {
             seed: 0,
         };
         let r = c.run_scheduled(&model, &mut s, &stream.inputs()).unwrap();
-        RunReport::from_records("sweep", &r.records)
+        RunReport::from_records("sweep", &r.records).unwrap()
     };
     let low = run(0.05);
     let high = run(0.9);
