@@ -149,6 +149,26 @@ fn main() {
     );
     rows.push(r);
 
+    // Batch-formation queues on the hot path: every arrival draws a
+    // workload class, every dispatch joins or seals a forming batch, and
+    // every seal apportions energy across members. The decide-ns row
+    // below is the batching baseline for the 10k-node perf item.
+    let r = bench("batch-serving", 0, 200_000, 3, g);
+    println!(
+        "  batch-serving  200k requests   {:>8.2}M sim-req/s  (batch queues)",
+        r.sim_rps / 1e6
+    );
+    rows.push(r);
+
+    // Classes + batching + microgrid settlement + demand-aware SoC
+    // projections together — the full multi-tenant service model.
+    let r = bench("multi-tenant", 0, 200_000, 3, g);
+    println!(
+        "  multi-tenant   200k requests   {:>8.2}M sim-req/s  (classes+mixed supply)",
+        r.sim_rps / 1e6
+    );
+    rows.push(r);
+
     // Per-decision scheduling overhead through the counters-only observed
     // path (NullSink: telemetry on, no serialisation) vs the paper's
     // 0.03 ms/task budget.

@@ -802,6 +802,64 @@ pub fn sim_arbitrage_render(
     out
 }
 
+// ---------------------------------------------------------------------------
+// Batched multi-tenant serving vs one-task-per-slot (the service-model A/B)
+// ---------------------------------------------------------------------------
+
+/// The experiment batch formation unlocks, on a batching-carrying
+/// scenario in Green mode: the scenario as built (per-`(node, class)`
+/// batch queues at the chassis's sub-linear latency/power point) against
+/// its [`scenarios::batching_disabled_twin`] (same tenant mix, same
+/// arrivals, same seed, one task per service slot). Returns
+/// `(batched, unbatched)` — under overload the margin shows up twice,
+/// as gCO₂/req *and* as tail latency.
+pub fn sim_batching_comparison(sc: &Scenario) -> (SimReport, SimReport) {
+    assert!(sc.config.batching.is_some(), "scenario carries no batch spec");
+    let twin = scenarios::batching_disabled_twin(sc);
+    (sim_run_mode(sc, Mode::Green), sim_run_mode(&twin, Mode::Green))
+}
+
+/// [`sim_batching_comparison`] over the `batch-serving` scenario —
+/// `carbonedge sim --scenario batch-serving --compare-batching` and
+/// `examples/fleet_sim.rs` both land here.
+pub fn sim_batching(nodes: usize, requests: usize, seed: u64) -> (SimReport, SimReport) {
+    let sc = scenarios::build("batch-serving", nodes, requests, seed).unwrap();
+    sim_batching_comparison(&sc)
+}
+
+pub fn sim_batching_render(batched: &SimReport, unbatched: &SimReport) -> String {
+    let mut t = Table::new(
+        "Batched serving vs one-task-per-slot — same tenant mix",
+        &["Run", "gCO2/req", "Dynamic kWh", "Batches", "Mean fill", "p99 (ms)", "SLO missed"],
+    );
+    for r in [unbatched, batched] {
+        let (_, slo_missed, _, _) = r.class_sums();
+        let batches: u64 = r.classes.iter().map(|c| c.batches).sum();
+        let fill = if batches > 0 {
+            format!("{:.2}", r.completed as f64 / batches as f64)
+        } else {
+            "-".into()
+        };
+        t.row(vec![
+            r.scenario.clone(),
+            format!("{:.6}", r.carbon_per_req_g),
+            format!("{:.6}", r.energy_dynamic_kwh_total),
+            batches.to_string(),
+            fill,
+            f2(r.latency_ms.p99),
+            slo_missed.to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "batch formation cuts gCO2/req by {} vs one-task-per-slot at p99 {} vs {} ms\n",
+        reduction_pct(batched.carbon_per_req_g, unbatched.carbon_per_req_g),
+        f2(batched.latency_ms.p99),
+        f2(unbatched.latency_ms.p99),
+    ));
+    out
+}
+
 pub fn sim_sweep_render(points: &[SimSweepPoint]) -> String {
     let mut t = Table::new(
         "Virtual weight sweep — carbon/latency trade-off at fleet scale",

@@ -39,7 +39,19 @@
 //!   discharged joule at its embodied intensity; microgrid deferral
 //!   forecasts are simulated SoC trajectories
 //!   ([`microgrid::Microgrid::project`]), so release slots are priced
-//!   against the battery the node will actually have.
+//!   against the battery the node will actually have. Service is
+//!   *batched and multi-tenant*: a [`workload::WorkloadMix`] tags each
+//!   arrival with a [`workload::WorkloadClass`] (its own SLO, model
+//!   scale and dispatch priority), [`sim::BatchSpec`] turns each service
+//!   slot into a batch-formation queue (seal on fill or window expiry)
+//!   whose members share one execution priced by the node's sub-linear
+//!   batch latency/power curves ([`node::NodeSpec::batch_latency_ms`],
+//!   [`node::NodeSpec::batch_dynamic_power_w`]), schedulers see
+//!   per-class queue states through [`scheduler::ClassNodeView`] and can
+//!   credit joining a forming batch, and reports break completions, SLO
+//!   misses, batch fill and attributed energy/carbon out per class
+//!   ([`sim::ClassUsage`]). With batching disabled (window 0, max 1)
+//!   the engine is bit-identical to one-task-per-slot serving.
 //! * **L2** — the JAX model zoo (`python/compile/models.py`), AOT-lowered to
 //!   HLO text artifacts consumed by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) backing every conv

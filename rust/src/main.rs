@@ -18,7 +18,9 @@
 //!               [--pv-peak-w W | --pv-csv PATH] [--battery-wh WH]
 //!               [--battery-rt-eff F] [--compare-microgrid]
 //!               [--charge-policy off|threshold] [--charge-threshold-pct P]
-//!               [--compare-arbitrage] [--help]
+//!               [--compare-arbitrage]
+//!               [--batch-window-ms MS] [--batch-max N] [--compare-batching]
+//!               [--help]
 //!                                                   # virtual-time fleet simulator
 //! ```
 
@@ -65,6 +67,7 @@ fn run() -> Result<()> {
         "list-scenarios",
         "compare-microgrid",
         "compare-arbitrage",
+        "compare-batching",
     ])?;
     let cmd = args.command.clone().unwrap_or_else(|| "info".to_string());
     // Handle --help before any command arm so no command ever runs its
@@ -287,6 +290,8 @@ fn run() -> Result<()> {
                     "battery-rt-eff",
                     "charge-policy",
                     "charge-threshold-pct",
+                    "batch-window-ms",
+                    "batch-max",
                 ] {
                     if args.has(flag) {
                         anyhow::bail!("--consolidate does not combine with --{flag}");
@@ -300,6 +305,7 @@ fn run() -> Result<()> {
                     "compare-defer-routing",
                     "compare-microgrid",
                     "compare-arbitrage",
+                    "compare-batching",
                 ] {
                     if args.bool_flag(switch) {
                         anyhow::bail!("--consolidate does not combine with --{switch}");
@@ -457,6 +463,8 @@ fn run() -> Result<()> {
                     "trace-out",
                     "trace-filter",
                     "timeline-stride",
+                    "batch-window-ms",
+                    "batch-max",
                 ];
                 for flag in conflicts {
                     if args.has(flag) {
@@ -470,6 +478,7 @@ fn run() -> Result<()> {
                     "compare-defer",
                     "compare-defer-routing",
                     "compare-arbitrage",
+                    "compare-batching",
                 ];
                 for switch in switches {
                     if args.bool_flag(switch) {
@@ -516,6 +525,23 @@ fn run() -> Result<()> {
                     policy: carbonedge::carbon::DeferralPolicy { resolution_s, min_gain },
                 });
             }
+            // Batch-formation knobs: either one tunes the scenario's
+            // existing batch spec or enables batching from the defaults
+            // (window 200 ms, fill 8) — `--batch-max` alone must not be
+            // silently ignored.
+            let batch_knobs = ["batch-window-ms", "batch-max"];
+            if batch_knobs.iter().any(|f| args.has(f)) {
+                let base = sc.config.batching.unwrap_or_default();
+                let window_ms: f64 = args.parse_or("batch-window-ms", base.window_ms)?;
+                let max_batch: usize = args.parse_or("batch-max", base.max_batch)?;
+                if !window_ms.is_finite() || window_ms < 0.0 {
+                    anyhow::bail!("--batch-window-ms must be finite and >= 0, got {window_ms}");
+                }
+                if max_batch == 0 {
+                    anyhow::bail!("--batch-max must be >= 1");
+                }
+                sc.config.batching = Some(carbonedge::sim::BatchSpec { window_ms, max_batch });
+            }
             // Everything above mutated the scenario from CLI knobs: validate
             // once here so any bad combination is a clean error, never a
             // mid-simulation panic.
@@ -524,9 +550,13 @@ fn run() -> Result<()> {
                 // The firehose documents exactly one simulation run; the
                 // comparison arms run several and would interleave their
                 // events into one stream.
-                for switch in
-                    ["sweep", "compare-defer", "compare-defer-routing", "compare-arbitrage"]
-                {
+                for switch in [
+                    "sweep",
+                    "compare-defer",
+                    "compare-defer-routing",
+                    "compare-arbitrage",
+                    "compare-batching",
+                ] {
                     if args.bool_flag(switch) {
                         anyhow::bail!(
                             "--trace-out streams one run; it does not combine with --{switch}"
@@ -595,6 +625,28 @@ fn run() -> Result<()> {
                 }
                 let (joint, rtd) = exp::sim_deferral_routing_comparison(&sc);
                 println!("{}", exp::sim_deferral_routing_render(&joint, &rtd));
+                return Ok(());
+            }
+            if args.bool_flag("compare-batching") {
+                if sc.config.batching.is_none() {
+                    anyhow::bail!(
+                        "--compare-batching needs batch formation on: use --scenario \
+                         batch-serving / multi-tenant or --batch-window-ms/--batch-max"
+                    );
+                }
+                if args.has("mode") || args.has("scheduler") {
+                    anyhow::bail!(
+                        "--compare-batching always runs green mode; it does not combine \
+                         with --mode/--scheduler"
+                    );
+                }
+                for switch in ["sweep", "json", "no-defer", "compare-defer"] {
+                    if args.bool_flag(switch) {
+                        anyhow::bail!("--compare-batching does not combine with --{switch}");
+                    }
+                }
+                let (batched, unbatched) = exp::sim_batching_comparison(&sc);
+                println!("{}", exp::sim_batching_render(&batched, &unbatched));
                 return Ok(());
             }
             if args.bool_flag("sweep") {
@@ -804,6 +856,22 @@ defers by default, like real-trace):
                          A/B the joint defer-green scheduler against the
                          legacy route-then-defer gate on the same workload
                          (the deferral-routing scenario is built for it)
+
+batched multi-tenant serving (tasks of the same workload class batch up
+per node and run as one batch in one service slot, on the chassis's
+sub-linear batch latency/power curves; the batch-serving and
+multi-tenant scenarios ship a tenant mix and batch on by default):
+  --batch-window-ms MS   longest wait before a forming batch seals
+                         regardless of fill (default 200; 0 seals
+                         immediately). Either batch knob enables batching
+                         on scenarios that ship without it
+  --batch-max N          fill target: a batch seals at N same-class tasks
+                         and never carries more (default 8; 1 restores
+                         one-task-per-slot service exactly)
+  --compare-batching     A/B in green mode: the batched scenario against
+                         its one-task-per-slot twin (same tenant mix,
+                         arrivals and seed), reporting the gCO2/req and
+                         p99 gap
 
 real traces:
   --trace-csv PATH       with --scenario real-trace: load an

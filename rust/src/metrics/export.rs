@@ -119,6 +119,27 @@ pub fn write_sim_report<W: io::Write>(
     j.field_fnum("carbon_dynamic_g", r.carbon_dynamic_g_total)?;
     j.field_fnum("carbon_idle_g", r.carbon_idle_g_total)?;
     j.field_fnum("carbon_per_req_g", r.carbon_per_req_g)?;
+    // Per-workload-class rows (multi-tenant runs only; empty otherwise).
+    if !r.classes.is_empty() {
+        j.key("classes")?;
+        j.begin_arr()?;
+        for c in &r.classes {
+            j.begin_obj()?;
+            j.field_str("class", &c.name)?;
+            j.field_num("completed", c.completed as f64)?;
+            j.field_fnum("slo_s", c.slo_s)?;
+            j.field_num("slo_missed", c.slo_missed as f64)?;
+            j.field_num("batches", c.batches as f64)?;
+            j.field_fnum("mean_fill", c.mean_fill())?;
+            j.field_fnum("latency_ms_p50", c.latency_ms.p50)?;
+            j.field_fnum("latency_ms_p99", c.latency_ms.p99)?;
+            j.field_fnum("energy_dynamic_kwh", c.energy_dynamic_kwh)?;
+            j.field_fnum("carbon_dynamic_g", c.carbon_dynamic_g)?;
+            j.field_fnum("carbon_per_req_g", c.carbon_per_req_g)?;
+            j.end_obj()?;
+        }
+        j.end_arr()?;
+    }
     j.key("nodes")?;
     j.begin_arr()?;
     for n in &r.nodes {
@@ -329,6 +350,7 @@ mod tests {
             cpu: 64.0,
             mem_mb: 1 << 20,
             latency_threshold_ms: 5_000.0,
+            class: 0,
         };
         let mut sched = crate::scheduler::CarbonAwareScheduler::new(
             "green",

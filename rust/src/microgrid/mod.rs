@@ -16,14 +16,17 @@
 //!   charges only from excess PV, `Threshold` additionally imports grid
 //!   power into the battery whenever the grid trace sits at or below a
 //!   percentile of its own forward window (rate- and headroom-capped);
-//! * a **stored-carbon ledger** — grid-charged joules carry their
-//!   *embodied* intensity (import priced at charge time, averaged over
-//!   the store, released pro rata on discharge), so arbitrage never
-//!   launders carbon to zero: a battery filled at 150 g/kWh discharges at
-//!   ≈ 150/η g/kWh, and a store dirtier than the current grid simply
-//!   holds (discharge is gated on `stored intensity < grid intensity`;
-//!   PV-charged joules stay free). The ledger balances exactly:
-//!   `charged == discharged + still stored`;
+//! * a **stored-carbon ledger in FIFO tranches** — grid-charged joules
+//!   carry their *embodied* intensity (import priced at charge time,
+//!   held as one tranche per charge stretch, released oldest-first on
+//!   discharge), so arbitrage never launders carbon to zero and a cheap
+//!   night-charge discharged first carries *its own* price rather than a
+//!   store-average blend: a battery filled at 150 g/kWh discharges at
+//!   ≈ 150/η g/kWh, and a tranche dirtier than the current grid simply
+//!   holds (discharge walks tranches while `tranche intensity < grid
+//!   intensity`; PV-charged joules stay free and always flow). The
+//!   ledger balances exactly — `charged == discharged + still stored` —
+//!   tranche by tranche;
 //! * [`Microgrid`] — the runtime state: over any virtual-time slice, node
 //!   draw is covered **PV-first, then battery, then grid**
 //!   ([`Microgrid::cover`] / [`Microgrid::settle`]), and excess PV charges
@@ -52,6 +55,8 @@
 //! into `EdgeNode::intensity_override` — so every existing
 //! [`crate::scheduler::Scheduler`] transparently follows the sun and the
 //! charge without knowing microgrids exist.
+
+use std::collections::VecDeque;
 
 use crate::carbon::{joules_to_kwh, GramsPerKwh, IntensityTrace};
 
@@ -316,7 +321,8 @@ pub struct SliceFlow {
     /// PUE when it moves carbon into its ledgers).
     pub charge_carbon_g: f64,
     /// Embodied carbon released by this slice's battery discharge (grams,
-    /// no PUE): the store's average intensity times the discharged energy.
+    /// no PUE): each discharged joule priced at its own FIFO tranche's
+    /// embodied intensity.
     pub battery_carbon_g: f64,
 }
 
@@ -332,23 +338,69 @@ pub struct NodeDraw {
     pub rated_w: f64,
 }
 
-/// Stored-energy ledger: joules in the battery plus their embodied carbon.
-#[derive(Debug, Clone, Copy)]
-struct Store {
-    soc_j: f64,
+/// One FIFO charge tranche: joules bought into the store in one stretch,
+/// carrying the embodied carbon they were priced at when imported (0 for
+/// PV-charged and initial joules).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Tranche {
+    j: f64,
     carbon_g: f64,
 }
 
-/// Average intensity of the stored energy (g/kWh; 0 for an empty or
-/// carbon-free store). `carbon_g · 3.6e6 / soc_j` is grams per kWh — the
-/// inverse of [`joules_to_kwh`], written as one rounding step so the
-/// gating comparisons stay bit-stable.
-fn store_intensity(store: &Store) -> f64 {
-    if store.soc_j > 0.0 {
-        store.carbon_g * 3.6e6 / store.soc_j
+/// Stored-energy ledger: joules in the battery plus their embodied
+/// carbon, broken into FIFO [`Tranche`]s. `soc_j`/`carbon_g` are the
+/// totals (`soc_j == Σ tranche.j`, `carbon_g == Σ tranche.carbon_g`);
+/// discharge consumes tranches oldest-first, so a cheap-hour charge
+/// discharged first carries *its own* intensity instead of the
+/// store-average blend that used to launder a dirty top-up across every
+/// stored joule.
+#[derive(Debug, Clone)]
+struct Store {
+    soc_j: f64,
+    carbon_g: f64,
+    tranches: VecDeque<Tranche>,
+}
+
+/// Embodied intensity of one tranche (g/kWh). `carbon_g · 3.6e6 / j` is
+/// grams per kWh — the inverse of [`joules_to_kwh`], written as one
+/// rounding step so the gating comparisons stay bit-stable.
+fn tranche_intensity(t: &Tranche) -> f64 {
+    if t.j > 0.0 {
+        t.carbon_g * 3.6e6 / t.j
     } else {
         0.0
     }
+}
+
+/// Intensity of the *next* joules the store would release (g/kWh): the
+/// head (oldest) tranche's embodied intensity, 0 for an empty store. The
+/// marginal price, matching FIFO discharge order — not the old
+/// store-average.
+fn store_intensity(store: &Store) -> f64 {
+    match store.tranches.front() {
+        Some(t) => tranche_intensity(t),
+        None => 0.0,
+    }
+}
+
+/// Append charged joules to the FIFO. Carbon-free joules merge into a
+/// carbon-free tail tranche (PV charges every sunny slice — without the
+/// merge the list would grow per slice; with it a PV-only store is always
+/// a single tranche and its arithmetic matches the pre-tranche ledger
+/// exactly).
+fn push_tranche(store: &mut Store, j: f64, carbon_g: f64) {
+    if j <= 0.0 {
+        return;
+    }
+    if carbon_g <= 0.0 {
+        if let Some(back) = store.tranches.back_mut() {
+            if back.carbon_g <= 0.0 {
+                back.j += j;
+                return;
+            }
+        }
+    }
+    store.tranches.push_back(Tranche { j, carbon_g });
 }
 
 /// Charge-price threshold at `t` for a [`ChargePolicy::Threshold`]:
@@ -422,26 +474,39 @@ fn settle_slice(
     let pv_avail_j = spec.pv.energy_j(t0, t1);
     let pv_j = demand_j.min(pv_avail_j);
     let mut residual_j = demand_j - pv_j;
-    // Discharge gate: a carbon-free store always discharges (the legacy
-    // PV-only behaviour); a carbon-bearing store discharges only when
-    // strictly profitable, and never while the policy is importing.
-    let allowed =
-        !charging && (store.carbon_g <= 0.0 || store_intensity(store) < grid_mean);
+    // FIFO discharge: consume tranches oldest-first, each gated on its
+    // *own* embodied intensity — a carbon-free tranche always discharges
+    // (the legacy PV-only behaviour), a carbon-bearing one only when
+    // strictly profitable against this slice's grid, and nothing moves
+    // while the policy is importing. The walk stops at the first
+    // unprofitable tranche, so a free head releases even when a dirty
+    // top-up sits behind it.
+    let mut battery_j = 0.0;
     let mut battery_carbon_g = 0.0;
-    let battery_j = if allowed {
-        residual_j.min(b.max_discharge_w * dt).min(store.soc_j).max(0.0)
-    } else {
-        0.0
-    };
-    if battery_j > 0.0 {
-        if battery_j >= store.soc_j {
-            battery_carbon_g = store.carbon_g;
-            store.carbon_g = 0.0;
-        } else {
-            battery_carbon_g = store.carbon_g * battery_j / store.soc_j;
-            store.carbon_g -= battery_carbon_g;
+    if !charging {
+        let mut want_j = residual_j.min(b.max_discharge_w * dt).max(0.0);
+        while want_j > 0.0 {
+            let Some(head) = store.tranches.front_mut() else { break };
+            if head.carbon_g > 0.0 && tranche_intensity(head) >= grid_mean {
+                break;
+            }
+            let take_j = want_j.min(head.j);
+            let released_g = if take_j >= head.j {
+                head.carbon_g
+            } else {
+                head.carbon_g * take_j / head.j
+            };
+            head.j -= take_j;
+            head.carbon_g -= released_g;
+            battery_j += take_j;
+            battery_carbon_g += released_g;
+            want_j -= take_j;
+            if head.j <= 0.0 {
+                store.tranches.pop_front();
+            }
         }
         store.soc_j = (store.soc_j - battery_j).max(0.0);
+        store.carbon_g = (store.carbon_g - battery_carbon_g).max(0.0);
     }
     residual_j -= battery_j;
     let grid_j = residual_j.max(0.0);
@@ -449,7 +514,9 @@ fn settle_slice(
     let excess_j = (pv_avail_j - pv_j).max(0.0);
     let headroom_in_j = (cap_j - store.soc_j).max(0.0) / b.rt_efficiency;
     let charged_j = excess_j.min(b.max_charge_w * dt).min(headroom_in_j);
-    store.soc_j = (store.soc_j + charged_j * b.rt_efficiency).min(cap_j);
+    let pv_gain_j = (store.soc_j + charged_j * b.rt_efficiency).min(cap_j) - store.soc_j;
+    store.soc_j += pv_gain_j;
+    push_tranche(store, pv_gain_j, 0.0);
     // Grid-charge arbitrage: whatever charger rate and headroom are left.
     let mut grid_charge_j = 0.0;
     let mut charge_carbon_g = 0.0;
@@ -458,9 +525,11 @@ fn settle_slice(
         let headroom_in_j = (cap_j - store.soc_j).max(0.0) / b.rt_efficiency;
         grid_charge_j = rate_left_j.min(headroom_in_j);
         if grid_charge_j > 0.0 {
-            store.soc_j = (store.soc_j + grid_charge_j * b.rt_efficiency).min(cap_j);
+            let gain_j = (store.soc_j + grid_charge_j * b.rt_efficiency).min(cap_j) - store.soc_j;
+            store.soc_j += gain_j;
             charge_carbon_g = joules_to_kwh(grid_charge_j) * grid_mean;
             store.carbon_g += charge_carbon_g;
+            push_tranche(store, gain_j, charge_carbon_g);
         }
     }
     SliceFlow {
@@ -478,8 +547,8 @@ fn settle_slice(
 /// Marginal effective intensity at instant `t` for a given store state:
 /// PV and the (gated, sustainable) battery power serve the standing draw
 /// first, and the marginal task pays for whatever is left — battery
-/// joules at the store's average intensity, grid joules at
-/// `grid_intensity`.
+/// joules at the head tranche's embodied intensity (what a discharge
+/// would actually release next, FIFO), grid joules at `grid_intensity`.
 #[allow(clippy::too_many_arguments)]
 fn effective_at(
     spec: &MicrogridSpec,
@@ -534,7 +603,10 @@ impl Microgrid {
             panic!("invalid microgrid spec: {e}");
         }
         let soc_j = spec.battery.initial_soc * spec.battery.capacity_wh * WH_TO_J;
-        Microgrid { spec, store: Store { soc_j, carbon_g: 0.0 }, threshold_cache: None }
+        let mut store = Store { soc_j, carbon_g: 0.0, tranches: VecDeque::new() };
+        // The initial charge predates the ledger: one carbon-free tranche.
+        push_tranche(&mut store, soc_j, 0.0);
+        Microgrid { spec, store, threshold_cache: None }
     }
 
     /// State of charge as a fraction of capacity (0 for a zero-capacity
@@ -560,7 +632,8 @@ impl Microgrid {
         self.store.carbon_g
     }
 
-    /// Average intensity of the stored energy (g/kWh).
+    /// Embodied intensity of the *next* joules a discharge would release
+    /// (g/kWh): the oldest FIFO tranche's price, matching discharge order.
     pub fn stored_intensity(&self) -> GramsPerKwh {
         store_intensity(&self.store)
     }
@@ -690,7 +763,7 @@ impl Microgrid {
         debug_assert!(resolution_s > 0.0, "projection resolution must be positive");
         let horizon_s = horizon_s.max(t0);
         let cap_j = self.spec.battery.capacity_wh * WH_TO_J;
-        let mut store = self.store;
+        let mut store = self.store.clone();
         let mut cache = self.threshold_cache;
         let mut out =
             Vec::with_capacity(((horizon_s - t0) / resolution_s.max(1e-9)) as usize + 2);
@@ -976,6 +1049,120 @@ mod tests {
         // Hour 3 at 700 > stored 500: discharge resumes.
         let f3 = mg.settle(7_200.0, 9_000.0, 50.0, &trace);
         assert!(f3.battery_j > 0.0, "profitable discharge blocked: {f3:?}");
+    }
+
+    #[test]
+    fn fifo_tranches_release_their_own_intensity_in_order() {
+        // Two charge stretches at different prices: hour 1 at 100 g, hour
+        // 2 at 200 g (each sits at its forward window's cheap quartile,
+        // so the policy imports through both), then a dirty tail forces
+        // discharge. FIFO must release tranche 1's carbon first, at
+        // tranche 1's price — the old store-average would have blended
+        // the two.
+        let trace = IntensityTrace::from_samples(vec![
+            (0.0, 100.0),
+            (3_600.0, 200.0),
+            (7_200.0, 800.0),
+        ])
+        .unwrap();
+        let mut mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec {
+                capacity_wh: 300.0,
+                max_charge_w: 100.0,
+                max_discharge_w: 100.0,
+                rt_efficiency: 1.0,
+                initial_soc: 0.0,
+            },
+            charge: ChargePolicy::Threshold { percentile: 0.25, window_s: 10_800.0 },
+        });
+        let f1 = mg.settle(0.0, 3_600.0, 0.0, &trace);
+        let f2 = mg.settle(3_600.0, 7_200.0, 0.0, &trace);
+        assert!(f1.grid_charge_j > 0.0 && f2.grid_charge_j > 0.0, "{f1:?} {f2:?}");
+        assert_eq!(mg.store.tranches.len(), 2, "one tranche per charge stretch");
+        let (t1_j, t1_g) = (mg.store.tranches[0].j, mg.store.tranches[0].carbon_g);
+        let (t2_j, t2_g) = (mg.store.tranches[1].j, mg.store.tranches[1].carbon_g);
+        assert!((tranche_intensity(&mg.store.tranches[0]) - 100.0).abs() < 1e-6);
+        assert!((tranche_intensity(&mg.store.tranches[1]) - 200.0).abs() < 1e-6);
+        // The head price is advertised, not the blend (which would be 150).
+        assert!((mg.stored_intensity() - 100.0).abs() < 1e-6);
+        // Discharge exactly tranche 1's joules (100 W rate over t1_j/100 s).
+        let f3 = mg.settle(7_200.0, 7_200.0 + t1_j / 100.0, 100.0, &trace);
+        assert!((f3.battery_j - t1_j).abs() < 1e-6);
+        assert!(
+            (f3.battery_carbon_g - t1_g).abs() < 1e-9,
+            "tranche 1 must release its own carbon: {} vs {t1_g}",
+            f3.battery_carbon_g
+        );
+        // Per-tranche balance: tranche 2 is untouched, the totals balance
+        // tranche by tranche.
+        assert_eq!(mg.store.tranches.len(), 1);
+        assert!((mg.store.tranches[0].j - t2_j).abs() < 1e-6);
+        assert!((mg.store.tranches[0].carbon_g - t2_g).abs() < 1e-12);
+        assert!((mg.stored_carbon_g() - t2_g).abs() < 1e-9);
+        assert!((mg.stored_intensity() - 200.0).abs() < 1e-6);
+        let charged = f1.charge_carbon_g + f2.charge_carbon_g;
+        assert!((charged - f3.battery_carbon_g - mg.stored_carbon_g()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn free_head_discharges_past_a_dirty_tail() {
+        // Store: [free initial tranche][500 g grid tranche]. At a 300 g
+        // grid the free head must flow while the dirty tail holds — the
+        // old average gate (250 < 300) would have released *both*,
+        // laundering half the tail's price through the blend.
+        let trace = IntensityTrace::from_samples(vec![
+            (0.0, 500.0),
+            (3_600.0, 300.0),
+            (7_200.0, 700.0),
+        ])
+        .unwrap();
+        let mut mg = Microgrid::new(MicrogridSpec {
+            pv: PvProfile::none(),
+            battery: BatterySpec {
+                capacity_wh: 300.0,
+                max_charge_w: 100.0,
+                max_discharge_w: 100.0,
+                rt_efficiency: 1.0,
+                initial_soc: 1.0 / 3.0, // 100 Wh free
+            },
+            // Median of the first forward window sits at 500: hour 1
+            // imports on top of the free initial charge.
+            charge: ChargePolicy::Threshold { percentile: 0.5, window_s: 10_800.0 },
+        });
+        let f1 = mg.settle(0.0, 3_600.0, 0.0, &trace);
+        assert!(f1.grid_charge_j > 0.0);
+        assert_eq!(mg.store.tranches.len(), 2);
+        let free_j = mg.store.tranches[0].j;
+        assert_eq!(mg.store.tranches[0].carbon_g, 0.0);
+        // Hour 2 at 300 g: demand far beyond the free tranche. Only the
+        // free joules flow; the 500 g tranche holds.
+        let f2 = mg.settle(3_600.0, 7_200.0, 200.0, &trace);
+        assert!((f2.battery_j - free_j).abs() < 1e-6, "{} vs {free_j}", f2.battery_j);
+        assert_eq!(f2.battery_carbon_g, 0.0, "free joules release no carbon");
+        assert_eq!(mg.store.tranches.len(), 1);
+        assert!((mg.stored_intensity() - 500.0).abs() < 1e-6);
+        // Past 7200 s at 700 g: the dirty tranche is profitable and flows.
+        let f3 = mg.settle(7_200.0, 9_000.0, 200.0, &trace);
+        assert!(f3.battery_j > 0.0);
+        assert!(f3.battery_carbon_g > 0.0);
+    }
+
+    #[test]
+    fn pv_charges_merge_into_one_free_tranche() {
+        // Many sunny slices must not grow the tranche list: carbon-free
+        // charge merges into the free tail, and a PV-only store is always
+        // a single tranche (bit-identical arithmetic to the pre-tranche
+        // ledger).
+        let mut mg = Microgrid::new(MicrogridSpec::solar(400.0, 600.0, 0.9, 0.3));
+        let mut t = 30_000.0;
+        for _ in 0..40 {
+            mg.cover(t, t + 600.0, 54.0);
+            t += 600.0;
+        }
+        assert_eq!(mg.store.tranches.len(), 1, "PV charges must merge");
+        assert_eq!(mg.store.tranches[0].carbon_g, 0.0);
+        assert!((mg.store.tranches[0].j - mg.store.soc_j).abs() < 1e-9);
     }
 
     #[test]

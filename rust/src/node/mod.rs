@@ -58,6 +58,19 @@ pub struct NodeSpec {
     /// history carries machine noise that does not exist in the paper's
     /// testbed and can flip rankings (DESIGN.md §3).
     pub adaptive: bool,
+    /// Batch-latency exponent γ: serving a batch of `b` same-model
+    /// requests costs `overhead + (t₁ − overhead)·b^γ` where `t₁` is the
+    /// single-request latency ([`NodeSpec::batch_latency_ms`]). γ < 1 is
+    /// the sub-linear compute amortization real inference servers see
+    /// (Ecomap/GreenScale); γ = 1 degenerates to sequential service.
+    pub batch_gamma: f64,
+    /// Batch-power exponent β: a slot running a batch of `b` draws
+    /// `dynamic_power_w·b^β` ([`NodeSpec::batch_dynamic_power_w`]) —
+    /// wider batches push the accelerator harder, but sub-linearly.
+    /// Keeping β + γ ≤ 1 makes *energy per inference* non-increasing in
+    /// batch size (power·latency/b ∝ b^{β+γ−1}), the regime where
+    /// batching is a carbon lever at all.
+    pub batch_beta: f64,
 }
 
 impl NodeSpec {
@@ -89,6 +102,8 @@ impl NodeSpec {
                 overhead_ms: 8.0,
                 time_scale: 20.6,
                 adaptive: false,
+                batch_gamma: 0.8,
+                batch_beta: 0.2,
             },
             NodeSpec {
                 name: "node-medium".into(),
@@ -102,6 +117,8 @@ impl NodeSpec {
                 overhead_ms: 8.0,
                 time_scale: 20.6,
                 adaptive: false,
+                batch_gamma: 0.8,
+                batch_beta: 0.2,
             },
             NodeSpec {
                 name: "node-green".into(),
@@ -115,6 +132,8 @@ impl NodeSpec {
                 overhead_ms: 8.0,
                 time_scale: 20.6,
                 adaptive: false,
+                batch_gamma: 0.8,
+                batch_beta: 0.2,
             },
         ]
     }
@@ -130,6 +149,35 @@ impl NodeSpec {
     /// exactly `rated_power_w`, the pre-idle accounting.
     pub fn dynamic_power_w(&self) -> f64 {
         (self.rated_power_w - self.idle_w).max(0.0)
+    }
+
+    /// Batched latency model: one service slot working through a batch of
+    /// `b` same-class requests takes `overhead + (t₁ − overhead)·b^γ`
+    /// milliseconds, where `t₁ = simulate_latency_ms(exec_ms)`. The
+    /// per-batch container/network overhead is paid once — that, plus
+    /// γ < 1 compute amortization, is why batching wins on both latency
+    /// density and energy. `b = 1` returns `simulate_latency_ms` exactly
+    /// (bit-for-bit, no powf on that path).
+    pub fn batch_latency_ms(&self, exec_ms: f64, b: usize) -> f64 {
+        let single = self.simulate_latency_ms(exec_ms);
+        if b <= 1 {
+            return single;
+        }
+        self.overhead_ms + (single - self.overhead_ms) * (b as f64).powf(self.batch_gamma)
+    }
+
+    /// Dynamic power of one slot running a batch of `b`:
+    /// `dynamic_power_w·b^β`. `b = 1` returns [`NodeSpec::dynamic_power_w`]
+    /// exactly. Energy per inference is then
+    /// `batch_dynamic_power_w(b)·batch_latency_ms(b)/b ∝ b^{β+γ−1}` for
+    /// the compute part — non-increasing whenever β + γ ≤ 1 — while the
+    /// once-per-batch overhead term strictly amortizes.
+    pub fn batch_dynamic_power_w(&self, b: usize) -> f64 {
+        let single = self.dynamic_power_w();
+        if b <= 1 {
+            return single;
+        }
+        single * (b as f64).powf(self.batch_beta)
     }
 }
 
@@ -339,6 +387,35 @@ mod tests {
         // matching the paper's ~0.2% green-vs-performance gap.
         assert!((green - (10.0 * 20.6 * 1.0075 + 8.0)).abs() < 1e-9);
         assert!(green / high < 1.02);
+    }
+
+    #[test]
+    fn batch_curves_recover_single_task_exactly() {
+        let n = NodeSpec::paper_nodes().remove(0);
+        // b = 1 is the pre-batching model, bit-for-bit (early return, no
+        // powf): the shim-equivalence guarantee starts here.
+        assert_eq!(n.batch_latency_ms(10.0, 1), n.simulate_latency_ms(10.0));
+        assert_eq!(n.batch_dynamic_power_w(1), n.dynamic_power_w());
+        assert_eq!(n.batch_latency_ms(10.0, 0), n.simulate_latency_ms(10.0));
+    }
+
+    #[test]
+    fn batch_curves_sublinear_and_energy_amortizing() {
+        let n = NodeSpec::paper_nodes().remove(0); // γ=0.8, β=0.2
+        let t1 = n.batch_latency_ms(10.0, 1);
+        let t8 = n.batch_latency_ms(10.0, 8);
+        // 8 requests in one batch finish far sooner than 8 sequential…
+        assert!(t8 < 8.0 * t1, "{t8} vs {}", 8.0 * t1);
+        // …and match the closed form: overhead + (t1-overhead)·8^0.8.
+        assert!((t8 - (8.0 + (t1 - 8.0) * 8f64.powf(0.8))).abs() < 1e-9);
+        // Power grows sub-linearly with fill…
+        let p8 = n.batch_dynamic_power_w(8);
+        assert!(p8 > n.dynamic_power_w() && p8 < 8.0 * n.dynamic_power_w());
+        // …so energy per inference is strictly decreasing in batch size
+        // (β + γ = 1 keeps the compute part flat; the per-batch overhead
+        // amortizes on top).
+        let e = |b: usize| n.batch_dynamic_power_w(b) * n.batch_latency_ms(10.0, b) / b as f64;
+        assert!(e(2) < e(1) && e(4) < e(2) && e(8) < e(4), "{} {} {} {}", e(1), e(2), e(4), e(8));
     }
 
     #[test]

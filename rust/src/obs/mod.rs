@@ -39,7 +39,7 @@ use std::io;
 use crate::scheduler::{DecisionExplain, RejectReason, SchedulingDecision};
 use crate::util::json::JsonWriter;
 
-/// The seven trace event kinds, used for filtering and counting.
+/// The eight trace event kinds, used for filtering and counting.
 /// Discriminants index [`Telemetry::events`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
@@ -50,10 +50,11 @@ pub enum EventKind {
     Completion = 4,
     Churn = 5,
     MicrogridSlice = 6,
+    BatchFormed = 7,
 }
 
 impl EventKind {
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 8;
     pub const ALL: [EventKind; EventKind::COUNT] = [
         EventKind::Arrival,
         EventKind::Decision,
@@ -62,6 +63,7 @@ impl EventKind {
         EventKind::Completion,
         EventKind::Churn,
         EventKind::MicrogridSlice,
+        EventKind::BatchFormed,
     ];
 
     /// Stable label: the `kind` field of every NDJSON line and the token
@@ -75,6 +77,7 @@ impl EventKind {
             EventKind::Completion => "completion",
             EventKind::Churn => "churn",
             EventKind::MicrogridSlice => "mg_slice",
+            EventKind::BatchFormed => "batch_formed",
         }
     }
 
@@ -87,6 +90,7 @@ impl EventKind {
             "completion" => Some(EventKind::Completion),
             "churn" => Some(EventKind::Churn),
             "mg_slice" | "microgrid" => Some(EventKind::MicrogridSlice),
+            "batch_formed" | "batch" => Some(EventKind::BatchFormed),
             _ => None,
         }
     }
@@ -102,7 +106,7 @@ pub struct TraceFilter(u8);
 
 impl TraceFilter {
     pub fn all() -> TraceFilter {
-        TraceFilter(0x7f)
+        TraceFilter(0xff)
     }
 
     pub fn none() -> TraceFilter {
@@ -206,6 +210,11 @@ pub enum TraceEvent<'a> {
         carbon_g: f64,
         soc: f64,
     },
+    /// A batch was sealed and entered service on `node`
+    /// ([`crate::sim::BatchSpec`]): `fill` same-class tasks dispatched as
+    /// one unit, `head_wait_ms` the time the oldest member spent waiting
+    /// for the batch to form (0 for a full-on-arrival seal).
+    BatchFormed { t_s: f64, node: &'a str, class: usize, fill: usize, head_wait_ms: f64 },
 }
 
 impl TraceEvent<'_> {
@@ -218,6 +227,7 @@ impl TraceEvent<'_> {
             TraceEvent::Completion { .. } => EventKind::Completion,
             TraceEvent::Churn { .. } => EventKind::Churn,
             TraceEvent::MicrogridSlice { .. } => EventKind::MicrogridSlice,
+            TraceEvent::BatchFormed { .. } => EventKind::BatchFormed,
         }
     }
 }
@@ -406,6 +416,13 @@ impl<W: io::Write> FirehoseSink<W> {
                 j.field_fnum("carbon_g", carbon_g)?;
                 j.field_fnum("soc", soc)?;
             }
+            TraceEvent::BatchFormed { t_s, node, class, fill, head_wait_ms } => {
+                j.field_num("t_s", t_s)?;
+                j.field_str("node", node)?;
+                j.field_num("class", class as f64)?;
+                j.field_num("fill", fill as f64)?;
+                j.field_fnum("head_wait_ms", head_wait_ms)?;
+            }
         }
         j.end_obj()?;
         self.out.write_all(b"\n")
@@ -445,9 +462,11 @@ mod tests {
         assert!(f.contains(EventKind::Completion));
         assert!(!f.contains(EventKind::Arrival));
         // Aliases.
-        let f = TraceFilter::parse("defer,microgrid").unwrap();
+        let f = TraceFilter::parse("defer,microgrid,batch").unwrap();
         assert!(f.contains(EventKind::DeferRelease));
         assert!(f.contains(EventKind::MicrogridSlice));
+        assert!(f.contains(EventKind::BatchFormed));
+        assert!(!f.contains(EventKind::Decision));
         assert!(TraceFilter::parse("bogus").is_err());
         assert!(TraceFilter::parse("").is_err());
     }
@@ -470,11 +489,18 @@ mod tests {
             queue_delay_est_ms: 12.25,
         });
         sink.record(&TraceEvent::Churn { t_s: 9.0, node: "edge-b", up: false });
-        assert_eq!(sink.events_written(), 3);
+        sink.record(&TraceEvent::BatchFormed {
+            t_s: 10.0,
+            node: "edge-a",
+            class: 2,
+            fill: 5,
+            head_wait_ms: 37.5,
+        });
+        assert_eq!(sink.events_written(), 4);
         let buf = sink.finish().unwrap();
         let text = String::from_utf8(buf).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 3);
+        assert_eq!(lines.len(), 4);
         let v = Json::parse(lines[0]).unwrap();
         assert_eq!(v.get("kind").unwrap().as_str(), Some("arrival"));
         assert_eq!(v.get("deadline_s").unwrap().as_f64(), Some(3600.5));
@@ -483,6 +509,11 @@ mod tests {
         assert_eq!(v.get("queue_delay_est_ms").unwrap().as_f64(), Some(12.25));
         let v = Json::parse(lines[2]).unwrap();
         assert_eq!(v.get("up").unwrap().as_bool(), Some(false));
+        let v = Json::parse(lines[3]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("batch_formed"));
+        assert_eq!(v.get("class").unwrap().as_i64(), Some(2));
+        assert_eq!(v.get("fill").unwrap().as_i64(), Some(5));
+        assert_eq!(v.get("head_wait_ms").unwrap().as_f64(), Some(37.5));
     }
 
     #[test]

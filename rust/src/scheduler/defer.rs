@@ -130,11 +130,26 @@ pub struct DeferAwareGreenScheduler {
     /// different slots (an unrelated `Assign` between two `Defer`s
     /// shifted the rotation), which broke twin comparisons.
     defers_issued: u64,
+    /// Batch-join intensity tolerance: when the routed node has no open
+    /// batch for the task's class but another feasible node within
+    /// `join_tol` relative effective intensity does, the task joins the
+    /// forming batch there — amortizing the per-batch overhead instead of
+    /// opening a fresh batch on a marginally cleaner node. Only active
+    /// when the fleet view carries per-class batching context
+    /// ([`super::NodeView::class_state`]); single-class runs are
+    /// untouched.
+    pub join_tol: f64,
 }
 
 /// Default release-plateau tolerance: slots within 2% of the forecast
 /// minimum are treated as equally clean and shared round-robin.
 pub const DEFAULT_PLATEAU_TOL: f64 = 0.02;
+
+/// Default batch-join intensity tolerance: a forming batch on a node up
+/// to 5% dirtier than the routed choice is still worth joining — the
+/// amortized per-batch overhead typically buys back more than 5% energy
+/// per request ([`crate::node::NodeSpec::batch_latency_ms`]).
+pub const DEFAULT_JOIN_TOL: f64 = 0.05;
 
 impl DeferAwareGreenScheduler {
     pub fn new(defer_min_gain: f64) -> DeferAwareGreenScheduler {
@@ -147,7 +162,37 @@ impl DeferAwareGreenScheduler {
             defer_min_gain,
             plateau_tol: DEFAULT_PLATEAU_TOL,
             defers_issued: 0,
+            join_tol: DEFAULT_JOIN_TOL,
         }
+    }
+
+    /// Class-aware batch join: keep the routed node when it already has a
+    /// forming batch for this class (or the view carries no batching
+    /// context); otherwise move to the feasible node with the fullest open
+    /// batch among those within `join_tol` relative intensity of the
+    /// routed choice. Deterministic: ties keep the lowest index.
+    fn join_refine(&self, task: &TaskDemand, fleet: &FleetView, chosen: usize) -> usize {
+        let Some(own) = fleet.nodes[chosen].class_state.get(task.class) else {
+            return chosen;
+        };
+        if own.queued > 0 {
+            return chosen;
+        }
+        let limit = fleet.nodes[chosen].intensity * (1.0 + self.join_tol);
+        let mut best = chosen;
+        let mut best_fill = 0usize;
+        for (i, v) in fleet.nodes.iter().enumerate() {
+            if i == chosen || v.intensity > limit || !v.feasible(task) {
+                continue;
+            }
+            if let Some(cv) = v.class_state.get(task.class) {
+                if cv.queued > best_fill {
+                    best_fill = cv.queued;
+                    best = i;
+                }
+            }
+        }
+        best
     }
 }
 
@@ -165,7 +210,20 @@ impl DeferAwareGreenScheduler {
             Some(e) => self.inner.decide_explained(task, fleet, e),
             None => self.inner.decide(task, fleet),
         };
-        let SchedulingDecision::Assign(chosen) = routed else { return routed };
+        let SchedulingDecision::Assign(routed_to) = routed else { return routed };
+        // Batch-aware placement refinement (no-op without class_state).
+        let chosen = self.join_refine(task, fleet, routed_to);
+        if chosen != routed_to {
+            if let Some(e) = explain.as_deref_mut() {
+                e.note = Some(format!(
+                    "batch join: moved class {} from {} to {}'s forming batch (fill {})",
+                    task.class,
+                    fleet.nodes[routed_to].node.spec.name,
+                    fleet.nodes[chosen].node.spec.name,
+                    fleet.nodes[chosen].class_state[task.class].queued
+                ));
+            }
+        }
         let now_fc = &fleet.nodes[chosen].forecast;
         // No forecast context (no slack, or a released task): run now.
         let Some(&(_, now_i)) = now_fc.first() else {
@@ -427,6 +485,44 @@ mod tests {
         let interleaved = defers_of(&[&deep, &flat, &flat, &deep]);
         assert_eq!(plain, interleaved, "assign traffic shifted the release rotation");
         assert_eq!(plain, vec![300.0, 600.0], "successive defers still rotate the plateau");
+    }
+
+    #[test]
+    fn batch_join_moves_to_forming_batch_within_tolerance() {
+        use crate::scheduler::ClassNodeView;
+        let task = TaskDemand::default(); // class 0
+        let cs = |queued: usize| {
+            vec![ClassNodeView { queued, predicted_dispatch_s: 0.1, queue_delay_s: 0.0 }]
+        };
+        // node-medium overridden to 380 g/kWh wins green routing (its S_P
+        // edge over node-green dominates a near-tie on intensity); the
+        // join question is whether node-green's forming batch pulls the
+        // task over anyway.
+        let mk = |green_i: f64, fill_medium: usize, fill_green: usize| {
+            let r = NodeRegistry::paper_setup();
+            r.get(1).set_intensity(380.0);
+            r.get(2).set_intensity(green_i);
+            let mut f = FleetView::observe(r.nodes());
+            f.nodes[0].class_state = cs(0);
+            f.nodes[1].class_state = cs(fill_medium);
+            f.nodes[2].class_state = cs(fill_green);
+            f
+        };
+        let mut s = DeferAwareGreenScheduler::new(0.05);
+        // Sanity: with no open batches the route is node-medium.
+        assert_eq!(s.decide(&task, &mk(390.0, 0, 0)), SchedulingDecision::Assign(1));
+        // node-green at 390 g (within 5% of 380) holds a 3-deep forming
+        // batch: join it instead of opening a fresh batch on node-medium.
+        assert_eq!(s.decide(&task, &mk(390.0, 0, 3)), SchedulingDecision::Assign(2));
+        // The routed node's own forming batch wins outright…
+        assert_eq!(s.decide(&task, &mk(390.0, 2, 3)), SchedulingDecision::Assign(1));
+        // …and a batch on a node past the tolerance is not worth chasing
+        // (450 g vs the 380·1.05 = 399 g limit).
+        assert_eq!(s.decide(&task, &mk(450.0, 0, 3)), SchedulingDecision::Assign(1));
+        // Without batching context the verdict is the plain green route.
+        let r = NodeRegistry::paper_setup();
+        let f = FleetView::observe(r.nodes());
+        assert_eq!(s.decide(&task, &f), SchedulingDecision::Assign(2));
     }
 
     #[test]

@@ -34,13 +34,14 @@ mod score;
 mod view;
 
 pub use baselines::{Amp4ecScheduler, LeastLoadedScheduler, RandomScheduler, RoundRobinScheduler};
-pub use defer::{DeferAwareGreenScheduler, RouteThenDefer, DEFAULT_PLATEAU_TOL};
+pub use defer::{DeferAwareGreenScheduler, RouteThenDefer, DEFAULT_JOIN_TOL, DEFAULT_PLATEAU_TOL};
 pub use modes::{Mode, Weights};
 pub use nsa::{CarbonAwareScheduler, SelectionTrace, LOAD_CUTOFF};
 pub use normalized::{ConstrainedGreenScheduler, NormalizedScheduler};
 pub use score::{carbon_score, score_breakdown, score_breakdown_view, ScoreBreakdown, TaskDemand};
 pub use view::{
-    CandidateExplain, DecisionExplain, FleetView, NodeView, RejectReason, SchedulingDecision,
+    CandidateExplain, ClassNodeView, DecisionExplain, FleetView, NodeView, RejectReason,
+    SchedulingDecision,
 };
 
 /// Scheduling interface shared by the carbon-aware scheduler and all

@@ -267,6 +267,7 @@ mod tests {
                     cpu: rng.range(0.05, 1.0),
                     mem_mb: 64 + rng.below(1024),
                     latency_threshold_ms: rng.range(100.0, 3000.0),
+                    class: 0,
                 };
                 (nodes, task)
             },

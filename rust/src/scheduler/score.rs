@@ -26,12 +26,18 @@ pub struct TaskDemand {
     pub mem_mb: usize,
     /// Latency threshold for the Algorithm 1 line-3 filter (ms).
     pub latency_threshold_ms: f64,
+    /// Workload-class index into the run's
+    /// [`crate::workload::WorkloadMix`] — same-class tasks share a model
+    /// and may be served in one batch. Single-class runs (and the paper's
+    /// testbed) use class 0 throughout; the index keys the per-class
+    /// batch-fill state in [`super::NodeView::class_state`].
+    pub class: usize,
 }
 
 impl Default for TaskDemand {
     fn default() -> Self {
         // A lightweight CNN inference: fits every paper node.
-        TaskDemand { cpu: 0.2, mem_mb: 256, latency_threshold_ms: 5_000.0 }
+        TaskDemand { cpu: 0.2, mem_mb: 256, latency_threshold_ms: 5_000.0, class: 0 }
     }
 }
 

@@ -121,6 +121,26 @@ impl DecisionExplain {
     }
 }
 
+/// Per-workload-class batching state of one node at decision time: what a
+/// class-aware scheduler needs to price "join the batch forming here" vs
+/// "open a new one there" vs defer. Built by the simulator only for runs
+/// with a [`crate::workload::WorkloadMix`] configured; empty otherwise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassNodeView {
+    /// Tasks of this class waiting in the node's batch-formation queue
+    /// (the open batch's current fill).
+    pub queued: usize,
+    /// When the open batch is predicted to dispatch (virtual seconds):
+    /// the earlier of window expiry and now-if-full. Equal to the view's
+    /// `now_s` when nothing is queued (a new batch would open and could
+    /// go immediately once a slot frees).
+    pub predicted_dispatch_s: f64,
+    /// Class-resolved queue-delay estimate (seconds): backlog × *this
+    /// class's* measured mean service time ÷ service slots, falling back
+    /// to the node's blended mean where the class has no history yet.
+    pub queue_delay_s: f64,
+}
+
 /// Immutable snapshot of one candidate node at decision time.
 #[derive(Debug, Clone)]
 pub struct NodeView {
@@ -154,6 +174,11 @@ pub struct NodeView {
     /// charge-frozen twin (`SimConfig::charge_frozen_forecasts`).
     /// Report/JSON diagnostics ride on it; schedulers may ignore it.
     pub soc_forecast: Vec<(f64, f64)>,
+    /// Per-workload-class batching state, indexed by
+    /// [`TaskDemand::class`]. Empty for single-class runs and every
+    /// non-simulated path — schedulers must treat empty as "no batching
+    /// context" and fall back to the blended `queue_delay_s`.
+    pub class_state: Vec<ClassNodeView>,
 }
 
 impl NodeView {
@@ -172,6 +197,17 @@ impl NodeView {
             intensity,
             forecast: Vec::new(),
             soc_forecast: Vec::new(),
+            class_state: Vec::new(),
+        }
+    }
+
+    /// Queue-delay estimate for `class` (seconds): the class-resolved
+    /// figure when the view carries batching context, else the blended
+    /// node-level estimate.
+    pub fn class_queue_delay_s(&self, class: usize) -> f64 {
+        match self.class_state.get(class) {
+            Some(c) => c.queue_delay_s,
+            None => self.queue_delay_s,
         }
     }
 
@@ -263,6 +299,7 @@ mod tests {
         assert_eq!(v.intensity, 620.0); // static spec scenario
         assert!(v.forecast.is_empty());
         assert!(v.soc_forecast.is_empty());
+        assert!(v.class_state.is_empty());
         // The override flows into the snapshot.
         r.get(0).set_intensity(42.0);
         assert_eq!(NodeView::observe(r.get(0), 1).intensity, 42.0);
@@ -287,6 +324,25 @@ mod tests {
         n.finish_task(100.0, 0.0, 0.0);
         let v3 = NodeView::observe(n, 1);
         assert!((v3.queue_delay_s - 0.100).abs() < 1e-12, "{}", v3.queue_delay_s);
+    }
+
+    #[test]
+    fn class_queue_delay_falls_back_to_blended() {
+        let r = NodeRegistry::paper_setup();
+        let mut v = NodeView::observe(r.get(0), 1);
+        v.queue_delay_s = 0.4;
+        // No batching context: every class sees the blended estimate.
+        assert_eq!(v.class_queue_delay_s(0), 0.4);
+        assert_eq!(v.class_queue_delay_s(7), 0.4);
+        // With context, the class-resolved figure wins — and out-of-range
+        // classes still fall back.
+        v.class_state = vec![
+            ClassNodeView { queued: 2, predicted_dispatch_s: 1.0, queue_delay_s: 0.9 },
+            ClassNodeView { queued: 0, predicted_dispatch_s: 0.0, queue_delay_s: 0.1 },
+        ];
+        assert_eq!(v.class_queue_delay_s(0), 0.9);
+        assert_eq!(v.class_queue_delay_s(1), 0.1);
+        assert_eq!(v.class_queue_delay_s(5), 0.4);
     }
 
     #[test]

@@ -70,9 +70,11 @@ use crate::microgrid::Microgrid;
 use crate::node::EdgeNode;
 use crate::obs::{EventKind as TraceKind, EventSink, Telemetry, TraceEvent};
 use crate::scheduler::{
-    DecisionExplain, FleetView, NodeView, RouteThenDefer, Scheduler, SchedulingDecision, TaskDemand,
+    ClassNodeView, DecisionExplain, FleetView, NodeView, RouteThenDefer, Scheduler,
+    SchedulingDecision, TaskDemand,
 };
 use crate::util::rng::Rng;
+use crate::workload::WorkloadMix;
 
 use super::report::SimReport;
 use super::scenarios::Scenario;
@@ -122,6 +124,49 @@ impl DeferralSpec {
     }
 }
 
+/// Batch-formation service model (TensorFlow-Serving style): same-class
+/// tasks dispatched to a node accumulate in a per-`(node, class)` queue
+/// until the fill target is reached or the oldest member has waited out
+/// the formation window, then execute as **one batch in one service
+/// slot** on the node's sub-linear batch curves
+/// ([`crate::node::NodeSpec::batch_latency_ms`] /
+/// [`crate::node::NodeSpec::batch_dynamic_power_w`]). Batch energy is
+/// settled once and apportioned equally across members. `window_ms: 0`
+/// with `max_batch: 1` reproduces the one-task-per-slot model bit for
+/// bit (`tests/sim.rs` asserts report equality per scenario).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchSpec {
+    /// Longest time (ms) the oldest queued task waits before its batch
+    /// seals regardless of fill. Zero seals every batch immediately.
+    pub window_ms: f64,
+    /// Fill target: a batch seals as soon as this many same-class tasks
+    /// are queued, and never carries more.
+    pub max_batch: usize,
+}
+
+impl Default for BatchSpec {
+    fn default() -> BatchSpec {
+        BatchSpec { window_ms: 200.0, max_batch: 8 }
+    }
+}
+
+impl BatchSpec {
+    /// Invariant check, run once per simulation at
+    /// [`super::scenarios::Scenario::validate`] time.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.window_ms.is_finite() || self.window_ms < 0.0 {
+            return Err(format!(
+                "batch window must be finite and >= 0 ms, got {}",
+                self.window_ms
+            ));
+        }
+        if self.max_batch == 0 {
+            return Err("batch fill target must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// Engine knobs shared by every scenario.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -149,6 +194,27 @@ pub struct SimConfig {
     /// pricing) instead of simulating the SoC trajectory. Default
     /// `false`; only the `charge_frozen_twin` comparisons flip it.
     pub charge_frozen_forecasts: bool,
+    /// Multi-tenant workload-class registry
+    /// ([`crate::workload::WorkloadMix`]): per-class demand, SLO tier,
+    /// model scale and arrival-mix weights, sampled per arrival from a
+    /// dedicated seeded stream woven into the Poisson/MMPP generators.
+    /// `None` (the default) runs the single-class legacy model: every
+    /// request presents `demand` and class index 0.
+    pub workload: Option<WorkloadMix>,
+    /// Batched service model: when set, dispatch pushes tasks into
+    /// per-`(node, class)` batch-formation queues instead of the plain
+    /// FIFO, and sealed batches occupy one service slot each at the
+    /// sub-linear batch latency/power point. `None` (the default) is
+    /// the exact legacy one-task-per-slot path.
+    pub batching: Option<BatchSpec>,
+    /// Fold queued-but-unstarted work into the *projected* standing
+    /// draw that prices microgrid effective intensities and SoC
+    /// forecasts: a backlog will occupy the free service slots for the
+    /// whole pricing window, so it counts toward the standing draw (up
+    /// to capacity). Default `false` keeps the legacy in-service-only
+    /// projection; accounting (microgrid settlement) always uses the
+    /// actual draw either way.
+    pub demand_aware_projections: bool,
 }
 
 impl Default for SimConfig {
@@ -162,6 +228,9 @@ impl Default for SimConfig {
             intensity_refresh_s: 60.0,
             deferral: None,
             charge_frozen_forecasts: false,
+            workload: None,
+            batching: None,
+            demand_aware_projections: false,
         }
     }
 }
@@ -187,6 +256,12 @@ impl SimConfig {
         }
         if let Some(d) = &self.deferral {
             d.validate()?;
+        }
+        if let Some(b) = &self.batching {
+            b.validate()?;
+        }
+        if let Some(w) = &self.workload {
+            w.validate()?;
         }
         Ok(())
     }
@@ -284,9 +359,40 @@ enum EventKind {
     /// node's trough may land elsewhere if the fleet shifted meanwhile —
     /// the min-gain threshold is enforced at decision time, not at
     /// execution.
-    DeferredRelease { arrival_s: f64, deadline_s: f64 },
-    Completion { node: usize, arrival_s: f64, deadline_s: f64, service_ms: f64, energy_j: f64 },
+    DeferredRelease { arrival_s: f64, deadline_s: f64, class: usize },
+    Completion {
+        node: usize,
+        class: usize,
+        arrival_s: f64,
+        deadline_s: f64,
+        service_ms: f64,
+        energy_j: f64,
+    },
+    /// Batch-formation window expiry for `(node, class)`. `gen` guards
+    /// staleness: sealing a batch bumps the generation, so a timer
+    /// scheduled for an already-dispatched batch is a no-op.
+    BatchTimer { node: usize, class: usize, gen: u64 },
+    /// A sealed batch finishing service: the slot frees, `dyn_w` leaves
+    /// the node's active draw, and each `(arrival_s, deadline_s)` member
+    /// settles an equal share of the batch energy.
+    BatchComplete {
+        node: usize,
+        class: usize,
+        service_ms: f64,
+        dyn_w: f64,
+        tasks: Vec<(f64, f64)>,
+    },
     Churn { node: usize, up: bool },
+}
+
+/// One task waiting in a batch-formation queue (batched path only).
+struct BatchTask {
+    arrival_s: f64,
+    deadline_s: f64,
+    /// When the task entered this node's formation queue — later than
+    /// `arrival_s` for deferred or migrated work. The formation-window
+    /// clock runs from the *head* member's enqueue time.
+    enqueue_s: f64,
 }
 
 struct Event {
@@ -325,12 +431,48 @@ pub struct Simulation<'a> {
     /// the `active` table). `SchedulingDecision::Assign` indexes map back
     /// through it.
     cache_idx: Vec<usize>,
-    /// Per-node FIFO of waiting requests: `(arrival_s, deadline_s)`.
-    queues: Vec<VecDeque<(f64, f64)>>,
+    /// Per-node FIFO of waiting requests (legacy one-task-per-slot
+    /// path): `(arrival_s, deadline_s, class)`.
+    queues: Vec<VecDeque<(f64, f64, usize)>>,
+    /// Batch-formation queues, `[node][class]` — only populated when
+    /// `SimConfig::batching` is set (the two queue families are
+    /// mutually exclusive per run).
+    bqueues: Vec<Vec<VecDeque<BatchTask>>>,
+    /// Formation-timer generation per `[node][class]`, bumped on every
+    /// seal so stale [`EventKind::BatchTimer`]s no-op.
+    bt_gen: Vec<Vec<u64>>,
+    /// Whether a formation timer is outstanding per `[node][class]`.
+    bt_sched: Vec<Vec<bool>>,
+    /// Slots in service, not tasks: a sealed batch of any fill occupies
+    /// exactly one.
     in_service: Vec<usize>,
+    /// Sum of the per-batch dynamic power points currently in service
+    /// per node (W) — the actual draw the microgrid settlement bills on
+    /// the batched path. The legacy path derives its draw as
+    /// `in_service × dynamic_power_w` exactly as before.
+    active_dyn_w: Vec<f64>,
     heap: BinaryHeap<Event>,
     seq: u64,
     service_rng: Rng,
+    /// Workload-class sampling stream, drawn once per arrival — and only
+    /// when a [`WorkloadMix`] is configured, so legacy runs consume
+    /// nothing from it.
+    class_rng: Rng,
+    /// Per-class constants resolved once from the mix (single-element
+    /// defaults for legacy runs: scale 1, SLO ∞, priority 0).
+    n_classes: usize,
+    class_exec_scale: Vec<f64>,
+    class_slo_s: Vec<f64>,
+    class_priority: Vec<u8>,
+    /// Per-class accounting, indexed by class. Maintained on every run
+    /// (class 0 absorbs everything without a mix) but reported only
+    /// when a mix is configured.
+    class_completed: Vec<u64>,
+    class_slo_missed: Vec<u64>,
+    class_batches: Vec<u64>,
+    class_latency_ms: Vec<Vec<f64>>,
+    class_energy_j: Vec<f64>,
+    class_carbon_g: Vec<f64>,
     /// Per-node *dynamic* energy/carbon/task totals, indexed by node id —
     /// the per-completion hot path must not pay a string-keyed map lookup.
     node_ledger: Vec<LedgerEntry>,
@@ -480,16 +622,42 @@ impl<'a> Simulation<'a> {
             })
             .collect();
 
+        let (class_exec_scale, class_slo_s, class_priority): (Vec<f64>, Vec<f64>, Vec<u8>) =
+            match &scenario.config.workload {
+                Some(mix) => (
+                    mix.classes.iter().map(|c| c.exec_scale).collect(),
+                    mix.classes.iter().map(|c| c.slo_s).collect(),
+                    mix.classes.iter().map(|c| c.priority).collect(),
+                ),
+                None => (vec![1.0], vec![f64::INFINITY], vec![0]),
+            };
+        let n_classes = class_exec_scale.len();
+
         let mut sim = Simulation {
             sc: scenario,
             nodes: scenario.specs.iter().cloned().map(EdgeNode::new).collect(),
             active: vec![true; n],
             cache_idx: Vec::new(),
             queues: (0..n).map(|_| VecDeque::new()).collect(),
+            bqueues: (0..n).map(|_| (0..n_classes).map(|_| VecDeque::new()).collect()).collect(),
+            bt_gen: vec![vec![0; n_classes]; n],
+            bt_sched: vec![vec![false; n_classes]; n],
             in_service: vec![0; n],
+            active_dyn_w: vec![0.0; n],
             heap: BinaryHeap::new(),
             seq: 0,
             service_rng: Rng::new(scenario.config.seed ^ 0x5DEECE66D),
+            class_rng: Rng::new(scenario.config.seed ^ 0xC1A55),
+            n_classes,
+            class_exec_scale,
+            class_slo_s,
+            class_priority,
+            class_completed: vec![0; n_classes],
+            class_slo_missed: vec![0; n_classes],
+            class_batches: vec![0; n_classes],
+            class_latency_ms: (0..n_classes).map(|_| Vec::new()).collect(),
+            class_energy_j: vec![0.0; n_classes],
+            class_carbon_g: vec![0.0; n_classes],
             node_ledger: vec![LedgerEntry::default(); n],
             up_since: vec![Some(0.0); n],
             uptime_s: vec![0.0; n],
@@ -542,6 +710,12 @@ impl<'a> Simulation<'a> {
                 EventKind::Arrival => {
                     sim.arrived += 1;
                     sim.refresh_intensities(t);
+                    // The class draw happens only under a configured mix,
+                    // so legacy runs consume nothing from the stream.
+                    let class = match &scenario.config.workload {
+                        Some(mix) => mix.sample(sim.class_rng.f64()),
+                        None => 0,
+                    };
                     let deadline = match &sim.sc.config.deferral {
                         Some(d) => t + d.slack_s,
                         None => f64::INFINITY,
@@ -549,21 +723,39 @@ impl<'a> Simulation<'a> {
                     if sim.observing() {
                         sim.emit(&TraceEvent::Arrival { t_s: t, deadline_s: deadline });
                     }
-                    sim.admit(t, t, deadline, true, scheduler);
+                    sim.admit(t, t, deadline, true, class, scheduler);
                     if sim.arrived < scenario.requests as u64 {
                         let gap = arrivals.next_gap_s();
                         sim.push(t + gap, EventKind::Arrival);
                     }
                 }
-                EventKind::DeferredRelease { arrival_s, deadline_s } => {
+                EventKind::DeferredRelease { arrival_s, deadline_s, class } => {
                     sim.refresh_intensities(t);
                     if sim.observing() {
                         sim.emit(&TraceEvent::DeferRelease { t_s: t, arrival_s, deadline_s });
                     }
-                    sim.admit(arrival_s, t, deadline_s, false, scheduler);
+                    sim.admit(arrival_s, t, deadline_s, false, class, scheduler);
                 }
-                EventKind::Completion { node, arrival_s, deadline_s, service_ms, energy_j } => {
-                    sim.complete(node, t, arrival_s, deadline_s, service_ms, energy_j);
+                EventKind::Completion {
+                    node,
+                    class,
+                    arrival_s,
+                    deadline_s,
+                    service_ms,
+                    energy_j,
+                } => {
+                    sim.complete(node, class, t, arrival_s, deadline_s, service_ms, energy_j);
+                }
+                EventKind::BatchTimer { node, class, gen } => {
+                    // A stale generation means the batch this timer was
+                    // armed for already sealed (fill or churn): no-op.
+                    if sim.bt_gen[node][class] == gen {
+                        sim.bt_sched[node][class] = false;
+                        sim.try_dispatch_batches(node, t);
+                    }
+                }
+                EventKind::BatchComplete { node, class, service_ms, dyn_w, tasks } => {
+                    sim.complete_batch(node, class, t, service_ms, dyn_w, tasks);
                 }
                 EventKind::Churn { node, up } => {
                     sim.churn(node, up, t, scheduler);
@@ -668,14 +860,32 @@ impl<'a> Simulation<'a> {
     }
 
     /// The draw profile node `g` is priced at right now: local supply
-    /// serves the standing draw (idle floor while powered on + tasks in
+    /// serves the standing draw (idle floor while powered on + work in
     /// service) first, and the marginal price is what the next task's
-    /// dynamic watts would pay.
+    /// dynamic watts would pay. With `demand_aware_projections` the
+    /// queued backlog counts toward the standing draw too (it will
+    /// occupy the free service slots for the whole pricing window, up
+    /// to capacity); the batched path otherwise prices its actual
+    /// per-batch power sum. Projection only — settlement bills the
+    /// actual draw regardless.
     fn node_draw(&self, g: usize) -> crate::microgrid::NodeDraw {
         let spec = &self.sc.specs[g];
         let idle_w = if self.up_since[g].is_some() { spec.idle_w } else { 0.0 };
+        let dyn_standing_w = if self.sc.config.demand_aware_projections {
+            let queued: usize = if self.sc.config.batching.is_some() {
+                self.bqueues[g].iter().map(|q| q.len()).sum()
+            } else {
+                self.queues[g].len()
+            };
+            (self.in_service[g] + queued).min(self.sc.capacity[g]) as f64
+                * spec.dynamic_power_w()
+        } else if self.sc.config.batching.is_some() {
+            self.active_dyn_w[g]
+        } else {
+            self.in_service[g] as f64 * spec.dynamic_power_w()
+        };
         crate::microgrid::NodeDraw {
-            standing_w: idle_w + self.in_service[g] as f64 * spec.dynamic_power_w(),
+            standing_w: idle_w + dyn_standing_w,
             task_w: spec.dynamic_power_w(),
             rated_w: spec.rated_power_w,
         }
@@ -707,7 +917,13 @@ impl<'a> Simulation<'a> {
         }
         let sc = self.sc;
         let idle_w = if self.up_since[g].is_some() { sc.specs[g].idle_w } else { 0.0 };
-        let dyn_w = self.in_service[g] as f64 * sc.specs[g].dynamic_power_w();
+        // Actual draw, never the projection: per-batch power sums on the
+        // batched path, slot count × per-task power on the legacy one.
+        let dyn_w = if sc.config.batching.is_some() {
+            self.active_dyn_w[g]
+        } else {
+            self.in_service[g] as f64 * sc.specs[g].dynamic_power_w()
+        };
         let draw_w = idle_w + dyn_w;
         let idle_share = if draw_w > 0.0 { idle_w / draw_w } else { 0.0 };
         while self.mg_settled_s[g] < until_s {
@@ -786,6 +1002,31 @@ impl<'a> Simulation<'a> {
             .iter()
             .map(|&g| {
                 let mut view = NodeView::observe(&self.nodes[g], sc.capacity[g]);
+                if let Some(b) = &sc.config.batching {
+                    // Per-class batching context: open-batch fill, the
+                    // predicted dispatch instant (window expiry, or now
+                    // when already full / empty), and a class-resolved
+                    // queue-delay estimate = blended estimate + the
+                    // formation wait still ahead of a joining task.
+                    let window_s = b.window_ms / 1e3;
+                    let blended_qd_s = view.queue_delay_s;
+                    view.class_state = self.bqueues[g]
+                        .iter()
+                        .map(|q| {
+                            let predicted_dispatch_s = match q.front() {
+                                Some(_) if q.len() >= b.max_batch => now_s,
+                                Some(head) => (head.enqueue_s + window_s).max(now_s),
+                                None => now_s,
+                            };
+                            ClassNodeView {
+                                queued: q.len(),
+                                predicted_dispatch_s,
+                                queue_delay_s: blended_qd_s
+                                    + (predicted_dispatch_s - now_s),
+                            }
+                        })
+                        .collect();
+                }
                 if let Some(d) = deferral {
                     let horizon = (deadline_s - d.headroom_s).max(now_s);
                     let trace = &sc.traces[g];
@@ -834,30 +1075,42 @@ impl<'a> Simulation<'a> {
         now_s: f64,
         deadline_s: f64,
         allow_defer: bool,
+        class: usize,
         scheduler: &mut dyn Scheduler,
     ) {
         let view = self.fleet_view(now_s, deadline_s, allow_defer);
+        let demand = self.demand_of(class);
         let decision = if self.observing() {
             let ctx = if allow_defer { "arrival" } else { "release" };
-            self.decide_observed(scheduler, &view, arrival_s, now_s, ctx)
+            self.decide_observed(scheduler, &demand, &view, arrival_s, now_s, ctx)
         } else {
-            scheduler.decide(&self.sc.config.demand, &view)
+            scheduler.decide(&demand, &view)
         };
         match decision {
             SchedulingDecision::Assign(ci) => {
                 let g = self.cache_idx[ci];
                 let qd_ms = view.nodes[ci].queue_delay_s * 1e3;
-                self.dispatch(g, qd_ms, arrival_s, now_s, deadline_s);
+                self.dispatch(g, qd_ms, arrival_s, now_s, deadline_s, class);
             }
             SchedulingDecision::Defer { until_s }
                 if allow_defer && until_s > now_s && until_s <= deadline_s =>
             {
                 self.deferred += 1;
-                self.push(until_s, EventKind::DeferredRelease { arrival_s, deadline_s });
+                self.push(until_s, EventKind::DeferredRelease { arrival_s, deadline_s, class });
             }
             SchedulingDecision::Defer { .. } | SchedulingDecision::Reject { .. } => {
                 self.rejected += 1
             }
+        }
+    }
+
+    /// The scheduler-facing demand for one request: the class's
+    /// registered demand (class index stamped) under a configured mix,
+    /// else the scenario-wide default.
+    fn demand_of(&self, class: usize) -> TaskDemand {
+        match &self.sc.config.workload {
+            Some(mix) => mix.demand_of(class),
+            None => self.sc.config.demand,
         }
     }
 
@@ -870,6 +1123,7 @@ impl<'a> Simulation<'a> {
     fn decide_observed(
         &mut self,
         scheduler: &mut dyn Scheduler,
+        demand: &TaskDemand,
         view: &FleetView,
         arrival_s: f64,
         now_s: f64,
@@ -882,10 +1136,10 @@ impl<'a> Simulation<'a> {
         let t0 = Instant::now();
         let (decision, explain) = if want_explain {
             let mut e = DecisionExplain::default();
-            let d = scheduler.decide_explained(&self.sc.config.demand, view, &mut e);
+            let d = scheduler.decide_explained(demand, view, &mut e);
             (d, Some(e))
         } else {
-            (scheduler.decide(&self.sc.config.demand, view), None)
+            (scheduler.decide(demand, view), None)
         };
         let decide_ns = t0.elapsed().as_nanos() as u64;
         if let Some(t) = self.telem.as_mut() {
@@ -922,6 +1176,7 @@ impl<'a> Simulation<'a> {
         arrival_s: f64,
         now_s: f64,
         deadline_s: f64,
+        class: usize,
     ) {
         debug_assert!(self.active[g], "dispatch onto inactive node {g}");
         self.queue_delay_ms[g].push(queue_delay_est_ms);
@@ -938,8 +1193,17 @@ impl<'a> Simulation<'a> {
             });
         }
         self.nodes[g].begin_task();
-        self.queues[g].push_back((arrival_s, deadline_s));
-        self.try_start(g, now_s);
+        if self.sc.config.batching.is_some() {
+            self.bqueues[g][class].push_back(BatchTask {
+                arrival_s,
+                deadline_s,
+                enqueue_s: now_s,
+            });
+            self.try_dispatch_batches(g, now_s);
+        } else {
+            self.queues[g].push_back((arrival_s, deadline_s, class));
+            self.try_start(g, now_s);
+        }
     }
 
     fn try_start(&mut self, g: usize, now_s: f64) {
@@ -947,14 +1211,14 @@ impl<'a> Simulation<'a> {
         // microgrid slice at the old draw first.
         self.settle_microgrid(g, now_s);
         while self.in_service[g] < self.sc.capacity[g] {
-            let Some((arrival_s, deadline_s)) = self.queues[g].pop_front() else { break };
+            let Some((arrival_s, deadline_s, class)) = self.queues[g].pop_front() else { break };
             let sigma = self.sc.config.jitter_sigma;
             let jitter = if sigma > 0.0 {
                 (sigma * self.service_rng.normal() - 0.5 * sigma * sigma).exp()
             } else {
                 1.0
             };
-            let exec_ms = self.sc.config.base_exec_ms * jitter;
+            let exec_ms = self.sc.config.base_exec_ms * jitter * self.class_exec_scale[class];
             let service_ms = self.sc.specs[g].simulate_latency_ms(exec_ms);
             // Dynamic (above-idle) energy only: the idle floor is accrued
             // over uptime, so a saturated node draws exactly rated power.
@@ -963,14 +1227,134 @@ impl<'a> Simulation<'a> {
             self.in_service[g] += 1;
             self.push(
                 now_s + service_ms / 1e3,
-                EventKind::Completion { node: g, arrival_s, deadline_s, service_ms, energy_j },
+                EventKind::Completion {
+                    node: g,
+                    class,
+                    arrival_s,
+                    deadline_s,
+                    service_ms,
+                    energy_j,
+                },
             );
         }
+    }
+
+    /// Dispatch-time batch formation (batched path only): while a
+    /// service slot is free, seal the best *sealable* class — a batch is
+    /// sealable when its queue reached the fill target or its head has
+    /// waited out the formation window (a zero window seals on sight).
+    /// Among sealable classes the highest priority wins, ties to the
+    /// longest-waiting head, then the lowest class index. Classes still
+    /// forming get a generation-guarded window timer so a partial batch
+    /// is never stranded.
+    fn try_dispatch_batches(&mut self, g: usize, now_s: f64) {
+        let Some(spec) = self.sc.config.batching else { return };
+        let window_s = spec.window_ms / 1e3;
+        while self.in_service[g] < self.sc.capacity[g] {
+            // (class, priority, head enqueue) of the best sealable class.
+            let mut best: Option<(usize, u8, f64)> = None;
+            for c in 0..self.n_classes {
+                let q = &self.bqueues[g][c];
+                let Some(head) = q.front() else { continue };
+                let sealable = q.len() >= spec.max_batch
+                    || window_s <= 0.0
+                    || now_s - head.enqueue_s >= window_s;
+                if !sealable {
+                    continue;
+                }
+                let cand = (c, self.class_priority[c], head.enqueue_s);
+                best = match best {
+                    // Keep the incumbent on higher priority, or on equal
+                    // priority with an earlier-or-equal head (ascending
+                    // scan, so full ties stay with the lower index).
+                    Some(b) if b.1 > cand.1 || (b.1 == cand.1 && b.2 <= cand.2) => Some(b),
+                    _ => Some(cand),
+                };
+            }
+            let Some((c, _, _)) = best else { break };
+            self.seal_batch(g, c, now_s, spec.max_batch);
+        }
+        if window_s > 0.0 {
+            for c in 0..self.n_classes {
+                self.ensure_batch_timer(g, c, now_s, window_s);
+            }
+        }
+    }
+
+    /// Arm a formation-window timer for `(g, c)`'s open batch if none is
+    /// outstanding and the window has not already expired — an expired
+    /// window means only capacity blocks the seal, and the next batch
+    /// completion on this node re-runs formation anyway (re-arming would
+    /// spin a same-instant timer loop).
+    fn ensure_batch_timer(&mut self, g: usize, c: usize, now_s: f64, window_s: f64) {
+        if self.bt_sched[g][c] {
+            return;
+        }
+        let Some(head) = self.bqueues[g][c].front() else { return };
+        let due_s = head.enqueue_s + window_s;
+        if due_s <= now_s {
+            return;
+        }
+        let gen = self.bt_gen[g][c];
+        self.bt_sched[g][c] = true;
+        self.push(due_s, EventKind::BatchTimer { node: g, class: c, gen });
+    }
+
+    /// Seal the open batch of `class` on node `g`: take up to
+    /// `fill_target` members, draw one service-jitter multiplier for the
+    /// whole batch, and enter it into service as a single slot at the
+    /// sub-linear batch latency/power point.
+    fn seal_batch(&mut self, g: usize, class: usize, now_s: f64, fill_target: usize) {
+        // The batch entering service changes the node's draw: settle the
+        // elapsed microgrid slice at the old draw first.
+        self.settle_microgrid(g, now_s);
+        let q = &mut self.bqueues[g][class];
+        let k = q.len().min(fill_target);
+        debug_assert!(k > 0, "sealing an empty batch on node {g}");
+        let head_wait_ms = (now_s - q.front().unwrap().enqueue_s) * 1e3;
+        let mut tasks = Vec::with_capacity(k);
+        for _ in 0..k {
+            let task = q.pop_front().unwrap();
+            tasks.push((task.arrival_s, task.deadline_s));
+        }
+        // Any outstanding formation timer now refers to a sealed batch.
+        self.bt_gen[g][class] += 1;
+        self.bt_sched[g][class] = false;
+        for &(arrival_s, _) in &tasks {
+            self.wait_ms.push((now_s - arrival_s) * 1e3);
+        }
+        let sigma = self.sc.config.jitter_sigma;
+        let jitter = if sigma > 0.0 {
+            (sigma * self.service_rng.normal() - 0.5 * sigma * sigma).exp()
+        } else {
+            1.0
+        };
+        let exec_ms = self.sc.config.base_exec_ms * jitter * self.class_exec_scale[class];
+        let service_ms = self.sc.specs[g].batch_latency_ms(exec_ms, k);
+        let dyn_w = self.sc.specs[g].batch_dynamic_power_w(k);
+        self.in_service[g] += 1;
+        self.active_dyn_w[g] += dyn_w;
+        self.class_batches[class] += 1;
+        if self.observing() {
+            let sc = self.sc;
+            self.emit(&TraceEvent::BatchFormed {
+                t_s: now_s,
+                node: &sc.specs[g].name,
+                class,
+                fill: k,
+                head_wait_ms,
+            });
+        }
+        self.push(
+            now_s + service_ms / 1e3,
+            EventKind::BatchComplete { node: g, class, service_ms, dyn_w, tasks },
+        );
     }
 
     fn complete(
         &mut self,
         g: usize,
+        class: usize,
         t_s: f64,
         arrival_s: f64,
         deadline_s: f64,
@@ -981,7 +1365,6 @@ impl<'a> Simulation<'a> {
         // microgrid slice (which includes this task's power) first.
         self.settle_microgrid(g, t_s);
         self.in_service[g] -= 1;
-        let kwh = joules_to_kwh(energy_j);
         // Emissions price the *completion-time* grid intensity (Eq. 2) —
         // this is where Diurnal/Trace bite on the accounting path. A
         // microgrid node's carbon is instead accrued slice-by-slice in
@@ -989,8 +1372,87 @@ impl<'a> Simulation<'a> {
         let carbon_g = if self.microgrids[g].is_some() {
             0.0
         } else {
-            emissions_g(kwh, self.sc.traces[g].at(t_s), self.sc.config.pue)
+            emissions_g(joules_to_kwh(energy_j), self.sc.traces[g].at(t_s), self.sc.config.pue)
         };
+        self.account_completion(
+            g, class, t_s, arrival_s, deadline_s, service_ms, energy_j, carbon_g,
+        );
+        // A churned-down node keeps its power floor while in-service work
+        // drains; the last drain completion finally powers it off.
+        if !self.active[g] && self.in_service[g] == 0 && self.up_since[g].is_some() {
+            self.accrue_idle(g, t_s);
+            self.up_since[g] = None;
+        }
+        self.try_start(g, t_s);
+    }
+
+    /// One sealed batch leaving service: free the slot, remove the
+    /// batch's power point from the node's active draw, and settle each
+    /// member with an equal share of the batch energy (and, on grid-only
+    /// nodes, the completion-time carbon on that share).
+    fn complete_batch(
+        &mut self,
+        g: usize,
+        class: usize,
+        t_s: f64,
+        service_ms: f64,
+        dyn_w: f64,
+        tasks: Vec<(f64, f64)>,
+    ) {
+        // The batch's draw stops now: settle the elapsed slice first.
+        self.settle_microgrid(g, t_s);
+        self.in_service[g] -= 1;
+        self.active_dyn_w[g] -= dyn_w;
+        let energy_j = dyn_w * service_ms / 1e3;
+        let task_energy_j = energy_j / tasks.len() as f64;
+        let task_carbon_g = if self.microgrids[g].is_some() {
+            0.0
+        } else {
+            emissions_g(
+                joules_to_kwh(task_energy_j),
+                self.sc.traces[g].at(t_s),
+                self.sc.config.pue,
+            )
+        };
+        for (arrival_s, deadline_s) in tasks {
+            self.account_completion(
+                g,
+                class,
+                t_s,
+                arrival_s,
+                deadline_s,
+                service_ms,
+                task_energy_j,
+                task_carbon_g,
+            );
+        }
+        // A churned-down node keeps its power floor while in-service work
+        // drains; the last drain completion finally powers it off.
+        if !self.active[g] && self.in_service[g] == 0 && self.up_since[g].is_some() {
+            self.accrue_idle(g, t_s);
+            self.up_since[g] = None;
+        }
+        self.try_dispatch_batches(g, t_s);
+    }
+
+    /// Per-task completion accounting shared by the one-task and batched
+    /// service paths: node ledger + fleet totals, latency, legacy
+    /// deadline bookkeeping, per-class SLO bookkeeping (a class's SLO
+    /// clock runs from arrival, independent of deferral slack), and the
+    /// Completion trace event.
+    #[allow(clippy::too_many_arguments)]
+    fn account_completion(
+        &mut self,
+        g: usize,
+        class: usize,
+        t_s: f64,
+        arrival_s: f64,
+        deadline_s: f64,
+        service_ms: f64,
+        energy_j: f64,
+        carbon_g: f64,
+    ) {
+        let kwh = joules_to_kwh(energy_j);
         self.nodes[g].finish_task(service_ms, energy_j, carbon_g);
         let entry = &mut self.node_ledger[g];
         entry.energy_kwh += kwh;
@@ -998,13 +1460,20 @@ impl<'a> Simulation<'a> {
         entry.tasks += 1;
         self.energy_total_j += energy_j;
         self.carbon_total_g += carbon_g;
-        self.latency_ms.push((t_s - arrival_s) * 1e3);
+        let latency_ms = (t_s - arrival_s) * 1e3;
+        self.latency_ms.push(latency_ms);
         self.completed += 1;
         if t_s > deadline_s {
             self.deadline_missed += 1;
         }
+        self.class_completed[class] += 1;
+        self.class_latency_ms[class].push(latency_ms);
+        self.class_energy_j[class] += energy_j;
+        self.class_carbon_g[class] += carbon_g;
+        if t_s > arrival_s + self.class_slo_s[class] {
+            self.class_slo_missed[class] += 1;
+        }
         if self.observing() {
-            let latency_ms = (t_s - arrival_s) * 1e3;
             if let Some(t) = self.telem.as_mut() {
                 t.latency_ms.record(latency_ms);
             }
@@ -1021,13 +1490,6 @@ impl<'a> Simulation<'a> {
             });
         }
         self.makespan_s = self.makespan_s.max(t_s);
-        // A churned-down node keeps its power floor while in-service work
-        // drains; the last drain completion finally powers it off.
-        if !self.active[g] && self.in_service[g] == 0 && self.up_since[g].is_some() {
-            self.accrue_idle(g, t_s);
-            self.up_since[g] = None;
-        }
-        self.try_start(g, t_s);
     }
 
     /// Close the node's open uptime interval at `until_s`, charging the
@@ -1096,27 +1558,46 @@ impl<'a> Simulation<'a> {
         // intensities first (unthrottled): the whole backlog re-routes in
         // one batch, and placing it against grids up to intensity_refresh_s
         // stale would systematically misroute it.
-        if !self.queues[g].is_empty() {
+        if !self.queues[g].is_empty() || self.bqueues[g].iter().any(|q| !q.is_empty()) {
             self.force_refresh_intensities(t_s);
         }
-        let pending: Vec<(f64, f64)> = self.queues[g].drain(..).collect();
-        for (arrival_s, deadline_s) in pending {
+        // Batch-formation queues drain too: flatten every class in
+        // enqueue order (stable sort keeps within-class FIFO and breaks
+        // cross-class ties by class index) and invalidate their timers.
+        let mut forming: Vec<(f64, f64, f64, usize)> = Vec::new();
+        for c in 0..self.n_classes {
+            if !self.bqueues[g][c].is_empty() {
+                self.bt_gen[g][c] += 1;
+                self.bt_sched[g][c] = false;
+                for task in self.bqueues[g][c].drain(..) {
+                    forming.push((task.enqueue_s, task.arrival_s, task.deadline_s, c));
+                }
+            }
+        }
+        forming.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let pending: Vec<(f64, f64, usize)> = self
+            .queues[g]
+            .drain(..)
+            .chain(forming.into_iter().map(|(_, a, d, c)| (a, d, c)))
+            .collect();
+        for (arrival_s, deadline_s, class) in pending {
             self.nodes[g].cancel_task();
             // One fresh view per migrated task: each dispatch changes the
             // backlog the next decision must see. Migration never defers
             // (no forecast in the view), matching the release path.
             let view = self.fleet_view(t_s, deadline_s, false);
+            let demand = self.demand_of(class);
             let decision = if self.observing() {
-                self.decide_observed(scheduler, &view, arrival_s, t_s, "migration")
+                self.decide_observed(scheduler, &demand, &view, arrival_s, t_s, "migration")
             } else {
-                scheduler.decide(&self.sc.config.demand, &view)
+                scheduler.decide(&demand, &view)
             };
             match decision {
                 SchedulingDecision::Assign(ci) => {
                     let ng = self.cache_idx[ci];
                     let qd_ms = view.nodes[ci].queue_delay_s * 1e3;
                     self.migrated += 1;
-                    self.dispatch(ng, qd_ms, arrival_s, t_s, deadline_s);
+                    self.dispatch(ng, qd_ms, arrival_s, t_s, deadline_s, class);
                 }
                 _ => self.rejected += 1,
             }
@@ -1202,6 +1683,31 @@ impl<'a> Simulation<'a> {
             carbon_battery_g_total,
             carbon_stored_g_total,
         ) = super::report::sum_storage(&nodes);
+        // Per-class rows only when a mix is configured: legacy reports
+        // keep an empty vec, so their PartialEq equality is untouched.
+        let classes: Vec<super::report::ClassUsage> = match &self.sc.config.workload {
+            Some(mix) => mix
+                .classes
+                .iter()
+                .enumerate()
+                .map(|(c, wc)| super::report::ClassUsage {
+                    name: wc.name.clone(),
+                    completed: self.class_completed[c],
+                    slo_s: wc.slo_s,
+                    slo_missed: self.class_slo_missed[c],
+                    batches: self.class_batches[c],
+                    latency_ms: super::report::summary_or_zero(&self.class_latency_ms[c]),
+                    energy_dynamic_kwh: joules_to_kwh(self.class_energy_j[c]),
+                    carbon_dynamic_g: self.class_carbon_g[c],
+                    carbon_per_req_g: if self.class_completed[c] > 0 {
+                        self.class_carbon_g[c] / self.class_completed[c] as f64
+                    } else {
+                        0.0
+                    },
+                })
+                .collect(),
+            None => Vec::new(),
+        };
         SimReport {
             scenario: self.sc.name.clone(),
             scheduler: scheduler_name.to_string(),
@@ -1238,6 +1744,7 @@ impl<'a> Simulation<'a> {
             } else {
                 0.0
             },
+            classes,
             nodes,
         }
     }

@@ -43,6 +43,8 @@ pub fn synth_fleet(n: usize, seed: u64) -> Vec<NodeSpec> {
                 overhead_ms: 8.0,
                 time_scale: 20.6,
                 adaptive: false,
+                batch_gamma: 0.8,
+                batch_beta: 0.2,
             }
         })
         .collect()

@@ -53,6 +53,21 @@
 //!   slots against the battery the node will actually have (`arbitrage`
 //!   scenario, [`crate::experiments::sim_arbitrage_comparison`],
 //!   `--compare-arbitrage`);
+//! * a **batched multi-tenant service model** ([`BatchSpec`] +
+//!   [`crate::workload::WorkloadMix`]): arrivals sample a workload class
+//!   (per-class demand, SLO tier, model `exec_scale`, priority) from a
+//!   dedicated seeded stream, dispatch lands in per-`(node, class)`
+//!   batch-formation queues, and same-class tasks accumulate until the
+//!   fill target or the formation window seals the batch — which then
+//!   occupies **one service slot** at the node's sub-linear batch
+//!   latency/power point ([`crate::node::NodeSpec::batch_latency_ms`]),
+//!   its energy settled once and apportioned equally across members.
+//!   `window 0 × max_batch 1` reproduces the one-task-per-slot model
+//!   bit for bit; the report gains per-class rows ([`ClassUsage`]:
+//!   completions, SLO misses against the class's own budget, realized
+//!   mean fill, gCO₂/req). `batch-serving` and `multi-tenant` exercise
+//!   it; [`crate::experiments::sim_batching_comparison`] and
+//!   `--compare-batching` A/B it against the unbatched twin;
 //! * scheduling through the [`crate::scheduler::Scheduler`] `decide` API:
 //!   every admission snapshots a [`crate::scheduler::FleetView`] — per-node
 //!   state (queue depth + in-flight as `inflight`), a queue-delay estimate
@@ -83,6 +98,6 @@ pub mod fleet;
 mod report;
 pub mod scenarios;
 
-pub use engine::{ArrivalProcess, ChurnEvent, DeferralSpec, SimConfig, Simulation};
-pub use report::{NodeUsage, SimReport};
+pub use engine::{ArrivalProcess, BatchSpec, ChurnEvent, DeferralSpec, SimConfig, Simulation};
+pub use report::{ClassUsage, NodeUsage, SimReport};
 pub use scenarios::{Scenario, SCENARIO_NAMES};

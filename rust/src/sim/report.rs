@@ -92,6 +92,47 @@ impl NodeUsage {
     }
 }
 
+/// Per-workload-class slice of a multi-tenant run
+/// ([`crate::workload::WorkloadClass`]): completions, SLO compliance
+/// against the class's own latency budget (clocked from arrival,
+/// independent of deferral slack), latency distribution, and the
+/// *dynamic* energy/carbon attributed to the class's tasks (the idle
+/// floor has no per-class owner). `batches` counts sealed batches on
+/// the batched service path (0 when batching is off), so `completed /
+/// batches` is the realized mean fill.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassUsage {
+    pub name: String,
+    pub completed: u64,
+    /// The class's latency SLO (seconds) — copied from the mix so the
+    /// report is self-describing.
+    pub slo_s: f64,
+    /// Completions that landed later than `arrival + slo_s`.
+    pub slo_missed: u64,
+    /// Batches sealed for this class (batched service path only).
+    pub batches: u64,
+    /// End-to-end latency (formation wait + batch service), ms.
+    pub latency_ms: Summary,
+    /// Task-attributed (dynamic) energy for this class's completions.
+    pub energy_dynamic_kwh: f64,
+    /// Emissions of that dynamic energy.
+    pub carbon_dynamic_g: f64,
+    /// Dynamic gCO₂ per completed request of this class.
+    pub carbon_per_req_g: f64,
+}
+
+impl ClassUsage {
+    /// Realized mean batch fill (tasks per sealed batch); 0 when the
+    /// run never batched this class.
+    pub fn mean_fill(&self) -> f64 {
+        if self.batches > 0 {
+            self.completed as f64 / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Everything one simulation run produced.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
@@ -142,6 +183,10 @@ pub struct SimReport {
     pub carbon_idle_g_total: f64,
     /// Total emissions (idle included) per completed request.
     pub carbon_per_req_g: f64,
+    /// Per-workload-class rows — empty unless the scenario configures a
+    /// [`crate::workload::WorkloadMix`] (legacy single-class reports
+    /// stay bit-identical).
+    pub classes: Vec<ClassUsage>,
     pub nodes: Vec<NodeUsage>,
 }
 
@@ -182,6 +227,25 @@ impl SimReport {
     /// Per-node row by name.
     pub fn node(&self, name: &str) -> Option<&NodeUsage> {
         self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Per-class row by name (multi-tenant runs only).
+    pub fn class(&self, name: &str) -> Option<&ClassUsage> {
+        self.classes.iter().find(|c| c.name == name)
+    }
+
+    /// Sum of the per-class completion counters — the conservation
+    /// counterpart to `completed` (equal whenever `classes` is
+    /// non-empty; `tests/sim.rs` asserts it).
+    pub fn class_sums(&self) -> (u64, u64, f64, f64) {
+        self.classes.iter().fold((0, 0, 0.0, 0.0), |(n, m, e, c), cl| {
+            (
+                n + cl.completed,
+                m + cl.slo_missed,
+                e + cl.energy_dynamic_kwh,
+                c + cl.carbon_dynamic_g,
+            )
+        })
     }
 
     /// Sum of the per-node ledger rows (tasks, total energy, total carbon)
@@ -265,6 +329,38 @@ impl SimReport {
                 self.carbon_battery_g_total,
                 self.carbon_stored_g_total,
             ));
+        }
+        if !self.classes.is_empty() {
+            let mut ct = Table::new(
+                "",
+                &[
+                    "class",
+                    "done",
+                    "slo (s)",
+                    "missed",
+                    "batches",
+                    "fill",
+                    "p50 (ms)",
+                    "p99 (ms)",
+                    "dyn (kWh)",
+                    "g/req",
+                ],
+            );
+            for c in &self.classes {
+                ct.row(vec![
+                    c.name.clone(),
+                    c.completed.to_string(),
+                    if c.slo_s.is_finite() { f2(c.slo_s) } else { "-".into() },
+                    c.slo_missed.to_string(),
+                    c.batches.to_string(),
+                    if c.batches > 0 { f2(c.mean_fill()) } else { "-".into() },
+                    f2(c.latency_ms.p50),
+                    f2(c.latency_ms.p99),
+                    format!("{:.6}", c.energy_dynamic_kwh),
+                    f5(c.carbon_per_req_g),
+                ]);
+            }
+            out.push_str(&ct.render());
         }
         let mut t = if microgrids {
             Table::new(
@@ -362,6 +458,7 @@ mod tests {
             carbon_dynamic_g_total: 0.012,
             carbon_idle_g_total: 0.005,
             carbon_per_req_g: 0.0085,
+            classes: Vec::new(),
             nodes: vec![
                 NodeUsage {
                     name: "a".into(),
@@ -498,5 +595,54 @@ mod tests {
     fn empty_sample_guard() {
         assert_eq!(summary_or_zero(&[]).mean, 0.0);
         assert_eq!(summary_or_zero(&[5.0]).mean, 5.0);
+    }
+
+    #[test]
+    fn class_table_renders_only_for_multi_tenant_runs() {
+        // Single-class (legacy) reports carry no class rows and render
+        // no class table.
+        let plain = report();
+        assert!(plain.classes.is_empty());
+        assert!(!plain.render().contains("slo (s)"));
+        // A multi-tenant run renders one row per class with fill and
+        // SLO-miss columns, and the lookup/sums helpers agree.
+        let mut multi = report();
+        multi.classes = vec![
+            ClassUsage {
+                name: "interactive".into(),
+                completed: 120,
+                slo_s: 3.0,
+                slo_missed: 2,
+                batches: 40,
+                latency_ms: Summary::of(&[80.0, 120.0]),
+                energy_dynamic_kwh: 2e-5,
+                carbon_dynamic_g: 0.01,
+                carbon_per_req_g: 0.01 / 120.0,
+            },
+            ClassUsage {
+                name: "background".into(),
+                completed: 30,
+                slo_s: f64::INFINITY,
+                slo_missed: 0,
+                batches: 0,
+                latency_ms: Summary::of(&[900.0]),
+                energy_dynamic_kwh: 1e-5,
+                carbon_dynamic_g: 0.02,
+                carbon_per_req_g: 0.02 / 30.0,
+            },
+        ];
+        let s = multi.render();
+        assert!(s.contains("| interactive"), "{s}");
+        assert!(s.contains("| background"), "{s}");
+        assert!(s.contains("slo (s)"));
+        assert!(s.contains("3.00"), "finite SLOs render in seconds: {s}");
+        let interactive = multi.class("interactive").unwrap();
+        assert!((interactive.mean_fill() - 3.0).abs() < 1e-12);
+        assert_eq!(multi.class("background").unwrap().mean_fill(), 0.0);
+        assert!(multi.class("zzz").is_none());
+        let (done, missed, energy, carbon) = multi.class_sums();
+        assert_eq!((done, missed), (150, 2));
+        assert!((energy - 3e-5).abs() < 1e-15);
+        assert!((carbon - 0.03).abs() < 1e-15);
     }
 }

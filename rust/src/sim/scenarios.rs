@@ -60,12 +60,31 @@
 //!   soon-to-be-empty batteries and SoC-trajectory forecasts do not
 //!   ([`crate::experiments::sim_arbitrage_comparison`],
 //!   `--compare-arbitrage`).
+//! * **`batch-serving`** — an N-node (default 4) fleet of identical
+//!   idle-capable serving hosts, one service slot each, under a
+//!   three-tier tenant mix (interactive 3 s / standard 10 s /
+//!   background 60 s SLOs) arriving at **130% of one-per-slot
+//!   capacity**: unbatchable service drowns, while batch formation
+//!   ([`BatchSpec`]: 200 ms window, fill 8) rides the chassis's
+//!   sub-linear batch latency/power curve and absorbs the same load at
+//!   lower gCO₂/req ([`crate::experiments::sim_batching_comparison`],
+//!   `--compare-batching`).
+//! * **`multi-tenant`** — an N-node (default 8) heterogeneous `REGIONS`
+//!   fleet, microgrids on the even-indexed half, serving three tenants
+//!   with *different models* (`exec_scale` 0.5/1/3), demands and
+//!   priorities through per-`(node, class)` batch queues (window
+//!   100 ms, fill 4), with demand-aware SoC projections on
+//!   ([`SimConfig::demand_aware_projections`]): queued-but-unserved
+//!   work depresses a microgrid's projected effective intensity before
+//!   it is ever drawn.
 
 use crate::carbon::{zone_traces_from_csv, IntensityTrace};
 use crate::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
 use crate::node::NodeSpec;
+use crate::scheduler::TaskDemand;
+use crate::workload::{WorkloadClass, WorkloadMix};
 
-use super::engine::{ArrivalProcess, ChurnEvent, DeferralSpec, SimConfig};
+use super::engine::{ArrivalProcess, BatchSpec, ChurnEvent, DeferralSpec, SimConfig};
 use super::fleet;
 
 /// Names accepted by [`build`] (and `carbonedge sim --scenario`).
@@ -81,6 +100,8 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "solar-battery",
     "microgrid-fleet",
     "arbitrage",
+    "batch-serving",
+    "multi-tenant",
 ];
 
 /// One synthetic ElectricityMaps-style day (hourly, 3 zones) bundled for
@@ -196,6 +217,12 @@ pub fn build(name: &str, nodes: usize, requests: usize, seed: u64) -> Option<Sce
             Some(microgrid_fleet(if nodes == 0 { 12 } else { nodes }, requests, seed))
         }
         "arbitrage" => Some(arbitrage(if nodes == 0 { 4 } else { nodes }, requests, seed)),
+        "batch-serving" => {
+            Some(batch_serving(if nodes == 0 { 4 } else { nodes }, requests, seed))
+        }
+        "multi-tenant" => {
+            Some(multi_tenant(if nodes == 0 { 8 } else { nodes }, requests, seed))
+        }
         _ => None,
     }
 }
@@ -468,6 +495,8 @@ fn consolidation(n: usize, requests: usize, seed: u64) -> Scenario {
             overhead_ms: 8.0,
             time_scale: 20.6,
             adaptive: false,
+            batch_gamma: 0.8,
+            batch_beta: 0.2,
         })
         .collect();
     let capacity = vec![1; n];
@@ -520,6 +549,8 @@ fn solar_battery(n: usize, requests: usize, seed: u64) -> Scenario {
             overhead_ms: 8.0,
             time_scale: 20.6,
             adaptive: false,
+            batch_gamma: 0.8,
+            batch_beta: 0.2,
         })
         .collect();
     let microgrids = (0..n)
@@ -666,6 +697,8 @@ fn arbitrage(n: usize, requests: usize, seed: u64) -> Scenario {
             overhead_ms: 8.0,
             time_scale: 20.6,
             adaptive: false,
+            batch_gamma: 0.8,
+            batch_beta: 0.2,
         })
         .collect();
     let microgrids = (0..n)
@@ -694,6 +727,191 @@ fn arbitrage(n: usize, requests: usize, seed: u64) -> Scenario {
         microgrids,
         config,
     }
+}
+
+/// `batch-serving` batch formation: a 200 ms window and a fill target of
+/// 8 — interactive-tier friendly (the window is small next to a 3 s SLO)
+/// while wide enough for the `b^0.8` latency curve to pay.
+pub const BATCH_SERVING_WINDOW_MS: f64 = 200.0;
+pub const BATCH_SERVING_MAX_BATCH: usize = 8;
+
+/// `batch-serving` arrival pressure: 1.3× the fleet's *one-per-slot*
+/// service capacity. Unbatched service saturates and queues grow for the
+/// whole run; a fill of 8 at γ = 0.8 serves ≈ 8/8^0.8 ≈ 1.5× per slot,
+/// so the batched fleet runs the same load at ~85% utilization.
+pub const BATCH_SERVING_OVERLOAD: f64 = 1.3;
+
+/// `batch-serving` hot-model weight: ≈ 1 s single-task service on the
+/// consolidation chassis (48 × 20.6 + 8 ms overhead), so the 200 ms
+/// formation window is a small fraction of one inference and the batch
+/// throughput multiplier — not formation latency — dominates sojourn
+/// time.
+pub const BATCH_SERVING_BASE_EXEC_MS: f64 = 48.0;
+
+/// The `batch-serving` tenant mix: **one hot model** behind three
+/// deadline tiers. Every class runs the same weights (`exec_scale`
+/// 1.0 — the arrival-rate calibration against `base_exec_ms` stays
+/// honest); what differs is the SLO budget and the traffic share.
+/// Dispatch priorities are deliberately *equal*: under sustained
+/// overload a strict priority order (no aging) starves the lowest
+/// tier into the fleet's p99, so seals go oldest-head-first and the
+/// SLO tiers carry the differentiation (`multi-tenant` exercises the
+/// priority spread).
+pub fn batch_serving_mix() -> WorkloadMix {
+    let class = |name: &str, slo_s: f64, weight: f64| WorkloadClass {
+        name: name.into(),
+        demand: TaskDemand::default(),
+        slo_s,
+        exec_scale: 1.0,
+        priority: 0,
+        weight,
+    };
+    WorkloadMix {
+        classes: vec![
+            class("interactive", 3.0, 3.0),
+            class("standard", 10.0, 2.0),
+            class("background", 60.0, 1.0),
+        ],
+    }
+}
+
+/// The batched-serving showcase: identical idle-capable hosts with one
+/// service slot each under the three-tier mix at
+/// [`BATCH_SERVING_OVERLOAD`]× one-per-slot capacity. The batched fleet
+/// absorbs it; the [`batching_disabled_twin`] drowns — the A/B
+/// [`crate::experiments::sim_batching_comparison`] measures the
+/// gCO₂/req and p99 gap.
+fn batch_serving(n: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig {
+        seed,
+        base_exec_ms: BATCH_SERVING_BASE_EXEC_MS,
+        workload: Some(batch_serving_mix()),
+        batching: Some(BatchSpec {
+            window_ms: BATCH_SERVING_WINDOW_MS,
+            max_batch: BATCH_SERVING_MAX_BATCH,
+        }),
+        ..SimConfig::default()
+    };
+    // A dedicated accelerator host pinned to the hot model: high idle
+    // floor (an idling inference server draws most of its peak — the
+    // floor is exactly what batch consolidation amortizes), modest
+    // incremental draw per busy slot, on the global-average grid.
+    let specs: Vec<NodeSpec> = (0..n)
+        .map(|i| NodeSpec {
+            name: format!("serve-{i:02}"),
+            cpu_quota: 1.0,
+            mem_mb: 2048,
+            intensity: 475.0,
+            rated_power_w: 160.0,
+            idle_w: 100.0,
+            prior_ms: 250.0,
+            alpha: 0.005,
+            overhead_ms: 8.0,
+            time_scale: 20.6,
+            adaptive: false,
+            batch_gamma: 0.8,
+            batch_beta: 0.2,
+        })
+        .collect();
+    let capacity = vec![1; n];
+    let rate_hz =
+        BATCH_SERVING_OVERLOAD * fleet::service_capacity_hz(&specs, &capacity, config.base_exec_ms);
+    Scenario {
+        name: "batch-serving".into(),
+        traces: static_traces(&specs),
+        capacity,
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz },
+        requests,
+        churn: Vec::new(),
+        microgrids: Vec::new(),
+        config,
+    }
+}
+
+/// The `multi-tenant` mix: three tenants with genuinely different models
+/// (a distilled vision model, an embedding service, a hefty generator),
+/// demands small enough to fit every `REGIONS` chassis (min 512 MB /
+/// 0.4 cores), and an SLO/priority spread from 2 s interactive down to
+/// best-effort batch.
+pub fn multi_tenant_mix() -> WorkloadMix {
+    let class = |name: &str,
+                 cpu: f64,
+                 mem_mb: usize,
+                 slo_s: f64,
+                 exec_scale: f64,
+                 priority: u8,
+                 weight: f64| WorkloadClass {
+        name: name.into(),
+        demand: TaskDemand { cpu, mem_mb, ..TaskDemand::default() },
+        slo_s,
+        exec_scale,
+        priority,
+        weight,
+    };
+    WorkloadMix {
+        classes: vec![
+            class("vision-small", 0.1, 128, 2.0, 0.5, 2, 3.0),
+            class("embed", 0.2, 256, 8.0, 1.0, 1, 2.0),
+            class("generate", 0.3, 384, f64::INFINITY, 3.0, 0, 1.0),
+        ],
+    }
+}
+
+/// The heterogeneous multi-tenant showcase: the `REGIONS` fleet with
+/// microgrids on its even-indexed half, three tenants batching through
+/// per-`(node, class)` queues (window 100 ms, fill 4), and
+/// [`SimConfig::demand_aware_projections`] on — SoC trajectories price
+/// release slots against the backlog that will drain through the
+/// battery, not just the work already in service.
+fn multi_tenant(n: usize, requests: usize, seed: u64) -> Scenario {
+    let config = SimConfig {
+        seed,
+        workload: Some(multi_tenant_mix()),
+        batching: Some(BatchSpec { window_ms: 100.0, max_batch: 4 }),
+        demand_aware_projections: true,
+        ..SimConfig::default()
+    };
+    let specs = fleet::synth_fleet(n, seed);
+    let capacity = fleet::capacities(&specs);
+    // Weighted mean exec_scale is (3·0.5 + 2·1.0 + 1·3.0)/6 ≈ 1.08; 55%
+    // of nominal capacity leaves the mix comfortably schedulable while
+    // queues still form often enough for batching to matter.
+    let rate_hz = 0.55 * fleet::service_capacity_hz(&specs, &capacity, config.base_exec_ms);
+    let microgrids = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            (i % 2 == 0).then(|| MicrogridSpec {
+                pv: PvProfile::diurnal_with_sunrise(3.0 * s.rated_power_w, i as f64 * 1_800.0),
+                battery: BatterySpec::simple(3.0 * s.rated_power_w, 0.9, 0.9),
+                charge: ChargePolicy::Off,
+            })
+        })
+        .collect();
+    Scenario {
+        name: "multi-tenant".into(),
+        traces: static_traces(&specs),
+        capacity,
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz },
+        requests,
+        churn: Vec::new(),
+        microgrids,
+        config,
+    }
+}
+
+/// Twin of `sc` with batch formation switched off (`batching: None`) —
+/// the one-task-per-slot baseline the batching margin is measured
+/// against ([`crate::experiments::sim_batching_comparison`]). The
+/// workload mix stays: the twin serves the same classes, SLOs and model
+/// scales, just one task per service slot.
+pub fn batching_disabled_twin(sc: &Scenario) -> Scenario {
+    let mut twin = sc.clone();
+    twin.name = format!("{}-unbatched", sc.name);
+    twin.config.batching = None;
+    twin
 }
 
 /// Twin of `sc` with grid charging switched off on every microgrid
@@ -748,6 +966,8 @@ pub fn monolithic_of(sc: &Scenario) -> Scenario {
         overhead_ms: 0.0,
         time_scale: 20.6,
         adaptive: false,
+        batch_gamma: 0.8,
+        batch_beta: 0.2,
     };
     Scenario {
         name: format!("{}-monolithic", sc.name),
@@ -792,6 +1012,8 @@ mod tests {
         assert_eq!(build("solar-battery", 0, 0, 1).unwrap().specs.len(), 4);
         assert_eq!(build("microgrid-fleet", 0, 0, 1).unwrap().specs.len(), 12);
         assert_eq!(build("arbitrage", 0, 0, 1).unwrap().specs.len(), 4);
+        assert_eq!(build("batch-serving", 0, 0, 1).unwrap().specs.len(), 4);
+        assert_eq!(build("multi-tenant", 0, 0, 1).unwrap().specs.len(), 8);
         // node/request overrides respected
         let sc = build("fleet-100", 25, 500, 1).unwrap();
         assert_eq!(sc.specs.len(), 25);
@@ -1042,6 +1264,75 @@ mod tests {
         assert_eq!(levenshtein("kitten", "sitting"), 3);
         assert_eq!(levenshtein("", "abc"), 3);
         assert_eq!(levenshtein("abc", "abc"), 0);
+    }
+
+    #[test]
+    fn batch_serving_scenario_shape() {
+        let sc = build("batch-serving", 0, 1_000, 7).unwrap();
+        assert_eq!(sc.name, "batch-serving");
+        assert_eq!(sc.specs.len(), 4);
+        assert!(sc.capacity.iter().all(|&c| c == 1), "one service slot per node");
+        // Batch formation on with the documented window and fill target.
+        let spec = sc.config.batching.as_ref().expect("batch-serving batches");
+        assert_eq!(spec.window_ms, BATCH_SERVING_WINDOW_MS);
+        assert_eq!(spec.max_batch, BATCH_SERVING_MAX_BATCH);
+        // One hot model behind three deadline tiers, interactive-heavy.
+        let mix = sc.config.workload.as_ref().expect("batch-serving is multi-tenant");
+        assert!(mix.validate().is_ok());
+        let names: Vec<&str> = mix.classes.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["interactive", "standard", "background"]);
+        // Equal dispatch priority (oldest-head seals first); the tiers
+        // differ by SLO budget and traffic share.
+        assert!(mix.classes.iter().all(|c| c.priority == 0));
+        assert!(mix.classes[0].slo_s < mix.classes[1].slo_s);
+        assert!(mix.classes[1].slo_s < mix.classes[2].slo_s);
+        assert!(mix.classes[0].weight > mix.classes[2].weight);
+        assert!(mix.classes.iter().all(|c| c.exec_scale == 1.0), "one model, many tiers");
+        assert_eq!(sc.config.base_exec_ms, BATCH_SERVING_BASE_EXEC_MS);
+        // The formation window is a small fraction of one inference.
+        let service_ms = sc.specs[0].simulate_latency_ms(BATCH_SERVING_BASE_EXEC_MS);
+        assert!(BATCH_SERVING_WINDOW_MS < 0.25 * service_ms);
+        // Overloaded for one-per-slot service, absorbable when batched:
+        // rate sits between 1× and the fill-8 throughput multiplier.
+        let cap_hz = fleet::service_capacity_hz(&sc.specs, &sc.capacity, sc.config.base_exec_ms);
+        let rate = sc.arrivals.mean_rate_hz();
+        assert!((rate - BATCH_SERVING_OVERLOAD * cap_hz).abs() < 1e-9);
+        let batched_gain = 8.0 / 8f64.powf(sc.specs[0].batch_gamma);
+        assert!(BATCH_SERVING_OVERLOAD < batched_gain, "batched fleet must keep up");
+        // The unbatched twin strips only the batch spec.
+        let twin = batching_disabled_twin(&sc);
+        assert_eq!(twin.name, "batch-serving-unbatched");
+        assert!(twin.config.batching.is_none());
+        assert!(twin.config.workload.is_some(), "twin keeps the tenant mix");
+        assert_eq!(twin.arrivals.mean_rate_hz(), rate);
+        assert_eq!(twin.config.seed, sc.config.seed);
+    }
+
+    #[test]
+    fn multi_tenant_scenario_shape() {
+        let sc = build("multi-tenant", 0, 1_000, 7).unwrap();
+        assert_eq!(sc.specs.len(), 8);
+        assert!(sc.config.demand_aware_projections);
+        assert_eq!(sc.config.batching.as_ref().unwrap().max_batch, 4);
+        // Microgrids alternate like microgrid-fleet.
+        assert_eq!(sc.microgrids.len(), 8);
+        for (i, mg) in sc.microgrids.iter().enumerate() {
+            assert_eq!(mg.is_some(), i % 2 == 0, "node {i}");
+        }
+        // Every class demand fits the smallest REGIONS chassis, and the
+        // model-size spread is real (0.5 vs 3.0).
+        let mix = sc.config.workload.as_ref().expect("multi-tenant mix");
+        assert!(mix.validate().is_ok());
+        for (i, c) in mix.classes.iter().enumerate() {
+            assert!(c.demand.cpu <= 0.4 && c.demand.mem_mb <= 512, "class {i} must fit");
+            assert_eq!(mix.demand_of(i).class, i);
+        }
+        let scales: Vec<f64> = mix.classes.iter().map(|c| c.exec_scale).collect();
+        assert_eq!(scales, vec![0.5, 1.0, 3.0]);
+        assert_eq!(mix.classes[2].slo_s, f64::INFINITY, "generate is best-effort");
+        // Load inside capacity even at the heavy tenant's scale.
+        let cap_hz = fleet::service_capacity_hz(&sc.specs, &sc.capacity, sc.config.base_exec_ms);
+        assert!((sc.arrivals.mean_rate_hz() - 0.55 * cap_hz).abs() < 1e-9);
     }
 
     #[test]

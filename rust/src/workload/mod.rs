@@ -1,7 +1,10 @@
 //! Workload generation: synthetic inference inputs (the ImageNet-val
-//! substitution, DESIGN.md §7) and request arrival processes.
+//! substitution, DESIGN.md §7), request arrival processes, and the
+//! multi-tenant [`WorkloadMix`] class registry the L3.5 simulator samples
+//! arrivals from.
 
 use crate::runtime::Tensor;
+use crate::scheduler::TaskDemand;
 use crate::util::rng::Rng;
 
 /// ImageNet normalization constants (paper Sec. IV-A2).
@@ -75,6 +78,84 @@ impl Arrivals {
                 (0..*count).map(|_| rng.exp(*rate_hz)).collect()
             }
         }
+    }
+}
+
+/// One tenant class in a multi-tenant serving mix: a model (size expressed
+/// as a scale on the scenario's base executor time), its resource demand,
+/// an SLO tier, and a priority. Tasks of the same class share a model, so
+/// the simulator may serve them in one batch
+/// ([`crate::node::NodeSpec::batch_latency_ms`]).
+#[derive(Debug, Clone)]
+pub struct WorkloadClass {
+    pub name: String,
+    /// Per-class resource demand handed to the scheduler. The engine
+    /// stamps [`TaskDemand::class`] with this class's index at arrival
+    /// time, so builders need not keep the two in sync by hand.
+    pub demand: TaskDemand,
+    /// SLO deadline: seconds of slack from arrival to required
+    /// completion. Completions past it count in the per-class
+    /// `deadline_missed`. Use `f64::INFINITY` for best-effort tiers.
+    pub slo_s: f64,
+    /// Model-size multiplier on the scenario's `base_exec_ms` (0.5 = a
+    /// distilled half-size model, 3.0 = a hefty one).
+    pub exec_scale: f64,
+    /// Larger = more latency-critical. Batch formation drains the
+    /// highest-priority eligible class first on ties.
+    pub priority: u8,
+    /// Relative arrival weight within the mix (need not sum to 1).
+    pub weight: f64,
+}
+
+/// The arrival mix over workload classes. Sampling is by cumulative
+/// weight from one uniform draw, so a mix woven into the simulator's
+/// seeded Poisson/MMPP generators stays deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadMix {
+    pub classes: Vec<WorkloadClass>,
+}
+
+impl WorkloadMix {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.classes.is_empty() {
+            return Err("workload mix needs at least one class".into());
+        }
+        for c in &self.classes {
+            if !c.weight.is_finite() || c.weight <= 0.0 {
+                return Err(format!("class {}: weight must be > 0, got {}", c.name, c.weight));
+            }
+            if !c.exec_scale.is_finite() || c.exec_scale <= 0.0 {
+                return Err(format!(
+                    "class {}: exec_scale must be > 0, got {}",
+                    c.name, c.exec_scale
+                ));
+            }
+            if c.slo_s.is_nan() || c.slo_s <= 0.0 {
+                return Err(format!("class {}: slo_s must be > 0, got {}", c.name, c.slo_s));
+            }
+        }
+        Ok(())
+    }
+
+    /// Map one uniform draw `u ∈ [0, 1)` to a class index by cumulative
+    /// weight. Deterministic and total: any finite `u` lands somewhere.
+    pub fn sample(&self, u: f64) -> usize {
+        let total: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let target = u * total;
+        let mut acc = 0.0;
+        for (i, c) in self.classes.iter().enumerate() {
+            acc += c.weight;
+            if target < acc {
+                return i;
+            }
+        }
+        self.classes.len() - 1
+    }
+
+    /// The scheduler-facing demand for class `i`, with
+    /// [`TaskDemand::class`] stamped to the index.
+    pub fn demand_of(&self, i: usize) -> TaskDemand {
+        TaskDemand { class: i, ..self.classes[i].demand }
     }
 }
 
@@ -162,6 +243,63 @@ mod tests {
         // Different seed ⇒ different process.
         let b = Arrivals::Poisson { count: 4, rate_hz: 2.0, seed: 10 };
         assert_ne!(a.gaps(), b.gaps());
+    }
+
+    fn mix3() -> WorkloadMix {
+        let class = |name: &str, w: f64| WorkloadClass {
+            name: name.into(),
+            demand: TaskDemand::default(),
+            slo_s: 10.0,
+            exec_scale: 1.0,
+            priority: 0,
+            weight: w,
+        };
+        WorkloadMix { classes: vec![class("a", 1.0), class("b", 2.0), class("c", 1.0)] }
+    }
+
+    #[test]
+    fn mix_samples_by_cumulative_weight() {
+        let m = mix3(); // cumulative shares: 0.25 | 0.75 | 1.0
+        assert_eq!(m.sample(0.0), 0);
+        assert_eq!(m.sample(0.24), 0);
+        assert_eq!(m.sample(0.25), 1);
+        assert_eq!(m.sample(0.74), 1);
+        assert_eq!(m.sample(0.75), 2);
+        assert_eq!(m.sample(0.999), 2);
+        // Weight-proportional in the long run against the engine's RNG.
+        let mut rng = Rng::new(11);
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[m.sample(rng.f64())] += 1;
+        }
+        assert!((counts[1] as f64 / 40_000.0 - 0.5).abs() < 0.02, "{counts:?}");
+        assert!((counts[0] as f64 / 40_000.0 - 0.25).abs() < 0.02, "{counts:?}");
+    }
+
+    #[test]
+    fn mix_demand_of_stamps_class_index() {
+        let m = mix3();
+        assert_eq!(m.demand_of(2).class, 2);
+        assert_eq!(m.demand_of(0).mem_mb, TaskDemand::default().mem_mb);
+    }
+
+    #[test]
+    fn mix_validate_catches_bad_classes() {
+        assert!(mix3().validate().is_ok());
+        assert!(WorkloadMix::default().validate().is_err());
+        let mut m = mix3();
+        m.classes[1].weight = 0.0;
+        assert!(m.validate().is_err());
+        let mut m = mix3();
+        m.classes[0].exec_scale = -1.0;
+        assert!(m.validate().is_err());
+        let mut m = mix3();
+        m.classes[2].slo_s = 0.0;
+        assert!(m.validate().is_err());
+        // Best-effort infinity SLO is legal.
+        let mut m = mix3();
+        m.classes[2].slo_s = f64::INFINITY;
+        assert!(m.validate().is_ok());
     }
 
     #[test]

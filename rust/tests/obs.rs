@@ -167,3 +167,50 @@ fn filtered_firehose_drops_lines_but_telemetry_counts_everything() {
     assert_eq!(telem.events_of(EventKind::Dispatch), report.completed);
     assert_eq!(telem.events_of(EventKind::Decision), written);
 }
+
+/// The batched service path through the firehose: one `batch_formed`
+/// line per sealed batch whose fills sum to exactly the completions, a
+/// per-class seal count that matches the report's `ClassUsage` rows, and
+/// (a grid-only fleet) a completion-carbon replay of the dynamic total.
+#[test]
+fn batch_serving_firehose_conserves_fills_and_replays_dynamic_carbon() {
+    let (report, telem, text) = observed("batch-serving", 3_000, 7);
+    let mut fills = 0u64;
+    let mut seals_per_class: BTreeMap<i64, u64> = BTreeMap::new();
+    let mut batch_lines = 0u64;
+    let mut completion_carbon = 0.0;
+    for line in text.lines() {
+        let v = Json::parse(line).unwrap();
+        match v.req_str("kind").unwrap() {
+            "batch_formed" => {
+                batch_lines += 1;
+                let fill = v.get("fill").unwrap().as_i64().unwrap();
+                assert!(fill >= 1, "empty batch sealed: {line}");
+                fills += fill as u64;
+                *seals_per_class
+                    .entry(v.get("class").unwrap().as_i64().unwrap())
+                    .or_insert(0) += 1;
+                assert!(v.req_f64("head_wait_ms").unwrap() >= 0.0, "{line}");
+            }
+            "completion" => completion_carbon += v.req_f64("carbon_g").unwrap(),
+            _ => {}
+        }
+    }
+    assert_eq!(batch_lines, telem.events_of(EventKind::BatchFormed));
+    assert_eq!(fills, report.completed, "batch fills must sum to completions");
+    assert_eq!(report.classes.len(), 3);
+    for (c, class) in report.classes.iter().enumerate() {
+        assert_eq!(
+            seals_per_class.get(&(c as i64)).copied().unwrap_or(0),
+            class.batches,
+            "{}: sealed-batch count mismatch",
+            class.name
+        );
+    }
+    assert!(
+        (completion_carbon - report.carbon_dynamic_g_total).abs()
+            <= 1e-6 * report.carbon_dynamic_g_total.max(1e-12),
+        "completion carbon {completion_carbon} != dynamic total {}",
+        report.carbon_dynamic_g_total
+    );
+}
