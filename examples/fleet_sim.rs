@@ -8,7 +8,8 @@
 //! energy against a duck curve with SoC-trajectory forecasts pricing the
 //! release slots truthfully, batch a three-class multi-tenant mix into
 //! shared service slots that amortize the idle floor, then trace a single
-//! defer decision end-to-end through the NDJSON event firehose — all in a
+//! defer decision end-to-end through the NDJSON event firehose and fold
+//! the trace back into the full report with the replay engine — all in a
 //! few wall-clock seconds, no artifacts required.
 //!
 //! ```sh
@@ -16,7 +17,7 @@
 //! ```
 
 use carbonedge::experiments as exp;
-use carbonedge::obs::FirehoseSink;
+use carbonedge::obs::{replay, FirehoseSink};
 use carbonedge::scheduler::{CarbonAwareScheduler, Mode};
 use carbonedge::sim::{scenarios, Simulation};
 use carbonedge::util::cli::Args;
@@ -116,7 +117,7 @@ fn main() -> anyhow::Result<()> {
     let day = scenarios::build("real-trace", 0, requests.min(8_000), seed).unwrap();
     let mut sched = CarbonAwareScheduler::new("green", Mode::Green.weights());
     let mut sink = FirehoseSink::new(Vec::new());
-    let (_, telem) =
+    let (live, telem) =
         Simulation::try_run_observed(&day, &mut sched, &mut sink).expect("valid scenario");
     let ndjson = String::from_utf8(sink.finish()?)?;
     println!("one deferred request, end to end (raw firehose lines):");
@@ -136,5 +137,36 @@ fn main() -> anyhow::Result<()> {
         }
     }
     print!("{}", telem.render());
+
+    // The firehose is a verifiable source of truth, not just a log: fold
+    // the NDJSON back through the replay state machine and the *entire*
+    // report — per-node and per-class counters, idle/dynamic/pv/battery/
+    // grid energy splits, Eq. 2 carbon, latency and wait percentiles —
+    // reconstructs from events alone, then audits field by field against
+    // the live run. From disk the same loop is
+    // `carbonedge replay trace.ndjson --verify`.
+    let (replayed, events) =
+        replay::replay_report(ndjson.as_bytes()).expect("well-formed trace");
+    let mismatches = replay::verify(&replayed, &live);
+    assert!(mismatches.is_empty(), "replay diverged: {mismatches:?}");
+    println!(
+        "replayed {events} events -> report matches the live run \
+         ({} completed, {:.3} gCO2)",
+        replayed.completed, replayed.carbon_g_total
+    );
+
+    // And two traces diff in lockstep: a seed-perturbed twin announces
+    // itself at the first divergent event — here the run_meta header,
+    // which carries the seed. On disk: `carbonedge replay --diff A B`.
+    let twin_day = scenarios::build("real-trace", 0, requests.min(8_000), seed + 1).unwrap();
+    let mut sched = CarbonAwareScheduler::new("green", Mode::Green.weights());
+    let mut twin_sink = FirehoseSink::new(Vec::new());
+    Simulation::try_run_observed(&twin_day, &mut sched, &mut twin_sink)
+        .expect("valid scenario");
+    let twin = String::from_utf8(twin_sink.finish()?)?;
+    let d = replay::diff(ndjson.as_bytes(), twin.as_bytes())
+        .expect("both traces are well-formed")
+        .expect("a perturbed seed must diverge");
+    println!("seed-perturbed twin: {}", d.render());
     Ok(())
 }

@@ -70,7 +70,21 @@
 //! slice as it happens — NDJSON to disk through [`obs::FirehoseSink`] in
 //! constant memory, plus an in-process [`obs::Telemetry`] registry whose
 //! per-decision overhead histogram is guarded against the paper's 0.03 ms
-//! envelope. With no sink attached nothing is constructed: the default
+//! envelope. The firehose is a *verifiable* source of truth: the
+//! [`obs::replay`] engine folds an all-filter trace back into a complete
+//! [`sim::SimReport`] — counters, energy splits, Eq. 2 carbon,
+//! percentiles — purely from events ([`obs::replay::replay_report`]),
+//! audits it field by field against a live run
+//! ([`obs::replay::verify`], CLI `carbonedge replay --verify`), and
+//! diffs two traces in lockstep to the first divergent event
+//! ([`obs::replay::diff`], CLI `carbonedge replay --diff`). An
+//! [`obs::MonitorSet`] attached via [`sim::Simulation::try_run_monitored`]
+//! evaluates in-sim rules over sliding virtual-time windows — carbon
+//! burn-rate against a gCO2/s budget, per-class SLO-miss burn, and
+//! reject/defer rate — firing alert events into the firehose and leaving
+//! per-rule summaries in the report and telemetry (CLI
+//! `sim --monitor carbon-budget=G,slo-burn=PCT,window=S`). With no sink
+//! or monitors attached nothing is constructed: the default
 //! `run`/`try_run` paths are untouched and reports stay bit-identical.
 
 pub mod carbon;

@@ -20,8 +20,11 @@
 //!               [--charge-policy off|threshold] [--charge-threshold-pct P]
 //!               [--compare-arbitrage]
 //!               [--batch-window-ms MS] [--batch-max N] [--compare-batching]
+//!               [--monitor SPEC] [--telemetry-out PATH]
 //!               [--help]
 //!                                                   # virtual-time fleet simulator
+//! carbonedge replay TRACE.ndjson [--verify] [--json] # reconstruct a report from a trace
+//! carbonedge replay --diff A.ndjson B.ndjson         # first divergent event between traces
 //! ```
 
 use anyhow::Result;
@@ -68,6 +71,8 @@ fn run() -> Result<()> {
         "compare-microgrid",
         "compare-arbitrage",
         "compare-batching",
+        "diff",
+        "verify",
     ])?;
     let cmd = args.command.clone().unwrap_or_else(|| "info".to_string());
     // Handle --help before any command arm so no command ever runs its
@@ -257,6 +262,17 @@ fn run() -> Result<()> {
                     .map_err(|e| anyhow::anyhow!("--trace-filter: {e}"))?,
                 None => carbonedge::obs::TraceFilter::all(),
             };
+            // In-sim monitors and the telemetry export ride the same
+            // single-run instrumentation path as the firehose; without
+            // --trace-out they run against a NullSink (counters only).
+            let telemetry_out = args.get("telemetry-out").map(str::to_string);
+            let monitors = match args.get("monitor") {
+                Some(spec) => Some(
+                    carbonedge::obs::MonitorSet::parse(spec)
+                        .map_err(|e| anyhow::anyhow!("--monitor: {e}"))?,
+                ),
+                None => None,
+            };
             let timeline_stride = args.parse_or("timeline-stride", 1usize)?;
             if args.has("timeline-stride") && !args.bool_flag("json") {
                 anyhow::bail!("--timeline-stride only applies to --json report output");
@@ -276,6 +292,8 @@ fn run() -> Result<()> {
                     "trace-out",
                     "trace-filter",
                     "timeline-stride",
+                    "monitor",
+                    "telemetry-out",
                     "idle-w",
                     "slack",
                     "headroom",
@@ -463,6 +481,8 @@ fn run() -> Result<()> {
                     "trace-out",
                     "trace-filter",
                     "timeline-stride",
+                    "monitor",
+                    "telemetry-out",
                     "batch-window-ms",
                     "batch-max",
                 ];
@@ -546,10 +566,19 @@ fn run() -> Result<()> {
             // once here so any bad combination is a clean error, never a
             // mid-simulation panic.
             sc.validate().map_err(|e| anyhow::anyhow!("invalid scenario configuration: {e}"))?;
-            if trace_out.is_some() {
-                // The firehose documents exactly one simulation run; the
-                // comparison arms run several and would interleave their
-                // events into one stream.
+            // The firehose, monitors and telemetry export all document
+            // exactly one simulation run; the comparison arms run several
+            // and would interleave their events into one stream.
+            let single_run_flag = if trace_out.is_some() {
+                Some("trace-out")
+            } else if monitors.is_some() {
+                Some("monitor")
+            } else if telemetry_out.is_some() {
+                Some("telemetry-out")
+            } else {
+                None
+            };
+            if let Some(flag) = single_run_flag {
                 for switch in [
                     "sweep",
                     "compare-defer",
@@ -559,7 +588,7 @@ fn run() -> Result<()> {
                 ] {
                     if args.bool_flag(switch) {
                         anyhow::bail!(
-                            "--trace-out streams one run; it does not combine with --{switch}"
+                            "--{flag} documents one run; it does not combine with --{switch}"
                         );
                     }
                 }
@@ -660,31 +689,7 @@ fn run() -> Result<()> {
                 if args.has("mode") {
                     anyhow::bail!("--scheduler and --mode are mutually exclusive");
                 }
-                let mut sched: Box<dyn Scheduler> = match sched_name {
-                    "defer-green" => {
-                        // Joint defer+route: reuse the scenario's min-gain
-                        // knob so `--defer-min-gain` shapes both verdicts.
-                        let min_gain = sc
-                            .config
-                            .deferral
-                            .as_ref()
-                            .map(|d| d.policy.min_gain)
-                            .unwrap_or(carbonedge::carbon::DeferralPolicy::default().min_gain);
-                        Box::new(carbonedge::scheduler::DeferAwareGreenScheduler::new(min_gain))
-                    }
-                    "green" | "balanced" | "performance" | "perf" => {
-                        let mode = Mode::parse(sched_name).unwrap();
-                        Box::new(CarbonAwareScheduler::new(mode.name(), mode.weights()))
-                    }
-                    "round-robin" => Box::new(carbonedge::scheduler::RoundRobinScheduler::new()),
-                    "random" => Box::new(carbonedge::scheduler::RandomScheduler::new(seed)),
-                    "least-loaded" => Box::new(carbonedge::scheduler::LeastLoadedScheduler),
-                    "amp4ec" => Box::new(Amp4ecScheduler::new()),
-                    other => anyhow::bail!(
-                        "unknown --scheduler {other:?}; try defer-green|green|balanced|\
-                         performance|round-robin|random|least-loaded|amp4ec"
-                    ),
-                };
+                let mut sched = sim_scheduler(sched_name, seed, &sc)?;
                 run_sim_single(
                     &sc,
                     sched.as_mut(),
@@ -692,6 +697,8 @@ fn run() -> Result<()> {
                     timeline_stride,
                     trace_out.as_deref(),
                     trace_filter,
+                    monitors,
+                    telemetry_out.as_deref(),
                 )?;
             } else if let Some(mode_s) = args.get("mode") {
                 let mode = Mode::parse(mode_s).ok_or_else(|| anyhow::anyhow!("bad --mode"))?;
@@ -703,11 +710,13 @@ fn run() -> Result<()> {
                     timeline_stride,
                     trace_out.as_deref(),
                     trace_filter,
+                    monitors,
+                    telemetry_out.as_deref(),
                 )?;
-            } else if trace_out.is_some() {
-                // Tracing needs one concrete run to document: default to
-                // green mode (the headline CE configuration) instead of the
-                // four-way mode comparison.
+            } else if single_run_flag.is_some() {
+                // Instrumentation needs one concrete run to document:
+                // default to green mode (the headline CE configuration)
+                // instead of the four-way mode comparison.
                 let mut sched = CarbonAwareScheduler::new("green", Mode::Green.weights());
                 run_sim_single(
                     &sc,
@@ -716,24 +725,140 @@ fn run() -> Result<()> {
                     timeline_stride,
                     trace_out.as_deref(),
                     trace_filter,
+                    monitors,
+                    telemetry_out.as_deref(),
                 )?;
             } else {
                 let reports = exp::sim_mode_comparison(&sc);
                 println!("{}", exp::sim_comparison_render(&reports));
             }
         }
+        "replay" => {
+            // Pure trace processing — no artifacts, no Coordinator. The
+            // NDJSON firehose is the only input; an `all`-filter trace is a
+            // complete ledger and folds back into the full report.
+            let open = |p: &str| -> Result<std::io::BufReader<std::fs::File>> {
+                Ok(std::io::BufReader::new(
+                    std::fs::File::open(p).map_err(|e| anyhow::anyhow!("opening {p}: {e}"))?,
+                ))
+            };
+            if args.bool_flag("diff") {
+                let (a, b) = match args.positional.as_slice() {
+                    [a, b] => (a.as_str(), b.as_str()),
+                    _ => anyhow::bail!("replay --diff expects exactly two trace paths"),
+                };
+                match carbonedge::obs::replay::diff(open(a)?, open(b)?)
+                    .map_err(|e| anyhow::anyhow!("diffing {a} vs {b}: {e}"))?
+                {
+                    None => println!("traces agree: no divergent event"),
+                    Some(d) => anyhow::bail!("traces diverge: {}", d.render()),
+                }
+                return Ok(());
+            }
+            let path = match args.positional.as_slice() {
+                [p] => p.as_str(),
+                _ => anyhow::bail!("replay expects one trace path (or --diff A B)"),
+            };
+            let (report, events) = carbonedge::obs::replay::replay_report(open(path)?)
+                .map_err(|e| anyhow::anyhow!("replaying {path}: {e}"))?;
+            eprintln!("replay: {events} events from {path}");
+            if args.bool_flag("verify") {
+                // The run_meta header makes the trace self-describing:
+                // rebuild the library scenario it names, re-run it live on
+                // the same seed and scheduler, and audit the replayed
+                // report against the fresh one. Only unmodified library
+                // scenarios round-trip — CLI-mutated runs (--idle-w,
+                // --slack, microgrid flags...) name a scenario the library
+                // cannot rebuild verbatim.
+                let sc = carbonedge::sim::scenarios::build(
+                    &report.scenario,
+                    report.nodes.len(),
+                    report.requests as usize,
+                    report.seed,
+                )
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "trace names scenario {:?}, which is not in the library; \
+                         --verify only replays unmodified library scenarios",
+                        report.scenario
+                    )
+                })?;
+                let mut sched = sim_scheduler(&report.scheduler, report.seed, &sc)?;
+                let live = carbonedge::sim::Simulation::try_run(&sc, sched.as_mut())
+                    .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?;
+                let mismatches = carbonedge::obs::replay::verify(&report, &live);
+                if mismatches.is_empty() {
+                    eprintln!(
+                        "verify: replayed report matches the live {} / {} / seed {} run",
+                        report.scenario, report.scheduler, report.seed
+                    );
+                } else {
+                    for m in &mismatches {
+                        eprintln!("verify: {m}");
+                    }
+                    anyhow::bail!(
+                        "replayed report diverges from the live run in {} field(s)",
+                        mismatches.len()
+                    );
+                }
+            }
+            if args.bool_flag("json") {
+                println!("{}", carbonedge::metrics::sim_report_json_string(&report));
+            } else {
+                println!("{}", report.render());
+            }
+        }
         other => {
             anyhow::bail!(
-                "unknown command {other:?}; try info|golden|serve|reproduce|sweep|overhead|baselines|sim"
+                "unknown command {other:?}; try info|golden|serve|reproduce|sweep|overhead|baselines|sim|replay"
             );
         }
     }
     Ok(())
 }
 
+/// Build a named simulator scheduler. Shared by `sim --scheduler` and
+/// `replay --verify` (which reconstructs the scheduler a trace's run_meta
+/// header names).
+fn sim_scheduler(
+    name: &str,
+    seed: u64,
+    sc: &carbonedge::sim::Scenario,
+) -> Result<Box<dyn Scheduler>> {
+    Ok(match name {
+        "defer-green" => {
+            // Joint defer+route: reuse the scenario's min-gain knob so
+            // `--defer-min-gain` shapes both verdicts.
+            let min_gain = sc
+                .config
+                .deferral
+                .as_ref()
+                .map(|d| d.policy.min_gain)
+                .unwrap_or_else(|| carbonedge::carbon::DeferralPolicy::default().min_gain);
+            Box::new(carbonedge::scheduler::DeferAwareGreenScheduler::new(min_gain))
+        }
+        "green" | "balanced" | "performance" | "perf" => {
+            let mode = Mode::parse(name).unwrap();
+            Box::new(CarbonAwareScheduler::new(mode.name(), mode.weights()))
+        }
+        "round-robin" => Box::new(carbonedge::scheduler::RoundRobinScheduler::new()),
+        "random" => Box::new(carbonedge::scheduler::RandomScheduler::new(seed)),
+        "least-loaded" => Box::new(carbonedge::scheduler::LeastLoadedScheduler),
+        "amp4ec" => Box::new(Amp4ecScheduler::new()),
+        other => anyhow::bail!(
+            "unknown scheduler {other:?}; try defer-green|green|balanced|\
+             performance|round-robin|random|least-loaded|amp4ec"
+        ),
+    })
+}
+
 /// Run one scheduler over the scenario — optionally streaming the NDJSON
-/// event firehose to `trace_out` — and print the report. Telemetry and the
-/// trace summary go to stderr so `--json` stdout stays machine-parseable.
+/// event firehose to `trace_out`, evaluating in-sim `monitors`, and writing
+/// the telemetry registry to `telemetry_out` — and print the report.
+/// Telemetry and the trace summary go to stderr so `--json` stdout stays
+/// machine-parseable. With monitors or a telemetry export but no trace
+/// path, the run is instrumented against a [`carbonedge::obs::NullSink`]
+/// (counters only); with none of the three, nothing is ever constructed.
 fn run_sim_single(
     sc: &carbonedge::sim::Scenario,
     sched: &mut dyn Scheduler,
@@ -741,9 +866,12 @@ fn run_sim_single(
     timeline_stride: usize,
     trace_out: Option<&str>,
     trace_filter: carbonedge::obs::TraceFilter,
+    monitors: Option<carbonedge::obs::MonitorSet>,
+    telemetry_out: Option<&str>,
 ) -> Result<()> {
     use carbonedge::sim::Simulation;
-    let report = match trace_out {
+    let bad = |e: String| anyhow::anyhow!("invalid scenario: {e}");
+    let (report, telem) = match trace_out {
         Some(path) => {
             let file = std::fs::File::create(path)
                 .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
@@ -751,18 +879,41 @@ fn run_sim_single(
                 std::io::BufWriter::new(file),
                 trace_filter,
             );
-            let (report, telem) = Simulation::try_run_observed(sc, sched, &mut sink)
-                .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?;
+            let (report, telem) = match monitors {
+                Some(m) => Simulation::try_run_monitored(sc, sched, &mut sink, m),
+                None => Simulation::try_run_observed(sc, sched, &mut sink),
+            }
+            .map_err(bad)?;
             let events = sink.events_written();
             let buf = sink.finish().map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
             buf.into_inner().map_err(|e| anyhow::anyhow!("flushing {path}: {e}"))?;
             eprint!("{}", telem.render());
             eprintln!("trace: {events} events -> {path}");
-            report
+            (report, Some(telem))
         }
-        None => Simulation::try_run(sc, sched)
-            .map_err(|e| anyhow::anyhow!("invalid scenario: {e}"))?,
+        None if monitors.is_some() || telemetry_out.is_some() => {
+            let mut sink = carbonedge::obs::NullSink;
+            let (report, telem) = match monitors {
+                Some(m) => Simulation::try_run_monitored(sc, sched, &mut sink, m),
+                None => Simulation::try_run_observed(sc, sched, &mut sink),
+            }
+            .map_err(bad)?;
+            eprint!("{}", telem.render());
+            (report, Some(telem))
+        }
+        None => (Simulation::try_run(sc, sched).map_err(bad)?, None),
     };
+    if let Some(path) = telemetry_out {
+        let telem = telem.as_ref().expect("an instrumented run always yields telemetry");
+        let mut buf = Vec::new();
+        {
+            let mut j = carbonedge::util::json::JsonWriter::new(&mut buf);
+            telem.write_json(&mut j).map_err(|e| anyhow::anyhow!("serializing telemetry: {e}"))?;
+        }
+        buf.push(b'\n');
+        std::fs::write(path, &buf).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        eprintln!("telemetry -> {path}");
+    }
     if json {
         println!(
             "{}",
@@ -786,7 +937,12 @@ carbonedge — carbon-aware edge inference (CarbonEdge reproduction)
   carbonedge sweep [--step 0.05] [--iters 20]      Fig. 3 weight sweep
   carbonedge overhead                              scheduling overhead micro-report
   carbonedge baselines                             scheduler ablation
-  carbonedge sim --help                            virtual-time fleet simulator"
+  carbonedge sim --help                            virtual-time fleet simulator
+  carbonedge replay TRACE [--verify] [--json]      reconstruct a sim report from an
+                                                   NDJSON trace (--verify audits it
+                                                   against a fresh live run)
+  carbonedge replay --diff A B                     first divergent event between two
+                                                   traces (determinism debugging)"
     );
 }
 
@@ -879,17 +1035,34 @@ real traces:
                          instead of the bundled synthetic day
 
 observability (single runs only — with neither --mode nor --scheduler,
---trace-out defaults to one green-mode run):
+these default to one green-mode run):
   --trace-out PATH       stream the event firehose to PATH as NDJSON, one
-                         event per line: arrival, decision (with
-                         per-candidate scores and reject reasons), dispatch,
-                         defer_release, completion, churn, mg_slice;
-                         telemetry (event counts, queue-delay/latency
-                         histograms, per-decision overhead vs the paper's
-                         0.03 ms envelope) prints to stderr
+                         event per line: run_meta (the self-describing
+                         header), arrival, decision (with per-candidate
+                         scores and reject reasons), dispatch,
+                         defer_release, completion, churn, batch_formed,
+                         mg_slice, idle_slice, alert; telemetry (event
+                         counts, queue-delay/latency histograms,
+                         per-decision overhead vs the paper's 0.03 ms
+                         envelope) prints to stderr. An 'all'-filter trace
+                         is a complete ledger: `carbonedge replay` folds it
+                         back into the full report
   --trace-filter KINDS   keep only these event kinds: 'all' or a comma list
-                         of arrival,decision,dispatch,defer_release,
-                         completion,churn,mg_slice
+                         of run_meta,arrival,decision,dispatch,
+                         defer_release,completion,churn,batch_formed,
+                         mg_slice,idle_slice,alert
+  --monitor SPEC         attach in-sim monitors evaluated on every emitted
+                         event over sliding virtual-time windows: a comma
+                         list of carbon-budget=G (gCO2/s burn rate),
+                         slo-burn=PCT (per-class SLO-miss rate),
+                         reject-defer=PCT (reject/defer rate) and window=S
+                         (shared window, default 3600). Threshold crossings
+                         fire 'alert' events into the firehose; per-rule
+                         summaries land in the report and telemetry. Works
+                         without --trace-out (counters only)
+  --telemetry-out PATH   write the run's telemetry registry (event counts,
+                         histograms, overhead envelope, monitor summaries)
+                         to PATH as JSON
   --timeline-stride N    with --json: downsample the per-node intensity and
                          SoC timelines to every Nth sample (first and last
                          kept)"

@@ -140,6 +140,28 @@ pub fn write_sim_report<W: io::Write>(
         }
         j.end_arr()?;
     }
+    // Per-rule monitor summaries (monitored runs only; empty otherwise).
+    if !r.monitors.is_empty() {
+        j.key("monitors")?;
+        j.begin_arr()?;
+        for m in &r.monitors {
+            j.begin_obj()?;
+            j.field_str("rule", &m.rule)?;
+            j.field_fnum("threshold", m.threshold)?;
+            j.field_num("window_s", m.window_s)?;
+            j.field_num("alerts", m.alerts as f64)?;
+            match m.first_alert_s {
+                Some(t) => j.field_num("first_alert_s", t)?,
+                None => {
+                    j.key("first_alert_s")?;
+                    j.null()?;
+                }
+            }
+            j.field_fnum("peak", m.peak)?;
+            j.end_obj()?;
+        }
+        j.end_arr()?;
+    }
     j.key("nodes")?;
     j.begin_arr()?;
     for n in &r.nodes {
@@ -423,6 +445,34 @@ mod tests {
         assert!(tl.len() <= orig.len());
         assert_eq!(tl.first(), orig.first());
         assert_eq!(tl.last(), orig.last());
+    }
+
+    #[test]
+    fn sim_report_json_carries_monitor_summaries() {
+        let sc = crate::sim::scenarios::build("paper-3-node", 0, 20, 1).unwrap();
+        let mut sched = crate::scheduler::CarbonAwareScheduler::new(
+            "green",
+            crate::scheduler::Mode::Green.weights(),
+        );
+        let mut r = crate::sim::Simulation::run(&sc, &mut sched);
+        assert!(
+            !sim_report_json_string(&r).contains("\"monitors\""),
+            "no monitors attached, no key"
+        );
+        r.monitors.push(crate::obs::MonitorSummary {
+            rule: "carbon-budget".into(),
+            threshold: 1e-3,
+            window_s: 600.0,
+            alerts: 4,
+            first_alert_s: None,
+            peak: 2e-3,
+        });
+        let back = Json::parse(&sim_report_json_string(&r)).unwrap();
+        let ms = back.req_arr("monitors").unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].req_str("rule").unwrap(), "carbon-budget");
+        assert_eq!(ms[0].req_usize("alerts").unwrap(), 4);
+        assert_eq!(ms[0].get("first_alert_s"), Some(&Json::Null));
     }
 
     #[test]

@@ -8,15 +8,16 @@
 //! to node X, which forecast slot a defer parked it for, and what each
 //! microgrid settlement slice cost.
 //!
-//! Three pieces:
+//! Five pieces:
 //!
 //! - [`TraceEvent`] / [`EventSink`] — the simulator's hot paths
 //!   ([`crate::sim::Simulation::try_run_observed`]) emit borrowed,
 //!   enum-dispatched events at every arrival, scheduling decision,
-//!   dispatch, deferred release, completion, churn transition, and
-//!   microgrid settlement slice. With no sink attached (the default
-//!   `run`/`try_run` entry points) no event is ever constructed — the off
-//!   path is a dead branch, not a null write.
+//!   dispatch, deferred release, completion, churn transition, microgrid
+//!   settlement slice, idle-floor accrual and monitor alert, plus one
+//!   [`TraceEvent::RunMeta`] header per run. With no sink attached (the
+//!   default `run`/`try_run` entry points) no event is ever constructed —
+//!   the off path is a dead branch, not a null write.
 //! - [`FirehoseSink`] — streams one NDJSON object per event through
 //!   [`crate::util::json::JsonWriter`]; no intermediate tree, no in-memory
 //!   event buffer, so a 10M-request run streams to disk in constant
@@ -25,13 +26,30 @@
 //!   queue delay, end-to-end latency, and per-decision wall-clock
 //!   overhead, guarded against the paper's 0.03 ms envelope
 //!   ([`OVERHEAD_ENVELOPE_NS`]).
+//! - [`replay`] — the audit side of the firehose: a streaming
+//!   [`replay::FirehoseReader`] feeds a [`replay::ReplayState`] machine
+//!   that reconstructs a full [`crate::sim::SimReport`] *purely from
+//!   events* (`carbonedge replay trace.ndjson`), and
+//!   [`replay::diff`] pinpoints the first divergent event between two
+//!   traces for determinism debugging (`carbonedge replay --diff A B`).
+//! - [`monitor`] — in-sim sliding-window rules ([`monitor::MonitorSet`])
+//!   evaluated on each emitted event over *virtual* time: carbon
+//!   burn-rate vs a gCO2/s budget, per-class SLO-miss burn rate, and
+//!   reject/defer rate. Crossing a threshold fires an
+//!   [`EventKind::Alert`] into the firehose; per-rule summaries land in
+//!   [`Telemetry`] and the sim report.
 //!
 //! Tracing must never perturb the simulation: the engine asserts (in tests)
 //! that a fully-traced run produces a bit-identical
-//! [`crate::sim::SimReport`] to an untraced one.
+//! [`crate::sim::SimReport`] to an untraced one — with or without
+//! monitors attached (their summaries live in a separate report field).
 
+pub mod monitor;
+pub mod replay;
 mod telemetry;
 
+pub use monitor::{AlertFire, CarbonBudget, MonitorSet, MonitorSummary};
+pub use replay::{FirehoseReader, ReplayState};
 pub use telemetry::{Log2Histogram, Telemetry, OVERHEAD_ENVELOPE_NS};
 
 use std::io;
@@ -39,7 +57,7 @@ use std::io;
 use crate::scheduler::{DecisionExplain, RejectReason, SchedulingDecision};
 use crate::util::json::JsonWriter;
 
-/// The eight trace event kinds, used for filtering and counting.
+/// The eleven trace event kinds, used for filtering and counting.
 /// Discriminants index [`Telemetry::events`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
@@ -51,10 +69,19 @@ pub enum EventKind {
     Churn = 5,
     MicrogridSlice = 6,
     BatchFormed = 7,
+    /// A [`monitor::MonitorSet`] rule crossed its threshold.
+    Alert = 8,
+    /// An idle-floor accrual interval closed on a node (power-off or the
+    /// simulation horizon) — what makes uptime and idle energy/carbon
+    /// reconstructible from the stream.
+    IdleSlice = 9,
+    /// One per run, first in the stream: scenario/scheduler/seed plus the
+    /// node and class rosters, so a replay needs nothing but the trace.
+    RunMeta = 10,
 }
 
 impl EventKind {
-    pub const COUNT: usize = 8;
+    pub const COUNT: usize = 11;
     pub const ALL: [EventKind; EventKind::COUNT] = [
         EventKind::Arrival,
         EventKind::Decision,
@@ -64,6 +91,9 @@ impl EventKind {
         EventKind::Churn,
         EventKind::MicrogridSlice,
         EventKind::BatchFormed,
+        EventKind::Alert,
+        EventKind::IdleSlice,
+        EventKind::RunMeta,
     ];
 
     /// Stable label: the `kind` field of every NDJSON line and the token
@@ -78,6 +108,9 @@ impl EventKind {
             EventKind::Churn => "churn",
             EventKind::MicrogridSlice => "mg_slice",
             EventKind::BatchFormed => "batch_formed",
+            EventKind::Alert => "alert",
+            EventKind::IdleSlice => "idle_slice",
+            EventKind::RunMeta => "run_meta",
         }
     }
 
@@ -91,22 +124,26 @@ impl EventKind {
             "churn" => Some(EventKind::Churn),
             "mg_slice" | "microgrid" => Some(EventKind::MicrogridSlice),
             "batch_formed" | "batch" => Some(EventKind::BatchFormed),
+            "alert" => Some(EventKind::Alert),
+            "idle_slice" | "idle" => Some(EventKind::IdleSlice),
+            "run_meta" | "meta" => Some(EventKind::RunMeta),
             _ => None,
         }
     }
 
-    fn bit(self) -> u8 {
-        1 << (self as u8)
+    fn bit(self) -> u16 {
+        1 << (self as u16)
     }
 }
 
-/// Bitmask over [`EventKind`]s a sink cares about.
+/// Bitmask over [`EventKind`]s a sink cares about. `u16` leaves headroom
+/// past the current eleven kinds (the original `u8` saturated at eight).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct TraceFilter(u8);
+pub struct TraceFilter(u16);
 
 impl TraceFilter {
     pub fn all() -> TraceFilter {
-        TraceFilter(0xff)
+        TraceFilter((1 << EventKind::COUNT as u16) - 1)
     }
 
     pub fn none() -> TraceFilter {
@@ -182,23 +219,32 @@ pub enum TraceEvent<'a> {
     DeferRelease { t_s: f64, arrival_s: f64, deadline_s: f64 },
     /// A task finished. `carbon_g` is the grid-attributed operational
     /// carbon; microgrid-backed nodes settle carbon in `MicrogridSlice`
-    /// events instead and report `0.0` here.
+    /// events instead and report `0.0` here. `missed` is the legacy
+    /// deadline check, `slo_missed` the per-class SLO check (arrival +
+    /// class SLO budget, independent of deferral slack).
     Completion {
         t_s: f64,
         arrival_s: f64,
         node: &'a str,
+        class: usize,
         service_ms: f64,
         latency_ms: f64,
         energy_j: f64,
         carbon_g: f64,
         missed: bool,
+        slo_missed: bool,
     },
     /// A node went up or down.
     Churn { t_s: f64, node: &'a str, up: bool },
     /// One microgrid settlement slice: the energy flows and carbon accrued
     /// on `node` over `[t0_s, t1_s]`, and the battery state of charge
     /// after the slice. Summing `carbon_g` over these plus `Completion`
-    /// carbon replays the run's carbon total (for zero-idle fleets).
+    /// carbon replays the run's carbon total (for zero-idle fleets);
+    /// `idle_g` is the idle-floor share of `carbon_g` (the rest is
+    /// dynamic), and `charge_g` / `battery_g` / `stored_g` carry the
+    /// stored-carbon ledger: embodied carbon bought this slice, embodied
+    /// carbon released by discharge this slice, and the total still
+    /// stored after the slice.
     MicrogridSlice {
         t0_s: f64,
         t1_s: f64,
@@ -208,6 +254,10 @@ pub enum TraceEvent<'a> {
         grid_j: f64,
         grid_charge_j: f64,
         carbon_g: f64,
+        idle_g: f64,
+        charge_g: f64,
+        battery_g: f64,
+        stored_g: f64,
         soc: f64,
     },
     /// A batch was sealed and entered service on `node`
@@ -215,6 +265,36 @@ pub enum TraceEvent<'a> {
     /// one unit, `head_wait_ms` the time the oldest member spent waiting
     /// for the batch to form (0 for a full-on-arrival seal).
     BatchFormed { t_s: f64, node: &'a str, class: usize, fill: usize, head_wait_ms: f64 },
+    /// A monitor rule crossed its threshold ([`monitor::MonitorSet`]):
+    /// `value` is the windowed rate that breached `threshold` over the
+    /// trailing `window_s` of virtual time. `class` is set for per-class
+    /// rules (SLO burn).
+    Alert {
+        t_s: f64,
+        rule: &'static str,
+        value: f64,
+        threshold: f64,
+        window_s: f64,
+        class: Option<usize>,
+    },
+    /// An idle-floor accrual interval closed on `node`: `energy_j` is
+    /// `idle_w × (t1_s − t0_s)`, `carbon_g` the piecewise trace-integrated
+    /// idle carbon (0 on microgrid nodes, whose idle carbon settles in
+    /// `MicrogridSlice` events). Summing `t1_s − t0_s` replays uptime.
+    IdleSlice { t0_s: f64, t1_s: f64, node: &'a str, energy_j: f64, carbon_g: f64 },
+    /// Run header, emitted once before any other event: everything a
+    /// replay needs that is not derivable from the stream itself —
+    /// scenario/scheduler/seed/request count plus the node roster (name,
+    /// microgrid-backed?) and class roster (name, SLO seconds; empty
+    /// without a workload mix).
+    RunMeta {
+        scenario: &'a str,
+        scheduler: &'a str,
+        seed: u64,
+        requests: u64,
+        nodes: &'a [(&'a str, bool)],
+        classes: &'a [(&'a str, f64)],
+    },
 }
 
 impl TraceEvent<'_> {
@@ -228,6 +308,9 @@ impl TraceEvent<'_> {
             TraceEvent::Churn { .. } => EventKind::Churn,
             TraceEvent::MicrogridSlice { .. } => EventKind::MicrogridSlice,
             TraceEvent::BatchFormed { .. } => EventKind::BatchFormed,
+            TraceEvent::Alert { .. } => EventKind::Alert,
+            TraceEvent::IdleSlice { .. } => EventKind::IdleSlice,
+            TraceEvent::RunMeta { .. } => EventKind::RunMeta,
         }
     }
 }
@@ -375,20 +458,24 @@ impl<W: io::Write> FirehoseSink<W> {
                 t_s,
                 arrival_s,
                 node,
+                class,
                 service_ms,
                 latency_ms,
                 energy_j,
                 carbon_g,
                 missed,
+                slo_missed,
             } => {
                 j.field_num("t_s", t_s)?;
                 j.field_num("arrival_s", arrival_s)?;
                 j.field_str("node", node)?;
+                j.field_num("class", class as f64)?;
                 j.field_fnum("service_ms", service_ms)?;
                 j.field_fnum("latency_ms", latency_ms)?;
                 j.field_fnum("energy_j", energy_j)?;
                 j.field_fnum("carbon_g", carbon_g)?;
                 j.field_bool("missed", missed)?;
+                j.field_bool("slo_missed", slo_missed)?;
             }
             TraceEvent::Churn { t_s, node, up } => {
                 j.field_num("t_s", t_s)?;
@@ -404,6 +491,10 @@ impl<W: io::Write> FirehoseSink<W> {
                 grid_j,
                 grid_charge_j,
                 carbon_g,
+                idle_g,
+                charge_g,
+                battery_g,
+                stored_g,
                 soc,
             } => {
                 j.field_num("t0_s", t0_s)?;
@@ -414,6 +505,10 @@ impl<W: io::Write> FirehoseSink<W> {
                 j.field_fnum("grid_j", grid_j)?;
                 j.field_fnum("grid_charge_j", grid_charge_j)?;
                 j.field_fnum("carbon_g", carbon_g)?;
+                j.field_fnum("idle_g", idle_g)?;
+                j.field_fnum("charge_g", charge_g)?;
+                j.field_fnum("battery_g", battery_g)?;
+                j.field_fnum("stored_g", stored_g)?;
                 j.field_fnum("soc", soc)?;
             }
             TraceEvent::BatchFormed { t_s, node, class, fill, head_wait_ms } => {
@@ -422,6 +517,48 @@ impl<W: io::Write> FirehoseSink<W> {
                 j.field_num("class", class as f64)?;
                 j.field_num("fill", fill as f64)?;
                 j.field_fnum("head_wait_ms", head_wait_ms)?;
+            }
+            TraceEvent::Alert { t_s, rule, value, threshold, window_s, class } => {
+                j.field_num("t_s", t_s)?;
+                j.field_str("rule", rule)?;
+                j.field_fnum("value", value)?;
+                j.field_fnum("threshold", threshold)?;
+                j.field_fnum("window_s", window_s)?;
+                match class {
+                    Some(c) => j.field_num("class", c as f64)?,
+                    None => j.field_null("class")?,
+                }
+            }
+            TraceEvent::IdleSlice { t0_s, t1_s, node, energy_j, carbon_g } => {
+                j.field_num("t0_s", t0_s)?;
+                j.field_num("t1_s", t1_s)?;
+                j.field_str("node", node)?;
+                j.field_fnum("energy_j", energy_j)?;
+                j.field_fnum("carbon_g", carbon_g)?;
+            }
+            TraceEvent::RunMeta { scenario, scheduler, seed, requests, nodes, classes } => {
+                j.field_str("scenario", scenario)?;
+                j.field_str("scheduler", scheduler)?;
+                j.field_num("seed", seed as f64)?;
+                j.field_num("requests", requests as f64)?;
+                j.key("nodes")?;
+                j.begin_arr()?;
+                for &(name, microgrid) in nodes {
+                    j.begin_obj()?;
+                    j.field_str("node", name)?;
+                    j.field_bool("microgrid", microgrid)?;
+                    j.end_obj()?;
+                }
+                j.end_arr()?;
+                j.key("classes")?;
+                j.begin_arr()?;
+                for &(name, slo_s) in classes {
+                    j.begin_obj()?;
+                    j.field_str("class", name)?;
+                    j.field_fnum("slo_s", slo_s)?;
+                    j.end_obj()?;
+                }
+                j.end_arr()?;
             }
         }
         j.end_obj()?;
@@ -476,6 +613,77 @@ mod tests {
         for k in EventKind::ALL {
             assert_eq!(EventKind::parse(k.label()), Some(k));
         }
+    }
+
+    /// Regression for the `u8` → `u16` filter widening: the mask was
+    /// saturated at eight kinds, so `Alert`/`IdleSlice`/`RunMeta` (bits
+    /// 8–10) would silently alias without the wider carrier. Every kind
+    /// must round-trip through `with`/`contains` *alone* (no cross-kind
+    /// bleed) and through `parse` of its own label, and `all()` must
+    /// cover exactly the defined kinds.
+    #[test]
+    fn every_kind_round_trips_through_the_filter() {
+        for k in EventKind::ALL {
+            let f = TraceFilter::none().with(k);
+            assert!(f.contains(k), "{:?} lost by its own filter", k);
+            for other in EventKind::ALL {
+                if other != k {
+                    assert!(!f.contains(other), "{k:?} filter leaked {other:?}");
+                }
+            }
+            let parsed = TraceFilter::parse(k.label()).unwrap();
+            assert_eq!(parsed, f, "{:?} label parse != with()", k);
+            assert!(TraceFilter::all().contains(k), "all() missing {k:?}");
+        }
+        // The all-mask carries no bits beyond the defined kinds.
+        assert_eq!(TraceFilter::all().0.count_ones() as usize, EventKind::COUNT);
+    }
+
+    #[test]
+    fn new_kinds_serialise_one_line_each() {
+        let mut sink = FirehoseSink::new(Vec::new());
+        sink.record(&TraceEvent::Alert {
+            t_s: 120.0,
+            rule: "carbon-budget",
+            value: 0.91,
+            threshold: 0.5,
+            window_s: 3600.0,
+            class: None,
+        });
+        sink.record(&TraceEvent::IdleSlice {
+            t0_s: 0.0,
+            t1_s: 480.5,
+            node: "edge-a",
+            energy_j: 19_220.0,
+            carbon_g: 3.25,
+        });
+        let nodes = [("edge-a", false), ("solar", true)];
+        let classes = [("interactive", 3.0)];
+        sink.record(&TraceEvent::RunMeta {
+            scenario: "paper-3-node",
+            scheduler: "green",
+            seed: 42,
+            requests: 4_000,
+            nodes: &nodes,
+            classes: &classes,
+        });
+        assert_eq!(sink.events_written(), 3);
+        let text = String::from_utf8(sink.finish().unwrap()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("alert"));
+        assert_eq!(v.get("rule").unwrap().as_str(), Some("carbon-budget"));
+        assert_eq!(v.get("class"), Some(&Json::Null));
+        let v = Json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("idle_slice"));
+        assert_eq!(v.get("t1_s").unwrap().as_f64(), Some(480.5));
+        let v = Json::parse(lines[2]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("run_meta"));
+        assert_eq!(v.get("seed").unwrap().as_i64(), Some(42));
+        let ns = v.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(ns.len(), 2);
+        assert_eq!(ns[1].get("microgrid").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("classes").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]
@@ -573,11 +781,13 @@ mod tests {
             t_s: 2.0,
             arrival_s: 1.0,
             node: "edge-a",
+            class: 0,
             service_ms: 100.0,
             latency_ms: 1000.0,
             energy_j: 5.0,
             carbon_g: 0.4,
             missed: false,
+            slo_missed: false,
         });
         assert_eq!(sink.events_written(), 1);
         let text = String::from_utf8(sink.finish().unwrap()).unwrap();

@@ -1,0 +1,485 @@
+//! In-sim sliding-window monitors: early-warning rules evaluated on each
+//! emitted [`TraceEvent`] over *virtual* time, inside the engine's
+//! observation path.
+//!
+//! End-of-run reports tell you a run blew its carbon budget; a monitor
+//! tells you *when* — the virtual instant the trailing-window burn rate
+//! crossed the line — which is what a sustainability controller (Ecomap)
+//! or an operator replaying an incident actually needs. Three rules:
+//!
+//! - **carbon-budget** (gCO2/s): operational carbon deposited by
+//!   completions, microgrid settlement slices and idle-floor accruals
+//!   over the trailing window, divided by the window length, against a
+//!   [`CarbonBudget`] rate.
+//! - **slo-burn** (%): per-class fraction of completions that missed
+//!   their class SLO inside the window.
+//! - **reject-defer** (%): fraction of scheduling verdicts inside the
+//!   window that did not assign (rejects + defers).
+//!
+//! Rules are **edge-triggered**: a rule fires once when its value crosses
+//! the threshold from below and re-arms only after the value falls back
+//! to or under it — a sustained breach is one alert, not one per event.
+//! Every firing becomes an [`EventKind::Alert`] in the firehose, and each
+//! rule leaves a deterministic [`MonitorSummary`] (virtual-time only; no
+//! wall clock) in [`super::Telemetry`] and the sim report.
+//!
+//! A run with no [`MonitorSet`] attached constructs nothing — the
+//! zero-overhead-when-off guarantee of the observation layer holds.
+
+use std::collections::VecDeque;
+
+use super::{EventKind, TraceEvent};
+use crate::scheduler::SchedulingDecision;
+
+/// Carbon burn-rate budget for the `carbon-budget` rule, in grams of CO2
+/// per *virtual* second across the whole fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CarbonBudget {
+    pub g_per_s: f64,
+}
+
+/// Rate rules (slo-burn, reject-defer) stay silent until their window
+/// holds this many samples — a 100% miss rate over two completions is
+/// noise, not a burn.
+pub const MIN_RATE_SAMPLES: usize = 16;
+
+const RULE_CARBON: &str = "carbon-budget";
+const RULE_SLO: &str = "slo-burn";
+const RULE_REJECT: &str = "reject-defer";
+
+/// One monitor firing, queued inside the [`MonitorSet`] until the engine
+/// drains it into an [`EventKind::Alert`] event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertFire {
+    pub rule: &'static str,
+    pub t_s: f64,
+    pub value: f64,
+    pub threshold: f64,
+    pub window_s: f64,
+    /// Class index for per-class rules (slo-burn), else `None`.
+    pub class: Option<usize>,
+}
+
+/// Deterministic end-of-run summary of one rule: how often it fired, when
+/// it first fired, and the peak value its window ever reached. Built from
+/// virtual time only, so attaching monitors cannot perturb report
+/// equality checks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorSummary {
+    pub rule: String,
+    pub threshold: f64,
+    pub window_s: f64,
+    pub alerts: u64,
+    pub first_alert_s: Option<f64>,
+    pub peak: f64,
+}
+
+/// One sliding window of `(t_s, value)` samples with a running sum and an
+/// edge-trigger arm.
+#[derive(Debug, Clone)]
+struct Window {
+    samples: VecDeque<(f64, f64)>,
+    sum: f64,
+    armed: bool,
+}
+
+impl Window {
+    fn new() -> Window {
+        Window { samples: VecDeque::new(), sum: 0.0, armed: true }
+    }
+
+    /// Append a sample and evict everything older than `t_s − window_s`.
+    fn push(&mut self, t_s: f64, value: f64, window_s: f64) {
+        self.samples.push_back((t_s, value));
+        self.sum += value;
+        while let Some(&(t0, v0)) = self.samples.front() {
+            if t0 >= t_s - window_s {
+                break;
+            }
+            self.samples.pop_front();
+            self.sum -= v0;
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RuleKind {
+    CarbonBudget,
+    SloBurn,
+    RejectDefer,
+}
+
+#[derive(Debug, Clone)]
+struct Rule {
+    kind: RuleKind,
+    threshold: f64,
+    /// Per-class windows for slo-burn (grown on demand); a single window
+    /// at index 0 otherwise.
+    windows: Vec<Window>,
+    alerts: u64,
+    first_alert_s: Option<f64>,
+    peak: f64,
+}
+
+impl Rule {
+    fn new(kind: RuleKind, threshold: f64) -> Rule {
+        Rule { kind, threshold, windows: Vec::new(), alerts: 0, first_alert_s: None, peak: 0.0 }
+    }
+
+    fn name(&self) -> &'static str {
+        match self.kind {
+            RuleKind::CarbonBudget => RULE_CARBON,
+            RuleKind::SloBurn => RULE_SLO,
+            RuleKind::RejectDefer => RULE_REJECT,
+        }
+    }
+}
+
+/// A set of sliding-window rules sharing one window length. Feed it every
+/// emitted event via [`MonitorSet::observe`], drain firings with
+/// [`MonitorSet::pop_fire`], and collect per-rule [`MonitorSummary`] rows
+/// at the end with [`MonitorSet::summaries`].
+#[derive(Debug, Clone)]
+pub struct MonitorSet {
+    window_s: f64,
+    rules: Vec<Rule>,
+    fired: Vec<AlertFire>,
+}
+
+impl MonitorSet {
+    /// An empty set evaluating over a trailing `window_s` of virtual time.
+    pub fn new(window_s: f64) -> MonitorSet {
+        MonitorSet { window_s, rules: Vec::new(), fired: Vec::new() }
+    }
+
+    /// Default window: one virtual hour.
+    pub const DEFAULT_WINDOW_S: f64 = 3_600.0;
+
+    /// Add a fleet-wide carbon burn-rate rule (gCO2 per virtual second).
+    pub fn carbon_budget(mut self, budget: CarbonBudget) -> MonitorSet {
+        self.rules.push(Rule::new(RuleKind::CarbonBudget, budget.g_per_s));
+        self
+    }
+
+    /// Add a per-class SLO-miss burn-rate rule (percent of windowed
+    /// completions missing their class SLO).
+    pub fn slo_burn_pct(mut self, pct: f64) -> MonitorSet {
+        self.rules.push(Rule::new(RuleKind::SloBurn, pct));
+        self
+    }
+
+    /// Add a reject/defer-rate rule (percent of windowed verdicts that
+    /// did not assign).
+    pub fn reject_defer_pct(mut self, pct: f64) -> MonitorSet {
+        self.rules.push(Rule::new(RuleKind::RejectDefer, pct));
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Parse the CLI spec: a comma list of `carbon-budget=G` (gCO2/s),
+    /// `slo-burn=PCT`, `reject-defer=PCT` and an optional shared
+    /// `window=SECONDS` (default one hour). At least one rule is required.
+    ///
+    /// `carbon-budget=0.5,slo-burn=5,window=1800`
+    pub fn parse(spec: &str) -> Result<MonitorSet, String> {
+        let mut window_s = MonitorSet::DEFAULT_WINDOW_S;
+        let mut rules: Vec<(RuleKind, f64)> = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("monitor term {tok:?} is not key=value"))?;
+            let v: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("monitor term {tok:?}: {val:?} is not a number"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("monitor term {tok:?} must be finite and >= 0"));
+            }
+            match key.trim() {
+                "window" => {
+                    if v <= 0.0 {
+                        return Err("monitor window must be > 0 seconds".into());
+                    }
+                    window_s = v;
+                }
+                RULE_CARBON => rules.push((RuleKind::CarbonBudget, v)),
+                RULE_SLO => rules.push((RuleKind::SloBurn, v)),
+                RULE_REJECT => rules.push((RuleKind::RejectDefer, v)),
+                other => {
+                    return Err(format!(
+                        "unknown monitor rule {other:?}; expected {RULE_CARBON}, {RULE_SLO}, \
+                         {RULE_REJECT} or window"
+                    ))
+                }
+            }
+        }
+        if rules.is_empty() {
+            return Err(format!(
+                "empty monitor spec; expected a comma list like {RULE_CARBON}=0.5,window=1800"
+            ));
+        }
+        let mut set = MonitorSet::new(window_s);
+        for (kind, threshold) in rules {
+            set.rules.push(Rule::new(kind, threshold));
+        }
+        Ok(set)
+    }
+
+    /// Evaluate every rule against one emitted event, queueing an
+    /// [`AlertFire`] per below→above threshold crossing. Alert events
+    /// themselves are ignored (a monitor never feeds on its own output).
+    pub fn observe(&mut self, ev: &TraceEvent<'_>) {
+        match *ev {
+            TraceEvent::Completion { t_s, carbon_g, class, slo_missed, .. } => {
+                self.deposit_carbon(t_s, carbon_g);
+                self.record_slo(t_s, class, slo_missed);
+            }
+            TraceEvent::MicrogridSlice { t1_s, carbon_g, .. } => {
+                self.deposit_carbon(t1_s, carbon_g);
+            }
+            TraceEvent::IdleSlice { t1_s, carbon_g, .. } => {
+                self.deposit_carbon(t1_s, carbon_g);
+            }
+            TraceEvent::Decision { t_s, verdict, .. } => {
+                let non_assign = !matches!(verdict, SchedulingDecision::Assign(_));
+                self.record_verdict(t_s, non_assign);
+            }
+            _ => {}
+        }
+    }
+
+    /// Drain the next queued firing (FIFO), if any.
+    pub fn pop_fire(&mut self) -> Option<AlertFire> {
+        if self.fired.is_empty() {
+            None
+        } else {
+            Some(self.fired.remove(0))
+        }
+    }
+
+    /// Deterministic per-rule summaries, in rule-registration order.
+    pub fn summaries(&self) -> Vec<MonitorSummary> {
+        self.rules
+            .iter()
+            .map(|r| MonitorSummary {
+                rule: r.name().to_string(),
+                threshold: r.threshold,
+                window_s: self.window_s,
+                alerts: r.alerts,
+                first_alert_s: r.first_alert_s,
+                peak: r.peak,
+            })
+            .collect()
+    }
+
+    fn deposit_carbon(&mut self, t_s: f64, carbon_g: f64) {
+        let window_s = self.window_s;
+        for r in self.rules.iter_mut().filter(|r| r.kind == RuleKind::CarbonBudget) {
+            if r.windows.is_empty() {
+                r.windows.push(Window::new());
+            }
+            r.windows[0].push(t_s, carbon_g, window_s);
+            let value = r.windows[0].sum / window_s;
+            Self::trigger(&mut self.fired, r, 0, None, t_s, value, window_s);
+        }
+    }
+
+    fn record_slo(&mut self, t_s: f64, class: usize, missed: bool) {
+        let window_s = self.window_s;
+        for r in self.rules.iter_mut().filter(|r| r.kind == RuleKind::SloBurn) {
+            while r.windows.len() <= class {
+                r.windows.push(Window::new());
+            }
+            let w = &mut r.windows[class];
+            w.push(t_s, if missed { 1.0 } else { 0.0 }, window_s);
+            if w.samples.len() < MIN_RATE_SAMPLES {
+                continue;
+            }
+            let value = 100.0 * w.sum / w.samples.len() as f64;
+            Self::trigger(&mut self.fired, r, class, Some(class), t_s, value, window_s);
+        }
+    }
+
+    fn record_verdict(&mut self, t_s: f64, non_assign: bool) {
+        let window_s = self.window_s;
+        for r in self.rules.iter_mut().filter(|r| r.kind == RuleKind::RejectDefer) {
+            if r.windows.is_empty() {
+                r.windows.push(Window::new());
+            }
+            let w = &mut r.windows[0];
+            w.push(t_s, if non_assign { 1.0 } else { 0.0 }, window_s);
+            if w.samples.len() < MIN_RATE_SAMPLES {
+                continue;
+            }
+            let value = 100.0 * w.sum / w.samples.len() as f64;
+            Self::trigger(&mut self.fired, r, 0, None, t_s, value, window_s);
+        }
+    }
+
+    /// Shared edge-trigger: fire on a below→above crossing of the rule's
+    /// threshold, re-arm once the value falls back to or under it.
+    fn trigger(
+        fired: &mut Vec<AlertFire>,
+        rule: &mut Rule,
+        widx: usize,
+        class: Option<usize>,
+        t_s: f64,
+        value: f64,
+        window_s: f64,
+    ) {
+        rule.peak = rule.peak.max(value);
+        let armed = &mut rule.windows[widx].armed;
+        if value > rule.threshold {
+            if *armed {
+                *armed = false;
+                rule.alerts += 1;
+                rule.first_alert_s.get_or_insert(t_s);
+                fired.push(AlertFire {
+                    rule: rule.name(),
+                    t_s,
+                    value,
+                    threshold: rule.threshold,
+                    window_s,
+                    class,
+                });
+            }
+        } else {
+            *armed = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn completion(t_s: f64, carbon_g: f64, class: usize, slo_missed: bool) -> TraceEvent<'static> {
+        TraceEvent::Completion {
+            t_s,
+            arrival_s: t_s - 1.0,
+            node: "edge-a",
+            class,
+            service_ms: 200.0,
+            latency_ms: 1_000.0,
+            energy_j: 10.0,
+            carbon_g,
+            missed: false,
+            slo_missed,
+        }
+    }
+
+    #[test]
+    fn parse_builds_rules_and_window() {
+        let m = MonitorSet::parse("carbon-budget=0.5, slo-burn=5, reject-defer=20, window=1800")
+            .unwrap();
+        assert_eq!(m.rules.len(), 3);
+        assert_eq!(m.window_s(), 1_800.0);
+        let s = m.summaries();
+        assert_eq!(s[0].rule, "carbon-budget");
+        assert_eq!(s[0].threshold, 0.5);
+        assert_eq!(s[1].rule, "slo-burn");
+        assert_eq!(s[2].rule, "reject-defer");
+        assert!(MonitorSet::parse("window=600").is_err(), "window alone is not a rule");
+        assert!(MonitorSet::parse("carbon-budget=x").is_err());
+        assert!(MonitorSet::parse("bogus=1").is_err());
+        assert!(MonitorSet::parse("").is_err());
+    }
+
+    #[test]
+    fn carbon_budget_fires_once_per_sustained_breach() {
+        // 10 s window, budget 1 g/s. Deposits of 6 g at 1 Hz breach at
+        // the second deposit (12 g / 10 s) and stay breached — exactly
+        // one alert until the stream goes quiet and the window drains.
+        let mut m = MonitorSet::new(10.0).carbon_budget(CarbonBudget { g_per_s: 1.0 });
+        for i in 0..8 {
+            m.observe(&completion(i as f64, 6.0, 0, false));
+        }
+        let fire = m.pop_fire().expect("budget breach must fire");
+        assert_eq!(fire.rule, "carbon-budget");
+        assert_eq!(fire.t_s, 1.0);
+        assert!(fire.value > 1.0);
+        assert!(m.pop_fire().is_none(), "sustained breach is one alert");
+        // The window drains below budget, then a fresh breach re-fires.
+        m.observe(&completion(100.0, 0.0, 0, false));
+        m.observe(&completion(101.0, 6.0, 0, false));
+        m.observe(&completion(102.0, 6.0, 0, false));
+        let again = m.pop_fire().expect("re-armed rule must fire again");
+        assert_eq!(again.t_s, 102.0);
+        let s = &m.summaries()[0];
+        assert_eq!(s.alerts, 2);
+        assert_eq!(s.first_alert_s, Some(1.0));
+        assert!(s.peak > 1.0);
+    }
+
+    #[test]
+    fn slo_burn_is_per_class_and_needs_min_samples() {
+        let mut m = MonitorSet::new(1_000.0).slo_burn_pct(25.0);
+        // Class 1 misses every completion, class 0 never: only class 1
+        // fires, and only once its window holds MIN_RATE_SAMPLES.
+        for i in 0..MIN_RATE_SAMPLES {
+            m.observe(&completion(i as f64, 0.0, 1, true));
+            m.observe(&completion(i as f64, 0.0, 0, false));
+            if i + 1 < MIN_RATE_SAMPLES {
+                assert!(m.pop_fire().is_none(), "fired below the sample floor at {i}");
+            }
+        }
+        let fire = m.pop_fire().expect("class 1 burns 100%");
+        assert_eq!(fire.rule, "slo-burn");
+        assert_eq!(fire.class, Some(1));
+        assert_eq!(fire.value, 100.0);
+        assert!(m.pop_fire().is_none(), "class 0 never burns");
+    }
+
+    #[test]
+    fn reject_defer_rate_counts_non_assign_verdicts() {
+        use crate::scheduler::DecisionExplain;
+        let explain = DecisionExplain::default();
+        let mut m = MonitorSet::new(1_000.0).reject_defer_pct(50.0);
+        for i in 0..(2 * MIN_RATE_SAMPLES) {
+            let verdict = if i % 4 == 0 {
+                SchedulingDecision::Assign(0)
+            } else {
+                SchedulingDecision::Defer { until_s: i as f64 + 10.0 }
+            };
+            m.observe(&TraceEvent::Decision {
+                t_s: i as f64,
+                arrival_s: i as f64,
+                ctx: "arrival",
+                verdict,
+                node: None,
+                explain: &explain,
+                decide_ns: 100,
+            });
+        }
+        let fire = m.pop_fire().expect("75% non-assign beats 50%");
+        assert_eq!(fire.rule, "reject-defer");
+        assert!(fire.value > 50.0, "value {}", fire.value);
+        assert_eq!(fire.class, None);
+    }
+
+    #[test]
+    fn alert_events_do_not_feed_monitors() {
+        let mut m = MonitorSet::new(10.0).carbon_budget(CarbonBudget { g_per_s: 0.0 });
+        m.observe(&TraceEvent::Alert {
+            t_s: 1.0,
+            rule: "carbon-budget",
+            value: 9.0,
+            threshold: 0.0,
+            window_s: 10.0,
+            class: None,
+        });
+        assert!(m.pop_fire().is_none());
+        assert_eq!(m.summaries()[0].alerts, 0);
+    }
+}

@@ -1,0 +1,922 @@
+//! Trace replay & audit: re-derive a full [`SimReport`] from an NDJSON
+//! firehose, and diff two traces for determinism debugging.
+//!
+//! The firehose (PR 6) made every engine event visible; this module makes
+//! it *verifiable*. [`FirehoseReader`] streams a trace line-at-a-time
+//! through [`Json::parse`] (constant memory — a 10M-request trace never
+//! lives in RAM), [`ReplayState`] folds the events into the same ledger
+//! sums the live engine keeps, and [`verify`] confronts the reconstruction
+//! with the live report: integer counters must match exactly, energy and
+//! carbon to float tolerance. A trace that replays clean is an
+//! independently audited carbon ledger — the paper's per-gCO2 claims
+//! re-derived from raw events rather than trusted from the aggregator.
+//!
+//! Requirements on the trace: it must carry a `run_meta` header and every
+//! event kind (`--trace-filter all`, the default). Replay reconstructs
+//! everything except per-node SoC timelines/projections (interior battery
+//! state is not on the event stream) and monitor summaries; [`verify`]
+//! skips those fields.
+//!
+//! [`diff`] compares two traces event-by-event and reports the first
+//! divergence (line, kind, virtual time, field) — the tool the sharded-
+//! engine determinism work needs: two runs that should be identical are
+//! localised to the exact event where they stopped agreeing, instead of
+//! eyeballing two end-of-run reports.
+
+use std::collections::HashMap;
+use std::io::{self, BufRead};
+
+use crate::carbon::joules_to_kwh;
+use crate::sim::report::{sum_storage, sum_supply, summary_or_zero};
+use crate::sim::{ClassUsage, NodeUsage, SimReport};
+use crate::util::json::Json;
+
+use super::EventKind;
+
+/// Relative tolerance for float comparisons in [`verify`]; the engine and
+/// the replay sum the same per-event values in the same order, so real
+/// agreement is ~1e-15 — 1e-6 is the audit threshold, not the noise floor.
+pub const VERIFY_REL_TOL: f64 = 1e-6;
+/// Absolute floor for near-zero comparisons in [`verify`].
+pub const VERIFY_ABS_TOL: f64 = 1e-9;
+
+/// Streams NDJSON trace lines through [`Json::parse`], one at a time over
+/// a reused buffer — no whole-file read, no line vector.
+pub struct FirehoseReader<R: io::BufRead> {
+    input: R,
+    buf: String,
+    line: u64,
+}
+
+impl<R: io::BufRead> FirehoseReader<R> {
+    pub fn new(input: R) -> FirehoseReader<R> {
+        FirehoseReader { input, buf: String::new(), line: 0 }
+    }
+
+    /// 1-indexed number of the last line handed out.
+    pub fn line(&self) -> u64 {
+        self.line
+    }
+
+    /// Next non-empty line as a parsed [`Json`] event, `None` at EOF.
+    pub fn next_event(&mut self) -> Result<Option<Json>, String> {
+        loop {
+            self.buf.clear();
+            let n = self
+                .input
+                .read_line(&mut self.buf)
+                .map_err(|e| format!("trace read error after line {}: {e}", self.line))?;
+            if n == 0 {
+                return Ok(None);
+            }
+            self.line += 1;
+            let text = self.buf.trim();
+            if text.is_empty() {
+                continue;
+            }
+            return Json::parse(text)
+                .map(Some)
+                .map_err(|e| format!("trace line {}: {e}", self.line));
+        }
+    }
+}
+
+/// The run header, from the trace's `run_meta` event.
+struct Meta {
+    scenario: String,
+    scheduler: String,
+    seed: u64,
+    requests_declared: u64,
+    node_names: Vec<String>,
+    node_microgrid: Vec<bool>,
+    node_index: HashMap<String, usize>,
+    class_names: Vec<String>,
+    class_slo_s: Vec<f64>,
+}
+
+/// Per-node replay ledger, mirroring the engine's per-node accumulators.
+#[derive(Default, Clone)]
+struct NodeAcc {
+    tasks: u64,
+    busy_ms: f64,
+    energy_dynamic_kwh: f64,
+    carbon_dynamic_g: f64,
+    uptime_s: f64,
+    idle_energy_j: f64,
+    idle_carbon_g: f64,
+    pv_j: f64,
+    battery_j: f64,
+    grid_j: f64,
+    grid_charge_j: f64,
+    charged_g: f64,
+    battery_g: f64,
+    /// Stored embodied carbon after the node's *latest* settlement slice —
+    /// the last slice in the trace ends at the horizon, so this finishes
+    /// as the report's `carbon_stored_g`.
+    stored_g: f64,
+    queue_delay_ms: Vec<f64>,
+}
+
+/// Per-class replay ledger.
+#[derive(Default, Clone)]
+struct ClassAcc {
+    completed: u64,
+    slo_missed: u64,
+    batches: u64,
+    latency_ms: Vec<f64>,
+    energy_j: f64,
+    carbon_g: f64,
+}
+
+/// Folds trace events into the same sums the live engine keeps, then
+/// produces a [`SimReport`] via [`ReplayState::finish`]. Counter
+/// identities, per event kind:
+///
+/// - `arrival` → `requests`; `defer_release` → `deferred`; `completion` →
+///   `completed` (+ per-node/per-class ledgers, latency, makespan);
+///   `rejected` falls out of conservation (`requests − completed` — every
+///   arrival terminates as exactly one of the two once the heap drains).
+/// - `decision` with `ctx == "migration"` and an `assign` verdict →
+///   `migrated`.
+/// - `mg_slice` → supply splits, idle/dynamic carbon shares, the
+///   stored-carbon ledger; `idle_slice` → uptime and the grid-only idle
+///   floor; `batch_formed` → per-class batch counts.
+pub struct ReplayState {
+    meta: Option<Meta>,
+    events: u64,
+    requests: u64,
+    completed: u64,
+    deferred: u64,
+    migrated: u64,
+    deadline_missed: u64,
+    makespan_s: f64,
+    energy_total_j: f64,
+    carbon_dynamic_g: f64,
+    latency_ms: Vec<f64>,
+    wait_ms: Vec<f64>,
+    nodes: Vec<NodeAcc>,
+    classes: Vec<ClassAcc>,
+}
+
+impl Default for ReplayState {
+    fn default() -> Self {
+        ReplayState::new()
+    }
+}
+
+fn num(ev: &Json, key: &str) -> Result<f64, String> {
+    ev.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing number field {key:?}"))
+}
+
+fn text<'j>(ev: &'j Json, key: &str) -> Result<&'j str, String> {
+    ev.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing string field {key:?}"))
+}
+
+fn flag(ev: &Json, key: &str) -> Result<bool, String> {
+    ev.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| format!("missing bool field {key:?}"))
+}
+
+impl ReplayState {
+    pub fn new() -> ReplayState {
+        ReplayState {
+            meta: None,
+            events: 0,
+            requests: 0,
+            completed: 0,
+            deferred: 0,
+            migrated: 0,
+            deadline_missed: 0,
+            makespan_s: 0.0,
+            energy_total_j: 0.0,
+            carbon_dynamic_g: 0.0,
+            latency_ms: Vec::new(),
+            wait_ms: Vec::new(),
+            nodes: Vec::new(),
+            classes: Vec::new(),
+        }
+    }
+
+    /// Events folded so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Fold one parsed trace event into the ledgers.
+    pub fn apply(&mut self, ev: &Json) -> Result<(), String> {
+        let label = text(ev, "kind")?;
+        let kind = EventKind::parse(label)
+            .ok_or_else(|| format!("unknown event kind {label:?}"))?;
+        self.events += 1;
+        if kind == EventKind::RunMeta {
+            return self.apply_meta(ev);
+        }
+        if self.meta.is_none() {
+            return Err(format!(
+                "event {label:?} before the run_meta header — replay needs a full trace \
+                 (--trace-filter all)"
+            ));
+        }
+        match kind {
+            EventKind::Arrival => self.requests += 1,
+            EventKind::Decision => {
+                if text(ev, "ctx")? == "migration" && text(ev, "verdict")? == "assign" {
+                    self.migrated += 1;
+                }
+            }
+            EventKind::Dispatch => {
+                let g = self.node_idx(text(ev, "node")?)?;
+                let qd = num(ev, "queue_delay_est_ms")?;
+                self.nodes[g].queue_delay_ms.push(qd);
+            }
+            EventKind::DeferRelease => self.deferred += 1,
+            EventKind::Completion => self.apply_completion(ev)?,
+            EventKind::Churn | EventKind::Alert => {}
+            EventKind::MicrogridSlice => self.apply_mg_slice(ev)?,
+            EventKind::IdleSlice => {
+                let g = self.node_idx(text(ev, "node")?)?;
+                let dt = num(ev, "t1_s")? - num(ev, "t0_s")?;
+                let n = &mut self.nodes[g];
+                n.uptime_s += dt;
+                n.idle_energy_j += num(ev, "energy_j")?;
+                n.idle_carbon_g += num(ev, "carbon_g")?;
+            }
+            EventKind::BatchFormed => {
+                let class = self.class_idx(ev)?;
+                self.classes[class].batches += 1;
+            }
+            EventKind::RunMeta => unreachable!("handled above"),
+        }
+        Ok(())
+    }
+
+    fn apply_meta(&mut self, ev: &Json) -> Result<(), String> {
+        if self.meta.is_some() {
+            return Err("second run_meta header — one trace per file".into());
+        }
+        let nodes = ev.get("nodes").and_then(Json::as_arr).ok_or("run_meta missing nodes")?;
+        let mut node_names = Vec::with_capacity(nodes.len());
+        let mut node_microgrid = Vec::with_capacity(nodes.len());
+        let mut node_index = HashMap::with_capacity(nodes.len());
+        for n in nodes {
+            let name = text(n, "node")?;
+            node_index.insert(name.to_string(), node_names.len());
+            node_names.push(name.to_string());
+            node_microgrid.push(flag(n, "microgrid")?);
+        }
+        let classes =
+            ev.get("classes").and_then(Json::as_arr).ok_or("run_meta missing classes")?;
+        let mut class_names = Vec::with_capacity(classes.len());
+        let mut class_slo_s = Vec::with_capacity(classes.len());
+        for c in classes {
+            class_names.push(text(c, "class")?.to_string());
+            // Infinite SLOs serialise as null (fnum convention).
+            class_slo_s.push(c.get("slo_s").and_then(Json::as_f64).unwrap_or(f64::INFINITY));
+        }
+        self.nodes = vec![NodeAcc::default(); node_names.len()];
+        // Class ledgers exist even for legacy single-class runs (class 0
+        // absorbs everything), mirroring the engine; reported only when
+        // the meta declared a mix.
+        self.classes = vec![ClassAcc::default(); class_names.len().max(1)];
+        self.meta = Some(Meta {
+            scenario: text(ev, "scenario")?.to_string(),
+            scheduler: text(ev, "scheduler")?.to_string(),
+            seed: num(ev, "seed")? as u64,
+            requests_declared: num(ev, "requests")? as u64,
+            node_names,
+            node_microgrid,
+            node_index,
+            class_names,
+            class_slo_s,
+        });
+        Ok(())
+    }
+
+    fn apply_completion(&mut self, ev: &Json) -> Result<(), String> {
+        let g = self.node_idx(text(ev, "node")?)?;
+        let class = self.class_idx(ev)?;
+        let t_s = num(ev, "t_s")?;
+        let service_ms = num(ev, "service_ms")?;
+        let latency_ms = num(ev, "latency_ms")?;
+        let energy_j = num(ev, "energy_j")?;
+        let carbon_g = num(ev, "carbon_g")?;
+        let n = &mut self.nodes[g];
+        n.tasks += 1;
+        n.busy_ms += service_ms;
+        // Per-completion kWh conversion, exactly as the engine's node
+        // ledger does it (the fleet total converts the joule sum once).
+        n.energy_dynamic_kwh += joules_to_kwh(energy_j);
+        n.carbon_dynamic_g += carbon_g;
+        self.energy_total_j += energy_j;
+        self.carbon_dynamic_g += carbon_g;
+        self.completed += 1;
+        self.latency_ms.push(latency_ms);
+        // The engine samples wait at service start: latency − service.
+        self.wait_ms.push(latency_ms - service_ms);
+        if flag(ev, "missed")? {
+            self.deadline_missed += 1;
+        }
+        let c = &mut self.classes[class];
+        c.completed += 1;
+        c.latency_ms.push(latency_ms);
+        c.energy_j += energy_j;
+        c.carbon_g += carbon_g;
+        if flag(ev, "slo_missed")? {
+            c.slo_missed += 1;
+        }
+        self.makespan_s = self.makespan_s.max(t_s);
+        Ok(())
+    }
+
+    fn apply_mg_slice(&mut self, ev: &Json) -> Result<(), String> {
+        let g = self.node_idx(text(ev, "node")?)?;
+        let carbon_g = num(ev, "carbon_g")?;
+        let idle_g = num(ev, "idle_g")?;
+        let n = &mut self.nodes[g];
+        n.pv_j += num(ev, "pv_j")?;
+        n.battery_j += num(ev, "battery_j")?;
+        n.grid_j += num(ev, "grid_j")?;
+        n.grid_charge_j += num(ev, "grid_charge_j")?;
+        n.charged_g += num(ev, "charge_g")?;
+        n.battery_g += num(ev, "battery_g")?;
+        n.stored_g = num(ev, "stored_g")?;
+        // The slice's carbon splits idle/dynamic exactly as the engine
+        // attributed it.
+        n.idle_carbon_g += idle_g;
+        let dyn_g = carbon_g - idle_g;
+        n.carbon_dynamic_g += dyn_g;
+        self.carbon_dynamic_g += dyn_g;
+        Ok(())
+    }
+
+    fn node_idx(&self, name: &str) -> Result<usize, String> {
+        self.meta
+            .as_ref()
+            .and_then(|m| m.node_index.get(name).copied())
+            .ok_or_else(|| format!("node {name:?} not in the run_meta roster"))
+    }
+
+    fn class_idx(&self, ev: &Json) -> Result<usize, String> {
+        let class = ev
+            .get("class")
+            .and_then(Json::as_usize)
+            .ok_or("missing non-negative integer field \"class\"")?;
+        if class >= self.classes.len() {
+            return Err(format!(
+                "class {class} out of range ({} declared in run_meta)",
+                self.classes.len()
+            ));
+        }
+        Ok(class)
+    }
+
+    /// Assemble the reconstructed [`SimReport`]. SoC timelines/projections
+    /// and monitor summaries are not reconstructible from the stream and
+    /// stay empty ([`verify`] skips them).
+    pub fn finish(self) -> Result<SimReport, String> {
+        let meta = self.meta.ok_or("trace has no run_meta header (--trace-filter all)")?;
+        if self.completed > self.requests {
+            return Err(format!(
+                "{} completions for {} arrivals — trace is truncated or mixed",
+                self.completed, self.requests
+            ));
+        }
+        let nodes: Vec<NodeUsage> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let idle_kwh = joules_to_kwh(n.idle_energy_j);
+                let microgrid = meta.node_microgrid[i];
+                let (pv, battery, grid) = if microgrid {
+                    (joules_to_kwh(n.pv_j), joules_to_kwh(n.battery_j), joules_to_kwh(n.grid_j))
+                } else {
+                    (0.0, 0.0, n.energy_dynamic_kwh + idle_kwh)
+                };
+                let qd = summary_or_zero(&n.queue_delay_ms);
+                NodeUsage {
+                    name: meta.node_names[i].clone(),
+                    tasks: n.tasks,
+                    busy_ms: n.busy_ms,
+                    uptime_s: n.uptime_s,
+                    queue_delay_ms_p50: qd.p50,
+                    queue_delay_ms_p99: qd.p99,
+                    queue_delay_ms_max: qd.max,
+                    energy_dynamic_kwh: n.energy_dynamic_kwh,
+                    energy_idle_kwh: idle_kwh,
+                    carbon_dynamic_g: n.carbon_dynamic_g,
+                    carbon_idle_g: n.idle_carbon_g,
+                    microgrid,
+                    energy_pv_kwh: pv,
+                    energy_battery_kwh: battery,
+                    energy_grid_kwh: grid,
+                    energy_grid_charge_kwh: joules_to_kwh(n.grid_charge_j),
+                    carbon_charged_g: n.charged_g,
+                    carbon_battery_g: n.battery_g,
+                    carbon_stored_g: n.stored_g,
+                    soc_timeline: Vec::new(),
+                    soc_projection: Vec::new(),
+                }
+            })
+            .collect();
+        let (energy_pv_kwh_total, energy_battery_kwh_total, energy_grid_kwh_total) =
+            sum_supply(&nodes);
+        let (
+            energy_grid_charge_kwh_total,
+            carbon_charged_g_total,
+            carbon_battery_g_total,
+            carbon_stored_g_total,
+        ) = sum_storage(&nodes);
+        let classes: Vec<ClassUsage> = meta
+            .class_names
+            .iter()
+            .enumerate()
+            .map(|(c, name)| {
+                let acc = &self.classes[c];
+                ClassUsage {
+                    name: name.clone(),
+                    completed: acc.completed,
+                    slo_s: meta.class_slo_s[c],
+                    slo_missed: acc.slo_missed,
+                    batches: acc.batches,
+                    latency_ms: summary_or_zero(&acc.latency_ms),
+                    energy_dynamic_kwh: joules_to_kwh(acc.energy_j),
+                    carbon_dynamic_g: acc.carbon_g,
+                    carbon_per_req_g: if acc.completed > 0 {
+                        acc.carbon_g / acc.completed as f64
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect();
+        let energy_idle_kwh_total =
+            joules_to_kwh(self.nodes.iter().map(|n| n.idle_energy_j).sum::<f64>());
+        let carbon_idle_g_total: f64 = self.nodes.iter().map(|n| n.idle_carbon_g).sum();
+        let energy_dynamic_kwh_total = joules_to_kwh(self.energy_total_j);
+        Ok(SimReport {
+            scenario: meta.scenario,
+            scheduler: meta.scheduler,
+            seed: meta.seed,
+            requests: self.requests,
+            completed: self.completed,
+            // Conservation: the heap drains fully, so every arrival ends
+            // as exactly one completion or rejection.
+            rejected: self.requests - self.completed,
+            migrated: self.migrated,
+            deferred: self.deferred,
+            deadline_missed: self.deadline_missed,
+            makespan_s: self.makespan_s,
+            throughput_rps: if self.makespan_s > 0.0 {
+                self.completed as f64 / self.makespan_s
+            } else {
+                0.0
+            },
+            latency_ms: summary_or_zero(&self.latency_ms),
+            wait_ms: summary_or_zero(&self.wait_ms),
+            energy_kwh_total: energy_dynamic_kwh_total + energy_idle_kwh_total,
+            energy_dynamic_kwh_total,
+            energy_idle_kwh_total,
+            energy_pv_kwh_total,
+            energy_battery_kwh_total,
+            energy_grid_kwh_total,
+            energy_grid_charge_kwh_total,
+            carbon_charged_g_total,
+            carbon_battery_g_total,
+            carbon_stored_g_total,
+            carbon_g_total: self.carbon_dynamic_g + carbon_idle_g_total,
+            carbon_dynamic_g_total: self.carbon_dynamic_g,
+            carbon_idle_g_total,
+            carbon_per_req_g: if self.completed > 0 {
+                (self.carbon_dynamic_g + carbon_idle_g_total) / self.completed as f64
+            } else {
+                0.0
+            },
+            classes,
+            nodes,
+            monitors: Vec::new(),
+        })
+    }
+}
+
+/// Replay an entire trace from `input` to a reconstructed [`SimReport`]
+/// plus the event count folded.
+pub fn replay_report<R: BufRead>(input: R) -> Result<(SimReport, u64), String> {
+    let mut reader = FirehoseReader::new(input);
+    let mut state = ReplayState::new();
+    while let Some(ev) = reader.next_event()? {
+        state.apply(&ev).map_err(|e| format!("trace line {}: {e}", reader.line()))?;
+    }
+    let events = state.events();
+    Ok((state.finish()?, events))
+}
+
+// -- verification -----------------------------------------------------------
+
+fn close(a: f64, b: f64) -> bool {
+    let d = (a - b).abs();
+    d <= VERIFY_ABS_TOL || d <= VERIFY_REL_TOL * a.abs().max(b.abs())
+}
+
+struct Verifier {
+    mismatches: Vec<String>,
+}
+
+impl Verifier {
+    fn int(&mut self, field: &str, replayed: u64, live: u64) {
+        if replayed != live {
+            self.mismatches.push(format!("{field}: replayed {replayed} != live {live}"));
+        }
+    }
+
+    fn float(&mut self, field: &str, replayed: f64, live: f64) {
+        if !close(replayed, live) && !(replayed.is_nan() && live.is_nan()) {
+            self.mismatches.push(format!("{field}: replayed {replayed} != live {live}"));
+        }
+    }
+
+    fn str(&mut self, field: &str, replayed: &str, live: &str) {
+        if replayed != live {
+            self.mismatches
+                .push(format!("{field}: replayed {replayed:?} != live {live:?}"));
+        }
+    }
+
+    fn summary(
+        &mut self,
+        field: &str,
+        replayed: &crate::util::stats::Summary,
+        live: &crate::util::stats::Summary,
+    ) {
+        self.int(&format!("{field}.n"), replayed.n as u64, live.n as u64);
+        self.float(&format!("{field}.mean"), replayed.mean, live.mean);
+        self.float(&format!("{field}.p50"), replayed.p50, live.p50);
+        self.float(&format!("{field}.p95"), replayed.p95, live.p95);
+        self.float(&format!("{field}.p99"), replayed.p99, live.p99);
+        self.float(&format!("{field}.max"), replayed.max, live.max);
+    }
+}
+
+/// Confront a replayed report with the live one: integer counters exactly,
+/// floats within [`VERIFY_REL_TOL`]/[`VERIFY_ABS_TOL`]. Returns one line
+/// per mismatching field — empty means the trace audits clean. SoC
+/// timelines/projections and monitor summaries are live-only (not on the
+/// event stream) and are skipped.
+pub fn verify(replayed: &SimReport, live: &SimReport) -> Vec<String> {
+    let mut v = Verifier { mismatches: Vec::new() };
+    v.str("scenario", &replayed.scenario, &live.scenario);
+    v.str("scheduler", &replayed.scheduler, &live.scheduler);
+    v.int("seed", replayed.seed, live.seed);
+    v.int("requests", replayed.requests, live.requests);
+    v.int("completed", replayed.completed, live.completed);
+    v.int("rejected", replayed.rejected, live.rejected);
+    v.int("migrated", replayed.migrated, live.migrated);
+    v.int("deferred", replayed.deferred, live.deferred);
+    v.int("deadline_missed", replayed.deadline_missed, live.deadline_missed);
+    v.float("makespan_s", replayed.makespan_s, live.makespan_s);
+    v.float("throughput_rps", replayed.throughput_rps, live.throughput_rps);
+    v.summary("latency_ms", &replayed.latency_ms, &live.latency_ms);
+    v.summary("wait_ms", &replayed.wait_ms, &live.wait_ms);
+    v.float("energy_kwh_total", replayed.energy_kwh_total, live.energy_kwh_total);
+    v.float(
+        "energy_dynamic_kwh_total",
+        replayed.energy_dynamic_kwh_total,
+        live.energy_dynamic_kwh_total,
+    );
+    v.float("energy_idle_kwh_total", replayed.energy_idle_kwh_total, live.energy_idle_kwh_total);
+    v.float("energy_pv_kwh_total", replayed.energy_pv_kwh_total, live.energy_pv_kwh_total);
+    v.float(
+        "energy_battery_kwh_total",
+        replayed.energy_battery_kwh_total,
+        live.energy_battery_kwh_total,
+    );
+    v.float("energy_grid_kwh_total", replayed.energy_grid_kwh_total, live.energy_grid_kwh_total);
+    v.float(
+        "energy_grid_charge_kwh_total",
+        replayed.energy_grid_charge_kwh_total,
+        live.energy_grid_charge_kwh_total,
+    );
+    v.float("carbon_charged_g_total", replayed.carbon_charged_g_total, live.carbon_charged_g_total);
+    v.float("carbon_battery_g_total", replayed.carbon_battery_g_total, live.carbon_battery_g_total);
+    v.float("carbon_stored_g_total", replayed.carbon_stored_g_total, live.carbon_stored_g_total);
+    v.float("carbon_g_total", replayed.carbon_g_total, live.carbon_g_total);
+    v.float("carbon_dynamic_g_total", replayed.carbon_dynamic_g_total, live.carbon_dynamic_g_total);
+    v.float("carbon_idle_g_total", replayed.carbon_idle_g_total, live.carbon_idle_g_total);
+    v.float("carbon_per_req_g", replayed.carbon_per_req_g, live.carbon_per_req_g);
+    v.int("nodes.len", replayed.nodes.len() as u64, live.nodes.len() as u64);
+    for (r, l) in replayed.nodes.iter().zip(&live.nodes) {
+        let p = format!("node[{}]", l.name);
+        v.str(&format!("{p}.name"), &r.name, &l.name);
+        v.int(&format!("{p}.tasks"), r.tasks, l.tasks);
+        v.float(&format!("{p}.busy_ms"), r.busy_ms, l.busy_ms);
+        v.float(&format!("{p}.uptime_s"), r.uptime_s, l.uptime_s);
+        v.float(&format!("{p}.queue_delay_ms_p50"), r.queue_delay_ms_p50, l.queue_delay_ms_p50);
+        v.float(&format!("{p}.queue_delay_ms_p99"), r.queue_delay_ms_p99, l.queue_delay_ms_p99);
+        v.float(&format!("{p}.queue_delay_ms_max"), r.queue_delay_ms_max, l.queue_delay_ms_max);
+        v.float(&format!("{p}.energy_dynamic_kwh"), r.energy_dynamic_kwh, l.energy_dynamic_kwh);
+        v.float(&format!("{p}.energy_idle_kwh"), r.energy_idle_kwh, l.energy_idle_kwh);
+        v.float(&format!("{p}.carbon_dynamic_g"), r.carbon_dynamic_g, l.carbon_dynamic_g);
+        v.float(&format!("{p}.carbon_idle_g"), r.carbon_idle_g, l.carbon_idle_g);
+        v.int(&format!("{p}.microgrid"), r.microgrid as u64, l.microgrid as u64);
+        v.float(&format!("{p}.energy_pv_kwh"), r.energy_pv_kwh, l.energy_pv_kwh);
+        v.float(&format!("{p}.energy_battery_kwh"), r.energy_battery_kwh, l.energy_battery_kwh);
+        v.float(&format!("{p}.energy_grid_kwh"), r.energy_grid_kwh, l.energy_grid_kwh);
+        v.float(
+            &format!("{p}.energy_grid_charge_kwh"),
+            r.energy_grid_charge_kwh,
+            l.energy_grid_charge_kwh,
+        );
+        v.float(&format!("{p}.carbon_charged_g"), r.carbon_charged_g, l.carbon_charged_g);
+        v.float(&format!("{p}.carbon_battery_g"), r.carbon_battery_g, l.carbon_battery_g);
+        v.float(&format!("{p}.carbon_stored_g"), r.carbon_stored_g, l.carbon_stored_g);
+    }
+    v.int("classes.len", replayed.classes.len() as u64, live.classes.len() as u64);
+    for (r, l) in replayed.classes.iter().zip(&live.classes) {
+        let p = format!("class[{}]", l.name);
+        v.str(&format!("{p}.name"), &r.name, &l.name);
+        v.int(&format!("{p}.completed"), r.completed, l.completed);
+        v.int(&format!("{p}.slo_missed"), r.slo_missed, l.slo_missed);
+        v.int(&format!("{p}.batches"), r.batches, l.batches);
+        if r.slo_s.is_finite() || l.slo_s.is_finite() {
+            v.float(&format!("{p}.slo_s"), r.slo_s, l.slo_s);
+        }
+        v.summary(&format!("{p}.latency_ms"), &r.latency_ms, &l.latency_ms);
+        v.float(&format!("{p}.energy_dynamic_kwh"), r.energy_dynamic_kwh, l.energy_dynamic_kwh);
+        v.float(&format!("{p}.carbon_dynamic_g"), r.carbon_dynamic_g, l.carbon_dynamic_g);
+        v.float(&format!("{p}.carbon_per_req_g"), r.carbon_per_req_g, l.carbon_per_req_g);
+    }
+    v.mismatches
+}
+
+// -- trace diff -------------------------------------------------------------
+
+/// The first point where two traces stop agreeing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Divergence {
+    /// 1-indexed line number (same in both traces — diff stops at the
+    /// first divergent line).
+    pub line: u64,
+    /// Event kind at the divergence (trace A's, or B's if A ended first).
+    pub kind: String,
+    /// Virtual time of the divergent event (`t_s`/`t0_s`; 0 for the
+    /// run_meta header).
+    pub t_s: f64,
+    /// Dotted path of the first differing field, in sorted-key order —
+    /// `"<end-of-trace>"` when one trace is a prefix of the other.
+    pub field: String,
+    /// The two values at `field`, rendered as JSON (`"<missing>"` /
+    /// `"<end-of-trace>"` when absent).
+    pub a: String,
+    pub b: String,
+}
+
+impl Divergence {
+    /// One-line rendering: `line 84371: completion @ t=53211.4s diverges
+    /// at energy_j: 10.2 != 10.9`.
+    pub fn render(&self) -> String {
+        format!(
+            "line {}: {} @ t={}s diverges at {}: {} != {}",
+            self.line, self.kind, self.t_s, self.field, self.a, self.b
+        )
+    }
+}
+
+fn event_kind(ev: &Json) -> String {
+    ev.get("kind").and_then(Json::as_str).unwrap_or("?").to_string()
+}
+
+fn event_t(ev: &Json) -> f64 {
+    ev.get("t_s").or_else(|| ev.get("t0_s")).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// First differing field between two JSON values, as `(path, a, b)`.
+/// Objects walk keys in sorted order (BTreeMap) and arrays by index, so
+/// the answer is order-stable: the same pair of traces always names the
+/// same field.
+fn first_field_diff(path: &str, a: &Json, b: &Json) -> Option<(String, String, String)> {
+    match (a, b) {
+        (Json::Obj(oa), Json::Obj(ob)) => {
+            for (k, va) in oa {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                match ob.get(k) {
+                    Some(vb) => {
+                        if let Some(d) = first_field_diff(&sub, va, vb) {
+                            return Some(d);
+                        }
+                    }
+                    None => return Some((sub, va.to_string(), "<missing>".into())),
+                }
+            }
+            for (k, vb) in ob {
+                if !oa.contains_key(k) {
+                    let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                    return Some((sub, "<missing>".into(), vb.to_string()));
+                }
+            }
+            None
+        }
+        (Json::Arr(xa), Json::Arr(xb)) => {
+            for (i, (va, vb)) in xa.iter().zip(xb).enumerate() {
+                if let Some(d) = first_field_diff(&format!("{path}[{i}]"), va, vb) {
+                    return Some(d);
+                }
+            }
+            if xa.len() != xb.len() {
+                return Some((
+                    format!("{path}.len"),
+                    xa.len().to_string(),
+                    xb.len().to_string(),
+                ));
+            }
+            None
+        }
+        _ if a == b => None,
+        _ => Some((path.to_string(), a.to_string(), b.to_string())),
+    }
+}
+
+/// Walk two traces in lockstep and report the first divergent event, or
+/// `None` when they match line for line. Order-stable by construction:
+/// lines in file order, fields in sorted-key order.
+pub fn diff<A: BufRead, B: BufRead>(a: A, b: B) -> Result<Option<Divergence>, String> {
+    let mut ra = FirehoseReader::new(a);
+    let mut rb = FirehoseReader::new(b);
+    loop {
+        let ea = ra.next_event().map_err(|e| format!("trace A: {e}"))?;
+        let eb = rb.next_event().map_err(|e| format!("trace B: {e}"))?;
+        match (ea, eb) {
+            (None, None) => return Ok(None),
+            (Some(ev), None) => {
+                return Ok(Some(Divergence {
+                    line: ra.line(),
+                    kind: event_kind(&ev),
+                    t_s: event_t(&ev),
+                    field: "<end-of-trace>".into(),
+                    a: event_kind(&ev),
+                    b: "<end-of-trace>".into(),
+                }))
+            }
+            (None, Some(ev)) => {
+                return Ok(Some(Divergence {
+                    line: rb.line(),
+                    kind: event_kind(&ev),
+                    t_s: event_t(&ev),
+                    field: "<end-of-trace>".into(),
+                    a: "<end-of-trace>".into(),
+                    b: event_kind(&ev),
+                }))
+            }
+            (Some(ev_a), Some(ev_b)) => {
+                if let Some((field, va, vb)) = first_field_diff("", &ev_a, &ev_b) {
+                    return Ok(Some(Divergence {
+                        line: ra.line(),
+                        kind: event_kind(&ev_a),
+                        t_s: event_t(&ev_a),
+                        field,
+                        a: va,
+                        b: vb,
+                    }));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{"kind":"run_meta","scenario":"unit","scheduler":"green","seed":7,"requests":2,"nodes":[{"node":"a","microgrid":false}],"classes":[]}"#;
+
+    fn trace(lines: &[&str]) -> String {
+        let mut s = String::new();
+        for l in lines {
+            s.push_str(l);
+            s.push('\n');
+        }
+        s
+    }
+
+    #[test]
+    fn reader_streams_and_skips_blank_lines() {
+        let text = trace(&[META, "", r#"{"kind":"arrival","t_s":1,"deadline_s":null}"#]);
+        let mut r = FirehoseReader::new(text.as_bytes());
+        assert_eq!(r.next_event().unwrap().unwrap().get("kind").unwrap().as_str(), Some("run_meta"));
+        assert_eq!(r.next_event().unwrap().unwrap().get("kind").unwrap().as_str(), Some("arrival"));
+        assert_eq!(r.line(), 3);
+        assert!(r.next_event().unwrap().is_none());
+        let mut bad = FirehoseReader::new("not json\n".as_bytes());
+        assert!(bad.next_event().unwrap_err().contains("line 1"));
+    }
+
+    #[test]
+    fn replay_folds_a_tiny_trace_into_a_report() {
+        let text = trace(&[
+            META,
+            r#"{"kind":"arrival","t_s":0.5,"deadline_s":null}"#,
+            r#"{"kind":"dispatch","t_s":0.5,"arrival_s":0.5,"node":"a","queue_delay_est_ms":4}"#,
+            r#"{"kind":"completion","t_s":0.7,"arrival_s":0.5,"node":"a","class":0,"service_ms":200,"latency_ms":200,"energy_j":9,"carbon_g":0.02,"missed":false,"slo_missed":false}"#,
+            r#"{"kind":"arrival","t_s":1.0,"deadline_s":null}"#,
+            r#"{"kind":"idle_slice","t0_s":0,"t1_s":0.7,"node":"a","energy_j":3.5,"carbon_g":0.001}"#,
+        ]);
+        let (report, events) = replay_report(text.as_bytes()).unwrap();
+        assert_eq!(events, 6);
+        assert_eq!(report.scenario, "unit");
+        assert_eq!(report.scheduler, "green");
+        assert_eq!(report.seed, 7);
+        assert_eq!(report.requests, 2);
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.rejected, 1, "conservation: the unfinished arrival was rejected");
+        assert_eq!(report.makespan_s, 0.7);
+        assert!(report.classes.is_empty(), "no mix declared, no class rows");
+        let a = report.node("a").unwrap();
+        assert_eq!(a.tasks, 1);
+        assert_eq!(a.busy_ms, 200.0);
+        assert!((a.uptime_s - 0.7).abs() < 1e-12);
+        assert!((a.energy_dynamic_kwh - 9.0 / 3.6e6).abs() < 1e-18);
+        assert!((report.energy_idle_kwh_total - 3.5 / 3.6e6).abs() < 1e-18);
+        assert!((report.carbon_g_total - 0.021).abs() < 1e-12);
+        assert_eq!(a.queue_delay_ms_max, 4.0);
+        // Grid-only supply identity: everything came from the grid.
+        assert!((a.energy_grid_kwh - (a.energy_dynamic_kwh + a.energy_idle_kwh)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn replay_requires_the_header() {
+        let text = trace(&[r#"{"kind":"arrival","t_s":1,"deadline_s":null}"#]);
+        let err = replay_report(text.as_bytes()).unwrap_err();
+        assert!(err.contains("run_meta"), "{err}");
+        // And an empty trace fails at finish.
+        assert!(replay_report("".as_bytes()).unwrap_err().contains("run_meta"));
+    }
+
+    #[test]
+    fn verify_reports_nothing_for_identical_reports_and_names_drift() {
+        let (report, _) = replay_report(trace(&[META]).as_bytes()).unwrap();
+        assert!(verify(&report, &report).is_empty());
+        let mut drifted = report.clone();
+        drifted.completed = 5;
+        drifted.carbon_g_total += 1.0;
+        let problems = verify(&report, &drifted);
+        assert!(problems.iter().any(|p| p.starts_with("completed:")), "{problems:?}");
+        assert!(problems.iter().any(|p| p.starts_with("carbon_g_total:")), "{problems:?}");
+    }
+
+    #[test]
+    fn verify_tolerates_float_noise_but_not_integer_drift() {
+        let (report, _) = replay_report(trace(&[META]).as_bytes()).unwrap();
+        let mut noisy = report.clone();
+        noisy.makespan_s += 1e-12;
+        noisy.carbon_g_total *= 1.0 + 1e-9;
+        assert!(verify(&report, &noisy).is_empty(), "sub-tolerance float noise must pass");
+        let mut off = report.clone();
+        off.requests += 1;
+        assert_eq!(verify(&report, &off).len(), 2, "requests and the rejected identity drift");
+    }
+
+    #[test]
+    fn diff_finds_nothing_between_identical_traces() {
+        let text = trace(&[META, r#"{"kind":"arrival","t_s":1,"deadline_s":null}"#]);
+        assert_eq!(diff(text.as_bytes(), text.as_bytes()).unwrap(), None);
+    }
+
+    #[test]
+    fn diff_names_the_first_divergent_field_and_is_order_stable() {
+        let a = trace(&[
+            META,
+            r#"{"kind":"arrival","t_s":1,"deadline_s":null}"#,
+            r#"{"kind":"completion","t_s":2,"arrival_s":1,"node":"a","class":0,"service_ms":100,"latency_ms":1000,"energy_j":5,"carbon_g":0.4,"missed":false,"slo_missed":false}"#,
+        ]);
+        let b = trace(&[
+            META,
+            r#"{"kind":"arrival","t_s":1,"deadline_s":null}"#,
+            r#"{"kind":"completion","t_s":2,"arrival_s":1,"node":"a","class":0,"service_ms":100,"latency_ms":1000,"energy_j":5.5,"carbon_g":0.5,"missed":false,"slo_missed":false}"#,
+        ]);
+        let d = diff(a.as_bytes(), b.as_bytes()).unwrap().expect("must diverge");
+        assert_eq!(d.line, 3);
+        assert_eq!(d.kind, "completion");
+        assert_eq!(d.t_s, 2.0);
+        // carbon_g sorts before energy_j: sorted-key order is the stable tie-break.
+        assert_eq!(d.field, "carbon_g");
+        assert_eq!((d.a.as_str(), d.b.as_str()), ("0.4", "0.5"));
+        // Symmetric inputs produce the same location.
+        let d2 = diff(b.as_bytes(), a.as_bytes()).unwrap().expect("must diverge");
+        assert_eq!((d2.line, d2.field.as_str()), (3, "carbon_g"));
+        assert!(d.render().contains("line 3: completion @ t=2s"), "{}", d.render());
+    }
+
+    #[test]
+    fn diff_detects_truncation() {
+        let a = trace(&[META, r#"{"kind":"arrival","t_s":1,"deadline_s":null}"#]);
+        let b = trace(&[META]);
+        let d = diff(a.as_bytes(), b.as_bytes()).unwrap().expect("must diverge");
+        assert_eq!(d.line, 2);
+        assert_eq!(d.field, "<end-of-trace>");
+        assert_eq!(d.kind, "arrival");
+    }
+}

@@ -17,7 +17,7 @@ use std::io;
 
 use crate::util::json::JsonWriter;
 
-use super::EventKind;
+use super::{EventKind, MonitorSummary};
 
 /// The paper's scheduling-overhead envelope: 0.03 ms per decision, in ns.
 /// [`Telemetry::render`] and the bench/test guards compare against it.
@@ -156,6 +156,10 @@ pub struct Telemetry {
     /// Wall-clock cost of every `Scheduler::decide` call (ns) — the
     /// paper's 0.03 ms overhead envelope, measured in-process.
     pub decide_ns: Log2Histogram,
+    /// Per-rule monitor summaries when a [`crate::obs::MonitorSet`] was
+    /// attached ([`crate::sim::Simulation::try_run_monitored`]); empty
+    /// otherwise. Deterministic — virtual-time only.
+    pub monitors: Vec<MonitorSummary>,
 }
 
 impl Telemetry {
@@ -210,6 +214,18 @@ impl Telemetry {
             d.max(),
             d.count
         );
+        for m in &self.monitors {
+            let first = m
+                .first_alert_s
+                .map(|t| format!("first at t={t:.1}s"))
+                .unwrap_or_else(|| "never fired".into());
+            let _ = writeln!(
+                out,
+                "  monitor {:<12} {} alerts ({first})  peak {:.4} vs threshold {:.4}  \
+                 window {:.0}s",
+                m.rule, m.alerts, m.peak, m.threshold, m.window_s
+            );
+        }
         out
     }
 
@@ -229,6 +245,27 @@ impl Telemetry {
         j.key("decide_ns")?;
         self.decide_ns.write_json(j)?;
         j.field_num("overhead_envelope_ns", OVERHEAD_ENVELOPE_NS)?;
+        if !self.monitors.is_empty() {
+            j.key("monitors")?;
+            j.begin_arr()?;
+            for m in &self.monitors {
+                j.begin_obj()?;
+                j.field_str("rule", &m.rule)?;
+                j.field_fnum("threshold", m.threshold)?;
+                j.field_num("window_s", m.window_s)?;
+                j.field_num("alerts", m.alerts as f64)?;
+                match m.first_alert_s {
+                    Some(t) => j.field_num("first_alert_s", t)?,
+                    None => {
+                        j.key("first_alert_s")?;
+                        j.null()?;
+                    }
+                }
+                j.field_fnum("peak", m.peak)?;
+                j.end_obj()?;
+            }
+            j.end_arr()?;
+        }
         j.end_obj()
     }
 }
@@ -309,5 +346,40 @@ mod tests {
         assert_eq!(v.path(&["events", "dispatch"]).unwrap().as_i64(), Some(1));
         assert_eq!(v.path(&["latency_ms", "count"]).unwrap().as_i64(), Some(1));
         assert_eq!(v.get("overhead_envelope_ns").unwrap().as_f64(), Some(30_000.0));
+        assert!(v.get("monitors").is_none(), "no monitors attached, no key");
+    }
+
+    #[test]
+    fn telemetry_json_carries_monitor_summaries() {
+        let mut t = Telemetry::new();
+        t.monitors.push(MonitorSummary {
+            rule: "carbon-budget".into(),
+            threshold: 0.5,
+            window_s: 600.0,
+            alerts: 3,
+            first_alert_s: Some(42.5),
+            peak: 0.9,
+        });
+        t.monitors.push(MonitorSummary {
+            rule: "slo-burn".into(),
+            threshold: 10.0,
+            window_s: 600.0,
+            alerts: 0,
+            first_alert_s: None,
+            peak: 2.0,
+        });
+        let mut buf = Vec::new();
+        let mut j = JsonWriter::new(&mut buf);
+        t.write_json(&mut j).unwrap();
+        let v = crate::util::json::Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        let ms = v.get("monitors").unwrap().as_arr().unwrap();
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[0].get("rule").unwrap().as_str(), Some("carbon-budget"));
+        assert_eq!(ms[0].get("alerts").unwrap().as_i64(), Some(3));
+        assert_eq!(ms[0].get("first_alert_s").unwrap().as_f64(), Some(42.5));
+        assert_eq!(ms[1].get("first_alert_s"), Some(&crate::util::json::Json::Null));
+        let render = t.render();
+        assert!(render.contains("monitor carbon-budget"), "{render}");
+        assert!(render.contains("never fired"), "{render}");
     }
 }

@@ -68,7 +68,7 @@ use std::time::Instant;
 use crate::carbon::{emissions_g, joules_to_kwh, DeferralPolicy, IntensityTrace, LedgerEntry};
 use crate::microgrid::Microgrid;
 use crate::node::EdgeNode;
-use crate::obs::{EventKind as TraceKind, EventSink, Telemetry, TraceEvent};
+use crate::obs::{EventKind as TraceKind, EventSink, MonitorSet, Telemetry, TraceEvent};
 use crate::scheduler::{
     ClassNodeView, DecisionExplain, FleetView, NodeView, RouteThenDefer, Scheduler,
     SchedulingDecision, TaskDemand,
@@ -534,6 +534,12 @@ pub struct Simulation<'a> {
     /// unobserved hot paths construct nothing and read no clock.
     sink: Option<&'a mut dyn EventSink>,
     telem: Option<Telemetry>,
+    /// In-sim monitor rules ([`Simulation::try_run_monitored`]): every
+    /// emitted event is folded into sliding virtual-time windows and
+    /// threshold crossings fire [`TraceEvent::Alert`]s back into the
+    /// firehose. `None` on every other path — no window, no rule, nothing
+    /// constructed.
+    monitors: Option<MonitorSet>,
 }
 
 impl<'a> Simulation<'a> {
@@ -567,9 +573,9 @@ impl<'a> Simulation<'a> {
         let (report, _) = match &scenario.config.deferral {
             Some(d) if !scheduler.defers() => {
                 let mut gate = RouteThenDefer::new(scheduler, d.policy.clone());
-                Simulation::run_inner(scenario, &mut gate, &name, None)
+                Simulation::run_inner(scenario, &mut gate, &name, None, None)
             }
-            _ => Simulation::run_inner(scenario, scheduler, &name, None),
+            _ => Simulation::run_inner(scenario, scheduler, &name, None, None),
         };
         Ok(report)
     }
@@ -594,9 +600,38 @@ impl<'a> Simulation<'a> {
         let (report, telem) = match &scenario.config.deferral {
             Some(d) if !scheduler.defers() => {
                 let mut gate = RouteThenDefer::new(scheduler, d.policy.clone());
-                Simulation::run_inner(scenario, &mut gate, &name, Some(sink))
+                Simulation::run_inner(scenario, &mut gate, &name, Some(sink), None)
             }
-            _ => Simulation::run_inner(scenario, scheduler, &name, Some(sink)),
+            _ => Simulation::run_inner(scenario, scheduler, &name, Some(sink), None),
+        };
+        Ok((report, telem.expect("observed run always collects telemetry")))
+    }
+
+    /// Like [`Simulation::try_run_observed`], but with an in-sim
+    /// [`MonitorSet`] evaluated on every emitted event: sliding
+    /// virtual-time windows track carbon burn-rate, per-class SLO-miss
+    /// burn and reject/defer rate, threshold crossings fire
+    /// [`TraceEvent::Alert`] events into the sink, and the per-rule
+    /// summaries land in both the returned [`Telemetry`] and the report's
+    /// `monitors` field. Monitoring is deterministic — rules read virtual
+    /// time only — so every other report field stays bit-identical to the
+    /// unmonitored run.
+    pub fn try_run_monitored(
+        scenario: &'a Scenario,
+        scheduler: &mut dyn Scheduler,
+        sink: &'a mut dyn EventSink,
+        monitors: MonitorSet,
+    ) -> Result<(SimReport, Telemetry), String> {
+        scenario.validate()?;
+        let name = scheduler.name().to_string();
+        let (report, telem) = match &scenario.config.deferral {
+            Some(d) if !scheduler.defers() => {
+                let mut gate = RouteThenDefer::new(scheduler, d.policy.clone());
+                Simulation::run_inner(scenario, &mut gate, &name, Some(sink), Some(monitors))
+            }
+            _ => {
+                Simulation::run_inner(scenario, scheduler, &name, Some(sink), Some(monitors))
+            }
         };
         Ok((report, telem.expect("observed run always collects telemetry")))
     }
@@ -606,6 +641,7 @@ impl<'a> Simulation<'a> {
         scheduler: &mut dyn Scheduler,
         scheduler_name: &str,
         sink: Option<&'a mut dyn EventSink>,
+        monitors: Option<MonitorSet>,
     ) -> (SimReport, Option<Telemetry>) {
         let n = scenario.specs.len();
         debug_assert!(scenario.validate().is_ok());
@@ -689,8 +725,37 @@ impl<'a> Simulation<'a> {
             last_refresh_s: f64::NEG_INFINITY,
             telem: sink.as_ref().map(|_| Telemetry::new()),
             sink,
+            monitors,
         };
         sim.rebuild_cache();
+        if sim.observing() {
+            // Run header first on the stream: everything a replay needs
+            // that the event flow itself cannot carry (node/class rosters,
+            // seed, declared request count). Built purely from the
+            // scenario so no engine state is borrowed.
+            let node_meta: Vec<(&str, bool)> = scenario
+                .specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    (s.name.as_str(), scenario.microgrids.get(i).is_some_and(|m| m.is_some()))
+                })
+                .collect();
+            let class_meta: Vec<(&str, f64)> = match &scenario.config.workload {
+                Some(mix) => {
+                    mix.classes.iter().map(|c| (c.name.as_str(), c.slo_s)).collect()
+                }
+                None => Vec::new(),
+            };
+            sim.emit(&TraceEvent::RunMeta {
+                scenario: &scenario.name,
+                scheduler: scheduler_name,
+                seed: scenario.config.seed,
+                requests: scenario.requests as u64,
+                nodes: &node_meta,
+                classes: &class_meta,
+            });
+        }
 
         for ev in &scenario.churn {
             debug_assert!(ev.node < n, "churn event names node {} of {}", ev.node, n);
@@ -764,8 +829,14 @@ impl<'a> Simulation<'a> {
         }
 
         sim.close_horizon();
+        let summaries = sim.monitors.take().map(|m| m.summaries()).unwrap_or_default();
+        if let Some(t) = sim.telem.as_mut() {
+            t.monitors = summaries.clone();
+        }
         let telem = sim.telem.take();
-        (sim.into_report(scheduler_name), telem)
+        let mut report = sim.into_report(scheduler_name);
+        report.monitors = summaries;
+        (report, telem)
     }
 
     /// Whether this run has an observer attached — the single branch every
@@ -776,14 +847,37 @@ impl<'a> Simulation<'a> {
     }
 
     /// Count `ev` in the telemetry registry (pre-filter, so conservation
-    /// checks see every event) and hand it to the sink. Call only behind
-    /// an `observing()` check so the unobserved path constructs nothing.
+    /// checks see every event), fold it into any attached monitor rules,
+    /// and hand it to the sink. Threshold crossings the fold produced are
+    /// drained afterwards as [`TraceEvent::Alert`]s — counted and
+    /// recorded like any event, but never fed back into the monitors, so
+    /// alerting cannot recurse. Call only behind an `observing()` check
+    /// so the unobserved path constructs nothing.
     fn emit(&mut self, ev: &TraceEvent<'_>) {
         if let Some(t) = self.telem.as_mut() {
             t.count(ev.kind());
         }
+        if let Some(m) = self.monitors.as_mut() {
+            m.observe(ev);
+        }
         if let Some(sink) = self.sink.as_deref_mut() {
             sink.record(ev);
+        }
+        while let Some(fire) = self.monitors.as_mut().and_then(|m| m.pop_fire()) {
+            let alert = TraceEvent::Alert {
+                t_s: fire.t_s,
+                rule: fire.rule,
+                value: fire.value,
+                threshold: fire.threshold,
+                window_s: fire.window_s,
+                class: fire.class,
+            };
+            if let Some(t) = self.telem.as_mut() {
+                t.count(TraceKind::Alert);
+            }
+            if let Some(sink) = self.sink.as_deref_mut() {
+                sink.record(&alert);
+            }
         }
     }
 
@@ -959,7 +1053,9 @@ impl<'a> Simulation<'a> {
                 self.carbon_total_g += dyn_carbon;
             }
             if self.observing() {
-                let soc = self.microgrids[g].as_ref().unwrap().soc_frac();
+                let mg = self.microgrids[g].as_ref().unwrap();
+                let soc = mg.soc_frac();
+                let stored_g = sc.config.pue * mg.stored_carbon_g();
                 self.emit(&TraceEvent::MicrogridSlice {
                     t0_s: t0,
                     t1_s: t1,
@@ -969,6 +1065,10 @@ impl<'a> Simulation<'a> {
                     grid_j: flow.grid_j,
                     grid_charge_j: flow.grid_charge_j,
                     carbon_g: carbon,
+                    idle_g: carbon * idle_share,
+                    charge_g: sc.config.pue * flow.charge_carbon_g,
+                    battery_g: sc.config.pue * flow.battery_carbon_g,
+                    stored_g,
                     soc,
                 });
             }
@@ -1145,7 +1245,11 @@ impl<'a> Simulation<'a> {
         if let Some(t) = self.telem.as_mut() {
             t.decide_ns.record(decide_ns as f64);
         }
-        if let Some(explain) = &explain {
+        if explain.is_some() || self.monitors.is_some() {
+            // Monitors read decision verdicts (reject/defer rate) even
+            // when the sink filters decision events out; an empty explain
+            // stands in so the event can still be constructed cheaply.
+            let empty = DecisionExplain::default();
             let node = decision.assigned().map(|ci| view.nodes[ci].node.spec.name.as_str());
             self.emit(&TraceEvent::Decision {
                 t_s: now_s,
@@ -1153,7 +1257,7 @@ impl<'a> Simulation<'a> {
                 ctx,
                 verdict: decision,
                 node,
-                explain,
+                explain: explain.as_ref().unwrap_or(&empty),
                 decide_ns,
             });
         } else if let Some(t) = self.telem.as_mut() {
@@ -1470,7 +1574,8 @@ impl<'a> Simulation<'a> {
         self.class_latency_ms[class].push(latency_ms);
         self.class_energy_j[class] += energy_j;
         self.class_carbon_g[class] += carbon_g;
-        if t_s > arrival_s + self.class_slo_s[class] {
+        let slo_missed = t_s > arrival_s + self.class_slo_s[class];
+        if slo_missed {
             self.class_slo_missed[class] += 1;
         }
         if self.observing() {
@@ -1482,11 +1587,13 @@ impl<'a> Simulation<'a> {
                 t_s,
                 arrival_s,
                 node: &sc.specs[g].name,
+                class,
                 service_ms,
                 latency_ms,
                 energy_j,
                 carbon_g,
                 missed: t_s > deadline_s,
+                slo_missed,
             });
         }
         self.makespan_s = self.makespan_s.max(t_s);
@@ -1502,16 +1609,32 @@ impl<'a> Simulation<'a> {
         if dt > 0.0 {
             self.uptime_s[g] += dt;
             let idle_w = self.sc.specs[g].idle_w;
+            let mut energy_j = 0.0;
+            let mut carbon_g = 0.0;
             if idle_w > 0.0 {
-                self.idle_energy_j[g] += idle_w * dt;
+                energy_j = idle_w * dt;
+                self.idle_energy_j[g] += energy_j;
                 // A microgrid node's idle carbon is accrued in
                 // settle_microgrid (only the grid-supplied share bears
                 // carbon); grid-only nodes price the full floor here.
                 if self.microgrids[g].is_none() {
                     let intensity_dt = self.sc.traces[g].integral(since, until_s);
                     // idle_w·∫I dt is W·(g/kWh)·s; /3.6e6 converts W·s → kWh.
-                    self.idle_carbon_g[g] += self.sc.config.pue * idle_w * intensity_dt / 3.6e6;
+                    carbon_g = self.sc.config.pue * idle_w * intensity_dt / 3.6e6;
+                    self.idle_carbon_g[g] += carbon_g;
                 }
+            }
+            if self.observing() {
+                // Emitted even at idle_w == 0 — the interval itself is
+                // what replays uptime.
+                let sc = self.sc;
+                self.emit(&TraceEvent::IdleSlice {
+                    t0_s: since,
+                    t1_s: until_s,
+                    node: &sc.specs[g].name,
+                    energy_j,
+                    carbon_g,
+                });
             }
         }
         self.up_since[g] = Some(until_s);
@@ -1746,6 +1869,9 @@ impl<'a> Simulation<'a> {
             },
             classes,
             nodes,
+            // Filled by run_inner after the take(); into_report itself
+            // never sees the monitor set.
+            monitors: Vec::new(),
         }
     }
 }

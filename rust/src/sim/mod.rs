@@ -87,7 +87,20 @@
 //!   NDJSON [`crate::obs::FirehoseSink`] streams one event per line to
 //!   disk (`carbonedge sim --trace-out`); with no sink attached nothing
 //!   is ever constructed, and a traced run's [`SimReport`] is
-//!   bit-identical to an untraced one (`tests/obs.rs`).
+//!   bit-identical to an untraced one (`tests/obs.rs`);
+//! * **trace replay & audit** ([`crate::obs::ReplayState`]): an
+//!   `all`-filter firehose is a complete ledger — `carbonedge replay`
+//!   streams it back through [`crate::obs::FirehoseReader`] and
+//!   reconstructs the full [`SimReport`] (counters exactly, energy/carbon
+//!   to 1e-6) purely from events, and `carbonedge replay --diff A B`
+//!   names the first divergent event between two traces for determinism
+//!   debugging;
+//! * **in-sim monitors** ([`crate::obs::MonitorSet`],
+//!   [`Simulation::try_run_monitored`], `sim --monitor`): sliding
+//!   virtual-time windows over the event stream — carbon burn-rate vs a
+//!   gCO₂/s budget, per-class SLO-miss burn rate, reject/defer rate —
+//!   fire `alert` events into the firehose and per-rule summaries into
+//!   both [`crate::obs::Telemetry`] and the report.
 //!
 //! Identical seeds produce identical [`SimReport`]s; millions of simulated
 //! requests run in seconds (`benches/sim.rs`). The scenario library lives
@@ -95,7 +108,7 @@
 
 mod engine;
 pub mod fleet;
-mod report;
+pub(crate) mod report;
 pub mod scenarios;
 
 pub use engine::{ArrivalProcess, BatchSpec, ChurnEvent, DeferralSpec, SimConfig, Simulation};

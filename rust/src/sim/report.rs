@@ -2,6 +2,7 @@
 //! determinism is testable as plain equality: identical (scenario, seed,
 //! fresh scheduler) runs must produce identical reports, bit for bit.
 
+use crate::obs::MonitorSummary;
 use crate::util::stats::Summary;
 use crate::util::table::{f2, f5, Table};
 
@@ -188,6 +189,12 @@ pub struct SimReport {
     /// stay bit-identical).
     pub classes: Vec<ClassUsage>,
     pub nodes: Vec<NodeUsage>,
+    /// Per-rule monitor summaries — empty unless a
+    /// [`crate::obs::MonitorSet`] was attached
+    /// ([`crate::sim::Simulation::try_run_monitored`]). Deterministic:
+    /// rules evaluate over virtual time only, so identical seeds still
+    /// produce identical reports with monitors on.
+    pub monitors: Vec<MonitorSummary>,
 }
 
 /// Sum the supply split over node rows: `(pv kWh, battery kWh, grid kWh)`.
@@ -397,6 +404,23 @@ impl SimReport {
                 ],
             )
         };
+        if !self.monitors.is_empty() {
+            let mut mt = Table::new(
+                "",
+                &["monitor", "threshold", "window (s)", "alerts", "first (s)", "peak"],
+            );
+            for m in &self.monitors {
+                mt.row(vec![
+                    m.rule.clone(),
+                    f5(m.threshold),
+                    f2(m.window_s),
+                    m.alerts.to_string(),
+                    m.first_alert_s.map(f2).unwrap_or_else(|| "-".into()),
+                    f5(m.peak),
+                ]);
+            }
+            out.push_str(&mt.render());
+        }
         for n in &self.nodes {
             let mut row = vec![
                 n.name.clone(),
@@ -507,6 +531,7 @@ mod tests {
                     soc_projection: Vec::new(),
                 },
             ],
+            monitors: Vec::new(),
         }
     }
 
@@ -589,6 +614,36 @@ mod tests {
         let mut off = report();
         off.energy_grid_charge_kwh_total = 0.0;
         assert!(!off.render().contains("arbitrage"));
+    }
+
+    #[test]
+    fn monitor_table_renders_only_when_rules_attached() {
+        let plain = report();
+        assert!(!plain.render().contains("monitor"), "no rules, no table");
+        let mut monitored = report();
+        monitored.monitors = vec![
+            MonitorSummary {
+                rule: "carbon-budget".into(),
+                threshold: 0.5,
+                window_s: 600.0,
+                alerts: 2,
+                first_alert_s: Some(42.5),
+                peak: 0.9,
+            },
+            MonitorSummary {
+                rule: "slo-burn".into(),
+                threshold: 10.0,
+                window_s: 600.0,
+                alerts: 0,
+                first_alert_s: None,
+                peak: 1.5,
+            },
+        ];
+        let s = monitored.render();
+        assert!(s.contains("| carbon-budget"), "{s}");
+        assert!(s.contains("42.50"), "{s}");
+        assert!(s.contains("| slo-burn"), "{s}");
+        assert!(s.contains("| -"), "never-fired rule dashes first-alert: {s}");
     }
 
     #[test]

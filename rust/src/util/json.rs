@@ -674,6 +674,128 @@ mod tests {
     }
 
     #[test]
+    fn writer_output_reparses_to_the_written_tree() {
+        use crate::util::proptest::check;
+        use crate::util::rng::Rng;
+
+        // A write plan: what gets pushed through the JsonWriter, paired
+        // with the tree Json::parse must hand back. `NanAsNull` exercises
+        // the fnum finite guard (NaN is written, null must come back).
+        #[derive(Debug, Clone)]
+        enum V {
+            Null,
+            NanAsNull,
+            Bool(bool),
+            Num(f64),
+            Str(String),
+            Arr(Vec<V>),
+            Obj(Vec<(String, V)>),
+        }
+
+        impl V {
+            fn expected(&self) -> Json {
+                match self {
+                    V::Null | V::NanAsNull => Json::Null,
+                    V::Bool(b) => Json::Bool(*b),
+                    V::Num(n) => Json::Num(*n),
+                    V::Str(s) => Json::Str(s.clone()),
+                    V::Arr(xs) => Json::Arr(xs.iter().map(V::expected).collect()),
+                    V::Obj(fs) => {
+                        Json::Obj(fs.iter().map(|(k, v)| (k.clone(), v.expected())).collect())
+                    }
+                }
+            }
+
+            fn write<W: std::io::Write>(&self, j: &mut JsonWriter<W>) -> std::io::Result<()> {
+                match self {
+                    V::Null => j.null(),
+                    V::NanAsNull => j.fnum(f64::NAN),
+                    V::Bool(b) => j.boolean(*b),
+                    V::Num(n) => j.num(*n),
+                    V::Str(s) => j.string(s),
+                    V::Arr(xs) => {
+                        j.begin_arr()?;
+                        for x in xs {
+                            x.write(j)?;
+                        }
+                        j.end_arr()
+                    }
+                    V::Obj(fs) => {
+                        j.begin_obj()?;
+                        for (k, v) in fs {
+                            j.key(k)?;
+                            v.write(j)?;
+                        }
+                        j.end_obj()
+                    }
+                }
+            }
+        }
+
+        // Escape-heavy pool: quotes, backslash, control chars, multi-byte
+        // UTF-8 — everything write_escaped_io treats specially.
+        fn gen_str(r: &mut Rng) -> String {
+            const POOL: &[char] =
+                &['a', 'b', '_', '"', '\\', '\n', '\r', '\t', '\u{1}', ' ', 'é', '🌍', '0'];
+            (0..r.below(8)).map(|_| *r.choose(POOL)).collect()
+        }
+
+        fn gen_num(r: &mut Rng) -> f64 {
+            match r.below(5) {
+                0 => r.below(1000) as f64 - 500.0,  // the i64 fast path
+                1 => r.range(-1.0, 1.0),            // fractional Display path
+                2 => 3.0e18 * r.range(0.5, 2.0),    // beyond the |n| < 1e15 shortcut
+                3 => r.range(1.0, 9.0) * 1e-300,    // extreme magnitude
+                _ => r.normal() * 1e6,
+            }
+        }
+
+        fn gen_v(r: &mut Rng, depth: usize) -> V {
+            // Containers only while depth remains; scalars close the tree.
+            let top = if depth == 0 { 5 } else { 7 };
+            match r.below(top) {
+                0 => V::Null,
+                1 => V::NanAsNull,
+                2 => V::Bool(r.below(2) == 0),
+                3 => V::Num(gen_num(r)),
+                4 => V::Str(gen_str(r)),
+                5 => V::Arr((0..r.below(4)).map(|_| gen_v(r, depth - 1)).collect()),
+                _ => V::Obj(
+                    (0..r.below(4)).map(|_| (gen_str(r), gen_v(r, depth - 1))).collect(),
+                ),
+            }
+        }
+
+        check(
+            "json_writer_roundtrip",
+            200,
+            |r| {
+                // Root is always a container so empty objects and arrays
+                // come up often.
+                if r.below(2) == 0 {
+                    V::Arr((0..r.below(5)).map(|_| gen_v(r, 3)).collect())
+                } else {
+                    V::Obj((0..r.below(5)).map(|_| (gen_str(r), gen_v(r, 3))).collect())
+                }
+            },
+            |plan| {
+                let mut j = JsonWriter::new(Vec::new());
+                plan.write(&mut j).map_err(|e| format!("write failed: {e}"))?;
+                let text = String::from_utf8(j.into_inner())
+                    .map_err(|e| format!("non-utf8 writer output: {e}"))?;
+                let parsed = Json::parse(&text)
+                    .map_err(|e| format!("reparse of {text:?} failed: {e}"))?;
+                let want = plan.expected();
+                if parsed == want {
+                    Ok(())
+                } else {
+                    Err(format!("parsed {parsed:?} != expected {want:?} (text {text:?})"))
+                }
+            },
+        );
+    }
+
+    #[test]
     fn manifest_like_document() {
         let doc = r#"{"models":{"m":{"stages":[{"in_shape":[64,64,3],"cost":123}]}}}"#;
         let v = Json::parse(doc).unwrap();

@@ -6,7 +6,8 @@
 use std::collections::BTreeMap;
 
 use carbonedge::obs::{
-    EventKind, FirehoseSink, NullSink, Telemetry, TraceFilter, OVERHEAD_ENVELOPE_NS,
+    replay, CarbonBudget, EventKind, FirehoseSink, MonitorSet, NullSink, Telemetry, TraceFilter,
+    OVERHEAD_ENVELOPE_NS,
 };
 use carbonedge::scheduler::{CarbonAwareScheduler, DeferAwareGreenScheduler, Mode, Scheduler};
 use carbonedge::sim::{scenarios, SimReport, Simulation};
@@ -212,5 +213,133 @@ fn batch_serving_firehose_conserves_fills_and_replays_dynamic_carbon() {
             <= 1e-6 * report.carbon_dynamic_g_total.max(1e-12),
         "completion carbon {completion_carbon} != dynamic total {}",
         report.carbon_dynamic_g_total
+    );
+}
+
+/// The tentpole guarantee: an `all`-filter firehose is a complete ledger.
+/// For every scenario in the library, folding the trace back through
+/// [`replay::replay_report`] reconstructs the live [`SimReport`] — integer
+/// counters exactly, energy/carbon totals and per-node splits within the
+/// replay tolerance — with zero mismatches from [`replay::verify`].
+#[test]
+fn replay_reconstructs_every_library_scenario_report() {
+    for name in scenarios::SCENARIO_NAMES {
+        let (live, telem, text) = observed(name, 1_500, 7);
+        let (replayed, events) = replay::replay_report(text.as_bytes())
+            .unwrap_or_else(|e| panic!("{name}: replay failed: {e}"));
+        assert_eq!(events, telem.total_events(), "{name}: replayed event count");
+        let mismatches = replay::verify(&replayed, &live);
+        assert!(
+            mismatches.is_empty(),
+            "{name}: replay drifted from the live report:\n  {}",
+            mismatches.join("\n  ")
+        );
+        // Headline counters must be exact, not merely within tolerance.
+        assert_eq!(replayed.requests, live.requests, "{name}: requests");
+        assert_eq!(replayed.completed, live.completed, "{name}: completed");
+        assert_eq!(replayed.rejected, live.rejected, "{name}: rejected");
+        assert_eq!(replayed.deferred, live.deferred, "{name}: deferred");
+        assert_eq!(replayed.deadline_missed, live.deadline_missed, "{name}: missed");
+        assert_eq!(replayed.scenario, live.scenario, "{name}: header");
+    }
+}
+
+/// Monitors ride the same never-perturb contract as tracing: a monitored
+/// NullSink run produces a bit-identical report (monitor summaries live in
+/// their own field) across the whole scenario library, the telemetry
+/// carries the same summary rows, and a zero budget fires on any run that
+/// emits carbon at all.
+#[test]
+fn monitored_run_report_stays_bit_identical_to_unmonitored() {
+    for name in scenarios::SCENARIO_NAMES {
+        let sc = scenarios::build(name, 0, 1_500, 7).unwrap();
+        let baseline = Simulation::try_run(&sc, &mut green()).unwrap();
+        let monitors = MonitorSet::new(600.0)
+            .carbon_budget(CarbonBudget { g_per_s: 0.0 })
+            .slo_burn_pct(0.0)
+            .reject_defer_pct(0.0);
+        let mut null = NullSink;
+        let (mut monitored, telem) =
+            Simulation::try_run_monitored(&sc, &mut green(), &mut null, monitors).unwrap();
+        assert_eq!(monitored.monitors.len(), 3, "{name}: one summary per rule");
+        assert_eq!(telem.monitors, monitored.monitors, "{name}: telemetry copy");
+        if baseline.carbon_g_total > 0.0 {
+            assert!(
+                monitored.monitors[0].alerts >= 1,
+                "{name}: a zero carbon budget must fire on a carbon-emitting run"
+            );
+        }
+        monitored.monitors = Vec::new();
+        assert_eq!(baseline, monitored, "{name}: monitors perturbed the simulation");
+    }
+}
+
+/// `replay --diff` semantics: a trace diffed against itself is clean, an
+/// injected single-field perturbation is pinpointed (kind, virtual time,
+/// field) order-stably, and a seed-perturbed twin diverges immediately.
+#[test]
+fn diff_is_order_stable_and_detects_an_injected_divergence() {
+    let (_, _, trace) = observed("paper-3-node", 2_000, 7);
+    assert_eq!(replay::diff(trace.as_bytes(), trace.as_bytes()).unwrap(), None);
+    // Flip one boolean field on one completion mid-stream.
+    let needle = "\"slo_missed\":false";
+    let pos = trace.rfind(needle).expect("a completion line to perturb");
+    let mut twin = String::with_capacity(trace.len());
+    twin.push_str(&trace[..pos]);
+    twin.push_str("\"slo_missed\":true");
+    twin.push_str(&trace[pos + needle.len()..]);
+    let d = replay::diff(trace.as_bytes(), twin.as_bytes()).unwrap().expect("must diverge");
+    assert_eq!(d.kind, "completion");
+    assert_eq!(d.field, "slo_missed");
+    assert!(d.t_s >= 0.0, "divergence carries the virtual time");
+    let rendered = d.render();
+    assert!(rendered.contains("completion") && rendered.contains("slo_missed"), "{rendered}");
+    // Order-stable: the same pair names the same first divergence.
+    let again = replay::diff(trace.as_bytes(), twin.as_bytes()).unwrap().unwrap();
+    assert_eq!(d, again);
+    // Determinism debugging: a seed-perturbed twin diverges at the header.
+    let (_, _, other) = observed("paper-3-node", 2_000, 8);
+    let header = replay::diff(trace.as_bytes(), other.as_bytes()).unwrap().expect("seeds differ");
+    assert_eq!(header.kind, "run_meta");
+}
+
+/// A breached monitor streams `alert` events into the firehose, counts
+/// them in telemetry, and leaves matching summary rows in the report — and
+/// the monitored trace still replays to the live report.
+#[test]
+fn tight_carbon_budget_fires_alerts_into_the_firehose_and_report() {
+    let sc = scenarios::build("paper-3-node", 0, 2_000, 7).unwrap();
+    let monitors = MonitorSet::parse("carbon-budget=0,window=600").unwrap();
+    let mut sink = FirehoseSink::new(Vec::new());
+    let (report, telem) =
+        Simulation::try_run_monitored(&sc, &mut green(), &mut sink, monitors).unwrap();
+    let text = String::from_utf8(sink.finish().unwrap()).unwrap();
+    let mut alert_lines = 0u64;
+    for line in text.lines() {
+        let v = Json::parse(line).unwrap();
+        if v.req_str("kind").unwrap() == "alert" {
+            alert_lines += 1;
+            assert_eq!(v.req_str("rule").unwrap(), "carbon-budget");
+            assert!(v.req_f64("value").unwrap() > 0.0, "alert below threshold: {line}");
+            assert_eq!(v.req_f64("threshold").unwrap(), 0.0);
+            assert_eq!(v.req_f64("window_s").unwrap(), 600.0);
+        }
+    }
+    assert!(alert_lines >= 1, "a zero budget must fire at least once");
+    assert_eq!(telem.events_of(EventKind::Alert), alert_lines);
+    assert_eq!(report.monitors.len(), 1);
+    let m = &report.monitors[0];
+    assert_eq!(m.rule, "carbon-budget");
+    assert_eq!(m.alerts, alert_lines);
+    assert!(m.first_alert_s.is_some());
+    assert!(m.peak > 0.0);
+    assert_eq!(telem.monitors, report.monitors);
+    // An all-filter monitored trace replays like any other.
+    let (replayed, _) = replay::replay_report(text.as_bytes()).unwrap();
+    let mismatches = replay::verify(&replayed, &report);
+    assert!(
+        mismatches.is_empty(),
+        "monitored trace replay drift:\n  {}",
+        mismatches.join("\n  ")
     );
 }
