@@ -479,6 +479,7 @@ pub fn scheduling_overhead(coord: &Coordinator, model: &str, iters: usize) -> Re
 
 use crate::scheduler::{DeferAwareGreenScheduler, RoundRobinScheduler};
 use crate::sim::{scenarios, Scenario, SimReport, Simulation};
+use crate::site::RouterSpec;
 
 /// Relative reduction of `new` vs `base` rendered as a percentage — `-`
 /// when the base is zero or not finite (a run where nothing completed, or
@@ -857,6 +858,74 @@ pub fn sim_batching_render(batched: &SimReport, unbatched: &SimReport) -> String
         f2(batched.latency_ms.p99),
         f2(unbatched.latency_ms.p99),
     ));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Cross-site routing: nearest vs carbon-greedy vs deadline-feasible (A/B/C)
+// ---------------------------------------------------------------------------
+
+/// The experiment the site layer unlocks, on a geographic scenario under
+/// the scheduler it configures (joint defer+route when the scenario
+/// carries deferral, Green otherwise): the same fleet, arrivals and seed
+/// under each [`crate::site::RouterSpec`] — locality-only `nearest`,
+/// `carbon`-greedy, and the `deadline`-feasible carbon router. The first
+/// margin prices what cross-site shifting is worth at all; the second,
+/// what the feasibility guard saves in missed deadlines while keeping
+/// most of the carbon win. Reports come back in that order, each tagged
+/// with its router name.
+pub fn sim_router_comparison(sc: &Scenario) -> Vec<SimReport> {
+    assert!(sc.sites.is_some(), "scenario carries no site layer");
+    let run = |s: &Scenario| match &s.config.deferral {
+        Some(d) => {
+            let mut sched = DeferAwareGreenScheduler::new(d.policy.min_gain);
+            Simulation::run(s, &mut sched)
+        }
+        None => sim_run_mode(s, Mode::Green),
+    };
+    [RouterSpec::Nearest, RouterSpec::Carbon, RouterSpec::default()]
+        .into_iter()
+        .map(|spec| {
+            let mut twin = sc.clone();
+            twin.sites.as_mut().expect("checked above").router = spec;
+            run(&twin)
+        })
+        .collect()
+}
+
+/// [`sim_router_comparison`] over the `follow-the-sun` scenario —
+/// `carbonedge sim --scenario follow-the-sun --compare-routers` and
+/// `examples/fleet_sim.rs` both land here.
+pub fn sim_routers(nodes: usize, requests: usize, seed: u64) -> Vec<SimReport> {
+    let sc = scenarios::build("follow-the-sun", nodes, requests, seed).unwrap();
+    sim_router_comparison(&sc)
+}
+
+pub fn sim_router_render(reports: &[SimReport]) -> String {
+    let mut t = Table::new(
+        "Cross-site routing — same fleet, arrivals and seed",
+        &["Router", "gCO2/req", "Shipped", "WAN kWh", "Missed", "Latency p95 (ms)"],
+    );
+    for r in reports {
+        t.row(vec![
+            r.router.clone(),
+            format!("{:.6}", r.carbon_per_req_g),
+            r.wan_shipped.to_string(),
+            format!("{:.6}", r.energy_wan_kwh_total),
+            r.deadline_missed.to_string(),
+            f2(r.latency_ms.p95),
+        ]);
+    }
+    let mut out = t.render();
+    if let [nearest, carbon, deadline] = reports {
+        out.push_str(&format!(
+            "deadline-feasible routing cuts gCO2/req by {} vs nearest \
+             and misses {} deadlines vs carbon-greedy's {}\n",
+            reduction_pct(deadline.carbon_per_req_g, nearest.carbon_per_req_g),
+            deadline.deadline_missed,
+            carbon.deadline_missed,
+        ));
+    }
     out
 }
 

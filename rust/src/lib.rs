@@ -51,7 +51,17 @@
 //!   credit joining a forming batch, and reports break completions, SLO
 //!   misses, batch fill and attributed energy/carbon out per class
 //!   ([`sim::ClassUsage`]). With batching disabled (window 0, max 1)
-//!   the engine is bit-identical to one-task-per-slot serving.
+//!   the engine is bit-identical to one-task-per-slot serving. Fleets may
+//!   further be *geographic* ([`site`]): a [`site::SiteLayer`] partitions
+//!   the nodes into regions with their own grids/PV and timezone offsets,
+//!   a [`site::SiteTopology`] prices WAN hops (latency + joules per
+//!   shipped request, both on the accounting path), and a cross-site
+//!   [`site::Router`] — nearest, carbon-greedy, or the deadline-feasible
+//!   carbon router — picks which region's grid eats each request before
+//!   the local scheduler routes within the site, over O(sites)
+//!   [`site::SiteView`] summaries. The `multi-site` and `follow-the-sun`
+//!   scenarios show cross-region shifting beating any single-site green
+//!   mode once PV peaks rotate across timezones.
 //! * **L2** — the JAX model zoo (`python/compile/models.py`), AOT-lowered to
 //!   HLO text artifacts consumed by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) backing every conv
@@ -102,5 +112,6 @@ pub mod partitioner;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod site;
 pub mod util;
 pub mod workload;

@@ -20,6 +20,8 @@
 //!               [--charge-policy off|threshold] [--charge-threshold-pct P]
 //!               [--compare-arbitrage]
 //!               [--batch-window-ms MS] [--batch-max N] [--compare-batching]
+//!               [--sites N] [--router nearest|carbon|deadline]
+//!               [--compare-routers]
 //!               [--monitor SPEC] [--telemetry-out PATH]
 //!               [--help]
 //!                                                   # virtual-time fleet simulator
@@ -71,6 +73,7 @@ fn run() -> Result<()> {
         "compare-microgrid",
         "compare-arbitrage",
         "compare-batching",
+        "compare-routers",
         "diff",
         "verify",
     ])?;
@@ -310,6 +313,8 @@ fn run() -> Result<()> {
                     "charge-threshold-pct",
                     "batch-window-ms",
                     "batch-max",
+                    "sites",
+                    "router",
                 ] {
                     if args.has(flag) {
                         anyhow::bail!("--consolidate does not combine with --{flag}");
@@ -324,6 +329,7 @@ fn run() -> Result<()> {
                     "compare-microgrid",
                     "compare-arbitrage",
                     "compare-batching",
+                    "compare-routers",
                 ] {
                     if args.bool_flag(switch) {
                         anyhow::bail!("--consolidate does not combine with --{switch}");
@@ -365,6 +371,33 @@ fn run() -> Result<()> {
                     },
                 )?
             };
+            // Geographic knobs: --sites rebuilds the region roster
+            // (timezones spread uniformly over the day), --router swaps
+            // the cross-site policy. Both need a site layer to act on.
+            if let Some(k) = args.get("sites") {
+                let k: usize = k
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--sites expects a site count, got {k:?}"))?;
+                sc = carbonedge::sim::scenarios::with_site_count(&name, k, nodes, requests, seed)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "--sites needs >= 2 sites and a geographic scenario \
+                             (multi-site, follow-the-sun), got {k} over {name:?}"
+                        )
+                    })?;
+            }
+            if let Some(r) = args.get("router") {
+                let spec = carbonedge::site::RouterSpec::parse(r).ok_or_else(|| {
+                    anyhow::anyhow!("unknown --router {r:?}; try nearest|carbon|deadline")
+                })?;
+                match sc.sites.as_mut() {
+                    Some(layer) => layer.router = spec,
+                    None => anyhow::bail!(
+                        "--router needs a site layer: use --scenario multi-site or \
+                         follow-the-sun"
+                    ),
+                }
+            }
             if let Some(w) = args.get("idle-w") {
                 let w: f64 = w
                     .parse()
@@ -499,6 +532,7 @@ fn run() -> Result<()> {
                     "compare-defer-routing",
                     "compare-arbitrage",
                     "compare-batching",
+                    "compare-routers",
                 ];
                 for switch in switches {
                     if args.bool_flag(switch) {
@@ -585,6 +619,7 @@ fn run() -> Result<()> {
                     "compare-defer-routing",
                     "compare-arbitrage",
                     "compare-batching",
+                    "compare-routers",
                 ] {
                     if args.bool_flag(switch) {
                         anyhow::bail!(
@@ -676,6 +711,29 @@ fn run() -> Result<()> {
                 }
                 let (batched, unbatched) = exp::sim_batching_comparison(&sc);
                 println!("{}", exp::sim_batching_render(&batched, &unbatched));
+                return Ok(());
+            }
+            if args.bool_flag("compare-routers") {
+                if sc.sites.is_none() {
+                    anyhow::bail!(
+                        "--compare-routers needs a site layer: use --scenario multi-site \
+                         or follow-the-sun"
+                    );
+                }
+                if args.has("mode") || args.has("scheduler") || args.has("router") {
+                    anyhow::bail!(
+                        "--compare-routers runs all three routers under the scenario's \
+                         own scheduler; it does not combine with \
+                         --mode/--scheduler/--router"
+                    );
+                }
+                for switch in ["sweep", "json", "no-defer", "compare-defer"] {
+                    if args.bool_flag(switch) {
+                        anyhow::bail!("--compare-routers does not combine with --{switch}");
+                    }
+                }
+                let reports = exp::sim_router_comparison(&sc);
+                println!("{}", exp::sim_router_render(&reports));
                 return Ok(());
             }
             if args.bool_flag("sweep") {
@@ -1028,6 +1086,21 @@ multi-tenant scenarios ship a tenant mix and batch on by default):
                          its one-task-per-slot twin (same tenant mix,
                          arrivals and seed), reporting the gCO2/req and
                          p99 gap
+
+multi-site fleets (the multi-site and follow-the-sun scenarios group
+nodes into regional sites with staggered diurnal grids; a cross-site
+router ships each arrival to the region whose grid/PV should eat it,
+pricing the WAN hop into both latency and carbon):
+  --sites N              rebuild the region roster with N sites, timezones
+                         spread uniformly over the day (default 3; node
+                         count defaults to three per region)
+  --router NAME          cross-site policy: nearest (locality only),
+                         carbon (greedy cleanest region), deadline
+                         (cleanest region that still clears the SLO after
+                         the WAN hop; the default)
+  --compare-routers      A/B/C all three routers on the same fleet,
+                         arrivals and seed, reporting gCO2/req, shipped
+                         share, WAN energy and missed deadlines
 
 real traces:
   --trace-csv PATH       with --scenario real-trace: load an

@@ -119,6 +119,31 @@ pub fn write_sim_report<W: io::Write>(
     j.field_fnum("carbon_dynamic_g", r.carbon_dynamic_g_total)?;
     j.field_fnum("carbon_idle_g", r.carbon_idle_g_total)?;
     j.field_fnum("carbon_per_req_g", r.carbon_per_req_g)?;
+    // Router + per-site rows (multi-site runs only; absent otherwise so
+    // legacy flat-fleet documents are byte-identical).
+    if !r.sites.is_empty() {
+        j.field_str("router", &r.router)?;
+        j.field_num("wan_shipped", r.wan_shipped as f64)?;
+        j.field_fnum("energy_wan_kwh", r.energy_wan_kwh_total)?;
+        j.field_fnum("carbon_wan_g", r.carbon_wan_g_total)?;
+        j.key("sites")?;
+        j.begin_arr()?;
+        for s in &r.sites {
+            j.begin_obj()?;
+            j.field_str("site", &s.name)?;
+            j.field_num("nodes", s.nodes as f64)?;
+            j.field_num("completed", s.completed as f64)?;
+            j.field_num("shipped_out", s.shipped_out as f64)?;
+            j.field_num("shipped_in", s.shipped_in as f64)?;
+            j.field_fnum("energy_kwh", s.energy_kwh)?;
+            j.field_fnum("energy_wan_kwh", s.energy_wan_kwh)?;
+            j.field_fnum("carbon_g", s.carbon_g)?;
+            j.field_fnum("carbon_wan_g", s.carbon_wan_g)?;
+            j.field_fnum("carbon_per_req_g", s.carbon_per_req_g)?;
+            j.end_obj()?;
+        }
+        j.end_arr()?;
+    }
     // Per-workload-class rows (multi-tenant runs only; empty otherwise).
     if !r.classes.is_empty() {
         j.key("classes")?;
@@ -127,6 +152,7 @@ pub fn write_sim_report<W: io::Write>(
             j.begin_obj()?;
             j.field_str("class", &c.name)?;
             j.field_num("completed", c.completed as f64)?;
+            j.field_num("rejected", c.rejected as f64)?;
             j.field_fnum("slo_s", c.slo_s)?;
             j.field_num("slo_missed", c.slo_missed as f64)?;
             j.field_num("batches", c.batches as f64)?;
@@ -473,6 +499,33 @@ mod tests {
         assert_eq!(ms[0].req_str("rule").unwrap(), "carbon-budget");
         assert_eq!(ms[0].req_usize("alerts").unwrap(), 4);
         assert_eq!(ms[0].get("first_alert_s"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn sim_report_json_carries_site_rows() {
+        // Flat fleets carry no site keys; a multi-site run exports the
+        // router, WAN totals and a partitioning per-site array.
+        let flat = crate::sim::scenarios::build("paper-3-node", 0, 20, 1).unwrap();
+        let mut sched = crate::scheduler::DeferAwareGreenScheduler::new(0.05);
+        let r = crate::sim::Simulation::run(&flat, &mut sched);
+        let text = sim_report_json_string(&r);
+        assert!(!text.contains("\"sites\""), "no site layer, no key");
+        assert!(!text.contains("\"router\""), "no site layer, no router");
+        let sc = crate::sim::scenarios::build("multi-site", 0, 400, 7).unwrap();
+        let mut sched = crate::scheduler::DeferAwareGreenScheduler::new(0.05);
+        let r = crate::sim::Simulation::run(&sc, &mut sched);
+        let back = Json::parse(&sim_report_json_string(&r)).unwrap();
+        assert_eq!(back.req_str("router").unwrap(), "deadline");
+        let sites = back.req_arr("sites").unwrap();
+        assert_eq!(sites.len(), 3);
+        let done: f64 = sites.iter().map(|s| s.req_f64("completed").unwrap()).sum();
+        assert_eq!(done as u64, r.completed);
+        let energy: f64 = sites
+            .iter()
+            .map(|s| s.req_f64("energy_kwh").unwrap() + s.req_f64("energy_wan_kwh").unwrap())
+            .sum();
+        let total = back.req_f64("energy_kwh").unwrap();
+        assert!((energy - total).abs() <= 1e-6 * total.max(1e-12), "{energy} vs {total}");
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //!   charges only from excess PV, `Threshold` additionally imports grid
 //!   power into the battery whenever the grid trace sits at or below a
 //!   percentile of its own forward window (rate- and headroom-capped);
+//! * [`DischargePolicy`] — **opportunity-cost dispatch**: `Greedy` (the
+//!   default, the legacy behaviour) spends charge on the first profitable
+//!   hour, which on a duck-curve day blows the whole store on the modest
+//!   morning ramp and buys grid through the evening peak;
+//!   `OpportunityCost` holds discharge until the grid sits at or above a
+//!   high percentile of its own forward window — charge is spent on the
+//!   *best remaining* hours, not the first acceptable ones;
 //! * a **stored-carbon ledger in FIFO tranches** — grid-charged joules
 //!   carry their *embodied* intensity (import priced at charge time,
 //!   held as one tranche per charge stretch, released oldest-first on
@@ -85,6 +92,14 @@ pub const DEFAULT_CHARGE_PERCENTILE: f64 = 0.25;
 
 /// Default [`ChargePolicy::Threshold`] window: one day of forward trace.
 pub const DEFAULT_CHARGE_WINDOW_S: f64 = 86_400.0;
+
+/// Default [`DischargePolicy::OpportunityCost`] percentile: spend charge
+/// only during the dirtiest quarter of the forward window.
+pub const DEFAULT_DISCHARGE_PERCENTILE: f64 = 0.75;
+
+/// Default [`DischargePolicy::OpportunityCost`] window: one day of
+/// forward trace.
+pub const DEFAULT_DISCHARGE_WINDOW_S: f64 = 86_400.0;
 
 /// Photovoltaic generation profile: watts as a function of virtual time,
 /// reusing [`IntensityTrace`] (value = watts, not gCO₂/kWh).
@@ -258,6 +273,59 @@ impl ChargePolicy {
     }
 }
 
+/// When stored charge may be **spent**. The per-tranche profitability
+/// gate (a carbon-bearing tranche never discharges into a grid cleaner
+/// than its own embodied intensity) applies under either policy; this
+/// decides *which* profitable hours are worth the finite charge.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum DischargePolicy {
+    /// Spend charge on the first profitable hour (the legacy behaviour).
+    /// On a duck-curve day this drains the store into the modest morning
+    /// ramp and leaves the evening peak to the grid.
+    #[default]
+    Greedy,
+    /// Hold discharge until the grid sits at or above the `percentile`
+    /// quantile of the trace over `[t, t + window_s]` — spend the finite
+    /// charge on the best remaining hours of the forward window. A flat
+    /// window (no better hour ahead) collapses to greedy.
+    OpportunityCost {
+        /// Quantile in `(0, 1)`: 0.75 discharges only during the
+        /// dirtiest quarter of the window.
+        percentile: f64,
+        /// Forward window the quantile is computed over (seconds).
+        window_s: f64,
+    },
+}
+
+impl DischargePolicy {
+    /// The standard opportunity-cost policy: spend charge during the
+    /// dirtiest `1 - percentile` of the day-ahead window.
+    pub fn opportunity_cost(percentile: f64) -> DischargePolicy {
+        DischargePolicy::OpportunityCost { percentile, window_s: DEFAULT_DISCHARGE_WINDOW_S }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        matches!(self, DischargePolicy::Greedy)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            DischargePolicy::Greedy => Ok(()),
+            DischargePolicy::OpportunityCost { percentile, window_s } => {
+                if !percentile.is_finite() || !(*percentile > 0.0 && *percentile < 1.0) {
+                    return Err(format!(
+                        "discharge-policy percentile must be in (0, 1), got {percentile}"
+                    ));
+                }
+                if !window_s.is_finite() || *window_s <= 0.0 {
+                    return Err(format!("discharge-policy window must be > 0, got {window_s}"));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
 /// Immutable per-node microgrid configuration a scenario carries; the
 /// simulator builds a fresh [`Microgrid`] runtime state from it per run,
 /// keeping runs deterministic.
@@ -267,6 +335,9 @@ pub struct MicrogridSpec {
     pub battery: BatterySpec,
     /// Grid-charge arbitrage policy ([`ChargePolicy::Off`] by default).
     pub charge: ChargePolicy,
+    /// Stored-charge dispatch policy ([`DischargePolicy::Greedy`] by
+    /// default).
+    pub discharge: DischargePolicy,
 }
 
 impl MicrogridSpec {
@@ -282,6 +353,7 @@ impl MicrogridSpec {
             pv: PvProfile::diurnal(pv_peak_w),
             battery: BatterySpec::simple(battery_wh, rt_efficiency, initial_soc),
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         }
     }
 
@@ -291,9 +363,16 @@ impl MicrogridSpec {
         self
     }
 
+    /// Builder: replace the discharge policy.
+    pub fn with_discharge(mut self, discharge: DischargePolicy) -> MicrogridSpec {
+        self.discharge = discharge;
+        self
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         self.battery.validate()?;
-        self.charge.validate()
+        self.charge.validate()?;
+        self.discharge.validate()
     }
 }
 
@@ -445,6 +524,47 @@ fn charging_at(
     }
 }
 
+/// Discharge floor at `t` for a [`DischargePolicy`]: the configured
+/// quantile of `trace` over `[t, t + window]` — discharge is held while
+/// the grid sits *below* it (a better hour is still ahead). `Greedy`
+/// floors at `-inf` (never hold); so does a flat window (nothing better
+/// ahead to wait for). Cached like the charge threshold so the settlement
+/// hot path recomputes only every [`THRESHOLD_REFRESH_FRAC`] of the
+/// window.
+fn discharge_floor(
+    policy: &DischargePolicy,
+    trace: &IntensityTrace,
+    cache: &mut Option<(f64, f64)>,
+    t: f64,
+) -> f64 {
+    let DischargePolicy::OpportunityCost { percentile, window_s } = policy else {
+        return f64::NEG_INFINITY;
+    };
+    if let Some((expires, thr)) = cache {
+        if t < *expires {
+            return *thr;
+        }
+    }
+    let n = THRESHOLD_SAMPLES;
+    let mut vals: Vec<f64> =
+        (0..n).map(|i| trace.at(t + i as f64 * window_s / (n - 1) as f64)).collect();
+    vals.sort_by(f64::total_cmp);
+    let thr = vals[(percentile * (n - 1) as f64) as usize];
+    let thr = if thr > vals[0] { thr } else { f64::NEG_INFINITY };
+    *cache = Some((t + window_s * THRESHOLD_REFRESH_FRAC, thr));
+    thr
+}
+
+/// Is the discharge policy holding the store back at instant `t`?
+fn holding_at(
+    policy: &DischargePolicy,
+    trace: &IntensityTrace,
+    cache: &mut Option<(f64, f64)>,
+    t: f64,
+) -> bool {
+    trace.at(t) < discharge_floor(policy, trace, cache, t)
+}
+
 /// Settle one slice of constant `draw_w` against `spec`, mutating the
 /// store (and the threshold cache). The single source of the settlement
 /// arithmetic: [`Microgrid::cover`], [`Microgrid::settle`] and
@@ -453,7 +573,10 @@ fn charging_at(
 ///
 /// `grid_mean` is the slice-mean grid intensity used for the discharge
 /// gate and to price grid-charged joules; `charging` says whether the
-/// policy is importing this slice (which also suppresses discharge).
+/// policy is importing this slice (which also suppresses discharge);
+/// `holding` says whether the [`DischargePolicy`] is keeping the store
+/// for a better hour still ahead in its window (greedy: never).
+#[allow(clippy::too_many_arguments)]
 fn settle_slice(
     spec: &MicrogridSpec,
     store: &mut Store,
@@ -462,6 +585,7 @@ fn settle_slice(
     draw_w: f64,
     grid_mean: f64,
     charging: bool,
+    holding: bool,
 ) -> SliceFlow {
     let dt = t1 - t0;
     debug_assert!(dt >= 0.0, "settle slice reversed: [{t0}, {t1}]");
@@ -483,7 +607,7 @@ fn settle_slice(
     // top-up sits behind it.
     let mut battery_j = 0.0;
     let mut battery_carbon_g = 0.0;
-    if !charging {
+    if !charging && !holding {
         let mut want_j = residual_j.min(b.max_discharge_w * dt).max(0.0);
         while want_j > 0.0 {
             let Some(head) = store.tranches.front_mut() else { break };
@@ -558,12 +682,13 @@ fn effective_at(
     grid_intensity: GramsPerKwh,
     sustain_s: f64,
     charging: bool,
+    holding: bool,
 ) -> GramsPerKwh {
     debug_assert!(sustain_s > 0.0, "sustain window must be positive");
     let pv_w = spec.pv.power_w(t);
     let s_int = store_intensity(store);
     let available =
-        !charging && (store.carbon_g <= 0.0 || s_int < grid_intensity);
+        !charging && !holding && (store.carbon_g <= 0.0 || s_int < grid_intensity);
     // The battery may only advertise power its charge can sustain for the
     // advertising window — a near-empty battery must not advertise its
     // full rate and invite a pile-on.
@@ -595,6 +720,8 @@ pub struct Microgrid {
     store: Store,
     /// `(expires_at, threshold)` cache for the charge-price percentile.
     threshold_cache: Option<(f64, f64)>,
+    /// `(expires_at, floor)` cache for the discharge-floor percentile.
+    discharge_cache: Option<(f64, f64)>,
 }
 
 impl Microgrid {
@@ -606,7 +733,7 @@ impl Microgrid {
         let mut store = Store { soc_j, carbon_g: 0.0, tranches: VecDeque::new() };
         // The initial charge predates the ledger: one carbon-free tranche.
         push_tranche(&mut store, soc_j, 0.0);
-        Microgrid { spec, store, threshold_cache: None }
+        Microgrid { spec, store, threshold_cache: None, discharge_cache: None }
     }
 
     /// State of charge as a fraction of capacity (0 for a zero-capacity
@@ -647,8 +774,9 @@ impl Microgrid {
     /// [`Microgrid::settle`], which adds grid-charge arbitrage on top.
     pub fn cover(&mut self, t0: f64, t1: f64, draw_w: f64) -> SliceFlow {
         // With no grid price in hand the discharge gate is vacuous
-        // (infinity), reproducing the legacy always-discharge behaviour.
-        settle_slice(&self.spec, &mut self.store, t0, t1, draw_w, f64::INFINITY, false)
+        // (infinity) and no trace exists to compute a floor over,
+        // reproducing the legacy always-discharge behaviour.
+        settle_slice(&self.spec, &mut self.store, t0, t1, draw_w, f64::INFINITY, false, false)
     }
 
     /// Cover `[t0, t1]` at `draw_w` against the node's grid `trace`,
@@ -670,8 +798,9 @@ impl Microgrid {
             return SliceFlow::default();
         }
         let charging = charging_at(&self.spec.charge, trace, &mut self.threshold_cache, t0);
+        let holding = holding_at(&self.spec.discharge, trace, &mut self.discharge_cache, t0);
         let grid_mean = trace.integral(t0, t1) / dt;
-        settle_slice(&self.spec, &mut self.store, t0, t1, draw_w, grid_mean, charging)
+        settle_slice(&self.spec, &mut self.store, t0, t1, draw_w, grid_mean, charging, holding)
     }
 
     /// Marginal effective carbon intensity (gCO₂/kWh) of handing this
@@ -689,13 +818,14 @@ impl Microgrid {
         grid_intensity: GramsPerKwh,
         sustain_s: f64,
     ) -> GramsPerKwh {
-        effective_at(&self.spec, &self.store, t, draw, grid_intensity, sustain_s, false)
+        effective_at(&self.spec, &self.store, t, draw, grid_intensity, sustain_s, false, false)
     }
 
-    /// [`Microgrid::effective_intensity`] with the charge policy applied:
-    /// while the policy is importing, the battery is not advertised (it
-    /// will not discharge), so the marginal price is honest during cheap
-    /// windows. Mutates only the threshold cache.
+    /// [`Microgrid::effective_intensity`] with the charge and discharge
+    /// policies applied: while the policy is importing — or the discharge
+    /// floor says a better hour is still ahead — the battery is not
+    /// advertised (it will not discharge), so the marginal price is
+    /// honest during cheap windows. Mutates only the threshold caches.
     pub fn advertised_intensity(
         &mut self,
         trace: &IntensityTrace,
@@ -704,7 +834,8 @@ impl Microgrid {
         sustain_s: f64,
     ) -> GramsPerKwh {
         let charging = charging_at(&self.spec.charge, trace, &mut self.threshold_cache, t);
-        effective_at(&self.spec, &self.store, t, draw, trace.at(t), sustain_s, charging)
+        let holding = holding_at(&self.spec.discharge, trace, &mut self.discharge_cache, t);
+        effective_at(&self.spec, &self.store, t, draw, trace.at(t), sustain_s, charging, holding)
     }
 
     /// The legacy (PR-4) charge-frozen forecast sample, kept for the A/B
@@ -765,23 +896,35 @@ impl Microgrid {
         let cap_j = self.spec.battery.capacity_wh * WH_TO_J;
         let mut store = self.store.clone();
         let mut cache = self.threshold_cache;
+        let mut dcache = self.discharge_cache;
         let mut out =
             Vec::with_capacity(((horizon_s - t0) / resolution_s.max(1e-9)) as usize + 2);
         let mut t = t0;
         loop {
             let charging = charging_at(&self.spec.charge, trace, &mut cache, t);
-            let eff =
-                effective_at(&self.spec, &store, t, draw, trace.at(t), sustain_s, charging);
+            let holding = holding_at(&self.spec.discharge, trace, &mut dcache, t);
+            let eff = effective_at(
+                &self.spec, &store, t, draw, trace.at(t), sustain_s, charging, holding,
+            );
             let soc = if cap_j > 0.0 { store.soc_j / cap_j } else { 0.0 };
             out.push((t, eff, soc));
             if t >= horizon_s || resolution_s <= 0.0 {
                 break;
             }
-            // The slice settles under the same charging verdict the sample
-            // above was priced at (same t, same cache).
+            // The slice settles under the same charging/holding verdicts
+            // the sample above was priced at (same t, same caches).
             let t_next = (t + resolution_s).min(horizon_s);
             let grid_mean = trace.integral(t, t_next) / (t_next - t);
-            settle_slice(&self.spec, &mut store, t, t_next, draw.standing_w, grid_mean, charging);
+            settle_slice(
+                &self.spec,
+                &mut store,
+                t,
+                t_next,
+                draw.standing_w,
+                grid_mean,
+                charging,
+                holding,
+            );
             t = t_next;
         }
         out
@@ -864,6 +1007,7 @@ mod tests {
             pv: PvProfile::from_samples(vec![(0.0, 500.0)]).unwrap(),
             battery: BatterySpec::simple(1_000.0, 1.0, 0.5),
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         // Draw under PV: all PV, battery untouched (and charging from excess).
         let f = mg.cover(0.0, 10.0, 300.0);
@@ -894,6 +1038,7 @@ mod tests {
             pv: PvProfile::from_samples(vec![(0.0, 1_000.0)]).unwrap(),
             battery: BatterySpec::simple(10.0, 1.0, 0.9), // 10 Wh = 36 kJ
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         // Massive excess: SoC caps at capacity.
         mg.cover(0.0, 3_600.0, 0.0);
@@ -905,6 +1050,7 @@ mod tests {
             pv: PvProfile::none(),
             battery: BatterySpec::simple(10.0, 1.0, 1.0),
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         let f = dark.cover(0.0, 3_600.0, 100.0); // 360 kJ demand vs 36 kJ stored
         assert!(dark.soc_frac().abs() < 1e-12);
@@ -925,6 +1071,7 @@ mod tests {
                 initial_soc: 0.0,
             },
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         let f = mg.cover(0.0, 10.0, 0.0);
         assert!((f.charged_j - 1_000.0).abs() < 1e-9); // 100 W × 10 s input
@@ -942,6 +1089,7 @@ mod tests {
                 initial_soc: 0.5,
             },
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         let f = full.cover(0.0, 100.0, 0.0); // 100 kJ excess vs 1800 J headroom
         assert!((f.charged_j - 1_800.0 / 0.5).abs() < 1e-9); // input = headroom/η
@@ -985,6 +1133,7 @@ mod tests {
                 initial_soc: 0.0,
             },
             charge: ChargePolicy::Threshold { percentile: 0.25, window_s: 7_200.0 },
+            discharge: DischargePolicy::Greedy,
         });
         // Hour 1: cheap -> import at the charger rate, no discharge.
         let f = mg.settle(0.0, 3_600.0, 50.0, &trace);
@@ -1037,6 +1186,7 @@ mod tests {
             // first hour imports; later windows flatten to 700 and the
             // flat-window guard stops the policy there.
             charge: ChargePolicy::Threshold { percentile: 0.5, window_s: 10_800.0 },
+            discharge: DischargePolicy::Greedy,
         });
         let f = mg.settle(0.0, 3_600.0, 50.0, &trace);
         assert!(f.grid_charge_j > 0.0, "first hour should import: {f:?}");
@@ -1075,6 +1225,7 @@ mod tests {
                 initial_soc: 0.0,
             },
             charge: ChargePolicy::Threshold { percentile: 0.25, window_s: 10_800.0 },
+            discharge: DischargePolicy::Greedy,
         });
         let f1 = mg.settle(0.0, 3_600.0, 0.0, &trace);
         let f2 = mg.settle(3_600.0, 7_200.0, 0.0, &trace);
@@ -1129,6 +1280,7 @@ mod tests {
             // Median of the first forward window sits at 500: hour 1
             // imports on top of the free initial charge.
             charge: ChargePolicy::Threshold { percentile: 0.5, window_s: 10_800.0 },
+            discharge: DischargePolicy::Greedy,
         });
         let f1 = mg.settle(0.0, 3_600.0, 0.0, &trace);
         assert!(f1.grid_charge_j > 0.0);
@@ -1204,6 +1356,7 @@ mod tests {
                 initial_soc: 1.0 / 36_000.0, // exactly 1 J
             },
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         // Zero task draw: the marginal watt is priced at 5% of rated
         // (7.1 W), which 1 J sustains for a fraction of a second.
@@ -1220,6 +1373,7 @@ mod tests {
             pv: PvProfile::from_samples(vec![(0.0, 0.2)]).unwrap(),
             battery: BatterySpec::none(),
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         let eff = dim.effective_intensity(0.0, draw(0.0, 0.0), 500.0, WINDOW);
         assert!(eff > 0.95 * 500.0, "0.2 W of PV advertised clean: {eff}");
@@ -1239,6 +1393,7 @@ mod tests {
                 initial_soc: 0.05, // 1800 J
             },
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         // Standing 0: the whole 30 W sustainable power serves the task.
         let eff = low.effective_intensity(0.0, draw(0.0, 100.0), 500.0, 60.0);
@@ -1266,6 +1421,7 @@ mod tests {
             pv: PvProfile::none(),
             battery: BatterySpec::none(),
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         let proj = bare.project(0.0, 1_500.0, d, &trace, 300.0, 60.0);
         let times: Vec<f64> = proj.iter().map(|&(t, ..)| t).collect();
@@ -1286,6 +1442,7 @@ mod tests {
                 initial_soc: 1.0,
             },
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         });
         let proj = mg.project(0.0, 1_500.0, d, &trace, 300.0, 60.0);
         let mut advert = mg.clone();
@@ -1321,10 +1478,148 @@ mod tests {
                 initial_soc: 0.0,
             },
             charge: ChargePolicy::Threshold { percentile: 0.3, window_s: 3_600.0 },
+            discharge: DischargePolicy::Greedy,
         });
         let proj = mg.project(0.0, 3_000.0, draw(54.0, 88.0), &trace, 300.0, 60.0);
         assert_eq!(proj[0].2, 0.0);
         let final_soc = proj.last().unwrap().2;
         assert!(final_soc > 0.0, "projection must see the future charge: {proj:?}");
+    }
+
+    #[test]
+    fn discharge_policy_validation_and_builder() {
+        assert!(DischargePolicy::Greedy.validate().is_ok());
+        assert!(DischargePolicy::default().is_greedy());
+        assert!(DischargePolicy::opportunity_cost(0.75).validate().is_ok());
+        assert!(DischargePolicy::opportunity_cost(0.0).validate().is_err());
+        assert!(DischargePolicy::opportunity_cost(1.0).validate().is_err());
+        assert!(DischargePolicy::OpportunityCost { percentile: 0.75, window_s: 0.0 }
+            .validate()
+            .is_err());
+        let spec = MicrogridSpec::solar(100.0, 100.0, 1.0, 0.5)
+            .with_discharge(DischargePolicy::opportunity_cost(0.75));
+        assert!(!spec.discharge.is_greedy());
+        assert!(spec.validate().is_ok());
+        let bad = MicrogridSpec::solar(100.0, 100.0, 1.0, 0.5)
+            .with_discharge(DischargePolicy::opportunity_cost(2.0));
+        assert!(bad.validate().is_err());
+    }
+
+    /// California-style duck-curve day (gCO₂/kWh per hour): cheap night,
+    /// modest morning ramp, clean solar midday, steep evening peak.
+    const DUCK_DAY_G: [f64; 24] = [
+        150.0, 145.0, 140.0, 140.0, 145.0, 160.0, // night
+        380.0, 480.0, 520.0, // morning ramp
+        430.0, 330.0, 260.0, 230.0, 225.0, 240.0, 300.0, // solar belly
+        520.0, 640.0, 680.0, 660.0, // evening peak
+        560.0, 540.0, 300.0, 200.0, // wind-down
+    ];
+
+    /// The duck-curve regression the opportunity-cost policy exists for:
+    /// a greedy store (every tranche is free, so every hour is
+    /// "profitable") spends its whole charge on the cheap night hours and
+    /// buys grid through the 680 g evening peak; the opportunity-cost
+    /// floor holds the same charge for the dirtiest quarter of the
+    /// forward window and lands it on the peak instead.
+    #[test]
+    fn opportunity_cost_beats_greedy_on_the_duck_curve() {
+        // Two tiled days so the forward window always sees a real day.
+        let points: Vec<(f64, f64)> = (0..48)
+            .map(|h| (h as f64 * 3_600.0, DUCK_DAY_G[h % 24]))
+            .collect();
+        let trace = IntensityTrace::from_samples(points).unwrap();
+        // 200 Wh of free charge, 50 W discharge limit, 50 W constant
+        // draw: exactly four hours of coverage to spend on a 24-hour day.
+        let battery = BatterySpec {
+            capacity_wh: 200.0,
+            max_charge_w: 0.0,
+            max_discharge_w: 50.0,
+            rt_efficiency: 1.0,
+            initial_soc: 1.0,
+        };
+        let mk = |discharge: DischargePolicy| {
+            Microgrid::new(MicrogridSpec {
+                pv: PvProfile::none(),
+                battery: battery.clone(),
+                charge: ChargePolicy::Off,
+                discharge,
+            })
+        };
+        let run = |mut mg: Microgrid| {
+            let mut grid_g = 0.0;
+            let mut battery_by_hour = [0.0f64; 24];
+            for h in 0..24 {
+                let (t0, t1) = (h as f64 * 3_600.0, (h + 1) as f64 * 3_600.0);
+                let f = mg.settle(t0, t1, 50.0, &trace);
+                let demand = 50.0 * 3_600.0;
+                assert!(
+                    (f.pv_j + f.battery_j + f.grid_j - demand).abs() < 1e-6,
+                    "hour {h} must conserve demand: {f:?}"
+                );
+                grid_g += joules_to_kwh(f.grid_j) * DUCK_DAY_G[h];
+                battery_by_hour[h] = f.battery_j;
+            }
+            (grid_g, battery_by_hour, mg)
+        };
+        let (greedy_g, greedy_hours, greedy_mg) = run(mk(DischargePolicy::Greedy));
+        let (oc_g, oc_hours, oc_mg) = run(mk(DischargePolicy::opportunity_cost(0.75)));
+        // Greedy blows the store on the cheap night: discharge starts at
+        // hour 0 and the battery is dry before the morning ramp.
+        assert!(greedy_hours[0] > 0.0, "greedy must spend on the first hour");
+        assert!(
+            greedy_hours[6..].iter().all(|&j| j == 0.0),
+            "greedy store must be dry by the ramp: {greedy_hours:?}"
+        );
+        // Opportunity-cost holds through the cheap night and the solar
+        // belly, and spends into the evening peak.
+        assert!(
+            oc_hours[..6].iter().all(|&j| j == 0.0),
+            "opportunity-cost must hold overnight: {oc_hours:?}"
+        );
+        assert!(
+            oc_hours[16..20].iter().any(|&j| j > 0.0),
+            "opportunity-cost must spend into the evening peak: {oc_hours:?}"
+        );
+        // Both spend the full (free) store by end of day.
+        assert!(greedy_mg.soc_frac() < 1e-9);
+        assert!(oc_mg.soc_frac() < 1e-9, "soc {}", oc_mg.soc_frac());
+        // The regression pin: same store, same day, >10% less grid carbon.
+        assert!(
+            oc_g < 0.9 * greedy_g,
+            "opportunity-cost must beat greedy on the duck curve: {oc_g:.1} vs {greedy_g:.1}"
+        );
+    }
+
+    #[test]
+    fn holding_store_is_not_advertised() {
+        // Full free battery under an opportunity-cost floor during a
+        // cheap hour: the marginal price must be the raw grid — the store
+        // is being held for the peak and will not discharge now.
+        let points: Vec<(f64, f64)> = (0..48)
+            .map(|h| (h as f64 * 3_600.0, DUCK_DAY_G[h % 24]))
+            .collect();
+        let trace = IntensityTrace::from_samples(points).unwrap();
+        let mk = |discharge: DischargePolicy| {
+            Microgrid::new(MicrogridSpec {
+                pv: PvProfile::none(),
+                battery: BatterySpec::simple(600.0, 1.0, 1.0),
+                charge: ChargePolicy::Off,
+                discharge,
+            })
+        };
+        let d = draw(54.0, 88.0);
+        // Hour 2 (140 g, the cheap night): greedy advertises the free
+        // store; the opportunity-cost floor holds it back.
+        let mut greedy = mk(DischargePolicy::Greedy);
+        assert_eq!(greedy.advertised_intensity(&trace, 7_500.0, d, 60.0), 0.0);
+        let mut oc = mk(DischargePolicy::opportunity_cost(0.75));
+        assert_eq!(oc.advertised_intensity(&trace, 7_500.0, d, 60.0), trace.at(7_500.0));
+        // Hour 18 (680 g, the peak): both advertise the store.
+        assert_eq!(oc.advertised_intensity(&trace, 65_000.0, d, 60.0), 0.0);
+        // The projection sees the hold and the release on the same grid.
+        let proj = oc.project(7_500.0, 70_000.0, d, &trace, 3_600.0, 60.0);
+        assert_eq!(proj[0].1, trace.at(7_500.0), "held store must not discount slot 0");
+        let peak = proj.iter().find(|&&(t, ..)| t >= 61_200.0).unwrap();
+        assert!(peak.1 < trace.at(peak.0), "projection must see the peak release: {proj:?}");
     }
 }

@@ -57,7 +57,7 @@ use std::io;
 use crate::scheduler::{DecisionExplain, RejectReason, SchedulingDecision};
 use crate::util::json::JsonWriter;
 
-/// The eleven trace event kinds, used for filtering and counting.
+/// The twelve trace event kinds, used for filtering and counting.
 /// Discriminants index [`Telemetry::events`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
@@ -78,10 +78,14 @@ pub enum EventKind {
     /// One per run, first in the stream: scenario/scheduler/seed plus the
     /// node and class rosters, so a replay needs nothing but the trace.
     RunMeta = 10,
+    /// A cross-site [`crate::site::Router`] shipped a request to a
+    /// non-home site over the WAN: the hop's latency and transfer energy,
+    /// and the carbon that energy cost at the origin grid.
+    WanHop = 11,
 }
 
 impl EventKind {
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 12;
     pub const ALL: [EventKind; EventKind::COUNT] = [
         EventKind::Arrival,
         EventKind::Decision,
@@ -94,6 +98,7 @@ impl EventKind {
         EventKind::Alert,
         EventKind::IdleSlice,
         EventKind::RunMeta,
+        EventKind::WanHop,
     ];
 
     /// Stable label: the `kind` field of every NDJSON line and the token
@@ -111,6 +116,7 @@ impl EventKind {
             EventKind::Alert => "alert",
             EventKind::IdleSlice => "idle_slice",
             EventKind::RunMeta => "run_meta",
+            EventKind::WanHop => "wan_hop",
         }
     }
 
@@ -127,6 +133,7 @@ impl EventKind {
             "alert" => Some(EventKind::Alert),
             "idle_slice" | "idle" => Some(EventKind::IdleSlice),
             "run_meta" | "meta" => Some(EventKind::RunMeta),
+            "wan_hop" | "wan" => Some(EventKind::WanHop),
             _ => None,
         }
     }
@@ -196,8 +203,11 @@ impl TraceFilter {
 #[derive(Debug)]
 pub enum TraceEvent<'a> {
     /// A request entered the system. `deadline_s` is `f64::INFINITY` when
-    /// the scenario has no deferral window (serialised as `null`).
-    Arrival { t_s: f64, deadline_s: f64 },
+    /// the scenario has no deferral window (serialised as `null`);
+    /// `class` is the workload-class draw (0 without a mix). Classes
+    /// never change after arrival, so per-class reject counts fall out
+    /// of replay conservation just like the fleet-level one.
+    Arrival { t_s: f64, deadline_s: f64, class: usize },
     /// A scheduling verdict, with the per-candidate rationale gathered by
     /// [`crate::scheduler::Scheduler::decide_explained`]. `ctx` says what
     /// triggered the decision: `"arrival"`, `"release"` (a deferred task
@@ -294,6 +304,27 @@ pub enum TraceEvent<'a> {
         requests: u64,
         nodes: &'a [(&'a str, bool)],
         classes: &'a [(&'a str, f64)],
+        /// Site roster (multi-site runs; empty — and absent from the
+        /// NDJSON line — on flat fleets).
+        sites: &'a [&'a str],
+        /// Home site index per node, parallel to `nodes` (empty on flat
+        /// fleets).
+        site_of: &'a [usize],
+        /// Cross-site router name (`""` on flat fleets).
+        router: &'a str,
+    },
+    /// A cross-site router shipped a request from its home site over the
+    /// WAN: `energy_j` is the transfer energy (billed on top of the node
+    /// split), `carbon_g` that energy priced at the origin grid's
+    /// ship-time effective intensity. The request re-enters the target
+    /// site's queue `latency_ms` later with its original arrival time.
+    WanHop {
+        t_s: f64,
+        from: &'a str,
+        to: &'a str,
+        latency_ms: f64,
+        energy_j: f64,
+        carbon_g: f64,
     },
 }
 
@@ -311,6 +342,7 @@ impl TraceEvent<'_> {
             TraceEvent::Alert { .. } => EventKind::Alert,
             TraceEvent::IdleSlice { .. } => EventKind::IdleSlice,
             TraceEvent::RunMeta { .. } => EventKind::RunMeta,
+            TraceEvent::WanHop { .. } => EventKind::WanHop,
         }
     }
 }
@@ -384,9 +416,10 @@ impl<W: io::Write> FirehoseSink<W> {
         j.begin_obj()?;
         j.field_str("kind", ev.kind().label())?;
         match *ev {
-            TraceEvent::Arrival { t_s, deadline_s } => {
+            TraceEvent::Arrival { t_s, deadline_s, class } => {
                 j.field_num("t_s", t_s)?;
                 j.field_fnum("deadline_s", deadline_s)?;
+                j.field_num("class", class as f64)?;
             }
             TraceEvent::Decision { t_s, arrival_s, ctx, verdict, node, explain, decide_ns } => {
                 j.field_num("t_s", t_s)?;
@@ -408,6 +441,7 @@ impl<W: io::Write> FirehoseSink<W> {
                         j.field_str("verdict", "reject")?;
                         let r = match reason {
                             RejectReason::NoFeasibleNode => "no-feasible-node",
+                            RejectReason::Overload => "overload",
                         };
                         j.field_str("reason", r)?;
                     }
@@ -536,17 +570,30 @@ impl<W: io::Write> FirehoseSink<W> {
                 j.field_fnum("energy_j", energy_j)?;
                 j.field_fnum("carbon_g", carbon_g)?;
             }
-            TraceEvent::RunMeta { scenario, scheduler, seed, requests, nodes, classes } => {
+            TraceEvent::RunMeta {
+                scenario,
+                scheduler,
+                seed,
+                requests,
+                nodes,
+                classes,
+                sites,
+                site_of,
+                router,
+            } => {
                 j.field_str("scenario", scenario)?;
                 j.field_str("scheduler", scheduler)?;
                 j.field_num("seed", seed as f64)?;
                 j.field_num("requests", requests as f64)?;
                 j.key("nodes")?;
                 j.begin_arr()?;
-                for &(name, microgrid) in nodes {
+                for (i, &(name, microgrid)) in nodes.iter().enumerate() {
                     j.begin_obj()?;
                     j.field_str("node", name)?;
                     j.field_bool("microgrid", microgrid)?;
+                    if let Some(&s) = site_of.get(i) {
+                        j.field_num("site", s as f64)?;
+                    }
                     j.end_obj()?;
                 }
                 j.end_arr()?;
@@ -559,6 +606,25 @@ impl<W: io::Write> FirehoseSink<W> {
                     j.end_obj()?;
                 }
                 j.end_arr()?;
+                // Site roster + router only on multi-site runs, so flat
+                // traces stay byte-identical to pre-site builds.
+                if !sites.is_empty() {
+                    j.field_str("router", router)?;
+                    j.key("sites")?;
+                    j.begin_arr()?;
+                    for &name in sites {
+                        j.string(name)?;
+                    }
+                    j.end_arr()?;
+                }
+            }
+            TraceEvent::WanHop { t_s, from, to, latency_ms, energy_j, carbon_g } => {
+                j.field_num("t_s", t_s)?;
+                j.field_str("from", from)?;
+                j.field_str("to", to)?;
+                j.field_fnum("latency_ms", latency_ms)?;
+                j.field_fnum("energy_j", energy_j)?;
+                j.field_fnum("carbon_g", carbon_g)?;
             }
         }
         j.end_obj()?;
@@ -666,6 +732,9 @@ mod tests {
             requests: 4_000,
             nodes: &nodes,
             classes: &classes,
+            sites: &[],
+            site_of: &[],
+            router: "",
         });
         assert_eq!(sink.events_written(), 3);
         let text = String::from_utf8(sink.finish().unwrap()).unwrap();
@@ -684,12 +753,56 @@ mod tests {
         assert_eq!(ns.len(), 2);
         assert_eq!(ns[1].get("microgrid").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("classes").unwrap().as_arr().unwrap().len(), 1);
+        // Flat fleet: no site keys on the meta line.
+        assert!(v.get("sites").is_none());
+        assert!(v.get("router").is_none());
+        assert!(ns[0].get("site").is_none());
+    }
+
+    #[test]
+    fn wan_hop_and_site_meta_serialise() {
+        let mut sink = FirehoseSink::new(Vec::new());
+        let nodes = [("eu-west-00", false), ("us-west-01", false)];
+        sink.record(&TraceEvent::RunMeta {
+            scenario: "multi-site",
+            scheduler: "green",
+            seed: 7,
+            requests: 100,
+            nodes: &nodes,
+            classes: &[],
+            sites: &["eu-west", "us-west"],
+            site_of: &[0, 1],
+            router: "deadline",
+        });
+        sink.record(&TraceEvent::WanHop {
+            t_s: 12.5,
+            from: "eu-west",
+            to: "us-west",
+            latency_ms: 60.0,
+            energy_j: 6.4e-3,
+            carbon_g: 8.4e-7,
+        });
+        let text = String::from_utf8(sink.finish().unwrap()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("router").unwrap().as_str(), Some("deadline"));
+        let sites = v.get("sites").unwrap().as_arr().unwrap();
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].as_str(), Some("eu-west"));
+        let ns = v.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(ns[1].get("site").unwrap().as_i64(), Some(1));
+        let v = Json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("wan_hop"));
+        assert_eq!(v.get("from").unwrap().as_str(), Some("eu-west"));
+        assert_eq!(v.get("to").unwrap().as_str(), Some("us-west"));
+        assert_eq!(v.get("latency_ms").unwrap().as_f64(), Some(60.0));
+        assert!(v.get("carbon_g").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]
     fn firehose_streams_one_parseable_line_per_event() {
         let mut sink = FirehoseSink::new(Vec::new());
-        sink.record(&TraceEvent::Arrival { t_s: 0.5, deadline_s: 3600.5 });
+        sink.record(&TraceEvent::Arrival { t_s: 0.5, deadline_s: 3600.5, class: 0 });
         sink.record(&TraceEvent::Dispatch {
             t_s: 0.5,
             arrival_s: 0.5,
@@ -776,7 +889,7 @@ mod tests {
         let mut sink = FirehoseSink::with_filter(Vec::new(), filter);
         assert!(sink.wants(EventKind::Completion));
         assert!(!sink.wants(EventKind::Arrival));
-        sink.record(&TraceEvent::Arrival { t_s: 1.0, deadline_s: f64::INFINITY });
+        sink.record(&TraceEvent::Arrival { t_s: 1.0, deadline_s: f64::INFINITY, class: 0 });
         sink.record(&TraceEvent::Completion {
             t_s: 2.0,
             arrival_s: 1.0,
@@ -799,7 +912,7 @@ mod tests {
     #[test]
     fn infinite_deadline_serialises_as_null() {
         let mut sink = FirehoseSink::new(Vec::new());
-        sink.record(&TraceEvent::Arrival { t_s: 0.0, deadline_s: f64::INFINITY });
+        sink.record(&TraceEvent::Arrival { t_s: 0.0, deadline_s: f64::INFINITY, class: 0 });
         let text = String::from_utf8(sink.finish().unwrap()).unwrap();
         let v = Json::parse(text.trim()).unwrap();
         assert_eq!(v.get("deadline_s"), Some(&Json::Null));
@@ -809,6 +922,6 @@ mod tests {
     fn null_sink_wants_nothing() {
         let mut s = NullSink;
         assert!(!s.wants(EventKind::Decision));
-        s.record(&TraceEvent::Arrival { t_s: 0.0, deadline_s: 1.0 });
+        s.record(&TraceEvent::Arrival { t_s: 0.0, deadline_s: 1.0, class: 0 });
     }
 }

@@ -28,7 +28,7 @@ use std::io::{self, BufRead};
 
 use crate::carbon::joules_to_kwh;
 use crate::sim::report::{sum_storage, sum_supply, summary_or_zero};
-use crate::sim::{ClassUsage, NodeUsage, SimReport};
+use crate::sim::{ClassUsage, NodeUsage, SimReport, SiteUsage};
 use crate::util::json::Json;
 
 use super::EventKind;
@@ -92,6 +92,10 @@ struct Meta {
     node_index: HashMap<String, usize>,
     class_names: Vec<String>,
     class_slo_s: Vec<f64>,
+    site_names: Vec<String>,
+    site_of: Vec<usize>,
+    site_index: HashMap<String, usize>,
+    router: String,
 }
 
 /// Per-node replay ledger, mirroring the engine's per-node accumulators.
@@ -117,15 +121,30 @@ struct NodeAcc {
     queue_delay_ms: Vec<f64>,
 }
 
-/// Per-class replay ledger.
+/// Per-class replay ledger. `arrived` feeds the per-class conservation
+/// identity: a request's class never changes after arrival, so the class's
+/// rejected count is `arrived − completed` — the same identity the fleet
+/// level uses.
 #[derive(Default, Clone)]
 struct ClassAcc {
+    arrived: u64,
     completed: u64,
     slo_missed: u64,
     batches: u64,
     latency_ms: Vec<f64>,
     energy_j: f64,
     carbon_g: f64,
+}
+
+/// Per-site replay ledger: the WAN side of a site's row. Member-node
+/// energy/carbon come from the per-node ledgers via the meta's `site_of`
+/// map; only the cross-site transfer sums need their own accumulators.
+#[derive(Default, Clone)]
+struct SiteAcc {
+    shipped_out: u64,
+    shipped_in: u64,
+    wan_energy_j: f64,
+    wan_carbon_g: f64,
 }
 
 /// Folds trace events into the same sums the live engine keeps, then
@@ -141,6 +160,10 @@ struct ClassAcc {
 /// - `mg_slice` → supply splits, idle/dynamic carbon shares, the
 ///   stored-carbon ledger; `idle_slice` → uptime and the grid-only idle
 ///   floor; `batch_formed` → per-class batch counts.
+/// - `wan_hop` → per-site shipped counts and transfer energy/carbon,
+///   billed at the origin site exactly as the engine attributes them;
+///   arrivals also carry their class, so per-class `rejected` falls out of
+///   the same conservation identity (`arrived − completed`).
 pub struct ReplayState {
     meta: Option<Meta>,
     events: u64,
@@ -156,6 +179,7 @@ pub struct ReplayState {
     wait_ms: Vec<f64>,
     nodes: Vec<NodeAcc>,
     classes: Vec<ClassAcc>,
+    sites: Vec<SiteAcc>,
 }
 
 impl Default for ReplayState {
@@ -199,6 +223,7 @@ impl ReplayState {
             wait_ms: Vec::new(),
             nodes: Vec::new(),
             classes: Vec::new(),
+            sites: Vec::new(),
         }
     }
 
@@ -223,7 +248,19 @@ impl ReplayState {
             ));
         }
         match kind {
-            EventKind::Arrival => self.requests += 1,
+            EventKind::Arrival => {
+                self.requests += 1;
+                // Legacy traces carry no class on arrivals; class 0
+                // absorbs them, mirroring the engine's default class.
+                let class = ev.get("class").and_then(Json::as_usize).unwrap_or(0);
+                if class >= self.classes.len() {
+                    return Err(format!(
+                        "arrival class {class} out of range ({} declared in run_meta)",
+                        self.classes.len()
+                    ));
+                }
+                self.classes[class].arrived += 1;
+            }
             EventKind::Decision => {
                 if text(ev, "ctx")? == "migration" && text(ev, "verdict")? == "assign" {
                     self.migrated += 1;
@@ -250,6 +287,16 @@ impl ReplayState {
                 let class = self.class_idx(ev)?;
                 self.classes[class].batches += 1;
             }
+            EventKind::WanHop => {
+                let from = self.site_idx(text(ev, "from")?)?;
+                let to = self.site_idx(text(ev, "to")?)?;
+                self.sites[from].shipped_out += 1;
+                self.sites[to].shipped_in += 1;
+                // Transfer energy/carbon bill at the origin, exactly as
+                // the engine attributes them to the shipping site's row.
+                self.sites[from].wan_energy_j += num(ev, "energy_j")?;
+                self.sites[from].wan_carbon_g += num(ev, "carbon_g")?;
+            }
             EventKind::RunMeta => unreachable!("handled above"),
         }
         Ok(())
@@ -259,15 +306,38 @@ impl ReplayState {
         if self.meta.is_some() {
             return Err("second run_meta header — one trace per file".into());
         }
+        // Geographic metadata is optional: flat fleets carry no sites
+        // array, no router, and no per-node site tags.
+        let mut site_names = Vec::new();
+        let mut site_index = HashMap::new();
+        if let Some(sites) = ev.get("sites").and_then(Json::as_arr) {
+            for s in sites {
+                let name =
+                    s.as_str().ok_or("run_meta sites must be an array of strings")?;
+                site_index.insert(name.to_string(), site_names.len());
+                site_names.push(name.to_string());
+            }
+        }
+        let router =
+            ev.get("router").and_then(Json::as_str).unwrap_or_default().to_string();
         let nodes = ev.get("nodes").and_then(Json::as_arr).ok_or("run_meta missing nodes")?;
         let mut node_names = Vec::with_capacity(nodes.len());
         let mut node_microgrid = Vec::with_capacity(nodes.len());
         let mut node_index = HashMap::with_capacity(nodes.len());
+        let mut site_of = Vec::with_capacity(nodes.len());
         for n in nodes {
             let name = text(n, "node")?;
             node_index.insert(name.to_string(), node_names.len());
             node_names.push(name.to_string());
             node_microgrid.push(flag(n, "microgrid")?);
+            let site = n.get("site").and_then(Json::as_usize).unwrap_or(0);
+            if !site_names.is_empty() && site >= site_names.len() {
+                return Err(format!(
+                    "node {name:?} site {site} out of range ({} declared)",
+                    site_names.len()
+                ));
+            }
+            site_of.push(site);
         }
         let classes =
             ev.get("classes").and_then(Json::as_arr).ok_or("run_meta missing classes")?;
@@ -283,6 +353,7 @@ impl ReplayState {
         // absorbs everything), mirroring the engine; reported only when
         // the meta declared a mix.
         self.classes = vec![ClassAcc::default(); class_names.len().max(1)];
+        self.sites = vec![SiteAcc::default(); site_names.len()];
         self.meta = Some(Meta {
             scenario: text(ev, "scenario")?.to_string(),
             scheduler: text(ev, "scheduler")?.to_string(),
@@ -293,6 +364,10 @@ impl ReplayState {
             node_index,
             class_names,
             class_slo_s,
+            site_names,
+            site_of,
+            site_index,
+            router,
         });
         Ok(())
     }
@@ -359,6 +434,13 @@ impl ReplayState {
             .as_ref()
             .and_then(|m| m.node_index.get(name).copied())
             .ok_or_else(|| format!("node {name:?} not in the run_meta roster"))
+    }
+
+    fn site_idx(&self, name: &str) -> Result<usize, String> {
+        self.meta
+            .as_ref()
+            .and_then(|m| m.site_index.get(name).copied())
+            .ok_or_else(|| format!("site {name:?} not in the run_meta roster"))
     }
 
     fn class_idx(&self, ev: &Json) -> Result<usize, String> {
@@ -441,6 +523,10 @@ impl ReplayState {
                 ClassUsage {
                     name: name.clone(),
                     completed: acc.completed,
+                    // Per-class conservation: class membership is fixed at
+                    // arrival, so sheds + scheduler rejects are whatever
+                    // of the class's arrivals never completed.
+                    rejected: acc.arrived.saturating_sub(acc.completed),
                     slo_s: meta.class_slo_s[c],
                     slo_missed: acc.slo_missed,
                     batches: acc.batches,
@@ -459,6 +545,48 @@ impl ReplayState {
             joules_to_kwh(self.nodes.iter().map(|n| n.idle_energy_j).sum::<f64>());
         let carbon_idle_g_total: f64 = self.nodes.iter().map(|n| n.idle_carbon_g).sum();
         let energy_dynamic_kwh_total = joules_to_kwh(self.energy_total_j);
+        // Per-site rows re-derive the engine's partition: member nodes'
+        // dynamic + idle sums from the node ledgers, WAN transfer from the
+        // wan_hop ledger billed at the origin site.
+        let sites: Vec<SiteUsage> = meta
+            .site_names
+            .iter()
+            .enumerate()
+            .map(|(s, name)| {
+                let members: Vec<usize> =
+                    (0..self.nodes.len()).filter(|&g| meta.site_of[g] == s).collect();
+                let completed: u64 = members.iter().map(|&g| self.nodes[g].tasks).sum();
+                let dyn_kwh: f64 =
+                    members.iter().map(|&g| self.nodes[g].energy_dynamic_kwh).sum();
+                let idle_kwh = joules_to_kwh(
+                    members.iter().map(|&g| self.nodes[g].idle_energy_j).sum::<f64>(),
+                );
+                let dyn_g: f64 = members.iter().map(|&g| self.nodes[g].carbon_dynamic_g).sum();
+                let idle_g: f64 = members.iter().map(|&g| self.nodes[g].idle_carbon_g).sum();
+                let acc = &self.sites[s];
+                let wan_kwh = joules_to_kwh(acc.wan_energy_j);
+                let wan_g = acc.wan_carbon_g;
+                let carbon_g = dyn_g + idle_g + wan_g;
+                SiteUsage {
+                    name: name.clone(),
+                    nodes: members.len(),
+                    completed,
+                    shipped_out: acc.shipped_out,
+                    shipped_in: acc.shipped_in,
+                    energy_kwh: dyn_kwh + idle_kwh,
+                    energy_wan_kwh: wan_kwh,
+                    carbon_g,
+                    carbon_wan_g: wan_g,
+                    carbon_per_req_g: if completed > 0 {
+                        carbon_g / completed as f64
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect();
+        let energy_wan_kwh_total: f64 = sites.iter().map(|r| r.energy_wan_kwh).sum();
+        let carbon_wan_g_total: f64 = sites.iter().map(|r| r.carbon_wan_g).sum();
         Ok(SimReport {
             scenario: meta.scenario,
             scheduler: meta.scheduler,
@@ -479,9 +607,12 @@ impl ReplayState {
             },
             latency_ms: summary_or_zero(&self.latency_ms),
             wait_ms: summary_or_zero(&self.wait_ms),
-            energy_kwh_total: energy_dynamic_kwh_total + energy_idle_kwh_total,
+            energy_kwh_total: energy_dynamic_kwh_total
+                + energy_idle_kwh_total
+                + energy_wan_kwh_total,
             energy_dynamic_kwh_total,
             energy_idle_kwh_total,
+            energy_wan_kwh_total,
             energy_pv_kwh_total,
             energy_battery_kwh_total,
             energy_grid_kwh_total,
@@ -489,15 +620,20 @@ impl ReplayState {
             carbon_charged_g_total,
             carbon_battery_g_total,
             carbon_stored_g_total,
-            carbon_g_total: self.carbon_dynamic_g + carbon_idle_g_total,
+            carbon_g_total: self.carbon_dynamic_g + carbon_idle_g_total + carbon_wan_g_total,
             carbon_dynamic_g_total: self.carbon_dynamic_g,
             carbon_idle_g_total,
+            carbon_wan_g_total,
             carbon_per_req_g: if self.completed > 0 {
-                (self.carbon_dynamic_g + carbon_idle_g_total) / self.completed as f64
+                (self.carbon_dynamic_g + carbon_idle_g_total + carbon_wan_g_total)
+                    / self.completed as f64
             } else {
                 0.0
             },
+            router: meta.router,
+            wan_shipped: self.sites.iter().map(|s| s.shipped_out).sum(),
             classes,
+            sites,
             nodes,
             monitors: Vec::new(),
         })
@@ -589,6 +725,7 @@ pub fn verify(replayed: &SimReport, live: &SimReport) -> Vec<String> {
         live.energy_dynamic_kwh_total,
     );
     v.float("energy_idle_kwh_total", replayed.energy_idle_kwh_total, live.energy_idle_kwh_total);
+    v.float("energy_wan_kwh_total", replayed.energy_wan_kwh_total, live.energy_wan_kwh_total);
     v.float("energy_pv_kwh_total", replayed.energy_pv_kwh_total, live.energy_pv_kwh_total);
     v.float(
         "energy_battery_kwh_total",
@@ -607,7 +744,24 @@ pub fn verify(replayed: &SimReport, live: &SimReport) -> Vec<String> {
     v.float("carbon_g_total", replayed.carbon_g_total, live.carbon_g_total);
     v.float("carbon_dynamic_g_total", replayed.carbon_dynamic_g_total, live.carbon_dynamic_g_total);
     v.float("carbon_idle_g_total", replayed.carbon_idle_g_total, live.carbon_idle_g_total);
+    v.float("carbon_wan_g_total", replayed.carbon_wan_g_total, live.carbon_wan_g_total);
     v.float("carbon_per_req_g", replayed.carbon_per_req_g, live.carbon_per_req_g);
+    v.str("router", &replayed.router, &live.router);
+    v.int("wan_shipped", replayed.wan_shipped, live.wan_shipped);
+    v.int("sites.len", replayed.sites.len() as u64, live.sites.len() as u64);
+    for (r, l) in replayed.sites.iter().zip(&live.sites) {
+        let p = format!("site[{}]", l.name);
+        v.str(&format!("{p}.name"), &r.name, &l.name);
+        v.int(&format!("{p}.nodes"), r.nodes as u64, l.nodes as u64);
+        v.int(&format!("{p}.completed"), r.completed, l.completed);
+        v.int(&format!("{p}.shipped_out"), r.shipped_out, l.shipped_out);
+        v.int(&format!("{p}.shipped_in"), r.shipped_in, l.shipped_in);
+        v.float(&format!("{p}.energy_kwh"), r.energy_kwh, l.energy_kwh);
+        v.float(&format!("{p}.energy_wan_kwh"), r.energy_wan_kwh, l.energy_wan_kwh);
+        v.float(&format!("{p}.carbon_g"), r.carbon_g, l.carbon_g);
+        v.float(&format!("{p}.carbon_wan_g"), r.carbon_wan_g, l.carbon_wan_g);
+        v.float(&format!("{p}.carbon_per_req_g"), r.carbon_per_req_g, l.carbon_per_req_g);
+    }
     v.int("nodes.len", replayed.nodes.len() as u64, live.nodes.len() as u64);
     for (r, l) in replayed.nodes.iter().zip(&live.nodes) {
         let p = format!("node[{}]", l.name);
@@ -640,6 +794,7 @@ pub fn verify(replayed: &SimReport, live: &SimReport) -> Vec<String> {
         let p = format!("class[{}]", l.name);
         v.str(&format!("{p}.name"), &r.name, &l.name);
         v.int(&format!("{p}.completed"), r.completed, l.completed);
+        v.int(&format!("{p}.rejected"), r.rejected, l.rejected);
         v.int(&format!("{p}.slo_missed"), r.slo_missed, l.slo_missed);
         v.int(&format!("{p}.batches"), r.batches, l.batches);
         if r.slo_s.is_finite() || l.slo_s.is_finite() {
@@ -844,6 +999,39 @@ mod tests {
         assert_eq!(a.queue_delay_ms_max, 4.0);
         // Grid-only supply identity: everything came from the grid.
         assert!((a.energy_grid_kwh - (a.energy_dynamic_kwh + a.energy_idle_kwh)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn replay_folds_wan_hops_into_site_rows() {
+        let meta = r#"{"kind":"run_meta","scenario":"unit","scheduler":"green","seed":7,"requests":1,"nodes":[{"node":"a","microgrid":false,"site":0},{"node":"b","microgrid":false,"site":1}],"classes":[],"sites":["eu","us"],"router":"deadline"}"#;
+        let text = trace(&[
+            meta,
+            r#"{"kind":"arrival","t_s":0.5,"deadline_s":null,"class":0}"#,
+            r#"{"kind":"wan_hop","t_s":0.5,"from":"eu","to":"us","latency_ms":120,"energy_j":0.008,"carbon_g":0.001}"#,
+            r#"{"kind":"completion","t_s":0.7,"arrival_s":0.5,"node":"b","class":0,"service_ms":200,"latency_ms":200,"energy_j":9,"carbon_g":0.02,"missed":false,"slo_missed":false}"#,
+        ]);
+        let (report, events) = replay_report(text.as_bytes()).unwrap();
+        assert_eq!(events, 4);
+        assert_eq!(report.router, "deadline");
+        assert_eq!(report.wan_shipped, 1);
+        assert_eq!(report.sites.len(), 2);
+        let eu = &report.sites[0];
+        assert_eq!((eu.shipped_out, eu.shipped_in), (1, 0));
+        assert!((eu.energy_wan_kwh - 0.008 / 3.6e6).abs() < 1e-18);
+        assert!((eu.carbon_wan_g - 0.001).abs() < 1e-15);
+        let us = &report.sites[1];
+        assert_eq!((us.shipped_out, us.shipped_in), (0, 1));
+        assert_eq!(us.completed, 1);
+        // The transfer joins the fleet totals through the origin row.
+        assert!((report.carbon_g_total - 0.021).abs() < 1e-12);
+        assert!((report.energy_kwh_total - (9.0 + 0.008) / 3.6e6).abs() < 1e-18);
+        assert!(verify(&report, &report).is_empty());
+        let mut drifted = report.clone();
+        drifted.sites[0].shipped_out = 9;
+        drifted.wan_shipped = 9;
+        let problems = verify(&report, &drifted);
+        assert!(problems.iter().any(|p| p.starts_with("site[eu].shipped_out")), "{problems:?}");
+        assert!(problems.iter().any(|p| p.starts_with("wan_shipped")), "{problems:?}");
     }
 
     #[test]

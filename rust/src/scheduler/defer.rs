@@ -19,7 +19,11 @@
 //!   over slots within [`DeferAwareGreenScheduler::plateau_tol`] of the
 //!   minimum), so parked work does not release as one thundering herd that
 //!   saturates the cleanest node and spills back onto dirty ones — the
-//!   queue-delay failure mode of route-then-defer under load.
+//!   queue-delay failure mode of route-then-defer under load. The defer
+//!   question is also *batch-aware*: joining a forming batch is credited
+//!   at its marginal energy `(E(k+1) − E(k))/E(1)`, so a request that
+//!   would ride an almost-free batch slot runs now unless the forecast
+//!   trough is deeper than that discount.
 
 use crate::carbon::{DeferDecision, DeferralPolicy};
 
@@ -194,6 +198,28 @@ impl DeferAwareGreenScheduler {
         }
         best
     }
+
+    /// Marginal-energy credit for joining the chosen node's forming batch:
+    /// `(E(k+1) − E(k)) / E(1)`, where `E(b)` is the slot energy of a
+    /// `b`-deep batch ([`crate::node::NodeSpec::batch_dynamic_power_w`] ×
+    /// [`crate::node::NodeSpec::batch_latency_ms`] at the spec's prior
+    /// service estimate) and `k` the batch's current fill. Returns 1.0 (no
+    /// credit) when the view carries no batching context or no batch is
+    /// forming — an opening request pays full freight.
+    fn marginal_batch_ratio(&self, task: &TaskDemand, chosen: &super::NodeView) -> f64 {
+        let k = match chosen.class_state.get(task.class) {
+            Some(cv) if cv.queued > 0 => cv.queued,
+            _ => return 1.0,
+        };
+        let spec = &chosen.node.spec;
+        let e =
+            |b: usize| spec.batch_dynamic_power_w(b) * spec.batch_latency_ms(spec.prior_ms, b);
+        let e1 = e(1);
+        if !e1.is_finite() || e1 <= 0.0 {
+            return 1.0;
+        }
+        ((e(k + 1) - e(k)) / e1).clamp(0.0, 1.0)
+    }
 }
 
 impl DeferAwareGreenScheduler {
@@ -267,13 +293,18 @@ impl DeferAwareGreenScheduler {
         }
         // Joint verdict: defer only when somewhere in the fleet, sometime
         // inside the deadline, beats running on the routed node right now.
-        if best >= now_i * (1.0 - self.defer_min_gain) {
+        // A forming batch discounts the now-price to its *marginal* energy:
+        // request k+1 adds only E(k+1) − E(k) ≪ E(1) of slot energy, so
+        // the trough must be deeper than that discount to justify parking
+        // instead of joining.
+        let marginal = self.marginal_batch_ratio(task, &fleet.nodes[chosen]);
+        if best >= now_i * marginal * (1.0 - self.defer_min_gain) {
             if let Some(e) = explain {
                 e.note = Some(format!(
                     "ran now on {}: best fleet slot {best:.1} g/kWh does not clear \
-                     {:.1} (now {now_i:.1} g/kWh, min gain {})",
+                     {:.1} (now {now_i:.1} g/kWh, min gain {}, batch marginal {marginal:.2})",
                     fleet.nodes[chosen].node.spec.name,
-                    now_i * (1.0 - self.defer_min_gain),
+                    now_i * marginal * (1.0 - self.defer_min_gain),
                     self.defer_min_gain
                 ));
             }
@@ -523,6 +554,48 @@ mod tests {
         let r = NodeRegistry::paper_setup();
         let f = FleetView::observe(r.nodes());
         assert_eq!(s.decide(&task, &f), SchedulingDecision::Assign(2));
+    }
+
+    #[test]
+    fn forming_batch_flips_defer_to_join() {
+        use crate::scheduler::ClassNodeView;
+        // The marginal-energy credit in action: a trough deep enough to
+        // park a batch-OPENING request is not deep enough to beat joining
+        // an already-forming batch on the same node, so the identical
+        // fleet snapshot flips from Defer to Assign once a batch forms.
+        let reg = NodeRegistry::paper_setup();
+        let spec = &reg.get(2).spec; // node-green: green routing's pick
+        let e =
+            |b: usize| spec.batch_dynamic_power_w(b) * spec.batch_latency_ms(spec.prior_ms, b);
+        let ratio = (e(2) - e(1)) / e(1);
+        assert!(ratio > 0.0 && ratio < 1.0, "paper nodes must amortize, got {ratio}");
+        let gain = 0.05;
+        let now_i = 380.0;
+        // Halfway between the two thresholds: clears the full-freight bar,
+        // misses the marginal-credit bar.
+        let trough = now_i * (1.0 - gain) * (1.0 + ratio) / 2.0;
+        let mk = |queued: usize| {
+            let r = NodeRegistry::paper_setup();
+            let mut f = FleetView::observe(r.nodes());
+            f.nodes[0].forecast = vec![(0.0, 620.0), (300.0, 620.0)];
+            f.nodes[1].forecast = vec![(0.0, 530.0), (300.0, 530.0)];
+            f.nodes[2].forecast = vec![(0.0, now_i), (300.0, trough)];
+            for (i, v) in f.nodes.iter_mut().enumerate() {
+                v.class_state = vec![ClassNodeView {
+                    queued: if i == 2 { queued } else { 0 },
+                    predicted_dispatch_s: 0.1,
+                    queue_delay_s: 0.0,
+                }];
+            }
+            f
+        };
+        let task = TaskDemand::default();
+        let mut s = DeferAwareGreenScheduler::new(gain);
+        // No batch forming: the trough wins and the task parks.
+        assert_eq!(s.decide(&task, &mk(0)), SchedulingDecision::Defer { until_s: 300.0 });
+        // A 1-deep forming batch on the routed node: joining costs only
+        // the marginal slot energy, so the same trough no longer pays.
+        assert_eq!(s.decide(&task, &mk(1)), SchedulingDecision::Assign(2));
     }
 
     #[test]

@@ -24,6 +24,10 @@ pub enum RejectReason {
     /// No node passes the Algorithm-1 feasibility filters (load cutoff,
     /// latency threshold, resource fit) — line 18's `n* = null`.
     NoFeasibleNode,
+    /// Shed by admission control before the scheduler ran: sustained
+    /// overload pushed queue pressure past the class's priority-scaled
+    /// tolerance ([`crate::sim::AdmissionSpec`]).
+    Overload,
 }
 
 /// One scheduling verdict: *where* to run, *when* to run, or neither.

@@ -70,9 +70,10 @@ use crate::microgrid::Microgrid;
 use crate::node::EdgeNode;
 use crate::obs::{EventKind as TraceKind, EventSink, MonitorSet, Telemetry, TraceEvent};
 use crate::scheduler::{
-    ClassNodeView, DecisionExplain, FleetView, NodeView, RouteThenDefer, Scheduler,
+    ClassNodeView, DecisionExplain, FleetView, NodeView, RejectReason, RouteThenDefer, Scheduler,
     SchedulingDecision, TaskDemand,
 };
+use crate::site::{Router, SiteView};
 use crate::util::rng::Rng;
 use crate::workload::WorkloadMix;
 
@@ -167,6 +168,41 @@ impl BatchSpec {
     }
 }
 
+/// Class-aware admission control for sustained overload: a fresh arrival
+/// is shed — rejected before the scheduler runs — when even the
+/// *least-loaded* visible node's queue-delay estimate exceeds the class's
+/// tolerance `shed_queue_s × (1 + priority)`. Low-priority (0) classes
+/// shed first; each priority step buys one extra multiple of the base
+/// tolerance, so under a sustained overload the reject counts order
+/// strictly by priority. Deferred releases and churn migrations are never
+/// shed (their requests were already admitted).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionSpec {
+    /// Base queue-pressure tolerance (virtual seconds) for a
+    /// priority-0 class.
+    pub shed_queue_s: f64,
+}
+
+impl Default for AdmissionSpec {
+    fn default() -> AdmissionSpec {
+        AdmissionSpec { shed_queue_s: 10.0 }
+    }
+}
+
+impl AdmissionSpec {
+    /// Invariant check, run once per simulation at
+    /// [`super::scenarios::Scenario::validate`] time.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.shed_queue_s.is_finite() || self.shed_queue_s <= 0.0 {
+            return Err(format!(
+                "admission shed_queue_s must be finite and > 0, got {}",
+                self.shed_queue_s
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Engine knobs shared by every scenario.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -207,6 +243,11 @@ pub struct SimConfig {
     /// sub-linear batch latency/power point. `None` (the default) is
     /// the exact legacy one-task-per-slot path.
     pub batching: Option<BatchSpec>,
+    /// Class-aware overload shedding ([`AdmissionSpec`]): reject fresh
+    /// arrivals, lowest priority first, once queue pressure exceeds the
+    /// class's tolerance. `None` (the default) admits everything and
+    /// lets the scheduler decide — the legacy behaviour.
+    pub admission: Option<AdmissionSpec>,
     /// Fold queued-but-unstarted work into the *projected* standing
     /// draw that prices microgrid effective intensities and SoC
     /// forecasts: a backlog will occupy the free service slots for the
@@ -230,6 +271,7 @@ impl Default for SimConfig {
             charge_frozen_forecasts: false,
             workload: None,
             batching: None,
+            admission: None,
             demand_aware_projections: false,
         }
     }
@@ -262,6 +304,9 @@ impl SimConfig {
         }
         if let Some(w) = &self.workload {
             w.validate()?;
+        }
+        if let Some(a) = &self.admission {
+            a.validate()?;
         }
         Ok(())
     }
@@ -359,7 +404,12 @@ enum EventKind {
     /// node's trough may land elsewhere if the fleet shifted meanwhile —
     /// the min-gain threshold is enforced at decision time, not at
     /// execution.
-    DeferredRelease { arrival_s: f64, deadline_s: f64, class: usize },
+    DeferredRelease { arrival_s: f64, deadline_s: f64, class: usize, site: usize },
+    /// A WAN-shipped request landing at its target site after the link
+    /// latency: admitted there with its *original* arrival timestamp, so
+    /// the hop sits inside end-to-end latency (transfer energy/carbon
+    /// were already paid at the origin when the hop was emitted).
+    WanArrival { site: usize, arrival_s: f64, deadline_s: f64, class: usize },
     Completion {
         node: usize,
         class: usize,
@@ -421,6 +471,24 @@ impl PartialEq for Event {
 }
 impl Eq for Event {}
 
+/// Per-site aggregates behind [`Simulation::site_views`], maintained so
+/// the router sees O(sites) summaries instead of an O(total-nodes)
+/// snapshot per arrival: membership-derived terms are rebuilt only on
+/// churn, the intensity sum piggybacks on the throttled refresh.
+#[derive(Debug, Clone, Copy, Default)]
+struct SiteAgg {
+    /// Active (powered-on) nodes at the site.
+    active: usize,
+    /// Aggregate service slots across active nodes.
+    slots: usize,
+    /// Mean single-task service estimate across active nodes (s).
+    est_service_s: f64,
+    /// Mean task dynamic energy across active nodes (J).
+    task_energy_j: f64,
+    /// Sum of scheduler-visible effective intensities over active nodes.
+    intensity_sum: f64,
+}
+
 /// One simulation run over a [`Scenario`].
 pub struct Simulation<'a> {
     sc: &'a Scenario,
@@ -468,6 +536,7 @@ pub struct Simulation<'a> {
     /// (class 0 absorbs everything without a mix) but reported only
     /// when a mix is configured.
     class_completed: Vec<u64>,
+    class_rejected: Vec<u64>,
     class_slo_missed: Vec<u64>,
     class_batches: Vec<u64>,
     class_latency_ms: Vec<Vec<f64>>,
@@ -540,6 +609,38 @@ pub struct Simulation<'a> {
     /// firehose. `None` on every other path — no window, no rule, nothing
     /// constructed.
     monitors: Option<MonitorSet>,
+    /// Geographic layer ([`crate::site`]) runtime state. All of it is
+    /// empty/`None` on flat fleets, so every `site_caches.is_empty()`
+    /// guard below is a dead branch and legacy runs stay bit-identical.
+    /// Node → site index (scenario [`crate::site::SiteLayer::site_of`]).
+    site_of: Vec<usize>,
+    /// Per-site active-node caches: the site-scoped analogue of
+    /// `cache_idx`, rebuilt beside it on churn.
+    site_caches: Vec<Vec<usize>>,
+    /// The cross-site router instance, built from the scenario's
+    /// [`crate::site::RouterSpec`].
+    router: Option<Box<dyn Router>>,
+    /// Home-site sampling stream — its own seed derivation, drawn once
+    /// per arrival and only when sites are configured, so the legacy
+    /// arrival/service/class streams never shift.
+    home_rng: Rng,
+    /// Scheduler-visible effective intensity per node, mirrored on every
+    /// refresh so site means never re-observe nodes.
+    node_eff: Vec<f64>,
+    /// Static per-node single-task service estimate (s) at the
+    /// scenario's base exec time.
+    node_est_service_s: Vec<f64>,
+    site_agg: Vec<SiteAgg>,
+    /// Tasks dispatched and not yet completed per site (queued + forming
+    /// + in service) — the router's queue-pressure input.
+    site_outstanding: Vec<usize>,
+    /// WAN ledgers, indexed by site. Transfer energy/carbon are
+    /// attributed to the *origin* site (its grid powers the egress) and
+    /// live outside the per-node ledgers.
+    site_shipped_out: Vec<u64>,
+    site_shipped_in: Vec<u64>,
+    site_wan_energy_j: Vec<f64>,
+    site_wan_carbon_g: Vec<f64>,
 }
 
 impl<'a> Simulation<'a> {
@@ -668,6 +769,7 @@ impl<'a> Simulation<'a> {
                 None => (vec![1.0], vec![f64::INFINITY], vec![0]),
             };
         let n_classes = class_exec_scale.len();
+        let n_sites = scenario.sites.as_ref().map(|l| l.sites.len()).unwrap_or(0);
 
         let mut sim = Simulation {
             sc: scenario,
@@ -689,6 +791,7 @@ impl<'a> Simulation<'a> {
             class_slo_s,
             class_priority,
             class_completed: vec![0; n_classes],
+            class_rejected: vec![0; n_classes],
             class_slo_missed: vec![0; n_classes],
             class_batches: vec![0; n_classes],
             class_latency_ms: (0..n_classes).map(|_| Vec::new()).collect(),
@@ -726,6 +829,22 @@ impl<'a> Simulation<'a> {
             telem: sink.as_ref().map(|_| Telemetry::new()),
             sink,
             monitors,
+            site_of: scenario.sites.as_ref().map(|l| l.site_of.clone()).unwrap_or_default(),
+            site_caches: vec![Vec::new(); n_sites],
+            router: scenario.sites.as_ref().map(|l| l.router.build()),
+            home_rng: Rng::new(scenario.config.seed ^ 0x517E5),
+            node_eff: scenario.specs.iter().map(|s| s.intensity).collect(),
+            node_est_service_s: scenario
+                .specs
+                .iter()
+                .map(|s| s.simulate_latency_ms(scenario.config.base_exec_ms) / 1e3)
+                .collect(),
+            site_agg: vec![SiteAgg::default(); n_sites],
+            site_outstanding: vec![0; n_sites],
+            site_shipped_out: vec![0; n_sites],
+            site_shipped_in: vec![0; n_sites],
+            site_wan_energy_j: vec![0.0; n_sites],
+            site_wan_carbon_g: vec![0.0; n_sites],
         };
         sim.rebuild_cache();
         if sim.observing() {
@@ -747,6 +866,16 @@ impl<'a> Simulation<'a> {
                 }
                 None => Vec::new(),
             };
+            let site_meta: Vec<&str> = match &scenario.sites {
+                Some(layer) => layer.sites.iter().map(|s| s.name.as_str()).collect(),
+                None => Vec::new(),
+            };
+            let site_of_meta: &[usize] = match &scenario.sites {
+                Some(layer) => &layer.site_of,
+                None => &[],
+            };
+            let router_meta =
+                scenario.sites.as_ref().map(|l| l.router.name()).unwrap_or("");
             sim.emit(&TraceEvent::RunMeta {
                 scenario: &scenario.name,
                 scheduler: scheduler_name,
@@ -754,6 +883,9 @@ impl<'a> Simulation<'a> {
                 requests: scenario.requests as u64,
                 nodes: &node_meta,
                 classes: &class_meta,
+                sites: &site_meta,
+                site_of: site_of_meta,
+                router: router_meta,
             });
         }
 
@@ -786,20 +918,24 @@ impl<'a> Simulation<'a> {
                         None => f64::INFINITY,
                     };
                     if sim.observing() {
-                        sim.emit(&TraceEvent::Arrival { t_s: t, deadline_s: deadline });
+                        sim.emit(&TraceEvent::Arrival { t_s: t, deadline_s: deadline, class });
                     }
-                    sim.admit(t, t, deadline, true, class, scheduler);
+                    sim.route_and_admit(t, deadline, class, scheduler);
                     if sim.arrived < scenario.requests as u64 {
                         let gap = arrivals.next_gap_s();
                         sim.push(t + gap, EventKind::Arrival);
                     }
                 }
-                EventKind::DeferredRelease { arrival_s, deadline_s, class } => {
+                EventKind::DeferredRelease { arrival_s, deadline_s, class, site } => {
                     sim.refresh_intensities(t);
                     if sim.observing() {
                         sim.emit(&TraceEvent::DeferRelease { t_s: t, arrival_s, deadline_s });
                     }
-                    sim.admit(arrival_s, t, deadline_s, false, class, scheduler);
+                    sim.admit(arrival_s, t, deadline_s, false, class, site, scheduler);
+                }
+                EventKind::WanArrival { site, arrival_s, deadline_s, class } => {
+                    sim.refresh_intensities(t);
+                    sim.admit(arrival_s, t, deadline_s, true, class, site, scheduler);
                 }
                 EventKind::Completion {
                     node,
@@ -894,6 +1030,45 @@ impl<'a> Simulation<'a> {
                 self.cache_idx.push(i);
             }
         }
+        if !self.site_caches.is_empty() {
+            for cache in self.site_caches.iter_mut() {
+                cache.clear();
+            }
+            for (g, &s) in self.site_of.iter().enumerate() {
+                if self.active[g] {
+                    self.site_caches[s].push(g);
+                }
+            }
+            self.rebuild_site_aggs();
+        }
+    }
+
+    /// Recompute the per-site aggregates behind [`Simulation::site_views`]
+    /// from scratch — O(total nodes), paid only at init and on churn.
+    fn rebuild_site_aggs(&mut self) {
+        for s in 0..self.site_caches.len() {
+            let members = &self.site_caches[s];
+            let active = members.len();
+            let mut slots = 0usize;
+            let mut est_sum = 0.0;
+            let mut task_w_sum = 0.0;
+            let mut intensity_sum = 0.0;
+            for &g in members {
+                slots += self.sc.capacity[g];
+                est_sum += self.node_est_service_s[g];
+                task_w_sum += self.sc.specs[g].dynamic_power_w();
+                intensity_sum += self.node_eff[g];
+            }
+            let est_service_s = if active > 0 { est_sum / active as f64 } else { 0.0 };
+            let task_w = if active > 0 { task_w_sum / active as f64 } else { 0.0 };
+            self.site_agg[s] = SiteAgg {
+                active,
+                slots,
+                est_service_s,
+                task_energy_j: task_w * est_service_s,
+                intensity_sum,
+            };
+        }
     }
 
     /// Push time-varying intensities into scheduler-visible node state,
@@ -930,6 +1105,7 @@ impl<'a> Simulation<'a> {
             if let Some(mg) = &mut self.microgrids[g] {
                 let eff = mg.advertised_intensity(&sc.traces[g], t_s, draw, sustain_s);
                 self.nodes[g].set_intensity(eff);
+                self.node_eff[g] = eff;
                 self.soc_timeline[g].push((t_s, mg.soc_frac()));
                 if project_soc {
                     // One settlement step ahead at the standing draw: the
@@ -948,7 +1124,17 @@ impl<'a> Simulation<'a> {
                     }
                 }
             } else if !matches!(sc.traces[g], IntensityTrace::Static(_)) {
-                self.nodes[g].set_intensity(sc.traces[g].at(t_s));
+                let eff = sc.traces[g].at(t_s);
+                self.nodes[g].set_intensity(eff);
+                self.node_eff[g] = eff;
+            }
+        }
+        // Fold the fresh intensities into the per-site means — O(active)
+        // inside an already-O(n) throttled walk.
+        if !self.site_caches.is_empty() {
+            for s in 0..self.site_caches.len() {
+                self.site_agg[s].intensity_sum =
+                    self.site_caches[s].iter().map(|&g| self.node_eff[g]).sum();
             }
         }
     }
@@ -1087,7 +1273,7 @@ impl<'a> Simulation<'a> {
     /// legacy PR-4 frozen average blend is rebuilt instead. Released and
     /// migrated tasks get no forecast, so no scheduler can defer them (no
     /// re-deferral livelock).
-    fn fleet_view(&self, now_s: f64, deadline_s: f64, allow_defer: bool) -> FleetView {
+    fn fleet_view(&self, now_s: f64, deadline_s: f64, allow_defer: bool, site: usize) -> FleetView {
         let sc = self.sc;
         let deferral = if allow_defer && deadline_s.is_finite() {
             sc.config.deferral.as_ref()
@@ -1098,7 +1284,7 @@ impl<'a> Simulation<'a> {
         // the same window the refresh path prices with.
         let sustain_s = sc.config.intensity_refresh_s.max(1.0);
         let nodes = self
-            .cache_idx
+            .scoped_cache(site)
             .iter()
             .map(|&g| {
                 let mut view = NodeView::observe(&self.nodes[g], sc.capacity[g]);
@@ -1162,6 +1348,120 @@ impl<'a> Simulation<'a> {
         FleetView { nodes, now_s, deadline_s: deadline_s.is_finite().then_some(deadline_s) }
     }
 
+    /// The active-node cache one decision sees: the site's own slice on
+    /// geographic fleets, the flat fleet-wide cache otherwise (where
+    /// `site` is a dummy 0). `Assign` verdicts index back through it.
+    #[inline]
+    fn scoped_cache(&self, site: usize) -> &[usize] {
+        if self.site_caches.is_empty() {
+            &self.cache_idx
+        } else {
+            &self.site_caches[site]
+        }
+    }
+
+    /// O(sites) router summaries from the maintained aggregates — the
+    /// arrival hot path never scans nodes to route.
+    fn site_views(&self) -> Vec<SiteView> {
+        self.site_agg
+            .iter()
+            .enumerate()
+            .map(|(s, a)| {
+                let (intensity, queue_delay_s) = if a.active > 0 {
+                    (
+                        a.intensity_sum / a.active as f64,
+                        self.site_outstanding[s] as f64 * a.est_service_s
+                            / a.slots.max(1) as f64,
+                    )
+                } else {
+                    (f64::INFINITY, f64::INFINITY)
+                };
+                SiteView {
+                    index: s,
+                    intensity,
+                    queue_delay_s,
+                    active_nodes: a.active,
+                    slots: a.slots,
+                    est_service_s: a.est_service_s,
+                    task_energy_j: a.task_energy_j,
+                }
+            })
+            .collect()
+    }
+
+    /// Pick the serving site for one fresh arrival and admit it there. On
+    /// a flat fleet this is a straight pass-through to
+    /// [`Simulation::admit`]. With a site layer, the request lands at a
+    /// uniformly-drawn home site (its own seeded stream, so flat runs
+    /// never shift), the router decides over [`Simulation::site_views`]
+    /// summaries — timed into the same per-decision overhead histogram
+    /// the scheduler pays into — and a remote verdict ships the request:
+    /// transfer energy is billed at the origin's effective intensity
+    /// immediately (the origin grid powers the egress), a
+    /// [`TraceEvent::WanHop`] hits the firehose, and the request
+    /// re-enters the event flow at the target one link latency later
+    /// with its original arrival timestamp.
+    fn route_and_admit(
+        &mut self,
+        t_s: f64,
+        deadline_s: f64,
+        class: usize,
+        scheduler: &mut dyn Scheduler,
+    ) {
+        let sc = self.sc;
+        let Some(layer) = sc.sites.as_ref() else {
+            self.admit(t_s, t_s, deadline_s, true, class, 0, scheduler);
+            return;
+        };
+        let home = self.home_rng.below(layer.sites.len());
+        let views = self.site_views();
+        let t0 = self.telem.as_ref().map(|_| Instant::now());
+        let target = self
+            .router
+            .as_mut()
+            .expect("site layer always builds a router")
+            .route(
+                home,
+                t_s,
+                deadline_s.is_finite().then_some(deadline_s),
+                &views,
+                &layer.topology,
+            );
+        if let (Some(t0), Some(telem)) = (t0, self.telem.as_mut()) {
+            telem.decide_ns.record(t0.elapsed().as_nanos() as f64);
+        }
+        debug_assert!(target < layer.sites.len(), "router returned site {target}");
+        if target == home {
+            self.admit(t_s, t_s, deadline_s, true, class, home, scheduler);
+            return;
+        }
+        let link = layer.topology.link(home, target);
+        let origin_i = views[home].intensity;
+        let wan_g = if origin_i.is_finite() {
+            sc.config.pue * joules_to_kwh(link.energy_j) * origin_i
+        } else {
+            0.0
+        };
+        self.site_shipped_out[home] += 1;
+        self.site_shipped_in[target] += 1;
+        self.site_wan_energy_j[home] += link.energy_j;
+        self.site_wan_carbon_g[home] += wan_g;
+        if self.observing() {
+            self.emit(&TraceEvent::WanHop {
+                t_s,
+                from: layer.sites[home].name.as_str(),
+                to: layer.sites[target].name.as_str(),
+                latency_ms: link.latency_ms,
+                energy_j: link.energy_j,
+                carbon_g: wan_g,
+            });
+        }
+        self.push(
+            t_s + link.latency_ms / 1e3,
+            EventKind::WanArrival { site: target, arrival_s: t_s, deadline_s, class },
+        );
+    }
+
     /// Route one request through the scheduler's verdict: `Assign`
     /// dispatches onto the chosen node, `Defer` parks the request as a
     /// [`EventKind::DeferredRelease`] at the scheduler's slot, `Reject`
@@ -1169,6 +1469,7 @@ impl<'a> Simulation<'a> {
     /// slack context, a non-future slot, or one past the deadline) is a
     /// rejection — in-tree schedulers never produce one, because they only
     /// defer toward slots of the view's own forecast.
+    #[allow(clippy::too_many_arguments)]
     fn admit(
         &mut self,
         arrival_s: f64,
@@ -1176,10 +1477,34 @@ impl<'a> Simulation<'a> {
         deadline_s: f64,
         allow_defer: bool,
         class: usize,
+        site: usize,
         scheduler: &mut dyn Scheduler,
     ) {
-        let view = self.fleet_view(now_s, deadline_s, allow_defer);
+        let view = self.fleet_view(now_s, deadline_s, allow_defer, site);
         let demand = self.demand_of(class);
+        if allow_defer {
+            if let Some(shed_s) = self.sc.config.admission.as_ref().map(|a| a.shed_queue_s) {
+                let pressure =
+                    view.nodes.iter().map(|nv| nv.queue_delay_s).fold(f64::INFINITY, f64::min);
+                if pressure > shed_s * (1.0 + f64::from(self.class_priority[class])) {
+                    self.rejected += 1;
+                    self.class_rejected[class] += 1;
+                    if self.observing() {
+                        let empty = DecisionExplain::default();
+                        self.emit(&TraceEvent::Decision {
+                            t_s: now_s,
+                            arrival_s,
+                            ctx: "admission",
+                            verdict: SchedulingDecision::Reject { reason: RejectReason::Overload },
+                            node: None,
+                            explain: &empty,
+                            decide_ns: 0,
+                        });
+                    }
+                    return;
+                }
+            }
+        }
         let decision = if self.observing() {
             let ctx = if allow_defer { "arrival" } else { "release" };
             self.decide_observed(scheduler, &demand, &view, arrival_s, now_s, ctx)
@@ -1188,7 +1513,7 @@ impl<'a> Simulation<'a> {
         };
         match decision {
             SchedulingDecision::Assign(ci) => {
-                let g = self.cache_idx[ci];
+                let g = self.scoped_cache(site)[ci];
                 let qd_ms = view.nodes[ci].queue_delay_s * 1e3;
                 self.dispatch(g, qd_ms, arrival_s, now_s, deadline_s, class);
             }
@@ -1196,10 +1521,14 @@ impl<'a> Simulation<'a> {
                 if allow_defer && until_s > now_s && until_s <= deadline_s =>
             {
                 self.deferred += 1;
-                self.push(until_s, EventKind::DeferredRelease { arrival_s, deadline_s, class });
+                self.push(
+                    until_s,
+                    EventKind::DeferredRelease { arrival_s, deadline_s, class, site },
+                );
             }
             SchedulingDecision::Defer { .. } | SchedulingDecision::Reject { .. } => {
-                self.rejected += 1
+                self.rejected += 1;
+                self.class_rejected[class] += 1;
             }
         }
     }
@@ -1283,6 +1612,9 @@ impl<'a> Simulation<'a> {
         class: usize,
     ) {
         debug_assert!(self.active[g], "dispatch onto inactive node {g}");
+        if !self.site_caches.is_empty() {
+            self.site_outstanding[self.site_of[g]] += 1;
+        }
         self.queue_delay_ms[g].push(queue_delay_est_ms);
         if self.observing() {
             if let Some(t) = self.telem.as_mut() {
@@ -1557,6 +1889,9 @@ impl<'a> Simulation<'a> {
         carbon_g: f64,
     ) {
         let kwh = joules_to_kwh(energy_j);
+        if !self.site_caches.is_empty() {
+            self.site_outstanding[self.site_of[g]] -= 1;
+        }
         self.nodes[g].finish_task(service_ms, energy_j, carbon_g);
         let entry = &mut self.node_ledger[g];
         entry.energy_kwh += kwh;
@@ -1703,12 +2038,21 @@ impl<'a> Simulation<'a> {
             .drain(..)
             .chain(forming.into_iter().map(|(_, a, d, c)| (a, d, c)))
             .collect();
+        // Migration stays within the churned node's own site on
+        // geographic fleets — cross-site movement is the router's call at
+        // arrival time, never a side effect of churn.
+        let site = if self.site_caches.is_empty() { 0 } else { self.site_of[g] };
         for (arrival_s, deadline_s, class) in pending {
             self.nodes[g].cancel_task();
+            if !self.site_caches.is_empty() {
+                // The task leaves the site's outstanding set; a successful
+                // re-dispatch below re-counts it.
+                self.site_outstanding[site] -= 1;
+            }
             // One fresh view per migrated task: each dispatch changes the
             // backlog the next decision must see. Migration never defers
             // (no forecast in the view), matching the release path.
-            let view = self.fleet_view(t_s, deadline_s, false);
+            let view = self.fleet_view(t_s, deadline_s, false, site);
             let demand = self.demand_of(class);
             let decision = if self.observing() {
                 self.decide_observed(scheduler, &demand, &view, arrival_s, t_s, "migration")
@@ -1717,12 +2061,15 @@ impl<'a> Simulation<'a> {
             };
             match decision {
                 SchedulingDecision::Assign(ci) => {
-                    let ng = self.cache_idx[ci];
+                    let ng = self.scoped_cache(site)[ci];
                     let qd_ms = view.nodes[ci].queue_delay_s * 1e3;
                     self.migrated += 1;
                     self.dispatch(ng, qd_ms, arrival_s, t_s, deadline_s, class);
                 }
-                _ => self.rejected += 1,
+                _ => {
+                    self.rejected += 1;
+                    self.class_rejected[class] += 1;
+                }
             }
         }
     }
@@ -1816,6 +2163,7 @@ impl<'a> Simulation<'a> {
                 .map(|(c, wc)| super::report::ClassUsage {
                     name: wc.name.clone(),
                     completed: self.class_completed[c],
+                    rejected: self.class_rejected[c],
                     slo_s: wc.slo_s,
                     slo_missed: self.class_slo_missed[c],
                     batches: self.class_batches[c],
@@ -1831,6 +2179,56 @@ impl<'a> Simulation<'a> {
                 .collect(),
             None => Vec::new(),
         };
+        // Per-site rows only on geographic fleets: flat reports keep the
+        // empty vec / zero totals, so their PartialEq equality is
+        // untouched. Site energy/carbon are a strict partition of the
+        // fleet totals: every node belongs to exactly one site, and WAN
+        // transfer joins the totals through the origin site's row.
+        let sites: Vec<super::report::SiteUsage> = match self.sc.sites.as_ref() {
+            Some(layer) => layer
+                .sites
+                .iter()
+                .enumerate()
+                .map(|(s, site)| {
+                    let members: Vec<usize> = (0..self.sc.specs.len())
+                        .filter(|&g| layer.site_of[g] == s)
+                        .collect();
+                    let completed: u64 =
+                        members.iter().map(|&g| self.node_ledger[g].tasks).sum();
+                    let dyn_kwh: f64 =
+                        members.iter().map(|&g| self.node_ledger[g].energy_kwh).sum();
+                    let idle_kwh = joules_to_kwh(
+                        members.iter().map(|&g| self.idle_energy_j[g]).sum::<f64>(),
+                    );
+                    let dyn_g: f64 =
+                        members.iter().map(|&g| self.node_ledger[g].carbon_g).sum();
+                    let idle_g: f64 =
+                        members.iter().map(|&g| self.idle_carbon_g[g]).sum();
+                    let wan_kwh = joules_to_kwh(self.site_wan_energy_j[s]);
+                    let wan_g = self.site_wan_carbon_g[s];
+                    let carbon_g = dyn_g + idle_g + wan_g;
+                    super::report::SiteUsage {
+                        name: site.name.clone(),
+                        nodes: members.len(),
+                        completed,
+                        shipped_out: self.site_shipped_out[s],
+                        shipped_in: self.site_shipped_in[s],
+                        energy_kwh: dyn_kwh + idle_kwh,
+                        energy_wan_kwh: wan_kwh,
+                        carbon_g,
+                        carbon_wan_g: wan_g,
+                        carbon_per_req_g: if completed > 0 {
+                            carbon_g / completed as f64
+                        } else {
+                            0.0
+                        },
+                    }
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        let energy_wan_kwh_total: f64 = sites.iter().map(|r| r.energy_wan_kwh).sum();
+        let carbon_wan_g_total: f64 = sites.iter().map(|r| r.carbon_wan_g).sum();
         SimReport {
             scenario: self.sc.name.clone(),
             scheduler: scheduler_name.to_string(),
@@ -1849,9 +2247,12 @@ impl<'a> Simulation<'a> {
             },
             latency_ms: super::report::summary_or_zero(&self.latency_ms),
             wait_ms: super::report::summary_or_zero(&self.wait_ms),
-            energy_kwh_total: energy_dynamic_kwh_total + energy_idle_kwh_total,
+            energy_kwh_total: energy_dynamic_kwh_total
+                + energy_idle_kwh_total
+                + energy_wan_kwh_total,
             energy_dynamic_kwh_total,
             energy_idle_kwh_total,
+            energy_wan_kwh_total,
             energy_pv_kwh_total,
             energy_battery_kwh_total,
             energy_grid_kwh_total,
@@ -1859,15 +2260,25 @@ impl<'a> Simulation<'a> {
             carbon_charged_g_total,
             carbon_battery_g_total,
             carbon_stored_g_total,
-            carbon_g_total: self.carbon_total_g + carbon_idle_g_total,
+            carbon_g_total: self.carbon_total_g + carbon_idle_g_total + carbon_wan_g_total,
             carbon_dynamic_g_total: self.carbon_total_g,
             carbon_idle_g_total,
+            carbon_wan_g_total,
             carbon_per_req_g: if self.completed > 0 {
-                (self.carbon_total_g + carbon_idle_g_total) / self.completed as f64
+                (self.carbon_total_g + carbon_idle_g_total + carbon_wan_g_total)
+                    / self.completed as f64
             } else {
                 0.0
             },
+            router: self
+                .sc
+                .sites
+                .as_ref()
+                .map(|l| l.router.name().to_string())
+                .unwrap_or_default(),
+            wan_shipped: self.site_shipped_out.iter().sum(),
             classes,
+            sites,
             nodes,
             // Filled by run_inner after the take(); into_report itself
             // never sees the monitor set.
@@ -1894,6 +2305,7 @@ mod tests {
             requests,
             churn: Vec::new(),
             microgrids: Vec::new(),
+            sites: None,
             config: SimConfig { jitter_sigma: 0.0, ..SimConfig::default() },
         }
     }
@@ -2124,7 +2536,9 @@ mod tests {
 
     #[test]
     fn full_battery_suppresses_raw_grid_deferral() {
-        use crate::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
+        use crate::microgrid::{
+            BatterySpec, ChargePolicy, DischargePolicy, MicrogridSpec, PvProfile,
+        };
         // ROADMAP-flagged bugfix pin: a stepped dirty→clean grid that the
         // raw curve would park everything for, behind a full battery. The
         // node's *blended* effective intensity is ~0 right now (the battery
@@ -2144,6 +2558,7 @@ mod tests {
             pv: PvProfile::none(),
             battery: BatterySpec::simple(5_000.0, 1.0, 1.0),
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         })];
         let mut s = RoundRobinScheduler::new();
         let r = Simulation::run(&sc, &mut s);
@@ -2183,7 +2598,9 @@ mod tests {
 
     #[test]
     fn pv_covers_daytime_draw_before_grid() {
-        use crate::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
+        use crate::microgrid::{
+            BatterySpec, ChargePolicy, DischargePolicy, MicrogridSpec, PvProfile,
+        };
         // One node, no battery, 1 kW of PV shining over the whole short
         // run (sunrise shifted 6 h back puts solar noon at t = 0): every
         // dynamic joule is PV-supplied and the run is carbon-free.
@@ -2192,6 +2609,7 @@ mod tests {
             pv: PvProfile::diurnal_with_sunrise(1_000.0, -21_600.0),
             battery: BatterySpec::none(),
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         })];
         let mut s = RoundRobinScheduler::new();
         let r = Simulation::run(&sc, &mut s);
@@ -2219,7 +2637,9 @@ mod tests {
 
     #[test]
     fn battery_bridges_then_grid_takes_over() {
-        use crate::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
+        use crate::microgrid::{
+            BatterySpec, ChargePolicy, DischargePolicy, MicrogridSpec, PvProfile,
+        };
         // No PV (midnight), a tiny fully-charged battery: the first task's
         // energy drains it, the rest imports grid power. 10 tasks × ~35 J
         // of dynamic energy each vs 36 J stored.
@@ -2234,6 +2654,7 @@ mod tests {
                 initial_soc: 1.0,
             },
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         })];
         let mut s = RoundRobinScheduler::new();
         let r = Simulation::run(&sc, &mut s);
@@ -2259,7 +2680,9 @@ mod tests {
 
     #[test]
     fn scheduler_follows_charged_battery_via_effective_intensity() {
-        use crate::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
+        use crate::microgrid::{
+            BatterySpec, ChargePolicy, DischargePolicy, MicrogridSpec, PvProfile,
+        };
         // Two identical nodes on the same dirty grid; only one has a
         // charged battery. Green mode reads the blended effective
         // intensity through the override and routes everything there.
@@ -2274,6 +2697,7 @@ mod tests {
                 pv: PvProfile::none(),
                 battery: BatterySpec::simple(1_000.0, 0.9, 1.0),
                 charge: ChargePolicy::Off,
+                discharge: DischargePolicy::Greedy,
             }),
         ];
         let mut s = CarbonAwareScheduler::new("green", Mode::Green.weights());
@@ -2298,7 +2722,9 @@ mod tests {
 
     #[test]
     fn grid_charge_arbitrage_settles_into_the_stored_ledger() {
-        use crate::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
+        use crate::microgrid::{
+            BatterySpec, ChargePolicy, DischargePolicy, MicrogridSpec, PvProfile,
+        };
         // Clean first 100 s (100 g), dirty afterwards (800 g): the policy
         // imports during the clean window and the report carries the
         // charge-source split and a balanced stored-carbon ledger.
@@ -2315,6 +2741,7 @@ mod tests {
                 initial_soc: 0.0,
             },
             charge: ChargePolicy::Threshold { percentile: 0.25, window_s: 200.0 },
+            discharge: DischargePolicy::Greedy,
         })];
         let mut s = RoundRobinScheduler::new();
         let r = Simulation::run(&sc, &mut s);

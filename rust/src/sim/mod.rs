@@ -95,6 +95,26 @@
 //!   to 1e-6) purely from events, and `carbonedge replay --diff A B`
 //!   names the first divergent event between two traces for determinism
 //!   debugging;
+//! * **hierarchical multi-site fleets** ([`crate::site`], `Scenario::sites`):
+//!   nodes group into named sites, each with its own grid trace, microgrid
+//!   posture and timezone; a [`crate::site::SiteTopology`] prices every
+//!   cross-site hop in WAN latency *and* transfer energy (billed at the
+//!   origin site's intensity, Eq. 2 style), and a [`crate::site::Router`]
+//!   (`nearest` / `carbon` / `deadline`) picks the serving site per arrival
+//!   from O(sites) [`crate::site::SiteView`] summaries before the
+//!   intra-site scheduler sees the request. Shipped requests re-enter the
+//!   event heap after the WAN delay, emit `wan_hop` firehose events, and
+//!   the report gains per-site rows ([`SiteUsage`]: completions, shipped
+//!   in/out, member vs WAN energy, gCO₂/req) that partition the fleet
+//!   totals exactly. `multi-site` staggers three regional grids;
+//!   `follow-the-sun` rotates PV peaks across timezones so cross-region
+//!   shifting beats any single-site green policy
+//!   ([`crate::experiments::sim_router_comparison`], `--compare-routers`);
+//! * **class-aware admission control** ([`AdmissionSpec`], satellite of the
+//!   site layer): under sustained overload the engine sheds fresh arrivals
+//!   *before* the scheduler decides, lowest priority first — a class at
+//!   priority `p` tolerates `shed_queue_s × (1 + p)` of estimated queue
+//!   delay — and per-class `rejected` counts land in [`ClassUsage`];
 //! * **in-sim monitors** ([`crate::obs::MonitorSet`],
 //!   [`Simulation::try_run_monitored`], `sim --monitor`): sliding
 //!   virtual-time windows over the event stream — carbon burn-rate vs a
@@ -111,6 +131,8 @@ pub mod fleet;
 pub(crate) mod report;
 pub mod scenarios;
 
-pub use engine::{ArrivalProcess, BatchSpec, ChurnEvent, DeferralSpec, SimConfig, Simulation};
-pub use report::{ClassUsage, NodeUsage, SimReport};
+pub use engine::{
+    AdmissionSpec, ArrivalProcess, BatchSpec, ChurnEvent, DeferralSpec, SimConfig, Simulation,
+};
+pub use report::{ClassUsage, NodeUsage, SimReport, SiteUsage};
 pub use scenarios::{Scenario, SCENARIO_NAMES};

@@ -105,6 +105,11 @@ impl NodeUsage {
 pub struct ClassUsage {
     pub name: String,
     pub completed: u64,
+    /// Requests of this class turned away — scheduler `Reject` verdicts
+    /// plus admission-control sheds under sustained overload
+    /// ([`crate::sim::AdmissionSpec`]). Conservation: sums to the
+    /// report-level `rejected` whenever `classes` is non-empty.
+    pub rejected: u64,
     /// The class's latency SLO (seconds) — copied from the mix so the
     /// report is self-describing.
     pub slo_s: f64,
@@ -134,6 +139,38 @@ impl ClassUsage {
     }
 }
 
+/// Per-site slice of a geographic run ([`crate::site::SiteLayer`]): how
+/// much work each region's grid ate, how much of it arrived over the WAN,
+/// and what the cross-site hops themselves cost. `carbon_g` already
+/// includes `carbon_wan_g` (transfer emissions are billed to the
+/// *origin* site that chose to ship). Conservation: site rows partition
+/// the fleet — energy/carbon sums match the report totals at 1e-6, and
+/// `tests/sim.rs` asserts it for the multi-site scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteUsage {
+    pub name: String,
+    /// Nodes homed at this site.
+    pub nodes: usize,
+    /// Requests completed on this site's nodes (wherever they arrived).
+    pub completed: u64,
+    /// Requests that arrived here but were routed to another site.
+    pub shipped_out: u64,
+    /// Requests routed here from another site.
+    pub shipped_in: u64,
+    /// Node energy (idle + dynamic) of this site's members, WAN excluded.
+    pub energy_kwh: f64,
+    /// WAN transfer energy paid by requests shipped *out* of this site.
+    pub energy_wan_kwh: f64,
+    /// Total emissions attributed to this site: member idle + dynamic
+    /// carbon plus `carbon_wan_g`.
+    pub carbon_g: f64,
+    /// Emissions of the WAN transfer energy, priced at the origin grid's
+    /// ship-time intensity (zero when the origin runs carbon-free).
+    pub carbon_wan_g: f64,
+    /// `carbon_g` per completion landed on this site (0 when idle).
+    pub carbon_per_req_g: f64,
+}
+
 /// Everything one simulation run produced.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
@@ -161,10 +198,14 @@ pub struct SimReport {
     pub latency_ms: Summary,
     /// Queue wait (including deferral parking) alone, ms.
     pub wait_ms: Summary,
-    /// Total energy: dynamic + idle.
+    /// Total energy: dynamic + idle (+ WAN transfer on multi-site runs).
     pub energy_kwh_total: f64,
     pub energy_dynamic_kwh_total: f64,
     pub energy_idle_kwh_total: f64,
+    /// WAN transfer energy across all cross-site hops — *on top of* the
+    /// idle + dynamic node split, and included in `energy_kwh_total`.
+    /// Zero (and absent from render/JSON) on flat fleets.
+    pub energy_wan_kwh_total: f64,
     /// Supply-side totals: PV + battery + grid == total energy (grid-only
     /// nodes contribute their whole draw to the grid term).
     pub energy_pv_kwh_total: f64,
@@ -178,16 +219,28 @@ pub struct SimReport {
     pub carbon_charged_g_total: f64,
     pub carbon_battery_g_total: f64,
     pub carbon_stored_g_total: f64,
-    /// Total emissions: dynamic + idle.
+    /// Total emissions: dynamic + idle (+ WAN transfer on multi-site
+    /// runs).
     pub carbon_g_total: f64,
     pub carbon_dynamic_g_total: f64,
     pub carbon_idle_g_total: f64,
+    /// Emissions of the WAN transfer energy — included in
+    /// `carbon_g_total` and the per-request figure.
+    pub carbon_wan_g_total: f64,
     /// Total emissions (idle included) per completed request.
     pub carbon_per_req_g: f64,
     /// Per-workload-class rows — empty unless the scenario configures a
     /// [`crate::workload::WorkloadMix`] (legacy single-class reports
     /// stay bit-identical).
     pub classes: Vec<ClassUsage>,
+    /// Name of the cross-site [`crate::site::Router`] in effect — empty
+    /// string on flat (siteless) fleets.
+    pub router: String,
+    /// Requests the router shipped to a non-home site over the WAN.
+    pub wan_shipped: u64,
+    /// Per-site rows — empty unless the scenario configures a
+    /// [`crate::site::SiteLayer`] (flat reports stay bit-identical).
+    pub sites: Vec<SiteUsage>,
     pub nodes: Vec<NodeUsage>,
     /// Per-rule monitor summaries — empty unless a
     /// [`crate::obs::MonitorSet`] was attached
@@ -239,6 +292,28 @@ impl SimReport {
     /// Per-class row by name (multi-tenant runs only).
     pub fn class(&self, name: &str) -> Option<&ClassUsage> {
         self.classes.iter().find(|c| c.name == name)
+    }
+
+    /// Per-site row by name (multi-site runs only).
+    pub fn site(&self, name: &str) -> Option<&SiteUsage> {
+        self.sites.iter().find(|s| s.name == name)
+    }
+
+    /// Sum of the per-site rows: `(completed, shipped out, total energy
+    /// kWh, total carbon g, wan kWh, wan g)` — the conservation
+    /// counterpart to the fleet totals (site rows partition the fleet;
+    /// `tests/sim.rs` asserts it at 1e-6 for the multi-site scenarios).
+    pub fn site_sums(&self) -> (u64, u64, f64, f64, f64, f64) {
+        self.sites.iter().fold((0, 0, 0.0, 0.0, 0.0, 0.0), |(n, o, e, c, we, wc), s| {
+            (
+                n + s.completed,
+                o + s.shipped_out,
+                e + s.energy_kwh + s.energy_wan_kwh,
+                c + s.carbon_g,
+                we + s.energy_wan_kwh,
+                wc + s.carbon_wan_g,
+            )
+        })
     }
 
     /// Sum of the per-class completion counters — the conservation
@@ -337,12 +412,50 @@ impl SimReport {
                 self.carbon_stored_g_total,
             ));
         }
+        if !self.sites.is_empty() {
+            out.push_str(&format!(
+                "router {} · {} shipped cross-site · wan {:.6} kWh / {:.4} g\n",
+                self.router,
+                self.wan_shipped,
+                self.energy_wan_kwh_total,
+                self.carbon_wan_g_total,
+            ));
+            let mut st = Table::new(
+                "",
+                &[
+                    "site",
+                    "nodes",
+                    "done",
+                    "out",
+                    "in",
+                    "energy (kWh)",
+                    "wan (kWh)",
+                    "carbon (g)",
+                    "g/req",
+                ],
+            );
+            for s in &self.sites {
+                st.row(vec![
+                    s.name.clone(),
+                    s.nodes.to_string(),
+                    s.completed.to_string(),
+                    s.shipped_out.to_string(),
+                    s.shipped_in.to_string(),
+                    format!("{:.6}", s.energy_kwh),
+                    format!("{:.6}", s.energy_wan_kwh),
+                    f5(s.carbon_g),
+                    f5(s.carbon_per_req_g),
+                ]);
+            }
+            out.push_str(&st.render());
+        }
         if !self.classes.is_empty() {
             let mut ct = Table::new(
                 "",
                 &[
                     "class",
                     "done",
+                    "rej",
                     "slo (s)",
                     "missed",
                     "batches",
@@ -357,6 +470,7 @@ impl SimReport {
                 ct.row(vec![
                     c.name.clone(),
                     c.completed.to_string(),
+                    c.rejected.to_string(),
                     if c.slo_s.is_finite() { f2(c.slo_s) } else { "-".into() },
                     c.slo_missed.to_string(),
                     c.batches.to_string(),
@@ -471,6 +585,7 @@ mod tests {
             energy_kwh_total: 4e-5,
             energy_dynamic_kwh_total: 3e-5,
             energy_idle_kwh_total: 1e-5,
+            energy_wan_kwh_total: 0.0,
             energy_pv_kwh_total: 0.5e-5,
             energy_battery_kwh_total: 0.5e-5,
             energy_grid_kwh_total: 3e-5,
@@ -481,8 +596,12 @@ mod tests {
             carbon_g_total: 0.017,
             carbon_dynamic_g_total: 0.012,
             carbon_idle_g_total: 0.005,
+            carbon_wan_g_total: 0.0,
             carbon_per_req_g: 0.0085,
             classes: Vec::new(),
+            router: String::new(),
+            wan_shipped: 0,
+            sites: Vec::new(),
             nodes: vec![
                 NodeUsage {
                     name: "a".into(),
@@ -647,6 +766,61 @@ mod tests {
     }
 
     #[test]
+    fn site_table_renders_only_for_multi_site_runs() {
+        // Flat (siteless) reports carry no site rows and no router line.
+        let plain = report();
+        assert!(plain.sites.is_empty());
+        assert!(!plain.render().contains("router"));
+        // A geographic run renders the router line plus one row per
+        // site, and the lookup/sums helpers agree with the totals.
+        let mut geo = report();
+        geo.router = "deadline".into();
+        geo.wan_shipped = 1;
+        geo.energy_wan_kwh_total = 1e-7;
+        geo.carbon_wan_g_total = 0.0001;
+        geo.sites = vec![
+            SiteUsage {
+                name: "eu-west".into(),
+                nodes: 1,
+                completed: 1,
+                shipped_out: 1,
+                shipped_in: 0,
+                energy_kwh: 2e-5,
+                energy_wan_kwh: 1e-7,
+                carbon_g: 0.0091,
+                carbon_wan_g: 0.0001,
+                carbon_per_req_g: 0.0091,
+            },
+            SiteUsage {
+                name: "us-west".into(),
+                nodes: 1,
+                completed: 1,
+                shipped_out: 0,
+                shipped_in: 1,
+                energy_kwh: 2e-5,
+                energy_wan_kwh: 0.0,
+                carbon_g: 0.008,
+                carbon_wan_g: 0.0,
+                carbon_per_req_g: 0.008,
+            },
+        ];
+        let s = geo.render();
+        assert!(s.contains("router deadline"), "{s}");
+        assert!(s.contains("1 shipped cross-site"), "{s}");
+        assert!(s.contains("| eu-west"), "{s}");
+        assert!(s.contains("| us-west"), "{s}");
+        assert!(s.contains("wan (kWh)"), "{s}");
+        assert_eq!(geo.site("us-west").unwrap().shipped_in, 1);
+        assert!(geo.site("zzz").is_none());
+        let (done, out, energy, carbon, wan_e, wan_g) = geo.site_sums();
+        assert_eq!((done, out), (2, 1));
+        assert!((energy - (4e-5 + 1e-7)).abs() < 1e-15);
+        assert!((carbon - 0.0171).abs() < 1e-15);
+        assert!((wan_e - 1e-7).abs() < 1e-15);
+        assert!((wan_g - 0.0001).abs() < 1e-15);
+    }
+
+    #[test]
     fn empty_sample_guard() {
         assert_eq!(summary_or_zero(&[]).mean, 0.0);
         assert_eq!(summary_or_zero(&[5.0]).mean, 5.0);
@@ -666,6 +840,7 @@ mod tests {
             ClassUsage {
                 name: "interactive".into(),
                 completed: 120,
+                rejected: 4,
                 slo_s: 3.0,
                 slo_missed: 2,
                 batches: 40,
@@ -677,6 +852,7 @@ mod tests {
             ClassUsage {
                 name: "background".into(),
                 completed: 30,
+                rejected: 0,
                 slo_s: f64::INFINITY,
                 slo_missed: 0,
                 batches: 0,
@@ -690,6 +866,7 @@ mod tests {
         assert!(s.contains("| interactive"), "{s}");
         assert!(s.contains("| background"), "{s}");
         assert!(s.contains("slo (s)"));
+        assert!(s.contains("rej"), "admission sheds render per class: {s}");
         assert!(s.contains("3.00"), "finite SLOs render in seconds: {s}");
         let interactive = multi.class("interactive").unwrap();
         assert!((interactive.mean_fill() - 3.0).abs() < 1e-12);

@@ -79,9 +79,13 @@
 //!   it is ever drawn.
 
 use crate::carbon::{zone_traces_from_csv, IntensityTrace};
-use crate::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
+use crate::microgrid::{BatterySpec, ChargePolicy, DischargePolicy, MicrogridSpec, PvProfile};
 use crate::node::NodeSpec;
 use crate::scheduler::TaskDemand;
+use crate::site::{
+    RouterSpec, SiteLayer, SiteSpec, SiteTopology, WanLink, DEFAULT_REQUEST_BYTES,
+    DEFAULT_WAN_J_PER_BYTE,
+};
 use crate::workload::{WorkloadClass, WorkloadMix};
 
 use super::engine::{ArrivalProcess, BatchSpec, ChurnEvent, DeferralSpec, SimConfig};
@@ -102,6 +106,8 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "arbitrage",
     "batch-serving",
     "multi-tenant",
+    "multi-site",
+    "follow-the-sun",
 ];
 
 /// One synthetic ElectricityMaps-style day (hourly, 3 zones) bundled for
@@ -124,6 +130,10 @@ pub struct Scenario {
     /// Optional PV + battery microgrid per node (same order as `specs`).
     /// Empty means "no microgrids anywhere"; otherwise one slot per node.
     pub microgrids: Vec<Option<MicrogridSpec>>,
+    /// Optional geographic layer ([`crate::site`]): the site roster, the
+    /// node→site partition, the WAN topology and the cross-site router.
+    /// `None` (the default) is the flat single-region fleet.
+    pub sites: Option<SiteLayer>,
     pub config: SimConfig,
 }
 
@@ -161,6 +171,9 @@ impl Scenario {
             if let Some(mg) = mg {
                 mg.validate().map_err(|e| format!("node {i} microgrid: {e}"))?;
             }
+        }
+        if let Some(layer) = &self.sites {
+            layer.validate(n).map_err(|e| format!("site layer: {e}"))?;
         }
         for ev in &self.churn {
             if ev.node >= n {
@@ -222,6 +235,10 @@ pub fn build(name: &str, nodes: usize, requests: usize, seed: u64) -> Option<Sce
         }
         "multi-tenant" => {
             Some(multi_tenant(if nodes == 0 { 8 } else { nodes }, requests, seed))
+        }
+        "multi-site" => Some(multi_site(if nodes == 0 { 9 } else { nodes }, requests, seed)),
+        "follow-the-sun" => {
+            Some(follow_the_sun(if nodes == 0 { 9 } else { nodes }, requests, seed))
         }
         _ => None,
     }
@@ -286,6 +303,7 @@ fn paper_3_node(requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids: Vec::new(),
+        sites: None,
         config: SimConfig { seed, ..SimConfig::default() },
     }
 }
@@ -304,6 +322,7 @@ fn fleet_n(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids: Vec::new(),
+        sites: None,
         config,
     }
 }
@@ -335,6 +354,7 @@ fn diurnal_solar(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids: Vec::new(),
+        sites: None,
         config,
     }
 }
@@ -358,6 +378,7 @@ fn bursty(nodes: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids: Vec::new(),
+        sites: None,
         config,
     }
 }
@@ -385,6 +406,7 @@ fn churn(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn,
         microgrids: Vec::new(),
+        sites: None,
         config,
     }
 }
@@ -434,6 +456,7 @@ pub fn real_trace_from_csv(
         requests,
         churn: Vec::new(),
         microgrids: Vec::new(),
+        sites: None,
         config: SimConfig {
             seed,
             deferral: Some(DeferralSpec {
@@ -514,6 +537,7 @@ fn consolidation(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids: Vec::new(),
+        sites: None,
         config,
     }
 }
@@ -567,6 +591,7 @@ fn solar_battery(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids,
+        sites: None,
         config,
     }
 }
@@ -592,6 +617,7 @@ fn microgrid_fleet(n: usize, requests: usize, seed: u64) -> Scenario {
                 pv: PvProfile::diurnal_with_sunrise(3.0 * s.rated_power_w, i as f64 * 1_800.0),
                 battery: BatterySpec::simple(3.0 * s.rated_power_w, 0.9, 0.9),
                 charge: ChargePolicy::Off,
+                discharge: DischargePolicy::Greedy,
             })
         })
         .collect();
@@ -604,6 +630,7 @@ fn microgrid_fleet(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids,
+        sites: None,
         config,
     }
 }
@@ -713,6 +740,7 @@ fn arbitrage(n: usize, requests: usize, seed: u64) -> Scenario {
                     initial_soc: 0.3,
                 },
                 charge: ChargePolicy::threshold(crate::microgrid::DEFAULT_CHARGE_PERCENTILE),
+                discharge: DischargePolicy::Greedy,
             })
         })
         .collect();
@@ -725,6 +753,7 @@ fn arbitrage(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids,
+        sites: None,
         config,
     }
 }
@@ -825,6 +854,7 @@ fn batch_serving(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids: Vec::new(),
+        sites: None,
         config,
     }
 }
@@ -886,6 +916,7 @@ fn multi_tenant(n: usize, requests: usize, seed: u64) -> Scenario {
                 pv: PvProfile::diurnal_with_sunrise(3.0 * s.rated_power_w, i as f64 * 1_800.0),
                 battery: BatterySpec::simple(3.0 * s.rated_power_w, 0.9, 0.9),
                 charge: ChargePolicy::Off,
+                discharge: DischargePolicy::Greedy,
             })
         })
         .collect();
@@ -898,6 +929,7 @@ fn multi_tenant(n: usize, requests: usize, seed: u64) -> Scenario {
         requests,
         churn: Vec::new(),
         microgrids,
+        sites: None,
         config,
     }
 }
@@ -978,8 +1010,253 @@ pub fn monolithic_of(sc: &Scenario) -> Scenario {
         requests: sc.requests,
         churn: Vec::new(),
         microgrids: Vec::new(),
+        sites: None,
         config: sc.config.clone(),
     }
+}
+
+/// The three regions of the geographic scenarios: name and timezone
+/// offset (seconds east of the first region). 8 h apart, so the grid
+/// troughs — and, in `follow-the-sun`, the PV windows — rotate around
+/// the clock and together cover the whole day.
+pub const MULTI_SITE_REGIONS: [(&str, f64); 3] =
+    [("eu-west", 0.0), ("us-west", 28_800.0), ("ap-east", 57_600.0)];
+
+/// Virtual horizon the geographic scenarios spread arrivals over: one
+/// full day, so every region sees its entire diurnal grid cycle.
+pub const MULTI_SITE_HORIZON_S: f64 = 86_400.0;
+
+/// One-way WAN latency between any two regions (ms): long-haul
+/// inter-continental distance, charged to every shipped request's
+/// end-to-end latency.
+pub const MULTI_SITE_WAN_LATENCY_MS: f64 = 60.0;
+
+/// Diurnal swing of each regional grid around the 475 g global mean —
+/// ±45%, so regional troughs are genuinely worth a WAN hop.
+pub const MULTI_SITE_GRID_SWING_G: f64 = 215.0;
+
+/// `follow-the-sun` deadline slack (s): tight enough that deferring in
+/// place cannot ride out a timezone (the sun moves 8 h between regions),
+/// so *where* has to do the work that *when* cannot.
+pub const FOLLOW_SUN_SLACK_S: f64 = 1_800.0;
+
+/// PV peak per `follow-the-sun` node, as a multiple of its rated draw —
+/// generous headroom so a sunlit region serves at ~zero marginal
+/// intensity even near its sunrise/sunset shoulders.
+pub const FOLLOW_SUN_PV_PEAK_X: f64 = 3.0;
+
+/// Region roster for the geographic scenarios: `k` timezones spread
+/// uniformly over the day, so the follow-the-sun property (some region
+/// always near its grid trough / under its sun) survives any count. The
+/// default three keep their [`MULTI_SITE_REGIONS`] names; other counts
+/// get synthetic `region-NN` entries. `sim --sites N` lands here.
+fn geo_regions(k: usize) -> Vec<(String, f64)> {
+    (0..k)
+        .map(|i| {
+            let tz = MULTI_SITE_HORIZON_S * i as f64 / k as f64;
+            let name = if k == MULTI_SITE_REGIONS.len() {
+                MULTI_SITE_REGIONS[i].0.to_string()
+            } else {
+                format!("region-{i:02}")
+            };
+            (name, tz)
+        })
+        .collect()
+}
+
+/// Round-robin [`SiteLayer`] over a region roster with a uniform WAN
+/// mesh priced per [`DEFAULT_REQUEST_BYTES`]-sized request.
+fn site_layer(n: usize, regions: &[(String, f64)], router: RouterSpec) -> SiteLayer {
+    let k = regions.len();
+    SiteLayer {
+        sites: regions.iter().map(|(name, tz)| SiteSpec::new(name, *tz)).collect(),
+        site_of: (0..n).map(|i| i % k).collect(),
+        topology: SiteTopology::uniform(
+            k,
+            WanLink::of_bytes(
+                MULTI_SITE_WAN_LATENCY_MS,
+                DEFAULT_REQUEST_BYTES,
+                DEFAULT_WAN_J_PER_BYTE,
+            ),
+        ),
+        router,
+    }
+}
+
+/// Identical idle-free hosts for the geographic scenarios, named after
+/// their region. Idle-free because all three regions stay online around
+/// the clock under every router — the floors would be a constant every
+/// variant pays identically, and zeroing them makes gCO₂/req purely a
+/// function of placement and WAN transfer.
+fn geo_fleet(n: usize, regions: &[(String, f64)]) -> Vec<NodeSpec> {
+    let (rated_power_w, _) = crate::config::default_host_power().node_power_split();
+    (0..n)
+        .map(|i| NodeSpec {
+            name: format!("{}-{:02}", regions[i % regions.len()].0, i),
+            cpu_quota: 1.0,
+            mem_mb: 1024,
+            intensity: 475.0,
+            rated_power_w,
+            idle_w: 0.0,
+            prior_ms: 250.0,
+            alpha: 0.005,
+            overhead_ms: 8.0,
+            time_scale: 20.6,
+            adaptive: false,
+            batch_gamma: 0.8,
+            batch_beta: 0.2,
+        })
+        .collect()
+}
+
+/// Three-region staggered-grid fleet: identical idle-free hosts split
+/// round-robin across [`MULTI_SITE_REGIONS`], each region on the same
+/// diurnal grid shifted by its timezone offset, WAN links priced into
+/// both the latency and the carbon ledgers, and the deadline-feasible
+/// carbon router in front ([`RouterSpec::default`]). At any instant some
+/// region sits near its grid trough, so cross-site shipping has standing
+/// material gain over serving at home
+/// ([`crate::experiments::sim_router_comparison`] is the A/B/C).
+fn multi_site(n: usize, requests: usize, seed: u64) -> Scenario {
+    multi_site_over(&geo_regions(MULTI_SITE_REGIONS.len()), n, requests, seed)
+}
+
+/// [`multi_site`] over an explicit region roster (`sim --sites N`).
+fn multi_site_over(
+    regions: &[(String, f64)],
+    n: usize,
+    requests: usize,
+    seed: u64,
+) -> Scenario {
+    let config = SimConfig { seed, ..SimConfig::default() };
+    let layer = site_layer(n, regions, RouterSpec::default());
+    let specs = geo_fleet(n, regions);
+    let traces = specs
+        .iter()
+        .enumerate()
+        .map(|(i, _)| IntensityTrace::Diurnal {
+            mean: 475.0,
+            amplitude: MULTI_SITE_GRID_SWING_G,
+            period_s: 86_400.0,
+            phase_s: layer.sites[layer.site_of[i]].tz_offset_s,
+        })
+        .collect();
+    Scenario {
+        name: "multi-site".into(),
+        traces,
+        capacity: vec![1; n],
+        specs,
+        arrivals: ArrivalProcess::Poisson { rate_hz: requests as f64 / MULTI_SITE_HORIZON_S },
+        requests,
+        churn: Vec::new(),
+        microgrids: Vec::new(),
+        sites: Some(layer),
+        config,
+    }
+}
+
+/// The follow-the-sun showcase: the `multi-site` fleet with a 3×-rated
+/// PV array behind every node, sunrise staggered by region timezone, and
+/// 30 min of deadline slack. Each region's 12 h PV window covers a third
+/// of the day offset by 8 h, so their union covers *all* of it: a single
+/// region in green mode serves at ~zero marginal intensity only while
+/// its own sun is up, while the cross-site deadline router always has
+/// some sunlit region within one WAN hop. Fleet gCO₂/req under the
+/// router beats the best single-site twin ([`single_site_twin`]) by well
+/// over the 0.9× acceptance margin.
+fn follow_the_sun(n: usize, requests: usize, seed: u64) -> Scenario {
+    solarize(multi_site(n, requests, seed))
+}
+
+/// The follow-the-sun mutation over any `multi-site`-shaped scenario:
+/// staggered PV arrays + tight deadline slack (see [`follow_the_sun`]).
+fn solarize(mut sc: Scenario) -> Scenario {
+    sc.name = "follow-the-sun".into();
+    let layer = sc.sites.as_ref().expect("multi-site always has a site layer");
+    sc.microgrids = sc
+        .specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let sunrise = 21_600.0 + layer.sites[layer.site_of[i]].tz_offset_s;
+            Some(MicrogridSpec {
+                pv: PvProfile::diurnal_with_sunrise(
+                    FOLLOW_SUN_PV_PEAK_X * s.rated_power_w,
+                    sunrise,
+                ),
+                battery: BatterySpec::none(),
+                charge: ChargePolicy::Off,
+                discharge: DischargePolicy::Greedy,
+            })
+        })
+        .collect();
+    sc.config.deferral = Some(DeferralSpec {
+        slack_s: FOLLOW_SUN_SLACK_S,
+        headroom_s: 300.0,
+        policy: crate::carbon::DeferralPolicy::default(),
+    });
+    sc
+}
+
+/// Rebuild a geographic scenario over `k` regions instead of the default
+/// three (`sim --sites N`): timezones spread uniformly over the day,
+/// nodes split round-robin, defaulting to three nodes per region. `None`
+/// for a non-geographic scenario name or `k < 2` (a site layer needs
+/// peers to ship to).
+pub fn with_site_count(
+    name: &str,
+    k: usize,
+    nodes: usize,
+    requests: usize,
+    seed: u64,
+) -> Option<Scenario> {
+    if k < 2 {
+        return None;
+    }
+    let regions = geo_regions(k);
+    let n = if nodes == 0 { 3 * k } else { nodes };
+    let requests = if requests == 0 { 20_000 } else { requests };
+    match name {
+        "multi-site" => Some(multi_site_over(&regions, n, requests, seed)),
+        "follow-the-sun" => Some(solarize(multi_site_over(&regions, n, requests, seed))),
+        _ => None,
+    }
+}
+
+/// Single-region twin of a geographic scenario: one site's nodes, traces
+/// and microgrids carved out as a flat fleet (no site layer, no router)
+/// that still faces the *same* arrival process and request budget — the
+/// whole planet's demand forced through one region. The best of these
+/// twins over all sites is the "best single-site green mode" baseline the
+/// follow-the-sun margin is measured against.
+pub fn single_site_twin(sc: &Scenario, site: usize) -> Scenario {
+    let layer = sc.sites.as_ref().expect("single_site_twin needs a geographic scenario");
+    assert!(site < layer.sites.len(), "site {site} out of range");
+    let keep: Vec<usize> = (0..sc.specs.len()).filter(|&i| layer.site_of[i] == site).collect();
+    assert!(!keep.is_empty(), "site {site} has no nodes");
+    let pos: std::collections::HashMap<usize, usize> =
+        keep.iter().enumerate().map(|(p, &g)| (g, p)).collect();
+    let mut twin = sc.clone();
+    twin.name = format!("{}-{}", sc.name, layer.sites[site].name);
+    twin.specs = keep.iter().map(|&i| sc.specs[i].clone()).collect();
+    twin.traces = keep.iter().map(|&i| sc.traces[i].clone()).collect();
+    twin.capacity = keep.iter().map(|&i| sc.capacity[i]).collect();
+    if !sc.microgrids.is_empty() {
+        twin.microgrids = keep.iter().map(|&i| sc.microgrids[i].clone()).collect();
+    }
+    twin.churn = sc
+        .churn
+        .iter()
+        .filter_map(|ev| {
+            pos.get(&ev.node).map(|&p| {
+                let mut ev = ev.clone();
+                ev.node = p;
+                ev
+            })
+        })
+        .collect();
+    twin.sites = None;
+    twin
 }
 
 #[cfg(test)]
@@ -1014,6 +1291,8 @@ mod tests {
         assert_eq!(build("arbitrage", 0, 0, 1).unwrap().specs.len(), 4);
         assert_eq!(build("batch-serving", 0, 0, 1).unwrap().specs.len(), 4);
         assert_eq!(build("multi-tenant", 0, 0, 1).unwrap().specs.len(), 8);
+        assert_eq!(build("multi-site", 0, 0, 1).unwrap().specs.len(), 9);
+        assert_eq!(build("follow-the-sun", 0, 0, 1).unwrap().specs.len(), 9);
         // node/request overrides respected
         let sc = build("fleet-100", 25, 500, 1).unwrap();
         assert_eq!(sc.specs.len(), 25);
@@ -1346,5 +1625,76 @@ mod tests {
         assert!((mono.specs[0].rated_power_w - 142.0).abs() < 1e-9);
         assert_eq!(mono.requests, sc.requests);
         assert_eq!(mono.config.seed, sc.config.seed);
+    }
+
+    #[test]
+    fn multi_site_scenario_shape() {
+        let sc = build("multi-site", 0, 1_000, 7).unwrap();
+        let layer = sc.sites.as_ref().expect("multi-site has a site layer");
+        assert_eq!(layer.sites.len(), 3);
+        assert_eq!(layer.site_of.len(), 9);
+        // Round-robin partition, region-named nodes, staggered grids.
+        for (i, spec) in sc.specs.iter().enumerate() {
+            let s = layer.site_of[i];
+            assert_eq!(s, i % 3, "node {i}");
+            assert!(spec.name.starts_with(MULTI_SITE_REGIONS[s].0), "{}", spec.name);
+            assert_eq!(spec.idle_w, 0.0, "geo chassis is idle-free");
+            match sc.traces[i] {
+                IntensityTrace::Diurnal { mean, amplitude, phase_s, .. } => {
+                    assert_eq!(mean, 475.0);
+                    assert_eq!(amplitude, MULTI_SITE_GRID_SWING_G);
+                    assert_eq!(phase_s, layer.sites[s].tz_offset_s);
+                }
+                _ => panic!("node {i}: expected a diurnal trace"),
+            }
+        }
+        // The WAN mesh prices every off-diagonal hop identically.
+        let link = layer.topology.link(0, 2);
+        assert_eq!(link.latency_ms, MULTI_SITE_WAN_LATENCY_MS);
+        assert!(link.energy_j > 0.0);
+        assert_eq!(layer.topology.link(1, 1).latency_ms, 0.0);
+        assert_eq!(layer.router.name(), "deadline");
+        assert!(sc.validate().is_ok());
+    }
+
+    #[test]
+    fn follow_the_sun_scenario_shape() {
+        let sc = build("follow-the-sun", 0, 1_000, 7).unwrap();
+        let layer = sc.sites.as_ref().expect("follow-the-sun has a site layer");
+        // Every node carries a battery-less PV microgrid whose sunrise
+        // tracks its region's timezone; the three PV windows tile the day.
+        assert_eq!(sc.microgrids.len(), sc.specs.len());
+        for (i, mg) in sc.microgrids.iter().enumerate() {
+            let mg = mg.as_ref().expect("every follow-the-sun node has PV");
+            assert_eq!(mg.battery.capacity_wh, 0.0);
+            let tz = layer.sites[layer.site_of[i]].tz_offset_s;
+            let noon = 21_600.0 + tz + 21_600.0;
+            let peak = FOLLOW_SUN_PV_PEAK_X * sc.specs[i].rated_power_w;
+            assert!((mg.pv.power_w(noon) - peak).abs() < 1e-9, "node {i} noon output");
+            assert_eq!(mg.pv.power_w(noon + 43_200.0), 0.0, "node {i} night output");
+        }
+        let d = sc.config.deferral.as_ref().expect("slack makes deadlines finite");
+        assert_eq!(d.slack_s, FOLLOW_SUN_SLACK_S);
+        assert!(sc.validate().is_ok());
+    }
+
+    #[test]
+    fn single_site_twin_carves_one_region() {
+        let sc = build("follow-the-sun", 0, 1_000, 7).unwrap();
+        let rate = sc.arrivals.mean_rate_hz();
+        for site in 0..3 {
+            let twin = single_site_twin(&sc, site);
+            assert_eq!(twin.specs.len(), 3);
+            assert_eq!(twin.microgrids.len(), 3);
+            assert!(twin.sites.is_none());
+            assert!(twin.name.ends_with(MULTI_SITE_REGIONS[site].0), "{}", twin.name);
+            // Same planet-wide demand squeezed through one region.
+            assert_eq!(twin.arrivals.mean_rate_hz(), rate);
+            assert_eq!(twin.requests, sc.requests);
+            for spec in &twin.specs {
+                assert!(spec.name.starts_with(MULTI_SITE_REGIONS[site].0));
+            }
+            assert!(twin.validate().is_ok());
+        }
     }
 }

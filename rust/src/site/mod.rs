@@ -1,0 +1,560 @@
+//! # Hierarchical multi-site fleets: the geographic routing layer
+//!
+//! The L3.5 simulator models one flat fleet; the real "millions of users
+//! at the edge" problem is geographic — heterogeneous edge data centers
+//! with local grids/microgrids linked by WAN hops that cost latency *and*
+//! energy, where staggered-timezone grids and rotating PV peaks make
+//! cross-region shifting the dominant carbon lever (GreenScale, the
+//! Vertical edge-DC line of work). This module is that layer:
+//!
+//! * a [`SiteSpec`] groups a slice of the node fleet under one name and
+//!   timezone offset — each site keeps its own grid trace / microgrid
+//!   profile on its nodes, and the *existing* [`crate::scheduler::Scheduler`]
+//!   runs unchanged within the site;
+//! * a [`SiteTopology`] prices every ordered site pair with a [`WanLink`]
+//!   (one-way latency in ms + transfer energy in joules per shipped
+//!   request, derived from bytes-on-the-wire × J/byte): shipped requests
+//!   pay the hop in end-to-end latency and the transfer joules enter the
+//!   Eq. 2 carbon accounting at the origin site's effective intensity;
+//! * a cross-site [`Router`] decides which region's grid/PV eats each
+//!   request *before* the local scheduler places it within the site,
+//!   deciding over O(sites) [`SiteView`] summaries — never O(total-nodes)
+//!   snapshots. Three policies: [`NearestSiteRouter`] (keep everything at
+//!   the arrival's home region — the latency-first baseline),
+//!   [`CarbonGreedyRouter`] (always the cleanest region, transfer and
+//!   deadline be damned), and [`DeadlineFeasibleCarbonRouter`] (ship only
+//!   when the WAN hop + remote queue still clears the deadline *and* the
+//!   grid delta clears the transfer energy).
+//!
+//! The simulator threads the layer through [`crate::sim::Scenario::sites`]:
+//! arrivals draw a home site from a dedicated seeded stream, the router
+//! picks the target, remote targets pay the WAN hop (a `wan_hop` firehose
+//! event carries the priced joules/grams so replayed ledgers still
+//! balance), and reports break completions, WAN-shipped share, transfer
+//! energy and gCO₂/req out per site ([`crate::sim::SiteUsage`]). The
+//! `multi-site` and `follow-the-sun` scenarios exercise it; with
+//! `Scenario::sites = None` nothing here is ever constructed.
+
+/// Default feasibility margin the deadline-aware router keeps between a
+/// shipped request's ETA and its deadline (seconds): absorbs queue-estimate
+/// error at the remote site so "feasible" survives a mildly stale view.
+pub const DEFAULT_ROUTE_MARGIN_S: f64 = 60.0;
+
+/// Default payload of one shipped inference request (bytes on the wire):
+/// a 224×224×3 uint8 tensor plus framing.
+pub const DEFAULT_REQUEST_BYTES: f64 = 160_000.0;
+
+/// Default WAN transfer energy per byte (J/B): core-network transport at
+/// the tens-of-nJ/B regime reported for wide-area transmission.
+pub const DEFAULT_WAN_J_PER_BYTE: f64 = 4e-8;
+
+/// One edge site: a named region grouping a slice of the node fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteSpec {
+    /// Region name (prefixes per-site report rows).
+    pub name: String,
+    /// Timezone offset from the simulation clock (seconds). Scenario
+    /// builders phase-shift grid traces and PV sunrises by it; the layer
+    /// itself only carries it for reporting.
+    pub tz_offset_s: f64,
+}
+
+impl SiteSpec {
+    pub fn new(name: &str, tz_offset_s: f64) -> SiteSpec {
+        SiteSpec { name: name.into(), tz_offset_s }
+    }
+}
+
+/// One directed WAN link between two sites.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WanLink {
+    /// One-way transfer latency (ms) a shipped request pays before it can
+    /// enter the remote site's queues.
+    pub latency_ms: f64,
+    /// Transfer energy (joules) per shipped request, priced into Eq. 2
+    /// carbon at the origin site's effective intensity.
+    pub energy_j: f64,
+}
+
+impl WanLink {
+    /// The zero link (a site to itself).
+    pub fn zero() -> WanLink {
+        WanLink { latency_ms: 0.0, energy_j: 0.0 }
+    }
+
+    /// Price a link from bytes on the wire: `latency_ms` one-way delay,
+    /// `bytes × j_per_byte` joules per shipped request.
+    pub fn of_bytes(latency_ms: f64, bytes: f64, j_per_byte: f64) -> WanLink {
+        WanLink { latency_ms, energy_j: bytes * j_per_byte }
+    }
+}
+
+/// Dense ordered-pair WAN link matrix over `n` sites (diagonal zero).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteTopology {
+    n: usize,
+    links: Vec<WanLink>,
+}
+
+impl SiteTopology {
+    /// `n` sites, every inter-site link zero (patch with [`Self::set`]).
+    pub fn new(n: usize) -> SiteTopology {
+        SiteTopology { n, links: vec![WanLink::zero(); n * n] }
+    }
+
+    /// `n` sites with the same `link` on every ordered off-diagonal pair.
+    pub fn uniform(n: usize, link: WanLink) -> SiteTopology {
+        let mut t = SiteTopology::new(n);
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    t.links[a * n + b] = link;
+                }
+            }
+        }
+        t
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.n
+    }
+
+    /// Install the directed link `from → to` (panics on the diagonal).
+    pub fn set(&mut self, from: usize, to: usize, link: WanLink) {
+        assert!(from != to, "the diagonal stays zero");
+        self.links[from * self.n + to] = link;
+    }
+
+    /// The directed link `from → to` (zero on the diagonal).
+    pub fn link(&self, from: usize, to: usize) -> &WanLink {
+        &self.links[from * self.n + to]
+    }
+}
+
+/// O(1)-sized routing summary of one site at decision time, maintained by
+/// the engine from running per-site aggregates — a router over `S` sites
+/// sees `S` of these, never per-node snapshots.
+#[derive(Debug, Clone, Copy)]
+pub struct SiteView {
+    /// Site index (into the scenario's [`SiteLayer::sites`]).
+    pub index: usize,
+    /// Mean effective carbon intensity over the site's *active* nodes
+    /// (gCO₂/kWh, microgrid-blended); `f64::INFINITY` when the whole site
+    /// is churned out.
+    pub intensity: f64,
+    /// Queue-pressure estimate (seconds): outstanding tasks × mean
+    /// service ÷ service slots.
+    pub queue_delay_s: f64,
+    /// Nodes currently powered on.
+    pub active_nodes: usize,
+    /// Aggregate service slots across active nodes.
+    pub slots: usize,
+    /// Mean single-task service estimate across active nodes (seconds).
+    pub est_service_s: f64,
+    /// Estimated dynamic energy of one task here (joules): mean dynamic
+    /// power × `est_service_s`. What the router prices grid deltas over.
+    pub task_energy_j: f64,
+}
+
+impl SiteView {
+    /// Estimated task carbon if this site eats the request (grams,
+    /// pre-PUE): `task_energy_j → kWh × intensity`.
+    pub fn task_carbon_g(&self) -> f64 {
+        self.task_energy_j / 3.6e6 * self.intensity
+    }
+}
+
+/// Cross-site routing policy: which region's grid/PV eats each request.
+/// Runs *before* the target site's local [`crate::scheduler::Scheduler`];
+/// must be deterministic for identical inputs.
+pub trait Router {
+    /// Pick the target site for a request homed at `home`. `deadline_s`
+    /// is absolute virtual time when the task carries slack. Must return
+    /// a valid site index; returning `home` keeps the request local.
+    fn route(
+        &mut self,
+        home: usize,
+        now_s: f64,
+        deadline_s: Option<f64>,
+        sites: &[SiteView],
+        topo: &SiteTopology,
+    ) -> usize;
+
+    fn name(&self) -> &str;
+}
+
+/// Latency-first baseline: every request stays at its home region
+/// (falling over to the cheapest active site only when home is fully
+/// churned out — a dead region cannot serve).
+pub struct NearestSiteRouter;
+
+impl Router for NearestSiteRouter {
+    fn route(
+        &mut self,
+        home: usize,
+        _now_s: f64,
+        _deadline_s: Option<f64>,
+        sites: &[SiteView],
+        _topo: &SiteTopology,
+    ) -> usize {
+        if sites[home].active_nodes > 0 {
+            return home;
+        }
+        cleanest_active(sites).unwrap_or(home)
+    }
+
+    fn name(&self) -> &str {
+        "nearest"
+    }
+}
+
+/// Carbon-only baseline: always the cleanest active region, ignoring both
+/// the deadline and the transfer energy — the upper bound on shifting
+/// aggression (and on WAN waste). Ties keep home, then the lowest index.
+pub struct CarbonGreedyRouter;
+
+impl Router for CarbonGreedyRouter {
+    fn route(
+        &mut self,
+        home: usize,
+        _now_s: f64,
+        _deadline_s: Option<f64>,
+        sites: &[SiteView],
+        _topo: &SiteTopology,
+    ) -> usize {
+        let mut best = home;
+        let mut best_i =
+            if sites[home].active_nodes > 0 { sites[home].intensity } else { f64::INFINITY };
+        for s in sites {
+            if s.active_nodes > 0 && s.intensity < best_i {
+                best = s.index;
+                best_i = s.intensity;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &str {
+        "carbon"
+    }
+}
+
+/// The deadline-feasible carbon router: ship a request to another region
+/// only when (a) the WAN hop + remote queue + remote service still clears
+/// the deadline with `margin_s` to spare, and (b) the grid delta clears
+/// the transfer energy by at least `min_gain_g` grams — i.e. remote task
+/// carbon + transfer carbon (priced at the *origin's* intensity: the
+/// sending edge powers the uplink) beats running at home.
+pub struct DeadlineFeasibleCarbonRouter {
+    /// Feasibility slack (seconds) kept between the shipped ETA and the
+    /// deadline.
+    pub margin_s: f64,
+    /// Minimum per-request carbon saving (grams, pre-PUE) required to pay
+    /// the WAN hop at all — a hysteresis floor against churn-shipping on
+    /// noise-level grid deltas.
+    pub min_gain_g: f64,
+}
+
+impl Router for DeadlineFeasibleCarbonRouter {
+    fn route(
+        &mut self,
+        home: usize,
+        now_s: f64,
+        deadline_s: Option<f64>,
+        sites: &[SiteView],
+        topo: &SiteTopology,
+    ) -> usize {
+        let mut best = home;
+        let mut best_g =
+            if sites[home].active_nodes > 0 { sites[home].task_carbon_g() } else { f64::INFINITY };
+        let origin_i = sites[home].intensity;
+        for s in sites {
+            if s.index == home || s.active_nodes == 0 {
+                continue;
+            }
+            let link = topo.link(home, s.index);
+            if let Some(d) = deadline_s {
+                let hop_s = link.latency_ms / 1e3;
+                let eta = now_s + hop_s + s.queue_delay_s + s.est_service_s + self.margin_s;
+                if eta > d {
+                    continue;
+                }
+            }
+            let wan_g = if origin_i.is_finite() { link.energy_j / 3.6e6 * origin_i } else { 0.0 };
+            let g = s.task_carbon_g() + wan_g;
+            if g < best_g - self.min_gain_g {
+                best = s.index;
+                best_g = g;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &str {
+        "deadline"
+    }
+}
+
+/// Lowest-intensity site with at least one active node.
+fn cleanest_active(sites: &[SiteView]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    let mut best_i = f64::INFINITY;
+    for s in sites {
+        if s.active_nodes > 0 && s.intensity < best_i {
+            best = Some(s.index);
+            best_i = s.intensity;
+        }
+    }
+    best
+}
+
+/// Cloneable router configuration a [`SiteLayer`] carries; the engine
+/// builds the boxed policy per run with [`RouterSpec::build`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouterSpec {
+    /// [`NearestSiteRouter`].
+    Nearest,
+    /// [`CarbonGreedyRouter`].
+    Carbon,
+    /// [`DeadlineFeasibleCarbonRouter`] with its two knobs.
+    Deadline { margin_s: f64, min_gain_g: f64 },
+}
+
+impl Default for RouterSpec {
+    fn default() -> RouterSpec {
+        RouterSpec::Deadline { margin_s: DEFAULT_ROUTE_MARGIN_S, min_gain_g: 0.0 }
+    }
+}
+
+impl RouterSpec {
+    /// Parse a CLI/registry name: `nearest`, `carbon` or `deadline`.
+    pub fn parse(s: &str) -> Option<RouterSpec> {
+        match s {
+            "nearest" => Some(RouterSpec::Nearest),
+            "carbon" => Some(RouterSpec::Carbon),
+            "deadline" => Some(RouterSpec::default()),
+            _ => None,
+        }
+    }
+
+    /// The stable routing-policy name (report/meta field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterSpec::Nearest => "nearest",
+            RouterSpec::Carbon => "carbon",
+            RouterSpec::Deadline { .. } => "deadline",
+        }
+    }
+
+    /// Build the boxed policy this spec describes.
+    pub fn build(&self) -> Box<dyn Router> {
+        match *self {
+            RouterSpec::Nearest => Box::new(NearestSiteRouter),
+            RouterSpec::Carbon => Box::new(CarbonGreedyRouter),
+            RouterSpec::Deadline { margin_s, min_gain_g } => {
+                Box::new(DeadlineFeasibleCarbonRouter { margin_s, min_gain_g })
+            }
+        }
+    }
+}
+
+/// The full geographic layer a [`crate::sim::Scenario`] may carry: the
+/// site roster, the node→site partition, the WAN topology and the router.
+#[derive(Debug, Clone)]
+pub struct SiteLayer {
+    /// The site roster; `site_of` indexes into it.
+    pub sites: Vec<SiteSpec>,
+    /// Node index → site index, one entry per scenario node.
+    pub site_of: Vec<usize>,
+    /// WAN links over `sites`.
+    pub topology: SiteTopology,
+    /// Cross-site routing policy.
+    pub router: RouterSpec,
+}
+
+impl SiteLayer {
+    /// Structural validation against the owning scenario's node count.
+    pub fn validate(&self, n_nodes: usize) -> Result<(), String> {
+        if self.sites.len() < 2 {
+            return Err(format!("site layer needs >= 2 sites, got {}", self.sites.len()));
+        }
+        if self.site_of.len() != n_nodes {
+            return Err(format!(
+                "site_of covers {} nodes, scenario has {n_nodes}",
+                self.site_of.len()
+            ));
+        }
+        if let Some(&bad) = self.site_of.iter().find(|&&s| s >= self.sites.len()) {
+            return Err(format!("site_of points at site {bad}, only {} exist", self.sites.len()));
+        }
+        if self.topology.n_sites() != self.sites.len() {
+            return Err(format!(
+                "topology spans {} sites, roster has {}",
+                self.topology.n_sites(),
+                self.sites.len()
+            ));
+        }
+        for a in 0..self.sites.len() {
+            for b in 0..self.sites.len() {
+                let l = self.topology.link(a, b);
+                if !l.latency_ms.is_finite()
+                    || l.latency_ms < 0.0
+                    || !l.energy_j.is_finite()
+                    || l.energy_j < 0.0
+                {
+                    return Err(format!("link {a}->{b} must be finite and >= 0, got {l:?}"));
+                }
+            }
+        }
+        for (i, s) in self.sites.iter().enumerate() {
+            if !self.site_of.contains(&i) {
+                return Err(format!("site {} ({}) has no nodes", i, s.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(intensities: &[f64]) -> Vec<SiteView> {
+        intensities
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| SiteView {
+                index: i,
+                intensity: g,
+                queue_delay_s: 0.0,
+                active_nodes: 2,
+                slots: 2,
+                est_service_s: 0.5,
+                task_energy_j: 100.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn topology_uniform_keeps_diagonal_zero() {
+        let t = SiteTopology::uniform(3, WanLink { latency_ms: 40.0, energy_j: 8.0 });
+        assert_eq!(t.n_sites(), 3);
+        for a in 0..3 {
+            assert_eq!(*t.link(a, a), WanLink::zero());
+            for b in 0..3 {
+                if a != b {
+                    assert_eq!(t.link(a, b).latency_ms, 40.0);
+                    assert_eq!(t.link(a, b).energy_j, 8.0);
+                }
+            }
+        }
+        let l = WanLink::of_bytes(60.0, DEFAULT_REQUEST_BYTES, DEFAULT_WAN_J_PER_BYTE);
+        assert!((l.energy_j - 160_000.0 * 4e-8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn router_spec_parses_and_builds() {
+        assert_eq!(RouterSpec::parse("nearest"), Some(RouterSpec::Nearest));
+        assert_eq!(RouterSpec::parse("carbon"), Some(RouterSpec::Carbon));
+        assert_eq!(RouterSpec::parse("deadline"), Some(RouterSpec::default()));
+        assert_eq!(RouterSpec::parse("bogus"), None);
+        for (spec, name) in [
+            (RouterSpec::Nearest, "nearest"),
+            (RouterSpec::Carbon, "carbon"),
+            (RouterSpec::default(), "deadline"),
+        ] {
+            assert_eq!(spec.name(), name);
+            assert_eq!(spec.build().name(), name);
+        }
+    }
+
+    #[test]
+    fn nearest_keeps_home_unless_dead() {
+        let topo = SiteTopology::uniform(3, WanLink::zero());
+        let mut r = NearestSiteRouter;
+        let v = views(&[500.0, 100.0, 300.0]);
+        assert_eq!(r.route(0, 0.0, None, &v, &topo), 0);
+        // Home churned out: fail over to the cleanest active site.
+        let mut dead = v.clone();
+        dead[0].active_nodes = 0;
+        dead[0].intensity = f64::INFINITY;
+        assert_eq!(r.route(0, 0.0, None, &dead, &topo), 1);
+    }
+
+    #[test]
+    fn carbon_greedy_chases_cleanest_and_ties_keep_home() {
+        let topo = SiteTopology::uniform(3, WanLink::zero());
+        let mut r = CarbonGreedyRouter;
+        assert_eq!(r.route(0, 0.0, None, &views(&[500.0, 100.0, 300.0]), &topo), 1);
+        // Exact tie with a remote site: home wins (strict <).
+        assert_eq!(r.route(2, 0.0, None, &views(&[300.0, 300.0, 300.0]), &topo), 2);
+        // Dead sites are never targets, however clean.
+        let mut v = views(&[500.0, 100.0, 300.0]);
+        v[1].active_nodes = 0;
+        assert_eq!(r.route(0, 0.0, None, &v, &topo), 2);
+    }
+
+    #[test]
+    fn deadline_router_ships_only_on_cleared_deadline_and_gain() {
+        let topo = SiteTopology::uniform(2, WanLink { latency_ms: 100.0, energy_j: 10.0 });
+        let mut r = DeadlineFeasibleCarbonRouter { margin_s: 1.0, min_gain_g: 0.0 };
+        // Remote is 5× cleaner and the deadline is loose: ship.
+        let v = views(&[500.0, 100.0]);
+        assert_eq!(r.route(0, 0.0, Some(1_000.0), &v, &topo), 1);
+        // No deadline at all: carbon gate alone decides.
+        assert_eq!(r.route(0, 0.0, None, &v, &topo), 1);
+        // Deadline tighter than hop + queue + service + margin: stay home.
+        // eta = 0.1 hop + 0 queue + 0.5 service + 1 margin = 1.6 s.
+        assert_eq!(r.route(0, 0.0, Some(1.5), &v, &topo), 0);
+        // Remote queue pressure pushes the ETA past the deadline too.
+        let mut busy = v.clone();
+        busy[1].queue_delay_s = 500.0;
+        assert_eq!(r.route(0, 0.0, Some(400.0), &busy, &topo), 0);
+        // Transfer energy can eat the whole grid delta: near-equal
+        // intensities with an expensive link stay home.
+        let heavy = SiteTopology::uniform(2, WanLink { latency_ms: 100.0, energy_j: 5_000.0 });
+        assert_eq!(r.route(0, 0.0, Some(1_000.0), &views(&[210.0, 200.0]), &heavy), 0);
+        // min_gain_g hysteresis: a real but sub-floor saving stays home.
+        let mut strict = DeadlineFeasibleCarbonRouter { margin_s: 1.0, min_gain_g: 10.0 };
+        assert_eq!(strict.route(0, 0.0, None, &views(&[500.0, 100.0]), &topo), 0);
+    }
+
+    #[test]
+    fn deadline_router_fails_over_from_a_dead_home() {
+        let topo = SiteTopology::uniform(2, WanLink { latency_ms: 40.0, energy_j: 8.0 });
+        let mut r = DeadlineFeasibleCarbonRouter { margin_s: 1.0, min_gain_g: 0.0 };
+        let mut v = views(&[500.0, 480.0]);
+        v[0].active_nodes = 0;
+        v[0].intensity = f64::INFINITY;
+        assert_eq!(r.route(0, 0.0, Some(1_000.0), &v, &topo), 1);
+    }
+
+    #[test]
+    fn layer_validates_structure() {
+        let layer = || SiteLayer {
+            sites: vec![SiteSpec::new("eu", 0.0), SiteSpec::new("us", -21_600.0)],
+            site_of: vec![0, 0, 1, 1],
+            topology: SiteTopology::uniform(2, WanLink { latency_ms: 40.0, energy_j: 8.0 }),
+            router: RouterSpec::default(),
+        };
+        assert!(layer().validate(4).is_ok());
+        assert!(layer().validate(3).is_err(), "site_of length mismatch");
+        let mut l = layer();
+        l.site_of[0] = 9;
+        assert!(l.validate(4).is_err(), "out-of-range site index");
+        let mut l = layer();
+        l.sites.pop();
+        assert!(l.validate(4).is_err(), "topology/roster mismatch");
+        let mut l = layer();
+        l.topology.set(0, 1, WanLink { latency_ms: -1.0, energy_j: 0.0 });
+        assert!(l.validate(4).is_err(), "negative latency");
+        let mut l = layer();
+        l.site_of = vec![0, 0, 0, 0];
+        assert!(l.validate(4).is_err(), "empty site");
+        let mut l = layer();
+        l.sites.truncate(1);
+        l.site_of = vec![0, 0, 0, 0];
+        l.topology = SiteTopology::new(1);
+        assert!(l.validate(4).is_err(), "single site is not a multi-site layer");
+    }
+}

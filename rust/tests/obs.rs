@@ -244,6 +244,65 @@ fn replay_reconstructs_every_library_scenario_report() {
     }
 }
 
+/// The WAN ledger balances end to end: on the geographic scenarios every
+/// shipped request leaves one `wan_hop` line carrying its transfer
+/// latency, energy, and origin-priced carbon; the lines sum to exactly
+/// the report's WAN totals; and folding the trace back through
+/// [`replay::replay_report`] reconstructs the per-site rows and router
+/// header with zero [`replay::verify`] mismatches.
+#[test]
+fn wan_hops_balance_the_site_ledger_and_replay_to_the_live_report() {
+    for name in ["multi-site", "follow-the-sun"] {
+        let (live, telem, text) = observed(name, 4_000, 7);
+        assert!(live.wan_shipped > 0, "{name}: no cross-site traffic");
+        let mut hops = 0u64;
+        let mut energy_j = 0.0;
+        let mut carbon_g = 0.0;
+        for line in text.lines() {
+            let v = Json::parse(line).unwrap();
+            if v.req_str("kind").unwrap() == "wan_hop" {
+                hops += 1;
+                assert!(v.req_f64("latency_ms").unwrap() > 0.0, "{name}: free hop: {line}");
+                energy_j += v.req_f64("energy_j").unwrap();
+                carbon_g += v.req_f64("carbon_g").unwrap();
+                assert_ne!(
+                    v.req_str("from").unwrap(),
+                    v.req_str("to").unwrap(),
+                    "{name}: self-hop shipped: {line}"
+                );
+            }
+        }
+        assert_eq!(hops, telem.events_of(EventKind::WanHop), "{name}: hop count");
+        assert_eq!(hops, live.wan_shipped, "{name}: one line per shipped request");
+        let want_j = live.energy_wan_kwh_total * 3.6e6;
+        assert!(
+            (energy_j - want_j).abs() <= 1e-6 * want_j.max(1e-12),
+            "{name}: wan energy {energy_j} J != report {want_j} J"
+        );
+        assert!(
+            (carbon_g - live.carbon_wan_g_total).abs()
+                <= 1e-6 * live.carbon_wan_g_total.max(1e-12),
+            "{name}: wan carbon {carbon_g} != report {}",
+            live.carbon_wan_g_total
+        );
+        // Site rows partition the shipped counts (no request leaks).
+        let out: u64 = live.sites.iter().map(|s| s.shipped_out).sum();
+        let inn: u64 = live.sites.iter().map(|s| s.shipped_in).sum();
+        assert_eq!(out, hops, "{name}: shipped_out rows");
+        assert_eq!(inn, hops, "{name}: shipped_in rows");
+        // And the trace replays into the same site ledger.
+        let (replayed, _) = replay::replay_report(text.as_bytes()).unwrap();
+        let mismatches = replay::verify(&replayed, &live);
+        assert!(
+            mismatches.is_empty(),
+            "{name}: WAN replay drift:\n  {}",
+            mismatches.join("\n  ")
+        );
+        assert_eq!(replayed.wan_shipped, live.wan_shipped, "{name}: replayed shipped");
+        assert_eq!(replayed.router, live.router, "{name}: replayed router");
+    }
+}
+
 /// Monitors ride the same never-perturb contract as tracing: a monitored
 /// NullSink run produces a bit-identical report (monitor summaries live in
 /// their own field) across the whole scenario library, the telemetry

@@ -4,13 +4,14 @@
 
 use carbonedge::carbon::{DeferralPolicy, IntensityTrace};
 use carbonedge::experiments as exp;
-use carbonedge::microgrid::{BatterySpec, ChargePolicy, MicrogridSpec, PvProfile};
+use carbonedge::microgrid::{BatterySpec, ChargePolicy, DischargePolicy, MicrogridSpec, PvProfile};
 use carbonedge::node::NodeSpec;
 use carbonedge::scheduler::{
     CarbonAwareScheduler, DeferAwareGreenScheduler, LeastLoadedScheduler, Mode, Weights,
 };
 use carbonedge::sim::{
-    scenarios, ArrivalProcess, BatchSpec, ChurnEvent, DeferralSpec, Scenario, SimConfig, Simulation,
+    scenarios, AdmissionSpec, ArrivalProcess, BatchSpec, ChurnEvent, DeferralSpec, Scenario,
+    SimConfig, Simulation,
 };
 
 fn green_run(sc: &Scenario) -> carbonedge::sim::SimReport {
@@ -41,13 +42,17 @@ fn conservation_per_node_ledger_sums_to_fleet_totals() {
         assert_eq!(r.completed + r.rejected, r.requests, "{name}: requests leaked");
         let (tasks, energy_kwh, carbon_g) = r.node_sums();
         assert_eq!(tasks, r.completed, "{name}: task conservation");
+        // Node ledgers cover idle + dynamic; geographic scenarios add WAN
+        // transfer on top, carried by the site rows, not any node.
         assert!(
-            (energy_kwh - r.energy_kwh_total).abs() <= 1e-9 * r.energy_kwh_total.max(1e-30),
+            (energy_kwh + r.energy_wan_kwh_total - r.energy_kwh_total).abs()
+                <= 1e-9 * r.energy_kwh_total.max(1e-30),
             "{name}: energy ledger {energy_kwh} != total {}",
             r.energy_kwh_total
         );
         assert!(
-            (carbon_g - r.carbon_g_total).abs() <= 1e-9 * r.carbon_g_total.max(1e-30),
+            (carbon_g + r.carbon_wan_g_total - r.carbon_g_total).abs()
+                <= 1e-9 * r.carbon_g_total.max(1e-30),
             "{name}: carbon ledger {carbon_g} != total {}",
             r.carbon_g_total
         );
@@ -73,12 +78,16 @@ fn conservation_per_node_ledger_sums_to_fleet_totals() {
             "{name}: idle-carbon ledger"
         );
         assert!(
-            (r.energy_dynamic_kwh_total + r.energy_idle_kwh_total - r.energy_kwh_total).abs()
+            (r.energy_dynamic_kwh_total + r.energy_idle_kwh_total + r.energy_wan_kwh_total
+                - r.energy_kwh_total)
+                .abs()
                 <= 1e-12 * r.energy_kwh_total.max(1e-30),
             "{name}: energy split does not sum to total"
         );
         assert!(
-            (r.carbon_dynamic_g_total + r.carbon_idle_g_total - r.carbon_g_total).abs()
+            (r.carbon_dynamic_g_total + r.carbon_idle_g_total + r.carbon_wan_g_total
+                - r.carbon_g_total)
+                .abs()
                 <= 1e-12 * r.carbon_g_total.max(1e-30),
             "{name}: carbon split does not sum to total"
         );
@@ -168,7 +177,7 @@ fn conservation_per_node_ledger_sums_to_fleet_totals() {
             "{name}: grid ledger"
         );
         assert!(
-            (pv + batt + grid - r.energy_kwh_total).abs()
+            (pv + batt + grid + r.energy_wan_kwh_total - r.energy_kwh_total).abs()
                 <= 1e-6 * r.energy_kwh_total.max(1e-30),
             "{name}: supply does not sum to total energy"
         );
@@ -273,6 +282,7 @@ fn churn_migrates_queued_work_to_survivors() {
         requests: 400,
         churn: vec![ChurnEvent { at_s: 5.0, node: 0, up: false }],
         microgrids: Vec::new(),
+        sites: None,
         config: SimConfig { seed: 3, jitter_sigma: 0.0, ..SimConfig::default() },
     };
     let mut sched = LeastLoadedScheduler;
@@ -634,6 +644,7 @@ fn churn_migration_rescores_against_fresh_intensities() {
         requests: 300,
         churn: vec![ChurnEvent { at_s: 120.0, node: 0, up: false }],
         microgrids: Vec::new(),
+        sites: None,
         config: SimConfig {
             seed: 1,
             jitter_sigma: 0.0,
@@ -802,6 +813,7 @@ fn project_matches_instantaneous_pricing_and_degenerates_to_the_trace() {
                 pv: PvProfile::none(),
                 battery: BatterySpec::none(),
                 charge: ChargePolicy::Off,
+                discharge: DischargePolicy::Greedy,
             });
             for (t, eff, soc) in bare.project(*t0, *horizon, *draw, trace, *resolution, 60.0) {
                 if eff != trace.at(t) || soc != 0.0 {
@@ -817,11 +829,21 @@ fn project_matches_instantaneous_pricing_and_degenerates_to_the_trace() {
 fn frozen_forecasts_change_nothing_without_microgrid_deferral_overlap() {
     // Shim-equivalence extended across the scenario library: the
     // charge-frozen twin replays bit-for-bit unless a scenario has BOTH
-    // microgrids and deferral (only `arbitrage` today) — the trajectory
-    // rewrite is surgical.
+    // battery-backed microgrids and deferral (only `arbitrage` today) —
+    // the trajectory rewrite is surgical. PV-only microgrids under
+    // deferral (`follow-the-sun`) sit in between: frozen forecasts
+    // average the standing draw where trajectory samples price the
+    // marginal watt, so the twins may or may not coincide depending on
+    // load collisions — neither direction is an invariant, skip them.
     for name in scenarios::SCENARIO_NAMES {
         let sc = scenarios::build(name, 0, 1_500, 7).unwrap();
-        let overlap = !sc.microgrids.is_empty() && sc.config.deferral.is_some();
+        let has_battery =
+            sc.microgrids.iter().flatten().any(|m| m.battery.capacity_wh > 0.0);
+        let has_microgrid = sc.microgrids.iter().any(Option::is_some);
+        if has_microgrid && !has_battery && sc.config.deferral.is_some() {
+            continue;
+        }
+        let overlap = has_battery && sc.config.deferral.is_some();
         let frozen = scenarios::charge_frozen_twin(&sc);
         let mut a = green_run(&sc);
         let mut b = green_run(&frozen);
@@ -1145,7 +1167,9 @@ fn deep_forming_queue_flips_defer_under_demand_aware_projections() {
             pv: PvProfile::none(),
             battery: BatterySpec::simple(120.0, 1.0, 1.0),
             charge: ChargePolicy::Off,
+            discharge: DischargePolicy::Greedy,
         })],
+        sites: None,
         config: SimConfig {
             seed: 5,
             jitter_sigma: 0.0,
@@ -1178,4 +1202,97 @@ fn deep_forming_queue_flips_defer_under_demand_aware_projections() {
     assert_eq!(aware.deferred, 3, "deep queue must flip the verdict to defer");
     assert_eq!(aware.deadline_missed, 0);
     assert_eq!(legacy.deadline_missed, 0);
+}
+
+#[test]
+fn admission_sheds_lowest_priority_first_under_sustained_overload() {
+    // ISSUE 9 satellite: class-aware admission control. The three-tenant
+    // mix at 5x capacity with a 2 s shed budget: priority p tolerates
+    // 2 x (1 + p) seconds of estimated queue delay, so best-effort
+    // `generate` (p0) sheds hardest, `embed` (p1) next, and interactive
+    // `vision-small` (p2) least.
+    let mut sc = scenarios::build("multi-tenant", 0, 3_000, 11).unwrap();
+    sc.arrivals = ArrivalProcess::Poisson { rate_hz: 5.0 * sc.arrivals.mean_rate_hz() };
+    sc.config.admission = Some(AdmissionSpec { shed_queue_s: 2.0 });
+    sc.validate().unwrap();
+    let r = green_run(&sc);
+    assert!(r.rejected > 0, "sustained overload must shed");
+    assert_eq!(r.classes.len(), 3);
+    // Per-class rejected rows partition the fleet's rejected counter.
+    let shed: u64 = r.classes.iter().map(|c| c.rejected).sum();
+    assert_eq!(shed, r.rejected, "class rejected rows must partition the total");
+    // Reject *rates* order strictly by priority (arrival weights differ,
+    // so raw counts would conflate mix share with shedding).
+    let rate = |name: &str| {
+        let c = r.classes.iter().find(|c| c.name == name).unwrap();
+        c.rejected as f64 / (c.completed + c.rejected).max(1) as f64
+    };
+    let (generate, embed, vision) = (rate("generate"), rate("embed"), rate("vision-small"));
+    assert!(
+        generate > embed && embed > vision,
+        "shed rates must order by priority: generate {generate:.3} > embed {embed:.3} > \
+         vision-small {vision:.3}"
+    );
+    // Deterministic: the shed pattern replays bit for bit.
+    assert_eq!(green_run(&sc), r);
+}
+
+#[test]
+fn site_rows_partition_fleet_totals_on_geo_scenarios() {
+    // ISSUE 9 satellite: per-site energy (member idle + dynamic + WAN
+    // transfer) must sum to the fleet totals — sites are a partition, not
+    // a sample.
+    for name in ["multi-site", "follow-the-sun"] {
+        let sc = scenarios::build(name, 0, 2_000, 17).unwrap();
+        let r = green_run(&sc);
+        assert_eq!(r.sites.len(), 3, "{name}: three regional sites");
+        assert!(!r.router.is_empty(), "{name}: router must be named");
+        let (completed, shipped_out, energy, carbon, wan_kwh, wan_g) = r.site_sums();
+        assert_eq!(completed, r.completed, "{name}: site completion conservation");
+        assert_eq!(shipped_out, r.wan_shipped, "{name}: shipped-out conservation");
+        assert!(
+            (energy - r.energy_kwh_total).abs() <= 1e-6 * r.energy_kwh_total.max(1e-30),
+            "{name}: site energy {energy} != fleet {}",
+            r.energy_kwh_total
+        );
+        assert!(
+            (carbon - r.carbon_g_total).abs() <= 1e-6 * r.carbon_g_total.max(1e-30),
+            "{name}: site carbon {carbon} != fleet {}",
+            r.carbon_g_total
+        );
+        assert!((wan_kwh - r.energy_wan_kwh_total).abs() <= 1e-12, "{name}: wan energy total");
+        assert!((wan_g - r.carbon_wan_g_total).abs() <= 1e-12, "{name}: wan carbon total");
+    }
+    // Flat fleets stay flat: no site rows, no router, no WAN counters.
+    let r = green_run(&scenarios::build("paper-3-node", 0, 200, 7).unwrap());
+    assert!(r.sites.is_empty());
+    assert!(r.router.is_empty());
+    assert_eq!(r.wan_shipped, 0);
+    assert_eq!(r.energy_wan_kwh_total, 0.0);
+}
+
+#[test]
+fn follow_the_sun_beats_every_single_site_green_baseline() {
+    // The ISSUE 9 acceptance gate: on `follow-the-sun` the deadline
+    // router's gCO2/req must come in under 0.9x the best single-site
+    // green twin with zero missed deadlines, deterministically.
+    let sc = scenarios::build("follow-the-sun", 0, 3_000, 7).unwrap();
+    let multi = green_run(&sc);
+    assert_eq!(multi.router, "deadline");
+    assert!(multi.wan_shipped > 0, "follow-the-sun must ship work across sites");
+    assert_eq!(multi.deadline_missed, 0, "cross-site shifting may not cost deadlines");
+    assert_eq!(green_run(&sc), multi, "the geo run must replay bit for bit");
+    // The best single-region twin: the same demand forced through one
+    // site's nodes, PV and grid — green scheduling, same deferral knobs.
+    let n_sites = sc.sites.as_ref().unwrap().sites.len();
+    let best = (0..n_sites)
+        .map(|s| green_run(&scenarios::single_site_twin(&sc, s)).carbon_per_req_g)
+        .fold(f64::INFINITY, f64::min);
+    assert!(best.is_finite() && best > 0.0);
+    assert!(
+        multi.carbon_per_req_g < 0.9 * best,
+        "follow-the-sun {} g/req must beat 0.9x best single-site {} g/req",
+        multi.carbon_per_req_g,
+        best
+    );
 }
