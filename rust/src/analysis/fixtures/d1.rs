@@ -1,0 +1,13 @@
+//! Known-bad fixture: D1 — HashMap iteration in a deterministic module.
+//! Iteration order is randomized per process, so any report fold fed
+//! from this loop breaks determinism-by-equality.
+use std::collections::HashMap;
+
+/// Collect node names — in whatever order the hasher feels like today.
+pub fn node_names(index: &HashMap<String, usize>) -> Vec<String> {
+    let mut names = Vec::new();
+    for name in index.keys() {
+        names.push(name.clone());
+    }
+    names
+}

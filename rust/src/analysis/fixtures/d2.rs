@@ -1,0 +1,8 @@
+//! Known-bad fixture: D2 — wall-clock read inside simulator code.
+//! Virtual time comes from the event queue, never the host clock.
+use std::time::Instant;
+
+/// Timestamp an event with host time (wrong: breaks replay).
+pub fn stamp() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,8 @@
+//! Known-bad fixture: D3 — f64 fold over an unordered container.
+//! Addition order varies per process; the total drifts in the last ulp.
+use std::collections::HashMap;
+
+/// Total carbon across nodes, in hasher order.
+pub fn total_g(per_node: &HashMap<String, f64>) -> f64 {
+    per_node.values().sum()
+}

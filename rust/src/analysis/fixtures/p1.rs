@@ -1,0 +1,8 @@
+//! Known-bad fixture: P1 — unwrap on a hot decision path.
+//! A panic here poisons an entire fleet sweep.
+
+/// Pick the first candidate, panicking on an empty slate.
+pub fn first_choice(candidates: &[usize]) -> usize {
+    let head = candidates.first();
+    *head.unwrap()
+}

@@ -1,0 +1,9 @@
+//! Known-bad fixture: P2 — release assert outside validate().
+//! The invariant was already guaranteed by a validate() one-shot.
+
+/// Price energy, re-checking an invariant on every call.
+pub fn price(energy_kwh: f64, intensity: f64) -> f64 {
+    let rate = intensity;
+    assert!(energy_kwh >= 0.0);
+    energy_kwh * rate
+}

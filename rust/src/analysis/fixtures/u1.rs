@@ -1,0 +1,10 @@
+//! Known-bad fixture: U1 — a milliseconds value assigned from seconds.
+//! The WAN ledger mixes _s/_ms/_wh/_kwh; conversions must be explicit.
+
+/// Copy a WAN latency budget across layers — dropping the unit on the
+/// floor.
+pub fn carry_over(window_s: f64) -> f64 {
+    let mut window_ms = 0.0;
+    window_ms = window_s;
+    window_ms
+}

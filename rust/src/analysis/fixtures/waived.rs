@@ -1,0 +1,8 @@
+//! Waived fixture: the same P1 hazard as `p1.rs`, suppressed by an
+//! inline waiver documenting the invariant that makes it safe.
+
+/// Pick the first candidate; the caller guarantees a non-empty slate.
+pub fn first_choice(candidates: &[usize]) -> usize {
+    // lint: allow(P1 caller guarantees a non-empty candidate slate)
+    *candidates.first().unwrap()
+}

@@ -1,0 +1,433 @@
+//! Source sanitizer + region tracker for the lint pass.
+//!
+//! The analyzer does not parse Rust; it runs line-oriented rules over a
+//! *sanitized* view of each file in which comments, string literals and
+//! char literals are blanked out (replaced by spaces, preserving line
+//! structure) so that rule matching never fires inside prose or data.
+//! Alongside the blanked text the lexer records the two pieces of
+//! context the rules need:
+//!
+//! * **waivers** — `// lint: allow(RULE reason)` comments, collected per
+//!   line while comments are being stripped;
+//! * **regions** — which lines sit inside `#[cfg(test)]` / `#[test]`
+//!   items (findings are never reported from test code) and the stack of
+//!   enclosing `fn` names (the P2 rule exempts `validate*` one-shots).
+//!
+//! Everything here is hand-rolled on `char` scanning in the same
+//! no-external-deps style as [`crate::util::json`].
+
+/// A sanitized source file: blanked lines plus the side tables the
+/// rules consume. Line numbers are 1-based everywhere in the public API;
+/// the vectors here are 0-based (`lines[0]` is line 1).
+pub struct SourceModel {
+    /// Source lines with comments/strings/chars blanked to spaces.
+    pub lines: Vec<String>,
+    /// Rule ids waived per line via `// lint: allow(RULE reason)`.
+    pub waivers: Vec<Vec<String>>,
+    /// True for lines inside `#[cfg(test)]` / `#[test]` items.
+    pub in_test: Vec<bool>,
+    /// Names of the enclosing functions, outermost first.
+    pub fns: Vec<Vec<String>>,
+}
+
+impl SourceModel {
+    pub fn new(src: &str) -> SourceModel {
+        let (lines, waivers) = sanitize(src);
+        let (in_test, fns) = regions(&lines);
+        SourceModel {
+            lines,
+            waivers,
+            in_test,
+            fns,
+        }
+    }
+
+    /// Is `rule` waived on `line` (1-based)? A waiver comment applies to
+    /// its own line and to the immediately following line, so both
+    /// trailing (`stmt; // lint: allow(..)`) and preceding-line comments
+    /// work.
+    pub fn waived(&self, line: usize, rule: &str) -> bool {
+        let hit = |ln: usize| {
+            ln >= 1 && ln <= self.waivers.len() && self.waivers[ln - 1].iter().any(|r| r == rule)
+        };
+        hit(line) || hit(line.wrapping_sub(1))
+    }
+}
+
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+    CharLit,
+}
+
+/// Blank comments, string literals and char literals out of `src`,
+/// returning the sanitized lines and the per-line waiver rule ids parsed
+/// from line comments. Handles nested block comments, escape sequences,
+/// raw strings (`r"…"`, `r#"…"#`), byte strings and the char-literal vs
+/// lifetime ambiguity (`'a'` is blanked, `'a` in `Vec<&'a str>` is not).
+fn sanitize(src: &str) -> (Vec<String>, Vec<Vec<String>>) {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut lines: Vec<String> = Vec::new();
+    let mut waivers: Vec<Vec<String>> = Vec::new();
+    let mut cur = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut depth = 0usize; // block-comment nesting
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            let mut w = Vec::new();
+            if matches!(mode, Mode::LineComment) {
+                w = parse_waivers(&comment);
+                comment.clear();
+                mode = Mode::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            waivers.push(w);
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && b.get(i + 1) == Some(&'/') {
+                    mode = Mode::LineComment;
+                    comment.clear();
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                    mode = Mode::BlockComment;
+                    depth = 1;
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    cur.push(' ');
+                    i += 1;
+                } else if c == 'r' && matches!(b.get(i + 1), Some(&'#') | Some(&'"')) {
+                    let mut k = i + 1;
+                    let mut h = 0usize;
+                    while b.get(k) == Some(&'#') {
+                        h += 1;
+                        k += 1;
+                    }
+                    if b.get(k) == Some(&'"') {
+                        mode = Mode::RawStr;
+                        raw_hashes = h;
+                        for _ in i..=k {
+                            cur.push(' ');
+                        }
+                        i = k + 1;
+                    } else {
+                        cur.push(c);
+                        i += 1;
+                    }
+                } else if c == 'b' && b.get(i + 1) == Some(&'"') {
+                    // byte string: blank the prefix, let '"' open Str mode
+                    cur.push(' ');
+                    i += 1;
+                } else if c == '\'' {
+                    if b.get(i + 1) == Some(&'\\') {
+                        mode = Mode::CharLit;
+                        cur.push(' ');
+                        i += 1;
+                    } else if b.get(i + 2) == Some(&'\'') {
+                        cur.push_str("   ");
+                        i += 3;
+                    } else {
+                        // lifetime tick — leave it
+                        cur.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                cur.push(' ');
+                i += 1;
+            }
+            Mode::BlockComment => {
+                if c == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    cur.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        mode = Mode::Code;
+                    }
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    if b.get(i + 1) == Some(&'\n') {
+                        // line-continuation escape: keep the newline
+                        cur.push(' ');
+                        i += 1;
+                    } else {
+                        cur.push_str("  ");
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    mode = Mode::Code;
+                    cur.push(' ');
+                    i += 1;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr => {
+                let closes = c == '"'
+                    && (i + 1..i + 1 + raw_hashes).all(|k| b.get(k) == Some(&'#'));
+                if closes {
+                    for _ in 0..=raw_hashes {
+                        cur.push(' ');
+                    }
+                    i += 1 + raw_hashes;
+                    mode = Mode::Code;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::CharLit => {
+                if c == '\\' && i + 1 < n {
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    mode = Mode::Code;
+                    cur.push(' ');
+                    i += 1;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.is_empty() || matches!(mode, Mode::LineComment) {
+        let w = if matches!(mode, Mode::LineComment) {
+            parse_waivers(&comment)
+        } else {
+            Vec::new()
+        };
+        lines.push(cur);
+        waivers.push(w);
+    }
+    (lines, waivers)
+}
+
+/// Parse `lint: allow(RULE reason)` out of a comment body. The rule id is
+/// an uppercase letter followed by digits (`D1`, `P2`, …); everything
+/// else inside the parens is the human reason and is not interpreted.
+fn parse_waivers(comment: &str) -> Vec<String> {
+    let Some(pos) = comment.find("lint:") else {
+        return Vec::new();
+    };
+    let rest = comment[pos + 5..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Vec::new();
+    };
+    let mut chars = rest.chars();
+    let mut rule = String::new();
+    match chars.next() {
+        Some(c) if c.is_ascii_uppercase() => rule.push(c),
+        _ => return Vec::new(),
+    }
+    for c in chars {
+        if c.is_ascii_digit() {
+            rule.push(c);
+        } else {
+            break;
+        }
+    }
+    if rule.len() < 2 {
+        return Vec::new();
+    }
+    vec![rule]
+}
+
+/// Walk brace depth over the sanitized lines, tracking (a) regions opened
+/// by a `#[cfg(test)]` / `#[test]` attribute and (b) the stack of
+/// enclosing `fn` names. Attribute and `fn` sightings are *pending* until
+/// their `{` opens; a `;` at depth 0 cancels a pending attribute (it
+/// annotated a braceless item).
+fn regions(lines: &[String]) -> (Vec<bool>, Vec<Vec<String>>) {
+    let mut in_test = vec![false; lines.len()];
+    let mut fns: Vec<Vec<String>> = vec![Vec::new(); lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending_skip = false;
+    let mut pending_fn: Option<String> = None;
+    let mut skip_stack: Vec<i64> = Vec::new();
+    let mut fn_stack: Vec<(String, i64)> = Vec::new();
+    for (ix, text) in lines.iter().enumerate() {
+        if text.contains("#[cfg(test)]") || text.contains("#[test]") {
+            pending_skip = true;
+        }
+        if let Some(name) = fn_name(text) {
+            pending_fn = Some(name);
+        }
+        in_test[ix] = !skip_stack.is_empty();
+        fns[ix] = fn_stack.iter().map(|(n, _)| n.clone()).collect();
+        for ch in text.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending_skip {
+                        skip_stack.push(depth);
+                        pending_skip = false;
+                        in_test[ix] = true;
+                    }
+                    if let Some(n) = pending_fn.take() {
+                        fn_stack.push((n, depth));
+                    }
+                }
+                '}' => {
+                    if skip_stack.last() == Some(&depth) {
+                        skip_stack.pop();
+                    }
+                    if fn_stack.last().map(|(_, d)| *d) == Some(depth) {
+                        fn_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' if depth == 0 => pending_skip = false,
+                _ => {}
+            }
+        }
+    }
+    (in_test, fns)
+}
+
+/// The name declared by a `fn` token on this line, if any.
+fn fn_name(line: &str) -> Option<String> {
+    let b = line.as_bytes();
+    for (start, end) in idents(line) {
+        if &line[start..end] == "fn" {
+            let mut k = end;
+            while k < b.len() && b[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            let name_start = k;
+            while k < b.len() && is_ident_byte(b[k]) {
+                k += 1;
+            }
+            if k > name_start && !b[name_start].is_ascii_digit() {
+                return Some(line[name_start..k].to_string());
+            }
+        }
+    }
+    None
+}
+
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte spans of the identifier tokens in a sanitized line (maximal runs
+/// of ident bytes not starting with a digit).
+pub fn idents(line: &str) -> Vec<(usize, usize)> {
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if is_ident_byte(b[i]) {
+            let start = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            if !b[start].is_ascii_digit() {
+                out.push((start, i));
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Does `line` contain `tok` as a whole word (ident-boundary on both
+/// sides)? `tok` may contain `::`.
+pub fn contains_token(line: &str, tok: &str) -> bool {
+    find_token(line, tok, 0).is_some()
+}
+
+/// First occurrence of `tok` at or after `from`, with ident-boundary
+/// checks on both ends.
+pub fn find_token(line: &str, tok: &str, from: usize) -> Option<usize> {
+    let b = line.as_bytes();
+    let mut at = from;
+    while let Some(rel) = line.get(at..).and_then(|s| s.find(tok)) {
+        let pos = at + rel;
+        let pre_ok = pos == 0 || !is_ident_byte(b[pos - 1]);
+        let end = pos + tok.len();
+        let post_ok = end >= b.len() || !is_ident_byte(b[end]);
+        if pre_ok && post_ok {
+            return Some(pos);
+        }
+        at = pos + 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let s = \"HashMap in a string\"; // HashMap in a comment\nlet c = 'x';\n";
+        let (lines, _) = sanitize(src);
+        assert!(!lines[0].contains("HashMap"), "{:?}", lines[0]);
+        assert!(lines[0].contains("let s ="));
+        assert!(!lines[1].contains('x'));
+    }
+
+    #[test]
+    fn raw_strings_and_nesting() {
+        let src = "let r = r#\"assert!(x)\"#; /* outer /* assert!(y) */ */ let z = 1;\n";
+        let (lines, _) = sanitize(src);
+        assert!(!lines[0].contains("assert"), "{:?}", lines[0]);
+        assert!(lines[0].contains("let z = 1;"));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_blanking() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\n";
+        let (lines, _) = sanitize(src);
+        assert!(lines[0].contains("&'a str"));
+    }
+
+    #[test]
+    fn waiver_parsing() {
+        let src = "x.unwrap(); // lint: allow(P1 guarded by is_some above)\ny.unwrap();\n";
+        let model = SourceModel::new(src);
+        assert!(model.waived(1, "P1"));
+        assert!(model.waived(2, "P1"), "waiver covers the following line");
+        assert!(!model.waived(2, "D1"));
+        assert!(!model.waived(3, "P1"));
+    }
+
+    #[test]
+    fn test_regions_and_fn_stack() {
+        let src = "fn validate_cfg(x: f64) {\n    assert!(x > 0.0);\n}\n#[cfg(test)]\nmod tests {\n    fn helper() { assert!(true); }\n}\n";
+        let model = SourceModel::new(src);
+        assert!(!model.in_test[1]);
+        assert_eq!(model.fns[1], vec!["validate_cfg".to_string()]);
+        assert!(model.in_test[5], "lines under #[cfg(test)] are skipped");
+    }
+}

@@ -1,0 +1,280 @@
+//! # `carbonedge lint` — determinism & ledger-safety static analysis
+//!
+//! The repo's headline guarantees are *equalities*: a traced run is
+//! bit-identical to an untraced one, a replayed firehose reconstructs the
+//! live report field-by-field, and the energy/carbon ledgers conserve to
+//! rounding. Those guarantees are enforced at runtime by the test
+//! suites — this module enforces their *preconditions* statically, so a
+//! careless edit fails CI before it can produce a plausible-but-wrong
+//! simulation. It is a self-contained, no-external-deps analyzer in the
+//! same hand-rolled style as [`crate::util::json`]: a sanitizing lexer
+//! ([`lexer`]) blanks comments/strings and tracks test regions, and a
+//! small rule engine ([`rules`]) runs line-oriented checks over the
+//! result.
+//!
+//! ## Rule catalogue
+//!
+//! | id | family | fires on |
+//! |----|--------|----------|
+//! | D1 | determinism | iteration over `HashMap`/`HashSet` in simulator modules — iteration order is randomized per process, so any fold feeding a report or replay breaks determinism-by-equality; use `BTreeMap` or collect-and-sort |
+//! | D2 | determinism | `Instant::now` / `SystemTime::now` / `thread_rng` / `rand::random` outside `util/bench.rs` — virtual time comes from the event queue, randomness from seeded [`crate::util::rng`] streams |
+//! | D3 | determinism | an f64 `.sum()`/`.fold()`/`.product()` chained onto an unordered-container iteration — float addition does not commute, so even value-identical runs diverge in the last ulp |
+//! | P1 | panic-safety | `.unwrap()` / `.expect(` in simulator/metrics non-test code — a panic mid-run poisons a multi-minute fleet sweep; propagate or waive with the invariant that makes it unreachable |
+//! | P2 | panic-safety | `assert!`-family (not `debug_assert!`) outside `validate*` functions — release-mode asserts on hot paths re-check invariants `validate()` already guaranteed once |
+//! | U1 | unit-hygiene | a direct flow (`=`, `+=`, comparison, `.max(`/`.min(`) between identifiers whose unit suffixes disagree within one family (`_s`/`_ms`/`_ns`, `_w`/`_kw`, `_j`/`_wh`/`_kwh`, `_g`/`_kg`) — the WAN/battery ledgers mix all of these |
+//!
+//! ## Scoping
+//!
+//! D1/D3 and P2 apply to the deterministic simulator modules
+//! ([`DET_MODULES`]); P1 additionally covers `metrics` (the export
+//! writers sit on the report path); D2 applies everywhere except
+//! `util/bench.rs` (the bench harness is *supposed* to read the wall
+//! clock); U1 applies everywhere. Test code (`#[cfg(test)]` / `#[test]`)
+//! is always exempt: tests may unwrap and assert freely.
+//!
+//! ## Waivers
+//!
+//! Legitimate exceptions carry an inline waiver on the same or the
+//! preceding line:
+//!
+//! ```text
+//! let t0 = Instant::now(); // lint: allow(D2 real ns-per-decision telemetry, never virtual state)
+//! ```
+//!
+//! Waivers are counted and reported; `carbonedge lint --deny` exits
+//! nonzero only on *unwaived* findings. The reason is mandatory by
+//! convention — a waiver documents the invariant that makes the hazard
+//! safe, and reviewers treat a bare waiver as a finding.
+
+pub mod lexer;
+pub mod rules;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Modules whose code runs under the virtual clock and feeds the
+/// deterministic reports (D1/D3/P2 scope, plus P1).
+pub const DET_MODULES: [&str; 7] =
+    ["sim", "scheduler", "site", "obs", "microgrid", "carbon", "workload"];
+
+/// Additional modules in P1 (unwrap/expect) scope: the metrics export
+/// writers serialize the report ledger, so a panic there loses the run.
+pub const PANIC_MODULES: [&str; 1] = ["metrics"];
+
+/// Rule identifiers. See the module docs for the catalogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    D1,
+    D2,
+    D3,
+    P1,
+    P2,
+    U1,
+}
+
+impl Rule {
+    pub fn id(&self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::P1 => "P1",
+            Rule::P2 => "P2",
+            Rule::U1 => "U1",
+        }
+    }
+
+    /// One-line fix hint attached to every finding.
+    pub fn hint(&self) -> &'static str {
+        match self {
+            Rule::D1 => "HashMap/HashSet iteration order is nondeterministic; use BTreeMap",
+            Rule::D2 => "wall-clock/randomness breaks replay; use virtual time or util::rng",
+            Rule::D3 => "f64 fold over an unordered container; sort keys before accumulating",
+            Rule::P1 => "unwrap/expect can poison a fleet sweep; propagate or waive",
+            Rule::P2 => "release assert outside validate(); demote to debug_assert!",
+            Rule::U1 => "unit suffixes disagree (_s/_ms, _wh/_kwh, ...); convert explicitly",
+        }
+    }
+}
+
+/// One lint finding: where, what, and an excerpt of the offending line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub excerpt: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} `{}`\n    hint: {}",
+            self.path,
+            self.line,
+            self.rule.id(),
+            self.excerpt,
+            self.rule.hint()
+        )
+    }
+}
+
+/// Lint result for one file (or one tree): unwaived findings plus the
+/// count of findings suppressed by inline waivers.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub waived: usize,
+    pub files: usize,
+}
+
+/// The module a path belongs to for scoping: the first directory under
+/// `src/`, or the file stem for `src/`-level files (`lib.rs` → `lib`).
+pub fn module_of(path: &str) -> String {
+    let parts: Vec<&str> = path.split(['/', '\\']).collect();
+    if let Some(i) = parts.iter().position(|&p| p == "src") {
+        let rest = &parts[i + 1..];
+        if rest.len() >= 2 {
+            return rest[0].to_string();
+        }
+        if let Some(f) = rest.first() {
+            return f.trim_end_matches(".rs").to_string();
+        }
+    }
+    if parts.len() >= 2 {
+        return parts[parts.len() - 2].to_string();
+    }
+    String::new()
+}
+
+/// Lint one file's source text. `path` determines module scoping only —
+/// the text itself is taken from `src`, so callers may lint fixtures or
+/// unsaved buffers under any synthetic path.
+pub fn lint_source(path: &str, src: &str) -> LintReport {
+    let model = lexer::SourceModel::new(src);
+    let mut raw = Vec::new();
+    rules::run(path, &model, &mut raw);
+    let mut report = LintReport {
+        files: 1,
+        ..LintReport::default()
+    };
+    for f in raw {
+        if model.waived(f.line, f.rule.id()) {
+            report.waived += 1;
+        } else {
+            report.findings.push(f);
+        }
+    }
+    report
+}
+
+/// Lint files and directory trees. Directories are walked recursively in
+/// sorted order (deterministic output); only `.rs` files are linted, and
+/// any path component named `fixtures` is skipped — the fixture corpus
+/// under `analysis/fixtures/` is *intentionally* dirty.
+pub fn lint_paths<S: AsRef<str>>(paths: &[S]) -> Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        collect(Path::new(p.as_ref()), &mut files)?;
+    }
+    files.sort();
+    let mut report = LintReport::default();
+    for path in files {
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let one = lint_source(&path.to_string_lossy(), &src);
+        report.findings.extend(one.findings);
+        report.waived += one.waived;
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+fn collect(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if path.file_name().is_some_and(|n| n == "fixtures") {
+        return Ok(());
+    }
+    let meta = std::fs::metadata(path).with_context(|| format!("stat {}", path.display()))?;
+    if meta.is_dir() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(path)
+            .with_context(|| format!("reading dir {}", path.display()))?
+            .collect::<std::io::Result<Vec<_>>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for e in entries {
+            collect(&e, out)?;
+        }
+    } else if path.extension().is_some_and(|e| e == "rs") {
+        out.push(path.to_path_buf());
+    }
+    Ok(())
+}
+
+/// The known-bad fixture corpus: one snippet per rule, each tripping
+/// exactly its own rule once, plus a waived variant. Embedded so the
+/// test suite (and `lint --self-check` style uses) need no filesystem
+/// layout assumptions. The paths are synthetic — they place each fixture
+/// in the module scope its rule targets.
+pub mod fixtures {
+    pub const D1: &str = include_str!("fixtures/d1.rs");
+    pub const D1_PATH: &str = "rust/src/sim/fixtures/d1.rs";
+    pub const D2: &str = include_str!("fixtures/d2.rs");
+    pub const D2_PATH: &str = "rust/src/sim/fixtures/d2.rs";
+    pub const D3: &str = include_str!("fixtures/d3.rs");
+    pub const D3_PATH: &str = "rust/src/sim/fixtures/d3.rs";
+    pub const P1: &str = include_str!("fixtures/p1.rs");
+    pub const P1_PATH: &str = "rust/src/scheduler/fixtures/p1.rs";
+    pub const P2: &str = include_str!("fixtures/p2.rs");
+    pub const P2_PATH: &str = "rust/src/carbon/fixtures/p2.rs";
+    pub const U1: &str = include_str!("fixtures/u1.rs");
+    pub const U1_PATH: &str = "rust/src/site/fixtures/u1.rs";
+    pub const WAIVED: &str = include_str!("fixtures/waived.rs");
+    pub const WAIVED_PATH: &str = "rust/src/scheduler/fixtures/waived.rs";
+
+    /// `(rule id, expected line, path, source)` for every fixture that
+    /// must fire.
+    pub const ALL_BAD: [(&str, usize, &str, &str); 6] = [
+        ("D1", 9, D1_PATH, D1),
+        ("D2", 7, D2_PATH, D2),
+        ("D3", 7, D3_PATH, D3),
+        ("P1", 7, P1_PATH, P1),
+        ("P2", 7, P2_PATH, P2),
+        ("U1", 8, U1_PATH, U1),
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_scoping() {
+        assert_eq!(module_of("rust/src/sim/engine.rs"), "sim");
+        assert_eq!(module_of("rust/src/util/json.rs"), "util");
+        assert_eq!(module_of("rust/src/lib.rs"), "lib");
+        assert_eq!(module_of("/abs/repo/rust/src/obs/replay.rs"), "obs");
+    }
+
+    #[test]
+    fn waived_findings_count_but_do_not_fail() {
+        let src = "fn f(x: Option<f64>) -> f64 {\n    // lint: allow(P1 caller checked is_some)\n    x.unwrap()\n}\n";
+        let r = lint_source("rust/src/sim/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.waived, 1);
+    }
+
+    #[test]
+    fn every_fixture_trips_exactly_its_own_rule() {
+        for (rule, line, path, src) in fixtures::ALL_BAD {
+            let r = lint_source(path, src);
+            assert_eq!(r.findings.len(), 1, "{rule}: {:?}", r.findings);
+            assert_eq!(r.findings[0].rule.id(), rule);
+            assert_eq!(r.findings[0].line, line, "{rule} fired on the wrong line");
+            assert_eq!(r.waived, 0);
+        }
+    }
+}

@@ -1,0 +1,434 @@
+//! The lint rules: determinism (D1–D3), panic-safety (P1–P2) and
+//! unit-hygiene (U1), evaluated line-by-line over a
+//! [`SourceModel`](crate::analysis::lexer::SourceModel).
+//!
+//! Rules are deliberately *high-precision*: each one matches a narrow
+//! syntactic shape that is almost always a real hazard in this codebase,
+//! and anything legitimate gets an inline
+//! `// lint: allow(RULE reason)` waiver rather than a looser rule. See
+//! [`crate::analysis`] for the rule catalogue and scoping.
+
+use super::lexer::{contains_token, find_token, idents, is_ident_byte, SourceModel};
+use super::{Finding, Rule};
+
+/// Wall-clock / ambient-randomness entry points (D2). Anything that
+/// reads the host environment breaks replay: virtual time comes from the
+/// event queue, randomness from the seeded [`crate::util::rng`] streams.
+const D2_TOKENS: [&str; 6] = [
+    "Instant::now",
+    "SystemTime::now",
+    "thread_rng",
+    "rand::random",
+    "Utc::now",
+    "Local::now",
+];
+
+/// Methods that iterate a `HashMap`/`HashSet` (D1/D3).
+const ITER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+];
+
+/// Fold adapters that turn an iteration into an f64 accumulation (D3).
+const FOLD_METHODS: [&str; 3] = ["sum", "fold", "product"];
+
+/// Run every rule over one sanitized file. `path` is only used for
+/// module scoping (see [`crate::analysis::module_of`]); pushes raw,
+/// unwaived findings into `out`.
+pub fn run(path: &str, model: &SourceModel, out: &mut Vec<Finding>) {
+    let module = super::module_of(path);
+    let det = super::DET_MODULES.contains(&module.as_str());
+    let panic_scope = det || super::PANIC_MODULES.contains(&module.as_str());
+    let bench = path.ends_with("util/bench.rs");
+    let tracked = tracked_unordered(&model.lines);
+    for (ix, text) in model.lines.iter().enumerate() {
+        if model.in_test[ix] {
+            continue;
+        }
+        let line = ix + 1;
+        let mut push = |rule: Rule| {
+            out.push(Finding {
+                path: path.to_string(),
+                line,
+                rule,
+                excerpt: excerpt(text),
+            });
+        };
+        if det {
+            if let Some(hit) = unordered_iteration(text, &tracked) {
+                // D1 and D3 are disjoint: a fold over the unordered
+                // iteration is the sharper finding.
+                push(if hit.folded { Rule::D3 } else { Rule::D1 });
+            }
+        }
+        if !bench {
+            for tok in D2_TOKENS {
+                if contains_token(text, tok) {
+                    push(Rule::D2);
+                    break;
+                }
+            }
+        }
+        if panic_scope && (text.contains(".unwrap()") || text.contains(".expect(")) {
+            push(Rule::P1);
+        }
+        if panic_scope
+            && has_release_assert(text)
+            && !model.fns[ix].iter().any(|f| f.starts_with("validate"))
+        {
+            push(Rule::P2);
+        }
+        for _ in 0..unit_mismatches(text) {
+            push(Rule::U1);
+        }
+    }
+}
+
+fn excerpt(text: &str) -> String {
+    let t = text.trim();
+    let mut s: String = t.chars().take(90).collect();
+    if s.len() < t.len() {
+        s.push('…');
+    }
+    s
+}
+
+/// Names bound or typed as `HashMap`/`HashSet` anywhere in the file:
+/// `name: [&][mut] [std::collections::] HashMap<…>` (bindings, fields,
+/// params) and `let [mut] name = HashMap::…`.
+fn tracked_unordered(lines: &[String]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for text in lines {
+        for ty in ["HashMap", "HashSet"] {
+            let mut from = 0usize;
+            while let Some(pos) = find_token(text, ty, from) {
+                from = pos + 1;
+                let after = text[pos + ty.len()..].trim_start();
+                if after.starts_with('<') {
+                    if let Some(name) = annotated_name(text, pos) {
+                        if !names.contains(&name) {
+                            names.push(name);
+                        }
+                    }
+                } else if after.starts_with("::") {
+                    if let Some(name) = let_bound_name(text) {
+                        if !names.contains(&name) {
+                            names.push(name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Walk backwards from a `HashMap`/`HashSet` token at `pos` through
+/// `mut`, `&`, and `path::` segments to the `:` of a type annotation,
+/// returning the annotated identifier.
+fn annotated_name(text: &str, pos: usize) -> Option<String> {
+    let b = text.as_bytes();
+    let mut i = pos;
+    loop {
+        while i > 0 && b[i - 1].is_ascii_whitespace() {
+            i -= 1;
+        }
+        if i == 0 {
+            return None;
+        }
+        if b[i - 1] == b'&' {
+            i -= 1;
+            continue;
+        }
+        if b[i - 1] == b':' {
+            if i >= 2 && b[i - 2] == b':' {
+                // `::` path separator — skip it and the segment before
+                i -= 2;
+                while i > 0 && is_ident_byte(b[i - 1]) {
+                    i -= 1;
+                }
+                continue;
+            }
+            // the annotation colon: the name sits just before it
+            i -= 1;
+            while i > 0 && b[i - 1].is_ascii_whitespace() {
+                i -= 1;
+            }
+            let end = i;
+            while i > 0 && is_ident_byte(b[i - 1]) {
+                i -= 1;
+            }
+            if end > i && !b[i].is_ascii_digit() {
+                return Some(text[i..end].to_string());
+            }
+            return None;
+        }
+        // a trailing `mut` keyword?
+        if is_ident_byte(b[i - 1]) {
+            let end = i;
+            while i > 0 && is_ident_byte(b[i - 1]) {
+                i -= 1;
+            }
+            if &text[i..end] == "mut" {
+                continue;
+            }
+            return None;
+        }
+        return None;
+    }
+}
+
+/// `let [mut] name … = [std::collections::] Hash{Map,Set}::…` on one line.
+fn let_bound_name(text: &str) -> Option<String> {
+    let let_pos = find_token(text, "let", 0)?;
+    let toks = idents(text);
+    let mut it = toks.iter().skip_while(|&&(s, _)| s <= let_pos);
+    let &(mut s, mut e) = it.next()?;
+    if &text[s..e] == "mut" {
+        let &(s2, e2) = it.next()?;
+        s = s2;
+        e = e2;
+    }
+    let name = &text[s..e];
+    let eq = text[e..].find('=').map(|p| e + p)?;
+    let rhs = text[eq + 1..].trim_start();
+    let rhs = rhs.strip_prefix("std::collections::").unwrap_or(rhs);
+    if rhs.starts_with("HashMap::") || rhs.starts_with("HashSet::") {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+struct IterHit {
+    folded: bool,
+}
+
+/// Does this line iterate one of the tracked unordered containers —
+/// either `name.iter()`-style or `for … in … name …`? `folded` reports
+/// whether the same line chains into `.sum()`/`.fold()`/`.product()`.
+fn unordered_iteration(text: &str, tracked: &[String]) -> Option<IterHit> {
+    let mut hit = false;
+    for name in tracked {
+        let mut from = 0usize;
+        while let Some(pos) = find_token(text, name, from) {
+            from = pos + 1;
+            let after = text[pos + name.len()..].trim_start();
+            let Some(meth) = after.strip_prefix('.') else {
+                continue;
+            };
+            let meth = meth.trim_start();
+            for m in ITER_METHODS {
+                if let Some(rest) = meth.strip_prefix(m) {
+                    let rest = rest.trim_start();
+                    let next = meth.as_bytes().get(m.len()).copied();
+                    let boundary = !next.is_some_and(is_ident_byte);
+                    if boundary && rest.starts_with('(') {
+                        hit = true;
+                    }
+                }
+            }
+        }
+    }
+    if !hit {
+        if let Some(for_pos) = find_token(text, "for", 0) {
+            if let Some(in_pos) = find_token(text, "in", for_pos + 3) {
+                let rest = &text[in_pos + 2..];
+                if tracked.iter().any(|n| contains_token(rest, n)) {
+                    hit = true;
+                }
+            }
+        }
+    }
+    if !hit {
+        return None;
+    }
+    let folded = FOLD_METHODS.iter().any(|m| {
+        let mut from = 0usize;
+        while let Some(pos) = find_token(text, m, from) {
+            from = pos + 1;
+            if pos > 0 && text.as_bytes()[pos - 1] == b'.' {
+                return true;
+            }
+        }
+        false
+    });
+    Some(IterHit { folded })
+}
+
+/// `assert!` / `assert_eq!` / `assert_ne!` as a standalone token (the
+/// ident-boundary check excludes `debug_assert*!`).
+fn has_release_assert(text: &str) -> bool {
+    for tok in ["assert", "assert_eq", "assert_ne"] {
+        let mut from = 0usize;
+        while let Some(pos) = find_token(text, tok, from) {
+            from = pos + 1;
+            let rest = text[pos + tok.len()..].trim_start();
+            if let Some(rest) = rest.strip_prefix('!') {
+                if rest.trim_start().starts_with('(') {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Unit-suffix families for U1. Two identifiers in a *direct* flow
+/// (`a = b`, `a += b`, comparisons, `a.max(b)`) whose suffixes differ
+/// within one family are a unit bug (`_ms` vs `_s`, `_wh` vs `_kwh`, …).
+/// Cross-family flows (`power_w * dt_s`) are physics, not bugs, and
+/// conversions spelled as arithmetic carry literals that break the
+/// "bare identifier on both sides" shape — so they pass.
+fn suffix_family(suffix: &str) -> Option<u8> {
+    match suffix {
+        "s" | "ms" | "ns" => Some(0),  // time
+        "w" | "kw" => Some(1),         // power
+        "j" | "wh" | "kwh" => Some(2), // energy
+        "g" | "kg" => Some(3),         // carbon mass
+        _ => None,
+    }
+}
+
+/// The unit suffix of a dotted path expression: the `_xyz` tail of its
+/// last segment, if it names a known unit.
+fn path_suffix(path: &str) -> Option<(&str, u8)> {
+    let last = path.rsplit('.').next().unwrap_or(path);
+    let (_, suffix) = last.rsplit_once('_')?;
+    suffix_family(suffix).map(|fam| (suffix, fam))
+}
+
+/// Byte spans of dotted path expressions (`self.total_wh`, `flow.pv_j`)
+/// in a sanitized line.
+fn path_tokens(text: &str) -> Vec<(usize, usize)> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let is_path_byte = |c: u8| is_ident_byte(c) || c == b'.';
+    while i < b.len() {
+        if is_path_byte(b[i]) {
+            let start = i;
+            while i < b.len() && is_path_byte(b[i]) {
+                i += 1;
+            }
+            // must start like an identifier, not a number or bare dot
+            if b[start] == b'_' || b[start].is_ascii_alphabetic() {
+                out.push((start, i));
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Count U1 hits on a line: `lhs OP rhs` at end-of-statement with both
+/// sides suffixed in the same family but with different units, plus
+/// `lhs.max(rhs)` / `lhs.min(rhs)` with the same mismatch.
+fn unit_mismatches(text: &str) -> usize {
+    let toks = path_tokens(text);
+    let mut count = 0usize;
+    const FLOW_OPS: [&str; 9] = ["=", "+=", "-=", "==", "!=", "<=", ">=", "<", ">"];
+    for pair in toks.windows(2) {
+        let (a_s, a_e) = pair[0];
+        let (b_s, b_e) = pair[1];
+        let between = text[a_e..b_s].trim();
+        if !FLOW_OPS.contains(&between) {
+            continue;
+        }
+        // end-of-statement anchor: nothing after the rhs but `;`/`,`/`)`
+        let tail = text[b_e..].trim();
+        if !(tail.is_empty() || (tail.len() == 1 && ";,)".contains(tail))) {
+            continue;
+        }
+        if let (Some((ua, fa)), Some((ub, fb))) =
+            (path_suffix(&text[a_s..a_e]), path_suffix(&text[b_s..b_e]))
+        {
+            if fa == fb && ua != ub {
+                count += 1;
+            }
+        }
+    }
+    // lhs.max(rhs) / lhs.min(rhs)
+    for &(a_s, a_e) in &toks {
+        let lhs = &text[a_s..a_e];
+        let Some(base) = lhs.strip_suffix(".max").or_else(|| lhs.strip_suffix(".min")) else {
+            continue;
+        };
+        let Some(arg) = text[a_e..].trim_start().strip_prefix('(') else {
+            continue;
+        };
+        let arg = arg.trim_start();
+        let end = arg
+            .as_bytes()
+            .iter()
+            .position(|&c| !(is_ident_byte(c) || c == b'.'))
+            .unwrap_or(arg.len());
+        if !arg[end..].trim_start().starts_with(')') || end == 0 {
+            continue;
+        }
+        if let (Some((ua, fa)), Some((ub, fb))) = (path_suffix(base), path_suffix(&arg[..end])) {
+            if fa == fb && ua != ub {
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lint_source;
+
+    fn rules_of(path: &str, src: &str) -> Vec<String> {
+        lint_source(path, src).findings.iter().map(|f| f.rule.id().to_string()).collect()
+    }
+
+    #[test]
+    fn d1_requires_iteration_not_lookup() {
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<String, f64>) -> f64 {\n    *m.get(\"x\").unwrap_or(&0.0)\n}\n";
+        assert!(rules_of("rust/src/sim/x.rs", src).is_empty(), "lookups are fine");
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<String, f64>) {\n    for k in m.keys() {\n        drop(k);\n    }\n}\n";
+        assert_eq!(rules_of("rust/src/sim/x.rs", src), ["D1"]);
+        assert!(rules_of("rust/src/util/x.rs", src).is_empty(), "scoped to det modules");
+    }
+
+    #[test]
+    fn d3_captures_folds_and_stays_disjoint_from_d1() {
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<String, f64>) -> f64 {\n    m.values().sum()\n}\n";
+        assert_eq!(rules_of("rust/src/sim/x.rs", src), ["D3"]);
+    }
+
+    #[test]
+    fn d2_everywhere_except_bench() {
+        let src = "fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+        assert_eq!(rules_of("rust/src/util/table.rs", src), ["D2"]);
+        assert!(rules_of("rust/src/util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn p2_exempts_validate_fns_and_debug_asserts() {
+        let src = "pub fn validate_spec(x: f64) {\n    assert!(x > 0.0);\n}\nfn hot(x: f64) {\n    debug_assert!(x > 0.0);\n}\n";
+        assert!(rules_of("rust/src/sim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn u1_mismatched_family_only() {
+        let src = "fn f(a_ms: f64, b_s: f64, c_w: f64) {\n    let mut x_ms = a_ms;\n    x_ms = b_s;\n    x_ms = c_w;\n}\n";
+        assert_eq!(rules_of("rust/src/energy/x.rs", src), ["U1"], "time≠time fires, time≠power not");
+    }
+
+    #[test]
+    fn u1_max_min_flows() {
+        let src = "fn f(a_wh: f64, b_kwh: f64) -> f64 {\n    a_wh.max(b_kwh)\n}\n";
+        assert_eq!(rules_of("rust/src/energy/x.rs", src), ["U1"]);
+    }
+}

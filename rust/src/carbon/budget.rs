@@ -30,6 +30,7 @@ pub struct CarbonBudget {
 
 impl CarbonBudget {
     pub fn new(per_period_g: f64, period_s: f64) -> CarbonBudget {
+        // lint: allow(P2 one-shot constructor guard)
         assert!(per_period_g > 0.0 && period_s > 0.0);
         CarbonBudget { per_period_g, remaining_g: per_period_g, period_s, period_start: 0.0 }
     }
@@ -48,7 +49,7 @@ impl CarbonBudget {
 
     /// Admission control for a task expected to emit `est_g`.
     pub fn admit(&self, est_g: f64) -> Admission {
-        assert!(est_g >= 0.0);
+        debug_assert!(est_g >= 0.0);
         if est_g > self.per_period_g {
             Admission::Reject
         } else if est_g > self.remaining_g {
@@ -61,7 +62,7 @@ impl CarbonBudget {
     /// Charge actual emissions after execution (may overdraw slightly when
     /// the estimate was low; the debt carries into the period).
     pub fn charge(&mut self, actual_g: f64) {
-        assert!(actual_g >= 0.0);
+        debug_assert!(actual_g >= 0.0);
         self.remaining_g -= actual_g;
     }
 }

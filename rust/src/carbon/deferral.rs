@@ -110,7 +110,8 @@ impl DeferralPolicy {
     /// Decide for a task arriving at `now_s` with slack until
     /// `deadline_s` (absolute, experiment clock).
     pub fn decide(&self, trace: &IntensityTrace, now_s: f64, deadline_s: f64) -> DeferDecision {
-        assert!(deadline_s >= now_s);
+        // Demoted: per-arrival hot path; deadlines are checked at admission.
+        debug_assert!(deadline_s >= now_s);
         self.decide_samples(&self.forecast(|t| trace.at(t), now_s, deadline_s))
     }
 

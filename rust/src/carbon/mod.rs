@@ -20,9 +20,11 @@ pub const DEFAULT_PUE: f64 = 1.0;
 ///
 /// `energy_kwh` in kWh, `intensity` in gCO₂/kWh; result in grams of CO₂.
 pub fn emissions_g(energy_kwh: f64, intensity: GramsPerKwh, pue: f64) -> f64 {
-    assert!(energy_kwh >= 0.0, "negative energy");
-    assert!(intensity >= 0.0, "negative intensity");
-    assert!(pue >= 1.0, "PUE < 1 is unphysical");
+    // Demoted to debug_assert: this sits on the per-completion hot path and
+    // every caller's inputs are validated once at scenario/config build.
+    debug_assert!(energy_kwh >= 0.0, "negative energy");
+    debug_assert!(intensity >= 0.0, "negative intensity");
+    debug_assert!(pue >= 1.0, "PUE < 1 is unphysical");
     energy_kwh * intensity * pue
 }
 

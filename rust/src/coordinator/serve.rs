@@ -55,6 +55,7 @@ impl<'a> ServingLoop<'a> {
         match &stream.arrivals {
             Arrivals::ClosedLoop { .. } => {
                 for x in &inputs {
+                    // lint: allow(D2 L3 real-execution latency measurement)
                     let t0 = Instant::now();
                     let fleet = FleetView::observe(self.registry.nodes());
                     let pick = scheduler.decide(&self.demand, &fleet).assigned();
@@ -65,6 +66,7 @@ impl<'a> ServingLoop<'a> {
                 }
             }
             Arrivals::Poisson { .. } => {
+                // lint: allow(D2 open-loop arrivals are issued on the real clock)
                 let start = Instant::now();
                 let mut issue_at: Vec<Duration> = Vec::with_capacity(inputs.len());
                 let mut acc = Duration::ZERO;
@@ -76,11 +78,13 @@ impl<'a> ServingLoop<'a> {
                 while records.len() < inputs.len() {
                     // enqueue everything whose issue time has passed
                     while next < inputs.len() && start.elapsed() >= issue_at[next] {
+                        // lint: allow(D2 real enqueue timestamp for queue-delay measurement)
                         queue.push_back((next, Instant::now()));
                         next += 1;
                     }
                     if let Some((i, enq)) = queue.pop_front() {
                         queue_ms.push(enq.elapsed().as_secs_f64() * 1e3);
+                        // lint: allow(D2 L3 real-execution latency measurement)
                         let t0 = Instant::now();
                         let fleet = FleetView::observe(self.registry.nodes());
                         let pick = scheduler.decide(&self.demand, &fleet).assigned();

@@ -96,7 +96,40 @@
 //! `sim --monitor carbon-budget=G,slo-burn=PCT,window=S`). With no sink
 //! or monitors attached nothing is constructed: the default
 //! `run`/`try_run` paths are untouched and reports stay bit-identical.
+//!
+//! # Invariants & lint
+//!
+//! The guarantees above are equalities over full runs, which runtime
+//! tests can only spot-check. The [`analysis`] module (`carbonedge lint`,
+//! a first-class CI job) enforces their *preconditions* statically over
+//! the source itself:
+//!
+//! * **Determinism** — D1/D3 forbid `HashMap`/`HashSet` iteration (and
+//!   especially f64 folds over it) in simulator modules, because hasher
+//!   order varies per process and float addition does not commute: one
+//!   unordered fold feeding a [`sim::SimReport`] breaks
+//!   traced==untraced and replay==live byte-for-byte equality. D2
+//!   forbids wall-clock and ambient-randomness APIs outside the bench
+//!   harness — virtual time comes from the event queue, randomness from
+//!   seeded [`util::rng`] streams.
+//! * **Panic-safety** — P1 flags `unwrap`/`expect` in simulator/metrics
+//!   code (a panic poisons a whole fleet sweep), P2 flags release
+//!   `assert!`s outside `validate*` one-shots (hot paths re-checking
+//!   invariants that validation already guaranteed demote to
+//!   `debug_assert!`).
+//! * **Unit-hygiene** — U1 flags direct flows between identifiers whose
+//!   unit suffixes disagree within a family (`_s`/`_ms`/`_ns`,
+//!   `_w`/`_kw`, `_j`/`_wh`/`_kwh`, `_g`/`_kg`); the WAN and battery
+//!   ledgers mix all of these.
+//!
+//! Legitimate exceptions carry `// lint: allow(RULE reason)` waivers
+//! naming the invariant that makes them safe; `carbonedge lint --deny
+//! rust/src` exits nonzero on anything unwaived, and the
+//! `rust/tests/lint.rs` meta-test pins the tree at zero findings.
 
+#![deny(unsafe_code)]
+
+pub mod analysis;
 pub mod carbon;
 pub mod config;
 pub mod coordinator;

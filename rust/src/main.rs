@@ -76,6 +76,7 @@ fn run() -> Result<()> {
         "compare-routers",
         "diff",
         "verify",
+        "deny",
     ])?;
     let cmd = args.command.clone().unwrap_or_else(|| "info".to_string());
     // Handle --help before any command arm so no command ever runs its
@@ -866,9 +867,32 @@ fn run() -> Result<()> {
                 println!("{}", report.render());
             }
         }
+        "lint" => {
+            // Static determinism/ledger-safety gate (no artifacts, no sim
+            // work): walk the source tree, print unwaived findings, and —
+            // under --deny — fail the process so CI blocks the merge.
+            let paths: Vec<String> = if args.positional.is_empty() {
+                vec!["rust/src".to_string()]
+            } else {
+                args.positional.clone()
+            };
+            let report = carbonedge::analysis::lint_paths(&paths)?;
+            for f in &report.findings {
+                println!("{f}");
+            }
+            eprintln!(
+                "lint: {} file(s), {} unwaived finding(s), {} waived",
+                report.files,
+                report.findings.len(),
+                report.waived
+            );
+            if args.bool_flag("deny") && !report.findings.is_empty() {
+                anyhow::bail!("lint --deny: {} unwaived finding(s)", report.findings.len());
+            }
+        }
         other => {
             anyhow::bail!(
-                "unknown command {other:?}; try info|golden|serve|reproduce|sweep|overhead|baselines|sim|replay"
+                "unknown command {other:?}; try info|golden|serve|reproduce|sweep|overhead|baselines|sim|replay|lint"
             );
         }
     }
@@ -1000,7 +1024,11 @@ carbonedge — carbon-aware edge inference (CarbonEdge reproduction)
                                                    NDJSON trace (--verify audits it
                                                    against a fresh live run)
   carbonedge replay --diff A B                     first divergent event between two
-                                                   traces (determinism debugging)"
+                                                   traces (determinism debugging)
+  carbonedge lint [--deny] [PATHS]                 determinism & ledger-safety static
+                                                   analysis over the simulator source
+                                                   (default rust/src; --deny exits
+                                                   nonzero on unwaived findings)"
     );
 }
 

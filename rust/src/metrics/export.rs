@@ -229,7 +229,9 @@ pub fn sim_report_json_string(r: &crate::sim::SimReport) -> String {
 /// [`write_sim_report`] into a `String` with a timeline stride.
 pub fn sim_report_json_string_strided(r: &crate::sim::SimReport, stride: usize) -> String {
     let mut buf = Vec::new();
+    // lint: allow(P1 io::Write on Vec<u8> is infallible)
     write_sim_report(&mut buf, r, stride).expect("write to Vec<u8> cannot fail");
+    // lint: allow(P1 JsonWriter escapes everything it emits to ASCII)
     String::from_utf8(buf).expect("JsonWriter emits UTF-8")
 }
 
@@ -237,6 +239,7 @@ pub fn sim_report_json_string_strided(r: &crate::sim::SimReport, stride: usize) 
 /// streamed [`write_sim_report`] text, for callers that want to inspect
 /// or embed the document rather than write it out.
 pub fn sim_report_to_json(r: &crate::sim::SimReport) -> Json {
+    // lint: allow(P1 round-trips text this module's own writer just produced)
     Json::parse(&sim_report_json_string(r)).expect("streamed report is valid JSON")
 }
 

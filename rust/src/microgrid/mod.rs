@@ -126,6 +126,7 @@ impl PvProfile {
     /// `(sunrise, sunrise + 12 h)` of every day. Lets a fleet stagger its
     /// sites across "longitudes".
     pub fn diurnal_with_sunrise(peak_w: f64, sunrise_s: f64) -> PvProfile {
+        // lint: allow(P2 one-shot profile-builder guard)
         assert!(peak_w.is_finite() && peak_w >= 0.0, "bad PV peak {peak_w}");
         PvProfile {
             trace: IntensityTrace::Diurnal {

@@ -23,7 +23,7 @@
 //! localised to the exact event where they stopped agreeing, instead of
 //! eyeballing two end-of-run reports.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{self, BufRead};
 
 use crate::carbon::joules_to_kwh;
@@ -89,12 +89,12 @@ struct Meta {
     requests_declared: u64,
     node_names: Vec<String>,
     node_microgrid: Vec<bool>,
-    node_index: HashMap<String, usize>,
+    node_index: BTreeMap<String, usize>,
     class_names: Vec<String>,
     class_slo_s: Vec<f64>,
     site_names: Vec<String>,
     site_of: Vec<usize>,
-    site_index: HashMap<String, usize>,
+    site_index: BTreeMap<String, usize>,
     router: String,
 }
 
@@ -309,7 +309,7 @@ impl ReplayState {
         // Geographic metadata is optional: flat fleets carry no sites
         // array, no router, and no per-node site tags.
         let mut site_names = Vec::new();
-        let mut site_index = HashMap::new();
+        let mut site_index = BTreeMap::new();
         if let Some(sites) = ev.get("sites").and_then(Json::as_arr) {
             for s in sites {
                 let name =
@@ -323,7 +323,7 @@ impl ReplayState {
         let nodes = ev.get("nodes").and_then(Json::as_arr).ok_or("run_meta missing nodes")?;
         let mut node_names = Vec::with_capacity(nodes.len());
         let mut node_microgrid = Vec::with_capacity(nodes.len());
-        let mut node_index = HashMap::with_capacity(nodes.len());
+        let mut node_index = BTreeMap::new();
         let mut site_of = Vec::with_capacity(nodes.len());
         for n in nodes {
             let name = text(n, "node")?;

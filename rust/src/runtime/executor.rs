@@ -160,9 +160,10 @@ fn execute(
     stats: &mut ExecStats,
 ) -> Result<(Tensor, Duration)> {
     let prog = programs.get(key).ok_or_else(|| anyhow!("program {key:?} not registered"))?;
+    // lint: allow(D2 PJRT execution is timed on the real clock)
     let t0 = Instant::now();
     let out = if prog.resident {
-        let up0 = Instant::now();
+        let up0 = Instant::now(); // lint: allow(D2 PJRT upload is timed on the real clock)
         let x = rt.upload(&input)?;
         stats.upload_time += up0.elapsed();
         let mut args: Vec<&xla::PjRtBuffer> = prog.buffers.iter().collect();

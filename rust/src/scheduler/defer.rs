@@ -157,6 +157,7 @@ pub const DEFAULT_JOIN_TOL: f64 = 0.05;
 
 impl DeferAwareGreenScheduler {
     pub fn new(defer_min_gain: f64) -> DeferAwareGreenScheduler {
+        // lint: allow(P2 one-shot constructor guard, pinned by a should_panic test)
         assert!(
             defer_min_gain.is_finite() && (0.0..=1.0).contains(&defer_min_gain),
             "defer_min_gain must be in [0, 1], got {defer_min_gain}"

@@ -18,6 +18,7 @@ impl Weights {
     /// Normalize to sum 1 (weights from sweeps/configs may not add up).
     pub fn normalized(&self) -> Weights {
         let s = self.sum();
+        // lint: allow(P2 config-time guard, pinned by a should_panic test)
         assert!(s > 0.0, "zero weight vector");
         Weights { r: self.r / s, l: self.l / s, p: self.p / s, b: self.b / s, c: self.c / s }
     }
@@ -25,6 +26,7 @@ impl Weights {
     /// Custom sweep point (Fig. 3): carbon weight `w_c`, the remaining mass
     /// distributed over R/L/P/B in Performance mode's proportions.
     pub fn sweep(w_c: f64) -> Weights {
+        // lint: allow(P2 sweep points are built once per experiment, keep the guard loud)
         assert!((0.0..=1.0).contains(&w_c));
         let base = Mode::Performance.weights();
         let rest = base.r + base.l + base.p + base.b; // 0.95

@@ -64,7 +64,7 @@ impl Scheduler for NormalizedScheduler {
                 .map(|(k, (i, _))| {
                     (*i, w.r * r[k] + w.l * l[k] + w.p * p[k] + w.b * bb[k] + w.c * c[k])
                 })
-                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
                 .map(|(i, _)| i),
         )
     }
@@ -85,6 +85,7 @@ pub struct ConstrainedGreenScheduler {
 
 impl ConstrainedGreenScheduler {
     pub fn new(latency_slack: f64) -> ConstrainedGreenScheduler {
+        // lint: allow(P2 one-shot constructor guard, pinned by a should_panic test)
         assert!(latency_slack >= 1.0);
         ConstrainedGreenScheduler { latency_slack, name: "constrained-green".into() }
     }
@@ -111,7 +112,7 @@ impl Scheduler for ConstrainedGreenScheduler {
             feasible
                 .into_iter()
                 .filter(|&(_, ms, _)| ms <= fastest * self.latency_slack)
-                .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+                .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal))
                 .map(|(i, _, _)| i),
         )
     }

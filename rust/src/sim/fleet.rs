@@ -16,6 +16,7 @@ const QUOTA_TIERS: [f64; 4] = [1.0, 0.8, 0.6, 0.4];
 /// prior latency and intensity get seeded spreads around paper-calibrated
 /// centers. Deterministic in `(n, seed)`.
 pub fn synth_fleet(n: usize, seed: u64) -> Vec<NodeSpec> {
+    // lint: allow(P2 one-shot fleet-builder guard)
     assert!(n > 0, "fleet needs at least one node");
     let mut rng = Rng::new(seed);
     (0..n)

@@ -125,6 +125,32 @@
 //! Identical seeds produce identical [`SimReport`]s; millions of simulated
 //! requests run in seconds (`benches/sim.rs`). The scenario library lives
 //! in [`scenarios`]; fleet synthesis in [`fleet`].
+//!
+//! # Invariants & lint
+//!
+//! Determinism-by-equality is a *source-level* discipline, enforced
+//! statically by [`crate::analysis`] (`carbonedge lint --deny rust/src`,
+//! run as its own CI job):
+//!
+//! * no `HashMap`/`HashSet` iteration in simulator modules (D1), and
+//!   never an f64 fold over one (D3) — hasher order varies per process,
+//!   float addition does not commute, and one unordered fold feeding a
+//!   [`SimReport`] silently breaks traced==untraced and replay==live
+//!   bit-identity; keyed state uses `BTreeMap` or sorted collects;
+//! * no `Instant::now`/`SystemTime::now`/ambient randomness (D2) —
+//!   virtual time comes from the event queue, randomness from the seeded
+//!   [`crate::util::rng`] streams (the engine's real-clock reads for
+//!   decide-ns telemetry carry waivers: they measure overhead, they
+//!   never feed virtual state);
+//! * no unwaived `unwrap`/`expect` (P1) and no release `assert!` outside
+//!   `validate*` one-shots (P2) — [`Scenario::validate`] is the single
+//!   loud gate at run start, hot paths use `debug_assert!`;
+//! * unit suffixes (`_s`/`_ms`, `_wh`/`_kwh`, …) never flow across a
+//!   direct assignment/comparison without an explicit conversion (U1).
+//!
+//! Exceptions are inline `// lint: allow(RULE reason)` waivers naming
+//! the invariant that makes them safe; `rust/tests/lint.rs` pins the
+//! tree at zero unwaived findings.
 
 mod engine;
 pub mod fleet;

@@ -217,7 +217,7 @@ pub fn build(name: &str, nodes: usize, requests: usize, seed: u64) -> Option<Sce
         "churn" => Some(churn(if nodes == 0 { 10 } else { nodes }, requests, seed)),
         "real-trace" => Some(
             real_trace_from_csv(BUNDLED_GRID_DAY_CSV, nodes, requests, seed)
-                .expect("bundled grid-day CSV is valid"),
+                .expect("bundled grid-day CSV is valid"), // lint: allow(P1 compile-time data)
         ),
         "deferral-routing" => Some(deferral_routing(nodes, requests, seed)),
         "consolidation" => {
@@ -384,6 +384,7 @@ fn bursty(nodes: usize, requests: usize, seed: u64) -> Scenario {
 }
 
 fn churn(n: usize, requests: usize, seed: u64) -> Scenario {
+    // lint: allow(P2 one-shot scenario-builder guard)
     assert!(n >= 3, "churn scenario needs at least 3 nodes");
     let config = SimConfig { seed, ..SimConfig::default() };
     let specs = fleet::synth_fleet(n, seed);
@@ -487,7 +488,7 @@ pub const DEFERRAL_ROUTING_BASE_EXEC_MS: f64 = 48.0;
 /// the A/B).
 fn deferral_routing(nodes: usize, requests: usize, seed: u64) -> Scenario {
     let mut sc = real_trace_from_csv(BUNDLED_GRID_DAY_CSV, nodes, requests, seed)
-        .expect("bundled grid-day CSV is valid");
+        .expect("bundled grid-day CSV is valid"); // lint: allow(P1 compile-time data)
     sc.name = "deferral-routing".into();
     sc.capacity = vec![1; sc.specs.len()];
     sc.config.base_exec_ms = DEFERRAL_ROUTING_BASE_EXEC_MS;
@@ -675,6 +676,7 @@ fn arbitrage_duck_trace(days: usize) -> IntensityTrace {
             pts.push((d as f64 * 86_400.0 + h as f64 * 3_600.0, v));
         }
     }
+    // lint: allow(P1 static duck-curve table, strictly increasing timestamps)
     IntensityTrace::from_samples(pts).expect("duck curve samples are valid")
 }
 
@@ -1172,6 +1174,7 @@ fn follow_the_sun(n: usize, requests: usize, seed: u64) -> Scenario {
 /// staggered PV arrays + tight deadline slack (see [`follow_the_sun`]).
 fn solarize(mut sc: Scenario) -> Scenario {
     sc.name = "follow-the-sun".into();
+    // lint: allow(P1 solarize is only applied to multi-site-shaped scenarios)
     let layer = sc.sites.as_ref().expect("multi-site always has a site layer");
     sc.microgrids = sc
         .specs
@@ -1230,11 +1233,14 @@ pub fn with_site_count(
 /// twins over all sites is the "best single-site green mode" baseline the
 /// follow-the-sun margin is measured against.
 pub fn single_site_twin(sc: &Scenario, site: usize) -> Scenario {
+    // lint: allow(P1 documented precondition of the twin-builder API)
     let layer = sc.sites.as_ref().expect("single_site_twin needs a geographic scenario");
+    // lint: allow(P2 one-shot twin-builder guard)
     assert!(site < layer.sites.len(), "site {site} out of range");
     let keep: Vec<usize> = (0..sc.specs.len()).filter(|&i| layer.site_of[i] == site).collect();
+    // lint: allow(P2 one-shot twin-builder guard)
     assert!(!keep.is_empty(), "site {site} has no nodes");
-    let pos: std::collections::HashMap<usize, usize> =
+    let pos: std::collections::BTreeMap<usize, usize> =
         keep.iter().enumerate().map(|(p, &g)| (g, p)).collect();
     let mut twin = sc.clone();
     twin.name = format!("{}-{}", sc.name, layer.sites[site].name);

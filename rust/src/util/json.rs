@@ -292,7 +292,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let txt = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        let txt = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("non-utf8 bytes in number"))?;
         txt.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }

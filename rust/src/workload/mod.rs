@@ -30,6 +30,7 @@ pub fn synthetic_image(image_size: usize, seed: u64) -> Tensor {
             }
         }
     }
+    // lint: allow(P1 shape and data length are constructed together above)
     Tensor::new(vec![n, n, 3], data).expect("shape matches")
 }
 
